@@ -1,0 +1,25 @@
+//! Bench: collective-communication model (Fig 10, six collectives).
+
+use cuda_myth::config::DeviceKind;
+use cuda_myth::harness;
+use cuda_myth::sim::collective::{self, ALL_COLLECTIVES};
+use cuda_myth::util::benchkit::{black_box, Bencher};
+
+fn main() {
+    for r in harness::run_experiment("fig10").unwrap() {
+        r.print();
+    }
+    let mut b = Bencher::new();
+    b.bench("fig10 full sweep (6 colls x 3 sizes x 2 devices x 3 ns)", || {
+        for coll in ALL_COLLECTIVES {
+            for kind in [DeviceKind::Gaudi2, DeviceKind::A100] {
+                for n in [2usize, 4, 8] {
+                    for s in [2e3, 2e6, 32e6] {
+                        black_box(collective::run(kind, coll, n, s));
+                    }
+                }
+            }
+        }
+    });
+    b.finish("collective");
+}

@@ -1,0 +1,32 @@
+//! Bench: GEMM model (Fig 4 roofline, Fig 5 heatmaps, Fig 7 geometry).
+//! Regenerates the paper series and times the simulator hot path.
+
+use cuda_myth::config::DeviceKind;
+use cuda_myth::harness;
+use cuda_myth::ops::gemm;
+use cuda_myth::sim::Dtype;
+use cuda_myth::util::benchkit::{black_box, Bencher};
+
+fn main() {
+    // Regenerate the paper figures this bench covers.
+    for id in ["fig4", "fig5", "fig7"] {
+        for r in harness::run_experiment(id).unwrap() {
+            r.print();
+        }
+    }
+    // Time the hot paths.
+    let mut b = Bencher::new();
+    b.bench("mme::run_gemm 8192^3", || {
+        black_box(gemm::run(DeviceKind::Gaudi2, 8192, 8192, 8192, Dtype::Bf16))
+    });
+    b.bench("tensor_core::run_gemm 8192^3", || {
+        black_box(gemm::run(DeviceKind::A100, 8192, 8192, 8192, Dtype::Bf16))
+    });
+    b.bench("fig4 full sweep (both devices)", || {
+        for (m, k, n) in gemm::fig4_shapes() {
+            black_box(gemm::run(DeviceKind::Gaudi2, m, k, n, Dtype::Bf16));
+            black_box(gemm::run(DeviceKind::A100, m, k, n, Dtype::Bf16));
+        }
+    });
+    b.finish("gemm");
+}

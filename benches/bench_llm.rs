@@ -1,0 +1,28 @@
+//! Bench: LLM serving cost model (Fig 12 speedups + Fig 13 energy).
+
+use cuda_myth::config::DeviceKind;
+use cuda_myth::harness;
+use cuda_myth::models::llama::{self, LlamaConfig};
+use cuda_myth::util::benchkit::{black_box, Bencher};
+
+fn main() {
+    for id in ["fig12", "fig13"] {
+        for r in harness::run_experiment(id).unwrap() {
+            r.print();
+        }
+    }
+    let mut b = Bencher::new();
+    let cfg8 = LlamaConfig::llama31_8b();
+    let cfg70 = LlamaConfig::llama31_70b();
+    b.bench("serve_fixed 8B b64 out400 (both devices)", || {
+        black_box(llama::serve_fixed(&cfg8, DeviceKind::Gaudi2, 64, 100, 400, 1));
+        black_box(llama::serve_fixed(&cfg8, DeviceKind::A100, 64, 100, 400, 1));
+    });
+    b.bench("serve_fixed 70B tp8 b64 out400", || {
+        black_box(llama::serve_fixed(&cfg70, DeviceKind::Gaudi2, 64, 100, 400, 8))
+    });
+    b.bench("decode_step_cost 8B b64 kv4096", || {
+        black_box(llama::decode_step_cost(&cfg8, DeviceKind::Gaudi2, 64, 4096, 1))
+    });
+    b.finish("llm");
+}

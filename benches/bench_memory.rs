@@ -1,0 +1,26 @@
+//! Bench: gather/scatter memory model (Fig 9).
+
+use cuda_myth::config::DeviceKind;
+use cuda_myth::harness;
+use cuda_myth::sim::memory::{self, AccessDir};
+use cuda_myth::util::benchkit::{black_box, Bencher};
+
+fn main() {
+    for r in harness::run_experiment("fig9").unwrap() {
+        r.print();
+    }
+    let mut b = Bencher::new();
+    let g = DeviceKind::Gaudi2.spec();
+    let a = DeviceKind::A100.spec();
+    b.bench("fig9 full sweep (both devices)", || {
+        for &v in &[16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0] {
+            for &f in &[0.01, 0.1, 0.5, 1.0] {
+                black_box(memory::random_access(&g, AccessDir::Gather, 4e6 * f, v));
+                black_box(memory::random_access(&a, AccessDir::Gather, 4e6 * f, v));
+                black_box(memory::random_access(&g, AccessDir::Scatter, 4e6 * f, v));
+                black_box(memory::random_access(&a, AccessDir::Scatter, 4e6 * f, v));
+            }
+        }
+    });
+    b.finish("memory");
+}

@@ -1,0 +1,35 @@
+//! Bench: RecSys end-to-end model (Fig 11) + embedding operators (Fig 15).
+
+use cuda_myth::config::DeviceKind;
+use cuda_myth::harness;
+use cuda_myth::models::dlrm::{self, DlrmConfig};
+use cuda_myth::ops::embedding::{self, rm2_work, EmbeddingImpl};
+use cuda_myth::sim::Dtype;
+use cuda_myth::util::benchkit::{black_box, Bencher};
+
+fn main() {
+    for id in ["fig11", "fig15"] {
+        for r in harness::run_experiment(id).unwrap() {
+            r.print();
+        }
+    }
+    let mut b = Bencher::new();
+    let rm1 = DlrmConfig::rm1();
+    b.bench("dlrm::serve RM1 b4096 d128 (both devices)", || {
+        black_box(dlrm::serve(&rm1, DeviceKind::Gaudi2, 4096, 128));
+        black_box(dlrm::serve(&rm1, DeviceKind::A100, 4096, 128));
+    });
+    b.bench("embedding fig15 grid x 4 impls", || {
+        for (batch, v) in embedding::fig15_grid() {
+            for imp in [
+                EmbeddingImpl::GaudiSdkSingleTable,
+                EmbeddingImpl::GaudiSingleTable,
+                EmbeddingImpl::GaudiBatchedTable,
+                EmbeddingImpl::A100Fbgemm,
+            ] {
+                black_box(embedding::run(imp, rm2_work(batch, v), Dtype::Fp32));
+            }
+        }
+    });
+    b.finish("recsys");
+}

@@ -1,0 +1,69 @@
+//! Bench: the serving engine's own hot paths — the §Perf targets of the
+//! L3 coordinator (scheduler step, block-manager churn, layout builds,
+//! end-to-end engine episodes). The engine overhead must be negligible
+//! against simulated step times (~ms).
+
+use cuda_myth::config::ServingConfig;
+use cuda_myth::models::llama::LlamaConfig;
+use cuda_myth::serving::block_table::{BlockList, BlockTable};
+use cuda_myth::serving::engine::{Engine, SimBackend};
+use cuda_myth::serving::kv_cache::KvBlockManager;
+use cuda_myth::serving::request::Request;
+use cuda_myth::serving::scheduler::{Scheduler, Step};
+use cuda_myth::util::benchkit::{black_box, Bencher};
+use cuda_myth::workload::DynamicSonnet;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.bench("kv manager alloc/free churn (64 seqs)", || {
+        let mut m = KvBlockManager::new(4096, 128, 0.01);
+        for i in 0..64u64 {
+            m.allocate(i, 1024 + (i as usize % 7) * 128).unwrap();
+        }
+        for i in 0..64u64 {
+            m.free(i);
+        }
+        black_box(m.num_free())
+    });
+
+    let mut mgr = KvBlockManager::new(4096, 128, 0.0);
+    let ids: Vec<u64> = (0..64).collect();
+    for &i in &ids {
+        mgr.allocate(i, 512 + (i as usize % 13) * 256).unwrap();
+    }
+    b.bench("BlockTable::build (64 seqs)", || black_box(BlockTable::build(&mgr, &ids)));
+    b.bench("BlockList::build (64 seqs)", || black_box(BlockList::build(&mgr, &ids)));
+
+    b.bench("scheduler full episode (32 reqs)", || {
+        let cfg = ServingConfig { num_blocks: 2048, max_decode_batch: 32, ..Default::default() };
+        let mut s = Scheduler::new(cfg);
+        for i in 0..32u64 {
+            s.submit(Request::new(i, 128, 32, 0.0));
+        }
+        let mut n = 0u64;
+        loop {
+            match s.schedule() {
+                Step::Prefill(_) => {}
+                Step::Decode(ids) => {
+                    n += 1;
+                    s.complete_decode(&ids, n as f64);
+                }
+                Step::Idle => break,
+            }
+        }
+        black_box(n)
+    });
+
+    b.bench("engine e2e episode (48 dynamic reqs, sim backend)", || {
+        let cfg = ServingConfig { num_blocks: 8192, max_decode_batch: 32, ..Default::default() };
+        let backend = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
+        let mut e = Engine::new(cfg, backend);
+        for r in DynamicSonnet::default().generate(48, f64::INFINITY, 9) {
+            e.submit(r);
+        }
+        black_box(e.run_to_completion())
+    });
+
+    b.finish("serving");
+}

@@ -1,0 +1,30 @@
+//! Bench: STREAM microbenchmark models (Fig 8, all four panels).
+
+use cuda_myth::config::DeviceKind;
+use cuda_myth::harness;
+use cuda_myth::sim::tpc::{self, StreamOp};
+use cuda_myth::sim::Dtype;
+use cuda_myth::util::benchkit::{black_box, Bencher};
+
+fn main() {
+    for r in harness::run_experiment("fig8").unwrap() {
+        r.print();
+    }
+    let spec = DeviceKind::Gaudi2.spec();
+    let mut b = Bencher::new();
+    b.bench("single_tpc_throughput sweep", || {
+        for u in [1usize, 2, 4, 8, 16] {
+            for g in [2.0, 64.0, 256.0, 2048.0] {
+                black_box(tpc::single_tpc_throughput(StreamOp::Triad, u, g, Dtype::Bf16));
+            }
+        }
+    });
+    b.bench("weak_scaled_throughput 24 tpcs x 3 ops", || {
+        for op in [StreamOp::Add, StreamOp::Scale, StreamOp::Triad] {
+            for n in 1..=24 {
+                black_box(tpc::weak_scaled_throughput(&spec, op, n, Dtype::Bf16));
+            }
+        }
+    });
+    b.finish("stream");
+}

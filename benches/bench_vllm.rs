@@ -1,0 +1,29 @@
+//! Bench: PagedAttention operators + the Fig 17 case study.
+
+use cuda_myth::harness;
+use cuda_myth::ops::attention::{run as attn, PagedAttnImpl, PagedAttnWork};
+use cuda_myth::util::benchkit::{black_box, Bencher};
+
+fn main() {
+    for r in harness::run_experiment("fig17").unwrap() {
+        r.print();
+    }
+    let mut b = Bencher::new();
+    let w = PagedAttnWork::llama8b(32, 4096);
+    for imp in [PagedAttnImpl::GaudiVllmBase, PagedAttnImpl::GaudiVllmOpt, PagedAttnImpl::A100Paged]
+    {
+        b.bench(&format!("paged attention model: {}", imp.name()), || {
+            black_box(attn(imp, w))
+        });
+    }
+    b.bench("fig17a sweep (16 points x 2 impls)", || {
+        for &s in &[512usize, 1024, 2048, 4096] {
+            for &bsz in &[8usize, 16, 32, 64] {
+                let w = PagedAttnWork::llama8b(bsz, s);
+                black_box(attn(PagedAttnImpl::GaudiVllmBase, w));
+                black_box(attn(PagedAttnImpl::GaudiVllmOpt, w));
+            }
+        }
+    });
+    b.finish("vllm");
+}

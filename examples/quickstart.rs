@@ -1,0 +1,56 @@
+//! Quickstart: the 60-second tour of the library.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cuda_myth::config::DeviceKind;
+use cuda_myth::sim::device::Device;
+use cuda_myth::sim::collective::{self, Collective};
+use cuda_myth::sim::Dtype;
+
+fn main() {
+    // 1. Run a GEMM on both simulated devices (paper Fig 4).
+    let gaudi = Device::new(DeviceKind::Gaudi2);
+    let a100 = Device::new(DeviceKind::A100);
+    let (m, k, n) = (4096, 4096, 4096);
+    let g = gaudi.gemm(m, k, n, Dtype::Bf16);
+    let a = a100.gemm(m, k, n, Dtype::Bf16);
+    println!("GEMM {m}x{k}x{n} BF16:");
+    println!(
+        "  Gaudi-2: {:6.1} TF ({:4.1}% util, MME geometry {})",
+        g.achieved_flops / 1e12,
+        100.0 * g.utilization,
+        g.config
+    );
+    println!(
+        "  A100:    {:6.1} TF ({:4.1}% util, CTA tile {})",
+        a.achieved_flops / 1e12,
+        100.0 * a.utilization,
+        a.config
+    );
+
+    // 2. A random gather (paper Fig 9): the 256 B granularity cliff.
+    for vec_bytes in [64.0, 256.0, 1024.0] {
+        let gg = gaudi.gather(1e6, vec_bytes);
+        let ga = a100.gather(1e6, vec_bytes);
+        println!(
+            "gather {vec_bytes:6}B vectors: Gaudi-2 {:4.1}% vs A100 {:4.1}% bandwidth util",
+            100.0 * gg.utilization,
+            100.0 * ga.utilization
+        );
+    }
+
+    // 3. An AllReduce on both node fabrics (paper Fig 10).
+    for n_dev in [2usize, 8] {
+        let g = collective::run(DeviceKind::Gaudi2, Collective::AllReduce, n_dev, 32e6);
+        let a = collective::run(DeviceKind::A100, Collective::AllReduce, n_dev, 32e6);
+        println!(
+            "allreduce 32MB x{n_dev} devices: Gaudi-2 {:4.1}% vs A100 {:4.1}% bus-bw util",
+            100.0 * g.utilization,
+            100.0 * a.utilization
+        );
+    }
+
+    println!("\nNext: `repro list` and `repro run fig4 | fig17 | ...`");
+}

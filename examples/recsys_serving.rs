@@ -1,0 +1,91 @@
+//! RecSys serving example (the paper's §3.5 / §4.1 workload): serve
+//! DLRM-DCNv2 batches on both simulated devices with the Zipf-skewed
+//! embedding workload, and — if `make artifacts` has run — execute the
+//! real tiny-DLRM HLO artifact through PJRT on the same index stream.
+
+use cuda_myth::config::DeviceKind;
+use cuda_myth::models::dlrm::{self, DlrmConfig};
+use cuda_myth::ops::embedding::{self, EmbeddingImpl, EmbeddingWork};
+use cuda_myth::runtime::{HostTensor, Runtime};
+use cuda_myth::sim::Dtype;
+use cuda_myth::workload::EmbeddingTrace;
+
+fn main() -> anyhow::Result<()> {
+    // Simulated end-to-end serving comparison (Fig 11).
+    println!("== simulated DLRM serving (batch 4096, dim 128) ==");
+    for cfg in [DlrmConfig::rm1(), DlrmConfig::rm2()] {
+        let g = dlrm::serve(&cfg, DeviceKind::Gaudi2, 4096, 128);
+        let a = dlrm::serve(&cfg, DeviceKind::A100, 4096, 128);
+        println!(
+            "{}: Gaudi-2 {:8.0} samples/s @ {:3.0} W | A100 {:8.0} samples/s @ {:3.0} W | speedup {:.2}x",
+            cfg.name,
+            g.throughput(4096),
+            g.avg_power,
+            a.throughput(4096),
+            a.avg_power,
+            a.time / g.time
+        );
+    }
+
+    // Operator-level study (Fig 15) on a Zipf-skewed index stream.
+    println!("\n== embedding operators (RM2 config, batch 4096, 512 B vectors) ==");
+    let work = EmbeddingWork { tables: 20, batch: 4096, pooling: 1, vec_bytes: 512.0 };
+    for imp in [
+        EmbeddingImpl::GaudiSdkSingleTable,
+        EmbeddingImpl::GaudiSingleTable,
+        EmbeddingImpl::GaudiBatchedTable,
+        EmbeddingImpl::A100Fbgemm,
+    ] {
+        let r = embedding::run(imp, work, Dtype::Fp32);
+        println!(
+            "{:18} {:8.1} us  {:5.1}% bandwidth util  ({} launches)",
+            imp.name(),
+            r.time * 1e6,
+            100.0 * r.bandwidth_utilization,
+            r.kernel_launches
+        );
+    }
+
+    // Real-numerics path: tiny-DLRM artifact + Zipf indices through PJRT.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\n== REAL tiny-DLRM inference through PJRT ==");
+        let mut rt = Runtime::new("artifacts")?;
+        let weights = {
+            let init = rt.load("init_dlrm_weights")?;
+            init.run(&[])?.remove(0)
+        };
+        let exe = rt.load("dlrm_forward")?;
+        let batch = exe.entry.inputs[1].shape[0];
+        let dense_in = exe.entry.inputs[1].shape[1];
+        let tables = exe.entry.meta["tables"] as usize;
+        let pooling = exe.entry.meta["pooling"] as usize;
+        let rows = exe.entry.meta["rows_per_table"] as usize;
+        let mut trace = EmbeddingTrace::new(tables, rows, 1.1, 42);
+        let t0 = std::time::Instant::now();
+        let n_batches = 5;
+        let mut checksum = 0.0f32;
+        for _ in 0..n_batches {
+            let idx: Vec<i32> =
+                trace.batch(batch, pooling).into_iter().map(|x| x as i32).collect();
+            let dense: Vec<f32> = (0..batch * dense_in).map(|i| (i % 5) as f32 * 0.2).collect();
+            let out = exe.run(&[
+                weights.clone(),
+                HostTensor::F32(dense),
+                HostTensor::I32(idx),
+            ])?;
+            checksum += out[0].as_f32()?.iter().sum::<f32>();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{} batches x {} samples in {:.1} ms -> {:.0} samples/s (checksum {:.3})",
+            n_batches,
+            batch,
+            dt * 1e3,
+            (n_batches * batch) as f64 / dt,
+            checksum
+        );
+    } else {
+        println!("\n(run `make artifacts` to also exercise the real PJRT path)");
+    }
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT lowering: JAX/Pallas (L2+L1) -> HLO text artifacts + manifest.json.
+
+Interchange is HLO *text*, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`. Python never runs on the request path: the Rust
+coordinator loads these files through PJRT and serves from them.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import embedding_gather, flash_prefill, paged_attention, stream_ops
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def tensor_json(s):
+    name = {jnp.float32: "float32", jnp.int32: "int32"}[
+        {"float32": jnp.float32, "int32": jnp.int32}[str(s.dtype)]
+    ]
+    return {"shape": list(s.shape), "dtype": name}
+
+
+def entry(name, fn, in_specs, meta=None):
+    """Lower `fn` at `in_specs`, return (manifest entry, hlo text)."""
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    out_shapes = jax.eval_shape(fn, *in_specs)
+    if not isinstance(out_shapes, (tuple, list)):
+        out_shapes = (out_shapes,)
+    ent = {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "inputs": [tensor_json(s) for s in in_specs],
+        "outputs": [tensor_json(s) for s in out_shapes],
+        "meta": meta or {},
+    }
+    return ent, text
+
+
+def build_entries():
+    cfg = model.TinyLlamaConfig()
+    dcfg = model.TinyDlrmConfig()
+    nw = model.llama_num_weights(cfg)
+    kv_shape = (cfg.layers, 2, cfg.batch, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+    llama_meta = {
+        "batch": cfg.batch,
+        "max_seq": cfg.max_seq,
+        "prompt_pad": cfg.prompt_pad,
+        "vocab": cfg.vocab,
+        "layers": cfg.layers,
+        "hidden": cfg.hidden,
+        "num_weights": nw,
+    }
+    entries = []
+
+    # --- tiny-llama serving artifacts --------------------------------
+    entries.append(entry(
+        "init_llama_weights", lambda: (model.init_llama_weights(cfg),), [], llama_meta))
+    entries.append(entry(
+        "prefill",
+        lambda w, t, kv, s, n: model.prefill(w, t, kv, s, n, cfg),
+        [spec((nw,), F32), spec((cfg.prompt_pad,), I32), spec(kv_shape, F32),
+         spec((1,), I32), spec((1,), I32)],
+        llama_meta,
+    ))
+    entries.append(entry(
+        "decode_step",
+        lambda w, t, kv, p: model.decode_step(w, t, kv, p, cfg),
+        [spec((nw,), F32), spec((cfg.batch,), I32), spec(kv_shape, F32),
+         spec((cfg.batch,), I32)],
+        llama_meta,
+    ))
+
+    # --- tiny-dlrm artifacts -----------------------------------------
+    dnw = model.dlrm_num_weights(dcfg)
+    dlrm_meta = {
+        "batch": dcfg.batch, "tables": dcfg.tables, "pooling": dcfg.pooling,
+        "rows_per_table": dcfg.rows_per_table, "emb_dim": dcfg.emb_dim,
+        "dense_in": dcfg.dense_in, "num_weights": dnw,
+    }
+    entries.append(entry(
+        "init_dlrm_weights", lambda: (model.init_dlrm_weights(dcfg),), [], dlrm_meta))
+    entries.append(entry(
+        "dlrm_forward",
+        lambda w, d, i: (model.dlrm_forward(w, d, i, dcfg),),
+        [spec((dnw,), F32), spec((dcfg.batch, dcfg.dense_in), F32),
+         spec((dcfg.tables, dcfg.batch, dcfg.pooling), I32)],
+        dlrm_meta,
+    ))
+
+    # --- standalone kernel artifacts (validated from Rust) -----------
+    n = 65536
+    entries.append(entry(
+        "stream_triad",
+        lambda a, b: (stream_ops.triad(a, b, 3.0),),
+        [spec((n,), F32), spec((n,), F32)],
+        {"n": n, "scalar": 3},
+    ))
+    entries.append(entry(
+        "embedding_gather",
+        lambda t, i, o: (embedding_gather.batched_embedding_gather(t, i, o),),
+        [spec((256, 128), F32), spec((4, 16), I32), spec((4,), I32)],
+        {"tables": 4, "batch": 16, "dim": 128},
+    ))
+    fseq, fd = 64, 64
+    entries.append(entry(
+        "flash_prefill",
+        lambda q, k, v: (flash_prefill.flash_prefill(q, k, v),),
+        [spec((fseq, fd), F32), spec((fseq, fd), F32), spec((fseq, fd), F32)],
+        {"seq": fseq, "head_dim": fd},
+    ))
+    bs, nb, d, batch = 16, 8, 64, 4
+    entries.append(entry(
+        "paged_attention",
+        lambda q, kv, bl, off, lens: (
+            paged_attention.paged_attention(q, kv, bl, off, lens, bs),),
+        [spec((batch, d), F32), spec((2, nb, bs, d), F32), spec((nb,), I32),
+         spec((batch + 1,), I32), spec((batch,), I32)],
+        {"batch": batch, "num_blocks": nb, "block_size": bs, "head_dim": d},
+    ))
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"entries": []}
+    for ent, text in build_entries():
+        path = os.path.join(args.out_dir, ent["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(ent)
+        print(f"wrote {path} ({len(text)/1e6:.2f} MB)")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

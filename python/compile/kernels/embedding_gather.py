@@ -1,0 +1,72 @@
+"""BatchedTable embedding gather as a Pallas kernel (paper §4.1, Fig 14(b)).
+
+The paper's TPC-C BatchedTable fuses every table's lookups into one kernel
+launch, treating the stacked tables as one big table with per-table start
+offsets. The Pallas re-expression: the grid spans (table, batch-chunk);
+each program resolves `indices + table_offset` to global rows and copies
+the rows from the (unblocked, HBM-resident) stacked table into its output
+block — the dynamic `pl.load` plays the role of the TPC's
+`v_f32_ld_tnsr` indexed vector loads, and the embedding dimension maps to
+the 128-lane axis (the 256-byte-granularity best practice).
+
+interpret=True: see stream_ops.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lookups handled per program instance (the "unroll factor" of Fig 14(a)).
+_CHUNK = 4
+
+
+def _gather_kernel(idx_ref, off_ref, tables_ref, o_ref, *, chunk):
+    t = pl.program_id(0)
+    c = pl.program_id(1)
+    table_start = off_ref[t]
+    for u in range(chunk):  # unrolled, like the TPC-C `#pragma unroll(4)`
+        row = idx_ref[t, c * chunk + u] + table_start
+        vec = pl.load(tables_ref, (pl.dslice(row, 1), slice(None)))
+        o_ref[0, u, :] = vec[0, :]
+
+
+def batched_embedding_gather(tables, indices, table_offsets):
+    """Gather `indices` (+ per-table offsets) from the stacked `tables`.
+
+    Args:
+      tables: [total_rows, dim] float array (all tables stacked).
+      indices: [n_tables, batch] int32 table-local row ids.
+      table_offsets: [n_tables] int32 start row per table.
+
+    Returns:
+      [n_tables, batch, dim] gathered vectors.
+    """
+    n_tables, batch = indices.shape
+    dim = tables.shape[1]
+    assert batch % _CHUNK == 0, "batch must be a multiple of the chunk size"
+    grid = (n_tables, batch // _CHUNK)
+    kernel = functools.partial(_gather_kernel, chunk=_CHUNK)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(indices.shape, lambda t, c: (0, 0)),  # all indices
+            pl.BlockSpec(table_offsets.shape, lambda t, c: (0,)),
+            pl.BlockSpec(tables.shape, lambda t, c: (0, 0)),  # full table
+        ],
+        out_specs=pl.BlockSpec((1, _CHUNK, dim), lambda t, c: (t, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tables, batch, dim), tables.dtype),
+        interpret=True,
+    )(indices, table_offsets, tables)
+    return out
+
+
+def pooled_embedding_lookup(tables, indices, table_offsets):
+    """Sum-pooled lookup: DLRM's embedding-bag (pooling over the lookup
+    axis). indices: [n_tables, batch, pooling]."""
+    n_tables, batch, pooling = indices.shape
+    flat = indices.reshape(n_tables, batch * pooling)
+    gathered = batched_embedding_gather(tables, flat, table_offsets)
+    return gathered.reshape(n_tables, batch, pooling, -1).sum(axis=2)

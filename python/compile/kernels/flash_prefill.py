@@ -1,0 +1,82 @@
+"""Causal flash-attention prefill as a Pallas kernel.
+
+The paper (§5) highlights that Gaudi's lack of low-level MME access blocks
+FlashAttention-style fusion — this kernel is the TPU-shaped counterfactual:
+one pass over K/V with an online softmax, blocks staged through VMEM, the
+two matmuls (`q @ k^T`, `p @ v`) hitting the MXU on a real lowering.
+
+Single-head kernel (callers vmap over heads); interpret=True as everywhere
+in this repo.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_BIG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_len):
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)  # [block_q, d]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    n_kblocks = seq_len // block_k
+
+    def body(kj, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kj * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kj * block_k, block_k), slice(None)))
+        s = (q @ k.astype(jnp.float32).T) * scale  # [bq, bk]
+        k_pos = kj * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, _NEG_BIG)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=1)
+        acc_new = acc * alpha[:, None] + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), _NEG_BIG, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kblocks, body, (m0, l0, acc0))
+    o_ref[...] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+def flash_prefill(q, k, v, block_q=16, block_k=16):
+    """Causal attention over a full prompt, single head.
+
+    Args:
+      q, k, v: [seq, head_dim]; seq must divide by block_q and block_k.
+
+    Returns:
+      [seq, head_dim] float32 attention outputs.
+    """
+    seq, d = q.shape
+    assert seq % block_q == 0 and seq % block_k == 0, "seq must tile evenly"
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, seq_len=seq)
+    return pl.pallas_call(
+        kernel,
+        grid=(seq // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((seq, d), lambda i: (0, 0)),
+            pl.BlockSpec((seq, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((seq, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def flash_prefill_multihead(q, k, v, block_q=16, block_k=16):
+    """vmap over heads: q/k/v [heads, seq, d]."""
+    fn = functools.partial(flash_prefill, block_q=block_q, block_k=block_k)
+    return jax.vmap(fn)(q, k, v)

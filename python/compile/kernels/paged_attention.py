@@ -1,0 +1,118 @@
+"""BlockList paged attention as a Pallas kernel (paper §4.2, Fig 16(b)).
+
+This is the vLLM_opt form: a flat list of *effectual* KV-block ids with
+CSR offsets per sequence — no zero-padding work. Each grid program owns
+one (sequence, head-group) pair and runs a flash-style online softmax over
+that sequence's blocks:
+
+  for each block j of sequence i:
+      k, v = KV[block_list[offsets[i]+j]]         (TPC gather)
+      s    = k @ q / sqrt(d)                      (MME batched GEMM)
+      online-softmax accumulate                   (TPC vector ops)
+
+which is exactly the gather→bgemm→softmax slicing the Gaudi graph
+compiler pipelines across TPC and MME (and the structure a real TPU
+lowering would tile through VMEM with the MXU doing `k @ q`).
+
+interpret=True: see stream_ops.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_BIG = -1e30
+
+
+def _paged_attn_kernel(
+    q_ref,
+    kv_ref,
+    bl_ref,
+    off_ref,
+    len_ref,
+    o_ref,
+    *,
+    block_size,
+    max_blocks_per_seq,
+):
+    i = pl.program_id(0)
+    q = q_ref[0, :].astype(jnp.float32)  # [d]
+    d = q.shape[0]
+    lo = off_ref[i]
+    n_blocks = off_ref[i + 1] - lo
+    seq_len = len_ref[i]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    def body(j, carry):
+        m, l, acc = carry
+        valid = j < n_blocks
+        # Clamp so the load stays in bounds even for invalid iterations.
+        slot = jnp.where(valid, lo + j, lo)
+        blk = bl_ref[slot]
+        k = pl.load(kv_ref, (0, pl.dslice(blk, 1), slice(None), slice(None)))[0]
+        v = pl.load(kv_ref, (1, pl.dslice(blk, 1), slice(None), slice(None)))[0]
+        s = (k.astype(jnp.float32) @ q) * scale  # [block_size]
+        pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+        mask = (pos < seq_len) & valid
+        s = jnp.where(mask, s, _NEG_BIG)
+        m_new = jnp.maximum(m, s.max())
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l * alpha + p.sum()
+        acc_new = acc * alpha + p @ v.astype(jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.float32(_NEG_BIG)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((d,), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, max_blocks_per_seq, body, (m0, l0, acc0))
+    o_ref[0, :] = acc / jnp.maximum(l, 1e-30)
+
+
+def paged_attention(q, kv_cache, block_list, block_offsets, seq_lens, block_size):
+    """BlockList paged attention, one decode step, single head.
+
+    Args:
+      q: [batch, head_dim].
+      kv_cache: [2, num_blocks, block_size, head_dim].
+      block_list: [total_blocks] int32 physical block ids.
+      block_offsets: [batch+1] int32 CSR offsets.
+      seq_lens: [batch] int32 effectual lengths.
+      block_size: static tokens/block (must equal kv_cache.shape[2]).
+
+    Returns:
+      [batch, head_dim] float32 outputs.
+    """
+    batch, head_dim = q.shape
+    assert kv_cache.shape[2] == block_size
+    # Static upper bound on blocks per sequence.
+    max_blocks_per_seq = int(kv_cache.shape[1])
+    kernel = functools.partial(
+        _paged_attn_kernel,
+        block_size=block_size,
+        max_blocks_per_seq=max_blocks_per_seq,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, head_dim), lambda i: (i, 0)),
+            pl.BlockSpec(kv_cache.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(block_list.shape, lambda i: (0,)),
+            pl.BlockSpec(block_offsets.shape, lambda i: (0,)),
+            pl.BlockSpec(seq_lens.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, head_dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, head_dim), jnp.float32),
+        interpret=True,
+    )(q, kv_cache, block_list, block_offsets, seq_lens)
+
+
+def paged_attention_multihead(q, kv_cache, block_list, block_offsets, seq_lens, block_size):
+    """vmap over heads: q [heads, batch, d], kv [heads, 2, nb, bs, d]."""
+    fn = functools.partial(paged_attention, block_size=block_size)
+    return jax.vmap(fn, in_axes=(0, 0, None, None, None))(
+        q, kv_cache, block_list, block_offsets, seq_lens
+    )

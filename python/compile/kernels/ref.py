@@ -1,0 +1,87 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness contracts: pytest (+hypothesis shape/dtype
+sweeps) asserts `kernels.* == ref.*` under `assert_allclose`, which is the
+core correctness signal of the L1 layer.
+"""
+
+import jax.numpy as jnp
+
+
+def add(a, b):
+    """STREAM ADD: c[i] = a[i] + b[i] (paper Algorithm 1)."""
+    return a + b
+
+
+def scale(a, scalar):
+    """STREAM SCALE: b[i] = scalar * a[i]."""
+    return scalar * a
+
+
+def triad(a, b, scalar):
+    """STREAM TRIAD: c[i] = scalar * a[i] + b[i]."""
+    return scalar * a + b
+
+
+def batched_embedding_gather(tables, indices, table_offsets):
+    """FBGEMM-style BatchedTable lookup (paper Fig 14(b)).
+
+    Args:
+      tables: [total_rows, dim] -- all embedding tables stacked row-wise.
+      indices: [n_tables, batch] -- per-table row indices (table-local).
+      table_offsets: [n_tables] -- starting row of each table within
+        `tables` (the BatchedTable trick: one big table + offsets).
+
+    Returns:
+      [n_tables, batch, dim] gathered embedding vectors.
+    """
+    flat = indices + table_offsets[:, None]  # [n_tables, batch] global rows
+    return tables[flat]
+
+
+def paged_attention(q, kv_cache, block_list, block_offsets, seq_lens, block_size):
+    """BlockList-form paged attention for one decode step (Fig 16(b)).
+
+    Single-head reference semantics (callers vmap over heads): for each
+    query i, attend over its `seq_lens[i]` cached tokens, whose KV lives in
+    the physical blocks `block_list[block_offsets[i] : block_offsets[i+1]]`.
+
+    Args:
+      q: [batch, head_dim] query vectors.
+      kv_cache: [2, num_blocks, block_size, head_dim] paged K and V.
+      block_list: [total_blocks] physical block ids (BlockList layout).
+      block_offsets: [batch+1] CSR row offsets into block_list.
+      seq_lens: [batch] effectual KV length per sequence.
+      block_size: tokens per block.
+
+    Returns:
+      [batch, head_dim] attention outputs (float32).
+    """
+    del block_size
+    batch, head_dim = q.shape
+    outs = []
+    for i in range(batch):
+        lo, hi = int(block_offsets[i]), int(block_offsets[i + 1])
+        blocks = block_list[lo:hi]
+        k = kv_cache[0, blocks].reshape(-1, head_dim)  # [nb*bs, d]
+        v = kv_cache[1, blocks].reshape(-1, head_dim)
+        n = int(seq_lens[i])
+        scores = (k[:n].astype(jnp.float32) @ q[i].astype(jnp.float32)) / jnp.sqrt(
+            jnp.float32(head_dim)
+        )
+        p = jnp.exp(scores - scores.max())
+        p = p / p.sum()
+        outs.append(p @ v[:n].astype(jnp.float32))
+    return jnp.stack(outs)
+
+
+def causal_attention(q, k, v):
+    """Causal (prefill) attention reference, single head: [seq, d]."""
+    import jax.numpy as jnp
+    seq, d = q.shape
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) / jnp.sqrt(jnp.float32(d))
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=1, keepdims=True))
+    p = p / p.sum(axis=1, keepdims=True)
+    return p @ v.astype(jnp.float32)

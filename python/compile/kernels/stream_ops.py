@@ -1,0 +1,90 @@
+"""STREAM microbenchmark kernels (ADD / SCALE / TRIAD) as Pallas kernels.
+
+These are the Pallas re-expression of the paper's TPC-C STREAM kernels
+(Algorithm 1 / Fig 2(c)). Hardware adaptation (DESIGN.md §Hardware-
+Adaptation): the TPC's 256-byte access-granularity best practice becomes a
+last-dimension block of 128 lanes; the manual 4x loop unroll that hides
+the TPC's 4-cycle latency becomes a `grid` of row-blocks, each program
+streaming an (8, 128) tile through VMEM.
+
+All kernels run with `interpret=True`: the CPU PJRT client cannot execute
+Mosaic custom-calls (real-TPU lowering), and correctness — checked against
+`ref.py` — is the goal of this path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile shape: 8 sublanes x 128 lanes, the native float32 TPU tile.
+_ROWS = 8
+_LANES = 128
+_TILE = _ROWS * _LANES
+
+
+def _pad_to_tiles(x):
+    """Pad a 1D array to a whole number of (8, 128) tiles; return the 2D
+    view and the original length."""
+    n = x.shape[0]
+    padded = ((n + _TILE - 1) // _TILE) * _TILE
+    x = jnp.pad(x, (0, padded - n))
+    return x.reshape(-1, _LANES), n
+
+
+def _tile_spec():
+    return pl.BlockSpec((_ROWS, _LANES), lambda i: (i, 0))
+
+
+def _run_elementwise(kernel, out_dtype, rows2d, *inputs):
+    grid = (rows2d.shape[0] // _ROWS,)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[_tile_spec() for _ in inputs],
+        out_specs=_tile_spec(),
+        out_shape=jax.ShapeDtypeStruct(rows2d.shape, out_dtype),
+        interpret=True,
+    )(*inputs)
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _scale_kernel(a_ref, o_ref, *, scalar):
+    o_ref[...] = scalar * a_ref[...]
+
+
+def _triad_kernel(a_ref, b_ref, o_ref, *, scalar):
+    # One fused multiply-add per lane — the MAC the TPC issues for TRIAD.
+    o_ref[...] = scalar * a_ref[...] + b_ref[...]
+
+
+def add(a, b):
+    """STREAM ADD over 1D arrays of any length."""
+    assert a.shape == b.shape and a.ndim == 1
+    a2, n = _pad_to_tiles(a)
+    b2, _ = _pad_to_tiles(b)
+    out = _run_elementwise(_add_kernel, a2.dtype, a2, a2, b2)
+    return out.reshape(-1)[:n]
+
+
+def scale(a, scalar):
+    """STREAM SCALE over a 1D array."""
+    assert a.ndim == 1
+    a2, n = _pad_to_tiles(a)
+    kernel = functools.partial(_scale_kernel, scalar=scalar)
+    out = _run_elementwise(kernel, a2.dtype, a2, a2)
+    return out.reshape(-1)[:n]
+
+
+def triad(a, b, scalar):
+    """STREAM TRIAD over 1D arrays."""
+    assert a.shape == b.shape and a.ndim == 1
+    a2, n = _pad_to_tiles(a)
+    b2, _ = _pad_to_tiles(b)
+    kernel = functools.partial(_triad_kernel, scalar=scalar)
+    out = _run_elementwise(kernel, a2.dtype, a2, a2, b2)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,301 @@
+"""L2 JAX models, calling the L1 Pallas kernels.
+
+Two build-time models are lowered to HLO artifacts:
+
+* **Tiny-Llama decoder** — the same architecture family as the paper's
+  Llama-3.1 workloads (RMSNorm, RoPE, GQA attention, SwiGLU MLP), sized to
+  run fast on the CPU PJRT client. Decode attention goes through the
+  `paged_attention` Pallas kernel: the contiguous per-slot KV cache is
+  viewed as one KV block per sequence (block_size = max_seq, identity
+  BlockList), so the serving path exercises the real kernel.
+* **Tiny-DLRM** — embedding bags via the `pooled_embedding_lookup` Pallas
+  kernel + bottom/top MLPs + dot interaction, for the RecSys example.
+
+Weights travel as one flat f32 vector (packing order defined by
+`*_weight_shapes`), so the Rust side never needs to understand the
+pytree.
+"""
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import embedding_gather, flash_prefill, paged_attention
+
+
+# ---------------------------------------------------------------- tiny llama
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyLlamaConfig:
+    vocab: int = 512
+    hidden: int = 256
+    layers: int = 2
+    n_q_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    intermediate: int = 512
+    max_seq: int = 128
+    batch: int = 4          # serving slots (static shape)
+    prompt_pad: int = 32    # prefill artifact prompt padding
+    rope_theta: float = 10000.0
+
+
+def llama_weight_shapes(cfg: TinyLlamaConfig):
+    """Ordered (name, shape) list defining the flat weight packing."""
+    h, q, kv = cfg.hidden, cfg.n_q_heads * cfg.head_dim, cfg.n_kv_heads * cfg.head_dim
+    shapes = [("embed", (cfg.vocab, h))]
+    for l in range(cfg.layers):
+        shapes += [
+            (f"l{l}.norm1", (h,)),
+            (f"l{l}.wq", (h, q)),
+            (f"l{l}.wk", (h, kv)),
+            (f"l{l}.wv", (h, kv)),
+            (f"l{l}.wo", (q, h)),
+            (f"l{l}.norm2", (h,)),
+            (f"l{l}.wgate", (h, cfg.intermediate)),
+            (f"l{l}.wup", (h, cfg.intermediate)),
+            (f"l{l}.wdown", (cfg.intermediate, h)),
+        ]
+    shapes += [("norm_f", (h,))]
+    return shapes
+
+
+def llama_num_weights(cfg: TinyLlamaConfig) -> int:
+    return sum(math.prod(s) for _, s in llama_weight_shapes(cfg))
+
+
+def unpack_weights(flat, shapes):
+    out = {}
+    i = 0
+    for name, shape in shapes:
+        n = math.prod(shape)
+        out[name] = flat[i : i + n].reshape(shape)
+        i += n
+    assert i == flat.shape[0]
+    return out
+
+
+def init_llama_weights(cfg: TinyLlamaConfig, seed: int = 0):
+    """Deterministic random init, returned flat (an AOT artifact of its
+    own so the Rust side never constructs weights)."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in llama_weight_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("norm1", "norm2")) or name == "norm_f":
+            parts.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        else:
+            scale = 1.0 / math.sqrt(shape[0])
+            parts.append((jax.random.normal(sub, shape, jnp.float32) * scale).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def _rmsnorm(x, w):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * w
+
+
+def _rope(x, pos, theta):
+    """Rotary embedding. x: [..., heads, head_dim]; pos: broadcastable."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[..., None, None] * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _kv_shape(cfg: TinyLlamaConfig):
+    return (cfg.layers, 2, cfg.batch, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+
+
+def kv_num_elements(cfg: TinyLlamaConfig) -> int:
+    return math.prod(_kv_shape(cfg))
+
+
+def _attend_decode(q, kv_layer, pos, cfg):
+    """Decode attention via the paged-attention Pallas kernel.
+
+    q: [batch, n_q_heads, head_dim]; kv_layer: [2, batch, n_kv_heads,
+    max_seq, head_dim]; pos: [batch] current position (tokens already in
+    KV *including* the one just written).
+    """
+    b = cfg.batch
+    group = cfg.n_q_heads // cfg.n_kv_heads
+    # View each sequence as ONE KV block: [2, B, S, D] per kv head.
+    # block_list = identity, offsets = 0..B, seq_lens = pos.
+    block_list = jnp.arange(b, dtype=jnp.int32)
+    offsets = jnp.arange(b + 1, dtype=jnp.int32)
+    outs = []
+    for h in range(cfg.n_q_heads):
+        kvh = h // group
+        kv_cache = kv_layer[:, :, kvh]  # [2, B(blocks), S(block), D]
+        out = paged_attention.paged_attention(
+            q[:, h], kv_cache, block_list, offsets, pos, cfg.max_seq
+        )
+        outs.append(out)
+    return jnp.stack(outs, axis=1)  # [B, heads, D]
+
+
+def decode_step(flat_weights, tokens, kv, pos, cfg: TinyLlamaConfig):
+    """One decode step for all slots.
+
+    Args:
+      flat_weights: [num_weights] f32.
+      tokens: [batch] i32 current token per slot.
+      kv: [layers, 2, batch, n_kv_heads, max_seq, head_dim] f32.
+      pos: [batch] i32 position to write (tokens already cached).
+
+    Returns:
+      (logits [batch, vocab], updated kv).
+    """
+    w = unpack_weights(flat_weights, llama_weight_shapes(cfg))
+    x = w["embed"][tokens]  # [B, h]
+    b = cfg.batch
+    posf = pos.astype(jnp.float32)
+    for l in range(cfg.layers):
+        h_in = _rmsnorm(x, w[f"l{l}.norm1"])
+        q = (h_in @ w[f"l{l}.wq"]).reshape(b, cfg.n_q_heads, cfg.head_dim)
+        k = (h_in @ w[f"l{l}.wk"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        v = (h_in @ w[f"l{l}.wv"]).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q, posf, cfg.rope_theta)
+        k = _rope(k, posf, cfg.rope_theta)
+        # Write k, v at pos for each slot.
+        for arr, which in ((k, 0), (v, 1)):
+            def write_one(slot_kv, arr_b, p):
+                # slot_kv: [n_kv, S, D]; arr_b: [n_kv, D]
+                return jax.lax.dynamic_update_slice(
+                    slot_kv, arr_b[:, None, :], (0, p, 0)
+                )
+            updated = jax.vmap(write_one)(kv[l, which], arr, pos)
+            kv = kv.at[l, which].set(updated)
+        attn = _attend_decode(q, kv[l], pos + 1, cfg)  # [B, heads, D]
+        attn = attn.reshape(b, -1) @ w[f"l{l}.wo"]
+        x = x + attn
+        h2 = _rmsnorm(x, w[f"l{l}.norm2"])
+        gate = jax.nn.silu(h2 @ w[f"l{l}.wgate"])
+        up = h2 @ w[f"l{l}.wup"]
+        x = x + (gate * up) @ w[f"l{l}.wdown"]
+    x = _rmsnorm(x, w["norm_f"])
+    logits = x @ w["embed"].T  # tied embedding
+    return logits, kv
+
+
+def prefill(flat_weights, tokens, kv, slot, length, cfg: TinyLlamaConfig):
+    """Process a (padded) prompt into slot `slot`'s KV cache.
+
+    Args:
+      tokens: [prompt_pad] i32 (padded with anything beyond `length`).
+      slot: [1] i32 slot index.
+      length: [1] i32 true prompt length.
+
+    Returns:
+      (logits [vocab] at the last prompt position, updated kv).
+    """
+    w = unpack_weights(flat_weights, llama_weight_shapes(cfg))
+    s = slot[0]
+    n = length[0]
+    x = w["embed"][tokens]  # [P, h]
+    posf = jnp.arange(cfg.prompt_pad, dtype=jnp.float32)
+    for l in range(cfg.layers):
+        h_in = _rmsnorm(x, w[f"l{l}.norm1"])
+        q = (h_in @ w[f"l{l}.wq"]).reshape(cfg.prompt_pad, cfg.n_q_heads, cfg.head_dim)
+        k = (h_in @ w[f"l{l}.wk"]).reshape(cfg.prompt_pad, cfg.n_kv_heads, cfg.head_dim)
+        v = (h_in @ w[f"l{l}.wv"]).reshape(cfg.prompt_pad, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(q, posf, cfg.rope_theta)
+        k = _rope(k, posf, cfg.rope_theta)
+        # Causal attention within the prompt via the flash-prefill
+        # Pallas kernel (one K/V pass, online softmax).
+        rep = cfg.n_q_heads // cfg.n_kv_heads
+        attn = flash_prefill.flash_prefill_multihead(
+            q.transpose(1, 0, 2),
+            jnp.repeat(k, rep, 1).transpose(1, 0, 2),
+            jnp.repeat(v, rep, 1).transpose(1, 0, 2),
+        ).transpose(1, 0, 2)
+        x = x + attn.reshape(cfg.prompt_pad, -1) @ w[f"l{l}.wo"]
+        h2 = _rmsnorm(x, w[f"l{l}.norm2"])
+        gate = jax.nn.silu(h2 @ w[f"l{l}.wgate"])
+        up = h2 @ w[f"l{l}.wup"]
+        x = x + (gate * up) @ w[f"l{l}.wdown"]
+        # Write the prompt's K/V into the slot (positions 0..P-1; junk
+        # beyond `length` is never attended and later overwritten).
+        kv = jax.lax.dynamic_update_slice(
+            kv, k.transpose(1, 0, 2)[None, None, None], (l, 0, s, 0, 0, 0)
+        )
+        kv = jax.lax.dynamic_update_slice(
+            kv, v.transpose(1, 0, 2)[None, None, None], (l, 1, s, 0, 0, 0)
+        )
+    x = _rmsnorm(x, w["norm_f"])
+    logits = x @ w["embed"].T  # [P, vocab]
+    last = jax.lax.dynamic_index_in_dim(logits, n - 1, axis=0, keepdims=False)
+    return last, kv
+
+
+# ------------------------------------------------------------------ tiny dlrm
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyDlrmConfig:
+    tables: int = 4
+    rows_per_table: int = 1000
+    emb_dim: int = 64
+    dense_in: int = 13
+    pooling: int = 4
+    batch: int = 32
+    bottom: tuple = (13, 64, 64)
+    top: tuple = (64 + 4 * 64, 64, 1)
+
+
+def dlrm_weight_shapes(cfg: TinyDlrmConfig):
+    shapes = [("tables", (cfg.tables * cfg.rows_per_table, cfg.emb_dim))]
+    for i in range(len(cfg.bottom) - 1):
+        shapes += [(f"bot{i}.w", (cfg.bottom[i], cfg.bottom[i + 1])), (f"bot{i}.b", (cfg.bottom[i + 1],))]
+    for i in range(len(cfg.top) - 1):
+        shapes += [(f"top{i}.w", (cfg.top[i], cfg.top[i + 1])), (f"top{i}.b", (cfg.top[i + 1],))]
+    return shapes
+
+
+def dlrm_num_weights(cfg: TinyDlrmConfig) -> int:
+    return sum(math.prod(s) for _, s in dlrm_weight_shapes(cfg))
+
+
+def init_dlrm_weights(cfg: TinyDlrmConfig, seed: int = 1):
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in dlrm_weight_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".b"):
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            scale = 1.0 / math.sqrt(shape[0])
+            parts.append((jax.random.normal(sub, shape, jnp.float32) * scale).reshape(-1))
+    return jnp.concatenate(parts)
+
+
+def dlrm_forward(flat_weights, dense, indices, cfg: TinyDlrmConfig):
+    """DLRM forward: embedding bags (Pallas kernel) + MLPs + interaction.
+
+    Args:
+      dense: [batch, dense_in] f32 dense features.
+      indices: [tables, batch, pooling] i32 table-local row ids.
+
+    Returns:
+      [batch, 1] click-probability logits.
+    """
+    w = unpack_weights(flat_weights, dlrm_weight_shapes(cfg))
+    offsets = jnp.arange(cfg.tables, dtype=jnp.int32) * cfg.rows_per_table
+    pooled = embedding_gather.pooled_embedding_lookup(w["tables"], indices, offsets)
+    # pooled: [tables, batch, emb_dim] -> [batch, tables*emb_dim]
+    emb = pooled.transpose(1, 0, 2).reshape(cfg.batch, -1)
+    x = dense
+    for i in range(len(cfg.bottom) - 1):
+        x = jax.nn.relu(x @ w[f"bot{i}.w"] + w[f"bot{i}.b"])
+    x = jnp.concatenate([x, emb], axis=1)
+    for i in range(len(cfg.top) - 1):
+        x = x @ w[f"top{i}.w"] + w[f"top{i}.b"]
+        if i < len(cfg.top) - 2:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,194 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py),
+including hypothesis sweeps over shapes and dtypes — the core correctness
+signal of the kernel layer."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import embedding_gather, paged_attention, ref, stream_ops
+
+F_DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------- STREAM
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scalar=st.floats(min_value=-4, max_value=4, allow_nan=False),
+    dtype_idx=st.integers(min_value=0, max_value=1),
+)
+def test_stream_ops_match_ref(n, seed, scalar, dtype_idx):
+    dtype = F_DTYPES[dtype_idx]
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal(n), dtype)
+    b = jnp.asarray(rng.standard_normal(n), dtype)
+    np.testing.assert_allclose(
+        np.asarray(stream_ops.add(a, b), np.float32),
+        np.asarray(ref.add(a, b), np.float32), **_tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(stream_ops.scale(a, scalar), np.float32),
+        np.asarray(ref.scale(a, scalar), np.float32), **_tol(dtype))
+    np.testing.assert_allclose(
+        np.asarray(stream_ops.triad(a, b, scalar), np.float32),
+        np.asarray(ref.triad(a, b, scalar), np.float32), **_tol(dtype))
+
+
+def test_stream_exact_tile_boundary():
+    for n in [1024, 1023, 1025, 8 * 128]:
+        a = jnp.arange(n, dtype=jnp.float32)
+        b = jnp.ones(n, jnp.float32)
+        np.testing.assert_allclose(stream_ops.add(a, b), np.arange(n) + 1.0)
+
+
+# --------------------------------------------------------------- embedding
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n_tables=st.integers(min_value=1, max_value=5),
+    batch_chunks=st.integers(min_value=1, max_value=6),
+    dim=st.sampled_from([16, 64, 128]),
+    rows=st.integers(min_value=8, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_batched_gather_matches_ref(n_tables, batch_chunks, dim, rows, seed):
+    rng = np.random.default_rng(seed)
+    batch = 4 * batch_chunks
+    tables = jnp.asarray(rng.standard_normal((rows * n_tables, dim)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, rows, (n_tables, batch)), jnp.int32)
+    offs = jnp.arange(n_tables, dtype=jnp.int32) * rows
+    got = embedding_gather.batched_embedding_gather(tables, idx, offs)
+    want = ref.batched_embedding_gather(tables, idx, offs)
+    np.testing.assert_allclose(got, want)
+
+
+def test_pooled_lookup_sums_over_pooling_axis():
+    rng = np.random.default_rng(0)
+    tables = jnp.asarray(rng.standard_normal((50, 32)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 25, (2, 4, 3)), jnp.int32)
+    offs = jnp.array([0, 25], jnp.int32)
+    got = embedding_gather.pooled_embedding_lookup(tables, idx, offs)
+    flat = ref.batched_embedding_gather(tables, idx.reshape(2, 12), offs)
+    want = flat.reshape(2, 4, 3, 32).sum(axis=2)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------- paged attention
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    batch=st.integers(min_value=1, max_value=4),
+    head_dim=st.sampled_from([16, 32, 64]),
+    block_size=st.sampled_from([8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    data=st.data(),
+)
+def test_paged_attention_matches_ref(batch, head_dim, block_size, seed, data):
+    rng = np.random.default_rng(seed)
+    # Random CSR structure: 1..3 blocks per sequence, random physical ids.
+    blocks_per = [data.draw(st.integers(1, 3)) for _ in range(batch)]
+    num_blocks = sum(blocks_per) + 2
+    block_ids, offsets = [], [0]
+    perm = rng.permutation(num_blocks)
+    k = 0
+    for nb in blocks_per:
+        block_ids.extend(perm[k:k + nb])
+        k += nb
+        offsets.append(len(block_ids))
+    seq_lens = [
+        data.draw(st.integers(1, nb * block_size)) for nb in blocks_per
+    ]
+    q = jnp.asarray(rng.standard_normal((batch, head_dim)), jnp.float32)
+    kv = jnp.asarray(rng.standard_normal((2, num_blocks, block_size, head_dim)), jnp.float32)
+    bl = jnp.asarray(block_ids, jnp.int32)
+    off = jnp.asarray(offsets, jnp.int32)
+    lens = jnp.asarray(seq_lens, jnp.int32)
+    got = paged_attention.paged_attention(q, kv, bl, off, lens, block_size)
+    want = ref.paged_attention(q, kv, bl, off, lens, block_size)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_paged_attention_masks_beyond_seq_len():
+    # Poison tokens beyond seq_len with huge values: output must not change.
+    rng = np.random.default_rng(1)
+    bs, nb, d = 8, 2, 16
+    q = jnp.asarray(rng.standard_normal((1, d)), jnp.float32)
+    kv = jnp.asarray(rng.standard_normal((2, nb, bs, d)), jnp.float32)
+    bl = jnp.array([0, 1], jnp.int32)
+    off = jnp.array([0, 2], jnp.int32)
+    lens = jnp.array([10], jnp.int32)
+    base = paged_attention.paged_attention(q, kv, bl, off, lens, bs)
+    poisoned = kv.at[:, 1, 3:, :].set(1e6)  # positions 11.. (beyond len 10)
+    got = paged_attention.paged_attention(q, poisoned, bl, off, lens, bs)
+    np.testing.assert_allclose(got, base, rtol=1e-6, atol=1e-6)
+
+
+def test_paged_attention_multihead_shape():
+    rng = np.random.default_rng(2)
+    heads, batch, d, bs, nb = 3, 2, 16, 8, 4
+    q = jnp.asarray(rng.standard_normal((heads, batch, d)), jnp.float32)
+    kv = jnp.asarray(rng.standard_normal((heads, 2, nb, bs, d)), jnp.float32)
+    bl = jnp.array([0, 1, 2, 3], jnp.int32)
+    off = jnp.array([0, 2, 4], jnp.int32)
+    lens = jnp.array([12, 9], jnp.int32)
+    out = paged_attention.paged_attention_multihead(q, kv, bl, off, lens, bs)
+    assert out.shape == (heads, batch, d)
+    # Head 0 must equal the single-head kernel on its slice.
+    want = paged_attention.paged_attention(q[0], kv[0], bl, off, lens, bs)
+    np.testing.assert_allclose(out[0], want, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------ flash prefill
+
+from compile.kernels import flash_prefill
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seq_blocks=st.integers(min_value=1, max_value=6),
+    head_dim=st.sampled_from([16, 32, 64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_flash_prefill_matches_causal_ref(seq_blocks, head_dim, seed):
+    rng = np.random.default_rng(seed)
+    seq = 16 * seq_blocks
+    q = jnp.asarray(rng.standard_normal((seq, head_dim)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((seq, head_dim)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((seq, head_dim)), jnp.float32)
+    got = flash_prefill.flash_prefill(q, k, v)
+    want = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_flash_prefill_is_causal():
+    # Poisoning FUTURE keys/values must not change earlier outputs.
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    base = flash_prefill.flash_prefill(q, k, v)
+    k2 = k.at[20:].set(1e3)
+    v2 = v.at[20:].set(1e3)
+    got = flash_prefill.flash_prefill(q, k2, v2)
+    np.testing.assert_allclose(got[:20], base[:20], rtol=1e-6, atol=1e-6)
+
+
+def test_flash_prefill_multihead_shape():
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.standard_normal((2, 16, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 16, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 16, 32)), jnp.float32)
+    out = flash_prefill.flash_prefill_multihead(q, k, v)
+    assert out.shape == (2, 16, 32)
+    np.testing.assert_allclose(
+        out[1], flash_prefill.flash_prefill(q[1], k[1], v[1]), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,126 @@
+"""L2 correctness: the tiny-Llama decoder and tiny-DLRM forward — shape
+contracts, prefill/decode consistency, causality, and KV-cache slot
+isolation."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+
+CFG = model.TinyLlamaConfig()
+DCFG = model.TinyDlrmConfig()
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return model.init_llama_weights(CFG)
+
+
+@pytest.fixture(scope="module")
+def dlrm_weights():
+    return model.init_dlrm_weights(DCFG)
+
+
+def zero_kv():
+    return jnp.zeros(
+        (CFG.layers, 2, CFG.batch, CFG.n_kv_heads, CFG.max_seq, CFG.head_dim),
+        jnp.float32,
+    )
+
+
+def test_weight_packing_roundtrip(weights):
+    shapes = model.llama_weight_shapes(CFG)
+    assert weights.shape == (model.llama_num_weights(CFG),)
+    w = model.unpack_weights(weights, shapes)
+    assert w["embed"].shape == (CFG.vocab, CFG.hidden)
+    assert w["l0.wq"].shape == (CFG.hidden, CFG.n_q_heads * CFG.head_dim)
+
+
+def test_decode_step_shapes(weights):
+    toks = jnp.array([1, 2, 3, 4], jnp.int32)
+    logits, kv = model.decode_step(weights, toks, zero_kv(), jnp.zeros(4, jnp.int32), CFG)
+    assert logits.shape == (CFG.batch, CFG.vocab)
+    assert kv.shape == zero_kv().shape
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_prefill_matches_stepwise_decode(weights):
+    """Prefill of a prompt must produce the same last-position logits and
+    KV state as feeding the prompt token by token through decode_step."""
+    prompt = jnp.array([7, 3, 9, 1, 30], jnp.int32)
+    n = len(prompt)
+    padded = jnp.zeros(CFG.prompt_pad, jnp.int32).at[:n].set(prompt)
+    lg_pre, kv_pre = model.prefill(
+        weights, padded, zero_kv(), jnp.array([2], jnp.int32), jnp.array([n], jnp.int32), CFG)
+    kv = zero_kv()
+    pos = jnp.zeros(CFG.batch, jnp.int32)
+    for t in range(n):
+        toks = jnp.zeros(CFG.batch, jnp.int32).at[2].set(prompt[t])
+        lg_dec, kv = model.decode_step(weights, toks, kv, pos, CFG)
+        pos = pos.at[2].add(1)
+    np.testing.assert_allclose(np.asarray(lg_pre), np.asarray(lg_dec[2]), rtol=3e-4, atol=3e-4)
+    # KV of slot 2 over the prompt span must agree too.
+    np.testing.assert_allclose(
+        np.asarray(kv_pre[:, :, 2, :, :n]), np.asarray(kv[:, :, 2, :, :n]),
+        rtol=3e-4, atol=3e-4)
+
+
+def test_slots_are_isolated(weights):
+    """Writing a prompt into slot 0 must not disturb slot 3's KV."""
+    kv0 = zero_kv()
+    marker = kv0.at[:, :, 3].set(42.0)
+    padded = jnp.zeros(CFG.prompt_pad, jnp.int32).at[:4].set(jnp.array([5, 6, 7, 8]))
+    _, kv1 = model.prefill(
+        weights, padded, marker, jnp.array([0], jnp.int32), jnp.array([4], jnp.int32), CFG)
+    np.testing.assert_array_equal(np.asarray(kv1[:, :, 3]), 42.0)
+    assert float(jnp.abs(kv1[:, :, 0, :, :4]).sum()) > 0.0
+
+
+def test_decode_attends_to_history(weights):
+    """The same token must produce different logits under different
+    histories (the KV cache is actually consulted)."""
+    padded_a = jnp.zeros(CFG.prompt_pad, jnp.int32).at[:3].set(jnp.array([1, 2, 3]))
+    padded_b = jnp.zeros(CFG.prompt_pad, jnp.int32).at[:3].set(jnp.array([9, 8, 7]))
+    slot = jnp.array([0], jnp.int32)
+    n = jnp.array([3], jnp.int32)
+    _, kv_a = model.prefill(weights, padded_a, zero_kv(), slot, n, CFG)
+    _, kv_b = model.prefill(weights, padded_b, zero_kv(), slot, n, CFG)
+    toks = jnp.zeros(CFG.batch, jnp.int32).at[0].set(4)
+    pos = jnp.zeros(CFG.batch, jnp.int32).at[0].set(3)
+    lg_a, _ = model.decode_step(weights, toks, kv_a, pos, CFG)
+    lg_b, _ = model.decode_step(weights, toks, kv_b, pos, CFG)
+    assert float(jnp.abs(lg_a[0] - lg_b[0]).max()) > 1e-3
+
+
+def test_prefill_padding_is_ignored(weights):
+    """Junk beyond `length` must not affect the last-position logits."""
+    base = jnp.zeros(CFG.prompt_pad, jnp.int32).at[:3].set(jnp.array([1, 2, 3]))
+    junk = base.at[3:].set(499)
+    slot = jnp.array([1], jnp.int32)
+    n = jnp.array([3], jnp.int32)
+    lg1, _ = model.prefill(weights, base, zero_kv(), slot, n, CFG)
+    lg2, _ = model.prefill(weights, junk, zero_kv(), slot, n, CFG)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), rtol=1e-6, atol=1e-6)
+
+
+def test_dlrm_forward_shapes_and_sensitivity(dlrm_weights):
+    rng = np.random.default_rng(0)
+    dense = jnp.asarray(rng.standard_normal((DCFG.batch, DCFG.dense_in)), jnp.float32)
+    idx = jnp.asarray(
+        rng.integers(0, DCFG.rows_per_table, (DCFG.tables, DCFG.batch, DCFG.pooling)),
+        jnp.int32)
+    out = model.dlrm_forward(dlrm_weights, dense, idx, DCFG)
+    assert out.shape == (DCFG.batch, 1)
+    assert bool(jnp.isfinite(out).all())
+    # Sensitivity to embedding indices.
+    idx2 = (idx + 17) % DCFG.rows_per_table
+    out2 = model.dlrm_forward(dlrm_weights, dense, idx2, DCFG)
+    assert float(jnp.abs(out - out2).max()) > 1e-6
+    # Sensitivity to dense features.
+    out3 = model.dlrm_forward(dlrm_weights, dense + 1.0, idx, DCFG)
+    assert float(jnp.abs(out - out3).max()) > 1e-6
+
+
+def test_dlrm_weight_count(dlrm_weights):
+    assert dlrm_weights.shape == (model.dlrm_num_weights(DCFG),)

@@ -1,0 +1,8 @@
+//! Configuration: static device specifications (Table 1 of the paper) and
+//! run-time experiment/serving configuration loaded from JSON.
+
+pub mod device_specs;
+pub mod serving_config;
+
+pub use device_specs::{DeviceKind, DeviceSpec};
+pub use serving_config::ServingConfig;

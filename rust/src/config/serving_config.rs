@@ -1,0 +1,167 @@
+//! Serving-engine configuration, loadable from JSON so the launcher
+//! (`repro serve --config <file>`) can be driven without recompiling.
+
+use crate::config::DeviceKind;
+use crate::util::json::Json;
+
+/// Configuration for the vLLM-style serving engine.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// Target device for the simulated backend.
+    pub device: DeviceKind,
+    /// Number of devices (tensor parallelism degree).
+    pub tensor_parallel: usize,
+    /// KV-cache block size in tokens (vLLM default 128 on Gaudi, 16 on GPU).
+    pub block_size: usize,
+    /// Total KV blocks available.
+    pub num_blocks: usize,
+    /// Maximum number of sequences decoded per step (Fig 17(d) knob).
+    pub max_decode_batch: usize,
+    /// Maximum tokens scheduled per prefill step.
+    pub max_prefill_tokens: usize,
+    /// Maximum model sequence length.
+    pub max_seq_len: usize,
+    /// Use the BlockList layout (vLLM_opt) instead of zero-padded
+    /// BlockTable (vLLM_base).
+    pub use_block_list: bool,
+    /// Fraction of blocks kept free before admitting new prefills.
+    pub watermark: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            device: DeviceKind::Gaudi2,
+            tensor_parallel: 1,
+            block_size: 128,
+            num_blocks: 4096,
+            max_decode_batch: 64,
+            max_prefill_tokens: 8192,
+            max_seq_len: 4096,
+            use_block_list: true,
+            watermark: 0.01,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn from_json(s: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let d = ServingConfig::default();
+        let get_usize = |key: &str, dflt: usize| -> anyhow::Result<usize> {
+            match j.get(key) {
+                None => Ok(dflt),
+                Some(v) => v.as_usize().ok_or_else(|| anyhow::anyhow!("bad field '{key}'")),
+            }
+        };
+        let cfg = ServingConfig {
+            device: match j.get("device") {
+                None => d.device,
+                Some(v) => {
+                    let name = v.as_str().ok_or_else(|| anyhow::anyhow!("bad 'device'"))?;
+                    DeviceKind::parse(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown device '{name}'"))?
+                }
+            },
+            tensor_parallel: get_usize("tensor_parallel", d.tensor_parallel)?,
+            block_size: get_usize("block_size", d.block_size)?,
+            num_blocks: get_usize("num_blocks", d.num_blocks)?,
+            max_decode_batch: get_usize("max_decode_batch", d.max_decode_batch)?,
+            max_prefill_tokens: get_usize("max_prefill_tokens", d.max_prefill_tokens)?,
+            max_seq_len: get_usize("max_seq_len", d.max_seq_len)?,
+            use_block_list: match j.get("use_block_list") {
+                None => d.use_block_list,
+                Some(v) => v.as_bool().ok_or_else(|| anyhow::anyhow!("bad 'use_block_list'"))?,
+            },
+            watermark: match j.get("watermark") {
+                None => d.watermark,
+                Some(v) => v.as_f64().ok_or_else(|| anyhow::anyhow!("bad 'watermark'"))?,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![
+            (
+                "device",
+                Json::Str(
+                    match self.device {
+                        DeviceKind::Gaudi2 => "gaudi2",
+                        DeviceKind::A100 => "a100",
+                    }
+                    .into(),
+                ),
+            ),
+            ("tensor_parallel", Json::Num(self.tensor_parallel as f64)),
+            ("block_size", Json::Num(self.block_size as f64)),
+            ("num_blocks", Json::Num(self.num_blocks as f64)),
+            ("max_decode_batch", Json::Num(self.max_decode_batch as f64)),
+            ("max_prefill_tokens", Json::Num(self.max_prefill_tokens as f64)),
+            ("max_seq_len", Json::Num(self.max_seq_len as f64)),
+            ("use_block_list", Json::Bool(self.use_block_list)),
+            ("watermark", Json::Num(self.watermark)),
+        ])
+        .dump()
+    }
+
+    /// Basic sanity validation; returns an error naming the bad field.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.block_size == 0 || !self.block_size.is_power_of_two() {
+            anyhow::bail!("block_size must be a nonzero power of two");
+        }
+        if self.num_blocks == 0 {
+            anyhow::bail!("num_blocks must be > 0");
+        }
+        if self.max_decode_batch == 0 {
+            anyhow::bail!("max_decode_batch must be > 0");
+        }
+        if !(0.0..0.5).contains(&self.watermark) {
+            anyhow::bail!("watermark must be in [0, 0.5)");
+        }
+        if ![1, 2, 4, 8].contains(&self.tensor_parallel) {
+            anyhow::bail!("tensor_parallel must be 1, 2, 4 or 8");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ServingConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ServingConfig {
+            max_decode_batch: 128,
+            device: DeviceKind::A100,
+            use_block_list: false,
+            ..Default::default()
+        };
+        let j = c.to_json();
+        let c2 = ServingConfig::from_json(&j).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let c = ServingConfig::from_json(r#"{"max_decode_batch": 32}"#).unwrap();
+        assert_eq!(c.max_decode_batch, 32);
+        assert_eq!(c.block_size, ServingConfig::default().block_size);
+    }
+
+    #[test]
+    fn validation_rejects_bad_fields() {
+        assert!(ServingConfig::from_json(r#"{"block_size": 100}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"tensor_parallel": 3}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"watermark": 0.9}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"device": "tpu9"}"#).is_err());
+        assert!(ServingConfig::from_json("not json").is_err());
+    }
+}

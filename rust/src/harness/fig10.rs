@@ -1,0 +1,59 @@
+//! Fig 10: bus-bandwidth utilization of the six collectives (HCCL vs
+//! NCCL), payloads 2 KB – 32 MB, 2/4/8 participating devices.
+
+use crate::config::DeviceKind;
+use crate::sim::collective::{self, ALL_COLLECTIVES};
+use crate::util::table::{fmt_pct, Report};
+use crate::util::units::{fmt_bytes, KIB, MIB};
+
+pub fn run() -> Vec<Report> {
+    let sizes = [2.0 * KIB, 32.0 * KIB, 512.0 * KIB, 2.0 * MIB, 32.0 * MIB];
+    let mut out = Vec::new();
+    for coll in ALL_COLLECTIVES {
+        let mut r = Report::new(format!("Fig 10: {} bus bandwidth utilization", coll.name()));
+        r.header(&["size", "G-2dev", "G-4dev", "G-8dev", "A-2dev", "A-4dev", "A-8dev"]);
+        for &s in &sizes {
+            let mut row = vec![fmt_bytes(s)];
+            for kind in [DeviceKind::Gaudi2, DeviceKind::A100] {
+                for n in [2usize, 4, 8] {
+                    row.push(fmt_pct(collective::run(kind, coll, n, s).utilization));
+                }
+            }
+            r.row(row);
+        }
+        let g8 = collective::run(DeviceKind::Gaudi2, coll, 8, 32.0 * MIB).utilization;
+        let a8 = collective::run(DeviceKind::A100, coll, 8, 32.0 * MIB).utilization;
+        r.note(format!(
+            "at 8 devices / 32 MiB: Gaudi {} vs A100 {} -> {}",
+            fmt_pct(g8),
+            fmt_pct(a8),
+            if g8 > a8 { "Gaudi wins" } else { "A100 wins" }
+        ));
+        out.push(r);
+    }
+    vec![merge(out)]
+}
+
+/// The paper presents the six collectives as one figure; merge the panels
+/// under one report for `repro run fig10`.
+fn merge(panels: Vec<Report>) -> Report {
+    let mut all = Report::new("Fig 10: collective communication (6 panels)");
+    all.header(&["panel"]);
+    for p in panels {
+        all.row(vec![p.render()]);
+    }
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn six_panels_and_gaudi_wins_five() {
+        let reports = super::run();
+        let text = reports[0].render();
+        let gaudi_wins = text.matches("Gaudi wins").count();
+        let a100_wins = text.matches("A100 wins").count();
+        assert_eq!(gaudi_wins, 5, "{text}");
+        assert_eq!(a100_wins, 1);
+    }
+}

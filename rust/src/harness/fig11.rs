@@ -1,0 +1,71 @@
+//! Fig 11: Gaudi-2 vs A100 for single-device RecSys serving (RM1/RM2):
+//! (a) performance heatmap, (b) energy-efficiency heatmap.
+
+use crate::config::DeviceKind;
+use crate::models::dlrm::{self, DlrmConfig};
+use crate::util::stats::mean;
+use crate::util::table::{fmt_ratio, Report};
+
+pub fn run() -> Vec<Report> {
+    let mut out = Vec::new();
+    for cfg in [DlrmConfig::rm1(), DlrmConfig::rm2()] {
+        let mut perf = Report::new(format!("Fig 11(a): {} speedup (Gaudi-2 over A100)", cfg.name));
+        perf.header(&["batch", "dim32", "dim64", "dim128", "dim256", "dim512"]);
+        let mut energy =
+            Report::new(format!("Fig 11(b): {} energy-efficiency (Gaudi-2 over A100)", cfg.name));
+        energy.header(&["batch", "dim32", "dim64", "dim128", "dim256", "dim512"]);
+        let mut speedups = Vec::new();
+        let mut effs = Vec::new();
+        for &batch in &[256usize, 1024, 4096, 16384] {
+            let mut prow = vec![batch.to_string()];
+            let mut erow = vec![batch.to_string()];
+            for &dim in &[32usize, 64, 128, 256, 512] {
+                let g = dlrm::serve(&cfg, DeviceKind::Gaudi2, batch, dim);
+                let a = dlrm::serve(&cfg, DeviceKind::A100, batch, dim);
+                let s = a.time / g.time;
+                let e = g.samples_per_joule(batch) / a.samples_per_joule(batch);
+                speedups.push(s);
+                effs.push(e);
+                prow.push(fmt_ratio(s));
+                erow.push(fmt_ratio(e));
+            }
+            perf.row(prow);
+            energy.row(erow);
+        }
+        perf.note(format!(
+            "avg speedup {} (paper: {} ~{})",
+            fmt_ratio(mean(&speedups)),
+            cfg.name,
+            if cfg.name == "RM1" { "0.78x" } else { "0.82x" }
+        ));
+        energy.note(format!("avg energy-eff {} (paper: ~0.78x combined)", fmt_ratio(mean(&effs))));
+        out.push(perf);
+        out.push(energy);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn four_heatmaps() {
+        let reports = super::run();
+        assert_eq!(reports.len(), 4);
+        // Every heatmap is 4 batch rows x 5 dim cols.
+        for r in &reports {
+            assert_eq!(r.num_rows(), 4);
+        }
+    }
+
+    #[test]
+    fn gaudi_wins_somewhere_and_loses_overall() {
+        let text: String = super::run().iter().map(|r| r.render()).collect();
+        // Wide-vector large-batch cells exceed 1x; notes show a <1x average.
+        assert!(text.contains("avg speedup 0."), "{text}");
+        let has_win = text
+            .lines()
+            .filter(|l| l.contains('x') && !l.contains("avg"))
+            .any(|l| l.split_whitespace().skip(1).any(|c| c.starts_with('1') && c.ends_with('x')));
+        assert!(has_win, "expected at least one >1x cell\n{text}");
+    }
+}

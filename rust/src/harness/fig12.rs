@@ -1,0 +1,95 @@
+//! Fig 12: (a) Gaudi-2 speedup over A100 serving Llama-3.1-8B (single
+//! device) and 70B (2/4/8-way TP); (b) prefill/decode latency breakdown.
+
+use crate::config::DeviceKind;
+use crate::models::llama::{self, LlamaConfig};
+use crate::util::stats::mean;
+use crate::util::table::{fmt_ratio, Report};
+use crate::util::units::fmt_time;
+
+const BATCHES: [usize; 3] = [4, 16, 64];
+const OUTPUTS: [usize; 4] = [25, 100, 200, 400];
+const INPUT: usize = 100;
+
+fn speedup_heatmap(cfg: &LlamaConfig, tp: usize) -> (Report, f64) {
+    let title = if tp == 1 {
+        format!("Fig 12(a): {} speedup, single device", cfg.name)
+    } else {
+        format!("Fig 12(a): {} speedup, {tp} devices (TP)", cfg.name)
+    };
+    let mut r = Report::new(title);
+    let mut header = vec!["batch".to_string()];
+    header.extend(OUTPUTS.iter().map(|o| format!("out{o}")));
+    r.header(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut all = Vec::new();
+    for &b in &BATCHES {
+        let mut row = vec![b.to_string()];
+        for &o in &OUTPUTS {
+            let g = llama::serve_fixed(cfg, DeviceKind::Gaudi2, b, INPUT, o, tp);
+            let a = llama::serve_fixed(cfg, DeviceKind::A100, b, INPUT, o, tp);
+            let s = a.total_time() / g.total_time();
+            all.push(s);
+            row.push(fmt_ratio(s));
+        }
+        r.row(row);
+    }
+    let avg = mean(&all);
+    r.note(format!("avg {}", fmt_ratio(avg)));
+    (r, avg)
+}
+
+pub fn run() -> Vec<Report> {
+    let cfg8 = LlamaConfig::llama31_8b();
+    let cfg70 = LlamaConfig::llama31_70b();
+    let mut out = Vec::new();
+    let (r, _) = speedup_heatmap(&cfg8, 1);
+    out.push(r);
+    for tp in [2usize, 4, 8] {
+        let (r, _) = speedup_heatmap(&cfg70, tp);
+        out.push(r);
+    }
+
+    // (b) latency breakdown, batch 64.
+    let mut br = Report::new("Fig 12(b): prefill/decode latency breakdown (8B, batch 64, Gaudi-2)");
+    br.header(&["in len", "out len", "prefill", "decode", "prefill share"]);
+    for &(i, o) in
+        &[(100usize, 25usize), (100, 100), (100, 400), (400, 100), (1600, 100), (6400, 100)]
+    {
+        let c = llama::serve_fixed(&cfg8, DeviceKind::Gaudi2, 64, i, o, 1);
+        br.row(vec![
+            i.to_string(),
+            o.to_string(),
+            fmt_time(c.prefill_time),
+            fmt_time(c.decode_time),
+            format!("{:.0}%", 100.0 * c.prefill_time / c.total_time()),
+        ]);
+    }
+    br.note("paper: decode dominates as output grows; prefill share rises with input length");
+    out.push(br);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::llama::LlamaConfig;
+
+    #[test]
+    fn single_device_avg_near_paper() {
+        let (_, avg) = speedup_heatmap(&LlamaConfig::llama31_8b(), 1);
+        assert!((avg - 1.47).abs() < 0.2, "avg {avg}");
+    }
+
+    #[test]
+    fn speedup_grows_with_tp() {
+        let cfg = LlamaConfig::llama31_70b();
+        let (_, a2) = speedup_heatmap(&cfg, 2);
+        let (_, a8) = speedup_heatmap(&cfg, 8);
+        assert!(a8 > a2, "tp8 {a8} vs tp2 {a2}");
+    }
+
+    #[test]
+    fn five_reports() {
+        assert_eq!(run().len(), 5);
+    }
+}

@@ -1,0 +1,71 @@
+//! Fig 13: energy-efficiency improvement of Gaudi-2 over A100 for LLM
+//! serving (tokens per joule), single device (8B) and TP 2/4/8 (70B).
+
+use crate::config::DeviceKind;
+use crate::models::llama::{self, LlamaConfig};
+use crate::util::stats::mean;
+use crate::util::table::{fmt_ratio, Report};
+
+const BATCHES: [usize; 3] = [4, 16, 64];
+const OUTPUTS: [usize; 4] = [25, 100, 200, 400];
+const INPUT: usize = 100;
+
+fn energy_heatmap(cfg: &LlamaConfig, tp: usize) -> (Report, f64, f64) {
+    let title = if tp == 1 {
+        format!("Fig 13: {} energy-efficiency, single device", cfg.name)
+    } else {
+        format!("Fig 13: {} energy-efficiency, {tp} devices", cfg.name)
+    };
+    let mut r = Report::new(title);
+    let mut header = vec!["batch".to_string()];
+    header.extend(OUTPUTS.iter().map(|o| format!("out{o}")));
+    r.header(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut effs = Vec::new();
+    let mut powers = Vec::new();
+    for &b in &BATCHES {
+        let mut row = vec![b.to_string()];
+        for &o in &OUTPUTS {
+            let g = llama::serve_fixed(cfg, DeviceKind::Gaudi2, b, INPUT, o, tp);
+            let a = llama::serve_fixed(cfg, DeviceKind::A100, b, INPUT, o, tp);
+            let e = g.tokens_per_joule(b, o) / a.tokens_per_joule(b, o);
+            effs.push(e);
+            powers.push(g.avg_power / a.avg_power);
+            row.push(fmt_ratio(e));
+        }
+        r.row(row);
+    }
+    let avg = mean(&effs);
+    let pw = mean(&powers);
+    r.note(format!("avg energy-eff {}, avg power ratio {}", fmt_ratio(avg), fmt_ratio(pw)));
+    (r, avg, pw)
+}
+
+pub fn run() -> Vec<Report> {
+    let mut out = Vec::new();
+    let (r, _, _) = energy_heatmap(&LlamaConfig::llama31_8b(), 1);
+    out.push(r);
+    for tp in [2usize, 4, 8] {
+        let (r, _, _) = energy_heatmap(&LlamaConfig::llama31_70b(), tp);
+        out.push(r);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_device_eff_near_paper() {
+        // Paper: 1.48x average for single-device 8B serving.
+        let (_, avg, _) = energy_heatmap(&LlamaConfig::llama31_8b(), 1);
+        assert!((avg - 1.48).abs() < 0.3, "avg {avg}");
+    }
+
+    #[test]
+    fn multi_device_power_below_a100() {
+        // Paper: Gaudi draws ~88% of A100's power at multi-device.
+        let (_, _, pw) = energy_heatmap(&LlamaConfig::llama31_70b(), 8);
+        assert!((pw - 0.88).abs() < 0.15, "power ratio {pw}");
+    }
+}

@@ -1,0 +1,81 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation section (`repro run <exp>`, `repro list`). Each module
+//! returns `Report`s — the same rows/series the paper plots — rendered by
+//! `util::table`.
+
+pub mod ablations;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig13;
+pub mod fig15;
+pub mod fig17;
+pub mod fig4;
+pub mod fig5;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+use crate::util::table::Report;
+
+/// A runnable experiment (one paper table/figure).
+pub struct Experiment {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub run: fn() -> Vec<Report>,
+}
+
+/// All experiments, in paper order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment { id: "table1", title: "Table 1: A100 vs Gaudi-2 specification ratios", run: table1::run },
+        Experiment { id: "fig4", title: "Fig 4: GEMM roofline (achieved TFLOPS, BF16)", run: fig4::run },
+        Experiment { id: "fig5", title: "Fig 5: GEMM compute utilization heatmaps", run: fig5::run },
+        Experiment { id: "fig7", title: "Fig 7: MME geometry configurability", run: fig7::run },
+        Experiment { id: "fig8", title: "Fig 8: STREAM microbenchmarks on TPC", run: fig8::run },
+        Experiment { id: "fig9", title: "Fig 9: vector gather/scatter bandwidth utilization", run: fig9::run },
+        Experiment { id: "fig10", title: "Fig 10: collective communication bus bandwidth", run: fig10::run },
+        Experiment { id: "fig11", title: "Fig 11: RecSys (RM1/RM2) speedup + energy", run: fig11::run },
+        Experiment { id: "fig12", title: "Fig 12: LLM serving speedup + latency breakdown", run: fig12::run },
+        Experiment { id: "fig13", title: "Fig 13: LLM serving energy efficiency", run: fig13::run },
+        Experiment { id: "fig15", title: "Fig 15: embedding lookup operators (DLRM case study)", run: fig15::run },
+        Experiment { id: "fig17", title: "Fig 17: vLLM PagedAttention case study", run: fig17::run },
+        Experiment { id: "abl-mme", title: "Ablation: MME reconfigurability", run: ablations::mme_reconfig },
+        Experiment { id: "abl-watermark", title: "Ablation: KV watermark vs preemptions", run: ablations::watermark_sweep },
+        Experiment { id: "ext-multi-recsys", title: "Extension: multi-device RecSys serving", run: ablations::multi_recsys },
+        Experiment { id: "ext-training", title: "Extension: training-step comparison", run: ablations::training },
+        Experiment { id: "ext-gaudi3", title: "Extension: Gaudi-3 projection", run: ablations::gaudi3_projection },
+    ]
+}
+
+/// Run one experiment by id; returns its reports or None if unknown.
+pub fn run_experiment(id: &str) -> Option<Vec<Report>> {
+    registry().into_iter().find(|e| e.id == id).map(|e| (e.run)())
+}
+
+/// Run everything (the `repro run all` path).
+pub fn run_all() -> Vec<Report> {
+    registry().into_iter().flat_map(|e| (e.run)()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_table_and_figure() {
+        let ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
+        for required in [
+            "table1", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+            "fig13", "fig15", "fig17",
+        ] {
+            assert!(ids.contains(&required), "missing {required}");
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_is_none() {
+        assert!(run_experiment("fig99").is_none());
+    }
+}

@@ -1,0 +1,42 @@
+//! Table 1: NVIDIA A100 vs Intel Gaudi-2 specification comparison.
+
+use crate::config::DeviceSpec;
+use crate::util::table::{fmt3, Report};
+use crate::util::units::{GB, TB, TFLOPS};
+
+pub fn run() -> Vec<Report> {
+    let g = DeviceSpec::gaudi2();
+    let a = DeviceSpec::a100();
+    let mut r = Report::new("Table 1: A100 vs Gaudi-2");
+    r.header(&["metric", "A100", "Gaudi-2", "ratio"]);
+    let mut row = |name: &str, av: f64, gv: f64, unit: &str| {
+        r.row(vec![
+            name.to_string(),
+            format!("{} {unit}", fmt3(av)),
+            format!("{} {unit}", fmt3(gv)),
+            format!("{:.1}x", gv / av),
+        ]);
+    };
+    row("Matrix TFLOPS (BF16)", a.matrix_tflops / TFLOPS, g.matrix_tflops / TFLOPS, "TF");
+    row("Vector TFLOPS (BF16)", a.vector_tflops / TFLOPS, g.vector_tflops / TFLOPS, "TF");
+    row("HBM capacity", a.hbm_capacity / GB, g.hbm_capacity / GB, "GB");
+    row("HBM bandwidth", a.hbm_bandwidth / TB, g.hbm_bandwidth / TB, "TB/s");
+    row("SRAM capacity", a.sram_bytes / 1e6, g.sram_bytes / 1e6, "MB");
+    row("Comm bandwidth", a.comm_bandwidth / GB, g.comm_bandwidth / GB, "GB/s");
+    row("Power (TDP)", a.tdp_watts, g.tdp_watts, "W");
+    r.note("paper Table 1 ratios: 1.4x / 0.3x / 1.2x / 1.2x / 1.2x / 1.0x / 1.5x");
+    vec![r]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_all_rows() {
+        let reports = super::run();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].num_rows(), 7);
+        let text = reports[0].render();
+        assert!(text.contains("1.4x"));
+        assert!(text.contains("1.5x"));
+    }
+}

@@ -1,0 +1,39 @@
+//! # cuda-myth — reproduction of "Debunking the CUDA Myth Towards GPU-based AI Systems"
+//!
+//! This crate reproduces the CS.DC 2024 characterization of Intel's Gaudi-2
+//! NPU against NVIDIA's A100 GPU for AI model serving. Since neither device
+//! is available in this environment, the hardware is replaced by calibrated
+//! architectural simulators (see `DESIGN.md` §1 for the substitution table):
+//!
+//! * [`sim`] — device-level models: the reconfigurable MME systolic array,
+//!   VLIW TPC pipeline, A100 tensor cores with wave quantization, HBM access
+//!   granularity (256 B vs 32 B sectors), P2P-mesh vs switched interconnect,
+//!   collective-communication algorithms, activity-based power, and the
+//!   Gaudi graph-compiler pipelining model.
+//! * [`ops`] — operator-level models composed from `sim`: GEMM, STREAM,
+//!   gather/scatter, FBGEMM-style embedding lookups (SingleTable vs
+//!   BatchedTable), and PagedAttention (BlockTable vs BlockList).
+//! * [`models`] — end-to-end workload cost models: DLRM-DCNv2 (RM1/RM2) and
+//!   Llama-3.1 (8B/70B) with tensor parallelism.
+//! * [`serving`] — the L3 coordination contribution: a vLLM-style serving
+//!   engine (router, continuous batcher, paged KV-cache block manager)
+//!   that drives either the simulators or real PJRT executables.
+//! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, lowered at
+//!   build time by `python/compile/aot.py`) and executes them on the PJRT
+//!   CPU client. Python is never on the request path.
+//! * [`harness`] — regenerates every table and figure in the paper's
+//!   evaluation section (`repro run <exp>`).
+//! * [`workload`] — synthetic workload generators (fixed-length sweeps,
+//!   Dynamic-Sonnet-like variable-length traces, Zipf embedding indices).
+
+pub mod config;
+pub mod harness;
+pub mod models;
+pub mod ops;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use config::device_specs::{DeviceKind, DeviceSpec};

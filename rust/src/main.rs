@@ -1,0 +1,157 @@
+//! `repro` — the leader entrypoint / CLI.
+//!
+//! ```text
+//! repro list                       # show every reproducible table/figure
+//! repro run <exp|all> [--csv]      # regenerate a paper table/figure
+//! repro serve [--config f.json] [--requests N] [--rate R]
+//!                                  # run the vLLM-style serving engine
+//!                                  # (simulated backend) on a
+//!                                  # Dynamic-Sonnet-like workload
+//! repro real-serve [--artifacts d] # serve the REAL tiny-Llama artifacts
+//!                                  # through PJRT (needs `make artifacts`)
+//! ```
+
+use cuda_myth::config::ServingConfig;
+use cuda_myth::harness;
+use cuda_myth::models::llama::LlamaConfig;
+use cuda_myth::serving::engine::{Engine, SimBackend};
+use cuda_myth::serving::real_engine::PjrtLlmEngine;
+use cuda_myth::serving::request::Request;
+use cuda_myth::workload::DynamicSonnet;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("list") => cmd_list(),
+        Some("run") => cmd_run(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("real-serve") => cmd_real_serve(&args[1..]),
+        _ => {
+            eprintln!("usage: repro <list|run <exp|all> [--csv]|serve [opts]|real-serve [opts]>");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_list() -> i32 {
+    println!("experiments (repro run <id>):");
+    for e in harness::registry() {
+        println!("  {:8} {}", e.id, e.title);
+    }
+    0
+}
+
+fn cmd_run(args: &[String]) -> i32 {
+    let Some(id) = args.first() else {
+        eprintln!("usage: repro run <exp|all> [--csv]");
+        return 2;
+    };
+    let csv = args.iter().any(|a| a == "--csv");
+    let reports = if id == "all" {
+        harness::run_all()
+    } else {
+        match harness::run_experiment(id) {
+            Some(r) => r,
+            None => {
+                eprintln!("unknown experiment '{id}' (see `repro list`)");
+                return 2;
+            }
+        }
+    };
+    for r in reports {
+        if csv {
+            println!("# {}", r.title());
+            print!("{}", r.to_csv());
+        } else {
+            r.print();
+        }
+    }
+    0
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cfg = match flag_value(args, "--config") {
+        Some(path) => match std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .and_then(|s| ServingConfig::from_json(&s))
+        {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        },
+        None => ServingConfig { num_blocks: 8192, ..Default::default() },
+    };
+    let n: usize = flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let rate: f64 =
+        flag_value(args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(f64::INFINITY);
+    println!("serving config: {}", cfg.to_json());
+    let backend = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
+    let mut engine = Engine::new(cfg, backend);
+    for req in DynamicSonnet::default().generate(n, rate, 7) {
+        engine.submit(req);
+    }
+    let s = engine.run_to_completion();
+    println!(
+        "served {} requests in {:.2}s (simulated): {:.1} tok/s, mean TTFT {:.1} ms, \
+         mean TPOT {:.2} ms, p99 TTFT {:.1} ms",
+        s.requests,
+        engine.clock(),
+        s.throughput_tps,
+        s.mean_ttft * 1e3,
+        s.mean_tpot * 1e3,
+        s.p99_ttft * 1e3,
+    );
+    0
+}
+
+fn cmd_real_serve(args: &[String]) -> i32 {
+    let dir = flag_value(args, "--artifacts").unwrap_or("artifacts").to_string();
+    let n: usize = flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let mut engine = match PjrtLlmEngine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("failed to load artifacts from '{dir}': {e:#}");
+            return 1;
+        }
+    };
+    let dims = engine.dims();
+    println!(
+        "loaded tiny-Llama artifacts: {} slots, max_seq {}, vocab {}",
+        dims.batch_slots, dims.max_seq, dims.vocab
+    );
+    for i in 0..n as u64 {
+        let plen = 4 + (i as usize % 5);
+        let prompt: Vec<i32> = (0..plen as i32).map(|t| (17 * t + i as i32 * 3) % 100).collect();
+        let out_len = 8 + (i as usize % 8);
+        if let Err(e) = engine.submit(Request::new(i, plen, out_len, 0.0), prompt) {
+            eprintln!("submit failed: {e:#}");
+            return 1;
+        }
+    }
+    match engine.run_to_completion() {
+        Ok(s) => {
+            println!(
+                "served {} requests (REAL PJRT numerics): {:.1} tok/s, mean TTFT {:.1} ms, \
+                 mean TPOT {:.1} ms, {} decode steps, {} tokens",
+                s.requests,
+                s.throughput_tps,
+                s.mean_ttft * 1e3,
+                s.mean_tpot * 1e3,
+                engine.steps,
+                engine.tokens_generated
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("serving failed: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Llama training-step cost model — the paper's stated immediate future
+//! work ("Analyzing Gaudi's competitive edge against NVIDIA GPUs in
+//! training scenarios is part of our immediate future work").
+//!
+//! Model: synchronous data-parallel (optionally tensor-parallel) training.
+//! Per step: forward = prefill-style GEMMs over the tokens, backward ≈ 2×
+//! forward FLOPs, plus a gradient AllReduce of the full parameter set
+//! across data-parallel peers (overlapped with backward up to the
+//! bandwidth bound). Training is compute-bound at realistic batch sizes,
+//! so Gaudi's GEMM advantage carries over — but the P2P mesh taxes the
+//! gradient AllReduce at small device counts, mirroring Fig 10.
+
+use crate::config::DeviceKind;
+use crate::models::llama::LlamaConfig;
+use crate::sim::collective;
+use crate::sim::device::Device;
+use crate::sim::graph_compiler;
+use crate::sim::Dtype;
+
+/// One training step's cost.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainStepCost {
+    pub compute_time: f64,
+    pub allreduce_time: f64,
+    /// Wall time with compute/communication overlap.
+    pub step_time: f64,
+    /// Tokens processed per second per device.
+    pub tokens_per_sec_per_device: f64,
+}
+
+/// Cost of one synchronous training step.
+///
+/// * `per_device_batch` sequences of `seq_len` tokens per device;
+/// * `dp` data-parallel replicas within the 8-device node (gradients
+///   all-reduced across them).
+pub fn train_step(
+    cfg: &LlamaConfig,
+    kind: DeviceKind,
+    per_device_batch: usize,
+    seq_len: usize,
+    dp: usize,
+) -> TrainStepCost {
+    assert!((1..=8).contains(&dp));
+    let dev = Device::new(kind);
+    let tokens = per_device_batch * seq_len;
+    let h = cfg.hidden;
+    let q = cfg.n_q_heads * cfg.head_dim;
+    let kv = cfg.n_kv_heads * cfg.head_dim;
+
+    // Forward GEMM time per layer (same shapes as serving prefill).
+    let fwd_layer = dev.gemm(tokens, h, q + 2 * kv, Dtype::Bf16).time
+        + dev.gemm(tokens, q, h, Dtype::Bf16).time
+        + dev.gemm(tokens, h, 2 * cfg.intermediate, Dtype::Bf16).time
+        + dev.gemm(tokens, cfg.intermediate, h, Dtype::Bf16).time
+        + crate::ops::attention::prefill_attention_time(
+            &dev,
+            per_device_batch,
+            seq_len,
+            cfg.n_q_heads,
+            cfg.head_dim,
+        );
+    // Backward: dgrad + wgrad ≈ 2× forward GEMM work.
+    let compute = cfg.layers as f64 * fwd_layer * 3.0
+        + dev.gemm(per_device_batch, h, cfg.vocab, Dtype::Bf16).time * 3.0;
+
+    // Gradient AllReduce of all parameters (BF16 grads).
+    let allreduce = if dp > 1 {
+        collective::allreduce_time(kind, dp, cfg.weight_bytes())
+    } else {
+        0.0
+    };
+    // Backward/communication overlap: the graph compiler (or NCCL stream)
+    // pipelines per-layer gradient buckets behind remaining backward work.
+    let overlapped = graph_compiler::pipeline2(
+        &dev.spec,
+        compute * 2.0 / 3.0, // backward portion
+        allreduce,
+        cfg.weight_bytes(),
+        true,
+    );
+    let step_time = compute / 3.0 + overlapped.time;
+    TrainStepCost {
+        compute_time: compute,
+        allreduce_time: allreduce,
+        step_time,
+        tokens_per_sec_per_device: tokens as f64 / step_time,
+    }
+}
+
+/// Gaudi-2 / A100 training-throughput ratio at a configuration.
+pub fn speedup(cfg: &LlamaConfig, per_device_batch: usize, seq_len: usize, dp: usize) -> f64 {
+    let g = train_step(cfg, DeviceKind::Gaudi2, per_device_batch, seq_len, dp);
+    let a = train_step(cfg, DeviceKind::A100, per_device_batch, seq_len, dp);
+    g.tokens_per_sec_per_device / a.tokens_per_sec_per_device
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn training_is_compute_bound_and_gaudi_wins() {
+        // Paper conjecture: Gaudi's GEMM advantage should carry to
+        // training. At realistic batch (8 x 4096 tokens) the step is
+        // compute-bound and the speedup tracks the MME advantage (~1.4-1.7).
+        let cfg = LlamaConfig::llama31_8b();
+        let s = speedup(&cfg, 8, 4096, 8);
+        assert!(s > 1.2 && s < 1.8, "training speedup {s}");
+        let c = train_step(&cfg, DeviceKind::Gaudi2, 8, 4096, 8);
+        assert!(c.compute_time > 2.0 * c.allreduce_time, "compute-bound");
+    }
+
+    #[test]
+    fn gradient_allreduce_hurts_small_dp_on_gaudi() {
+        // At dp=2 the Gaudi mesh gives 1/7 of its fabric: its advantage
+        // shrinks relative to dp=8 (the paper's Fig-10 mechanism).
+        let cfg = LlamaConfig::llama31_8b();
+        let s2 = speedup(&cfg, 2, 1024, 2);
+        let s8 = speedup(&cfg, 2, 1024, 8);
+        assert!(s8 > s2, "dp8 {s8} should beat dp2 {s2}");
+    }
+
+    #[test]
+    fn backward_is_twice_forward() {
+        let cfg = LlamaConfig::llama31_8b();
+        let c = train_step(&cfg, DeviceKind::A100, 4, 2048, 1);
+        assert_eq!(c.allreduce_time, 0.0);
+        assert!(c.step_time <= c.compute_time + 1e-12);
+        assert!(c.tokens_per_sec_per_device > 0.0);
+    }
+
+    #[test]
+    fn overlap_hides_communication_at_scale() {
+        let cfg = LlamaConfig::llama31_70b();
+        let c = train_step(&cfg, DeviceKind::Gaudi2, 2, 4096, 8);
+        // Step time is well below compute + allreduce (overlap works).
+        assert!(c.step_time < c.compute_time + 0.9 * c.allreduce_time);
+    }
+}

@@ -1,0 +1,7 @@
+//! End-to-end workload models with the paper's exact configurations
+//! (Table 3): DLRM-DCNv2 (RM1/RM2) and Llama-3.1 (8B/70B).
+
+pub mod dlrm;
+pub mod dlrm_multi;
+pub mod llama;
+pub mod llama_training;

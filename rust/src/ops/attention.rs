@@ -1,0 +1,320 @@
+//! Attention operators: flash-style prefill attention and the three
+//! PagedAttention implementations of the §4.2 vLLM case study (Fig 16/17).
+//!
+//! * `A100Paged` — vLLM's fused CUDA PagedAttention kernel: one pass over
+//!   the KV cache at near-streaming bandwidth.
+//! * `GaudiVllmBase` — the baseline Gaudi vLLM fork: a zero-padded 2D
+//!   `BlockTable` drives a fine-grained TPC gather of *every* table entry
+//!   (including padding), the gathered KV is written back to a contiguous
+//!   HBM region (the shapes are bucketed to the model's max length to
+//!   avoid graph recompilation), and only then FusedSDPA runs — no
+//!   MME/TPC pipelining is possible across the contiguous barrier, and
+//!   each step pays per-block dispatch plus dynamic-shape fallback costs.
+//! * `GaudiVllmOpt` — the paper's optimization: a flat `BlockList` of only
+//!   the effectual block indices; the TPC gather and the MME batched GEMM
+//!   are sliced by the graph compiler and pipelined through SRAM. KV still
+//!   crosses the pins twice (QK^T and PV passes — Gaudi cannot fuse a
+//!   FlashAttention-style single pass), which is the remaining ~2.2× gap
+//!   vs the A100 kernel (Key Takeaway #7).
+
+use crate::config::{DeviceKind, DeviceSpec};
+use crate::sim::device::Device;
+use crate::sim::graph_compiler;
+use crate::sim::Dtype;
+
+/// Shape of one paged-attention execution (decode step, per layer).
+#[derive(Debug, Clone, Copy)]
+pub struct PagedAttnWork {
+    pub batch: usize,
+    /// Effectual KV length per sequence (tokens).
+    pub kv_len: usize,
+    /// Padded BlockTable length (tokens); >= kv_len. The zero-padding
+    /// fraction of Fig 17(b) is `1 - kv_len/padded_len`.
+    pub padded_len: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    /// KV-cache block size in tokens.
+    pub block_size: usize,
+}
+
+impl PagedAttnWork {
+    /// Llama-3.1-8B attention geometry at a given batch/length.
+    pub fn llama8b(batch: usize, kv_len: usize) -> Self {
+        PagedAttnWork {
+            batch,
+            kv_len,
+            padded_len: kv_len,
+            n_q_heads: 32,
+            n_kv_heads: 8,
+            head_dim: 128,
+            block_size: 128,
+        }
+    }
+
+    pub fn with_padding(mut self, zero_fraction: f64) -> Self {
+        assert!((0.0..1.0).contains(&zero_fraction));
+        self.padded_len = ((self.kv_len as f64 / (1.0 - zero_fraction)).round() as usize)
+            .max(self.kv_len);
+        self
+    }
+
+    /// KV bytes per sequence-token (K + V, all kv heads), BF16.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_kv_heads as f64 * self.head_dim as f64 * Dtype::Bf16.bytes()
+    }
+
+    /// Effectual KV-cache bytes read by a correct implementation.
+    pub fn kv_bytes(&self) -> f64 {
+        self.batch as f64 * self.kv_len as f64 * self.kv_bytes_per_token()
+    }
+
+    /// Padded KV bytes (what vLLM_base actually touches).
+    pub fn padded_kv_bytes(&self) -> f64 {
+        self.batch as f64 * self.padded_len as f64 * self.kv_bytes_per_token()
+    }
+
+    /// Attention FLOPs for one decode step (QK^T + PV).
+    pub fn flops(&self) -> f64 {
+        2.0 * 2.0
+            * self.batch as f64
+            * self.n_q_heads as f64
+            * self.kv_len as f64
+            * self.head_dim as f64
+    }
+}
+
+/// Which PagedAttention implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PagedAttnImpl {
+    GaudiVllmBase,
+    GaudiVllmOpt,
+    A100Paged,
+}
+
+impl PagedAttnImpl {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PagedAttnImpl::GaudiVllmBase => "vLLM_base(Gaudi)",
+            PagedAttnImpl::GaudiVllmOpt => "vLLM_opt(Gaudi)",
+            PagedAttnImpl::A100Paged => "vLLM(A100)",
+        }
+    }
+
+    pub fn device(&self) -> DeviceKind {
+        match self {
+            PagedAttnImpl::A100Paged => DeviceKind::A100,
+            _ => DeviceKind::Gaudi2,
+        }
+    }
+}
+
+// --- Calibrated efficiency constants (see module docs for mechanisms) ---
+
+/// vLLM_base's BlockTable gather: per-head fine-grained index_select-style
+/// TPC processing, SDK-operator quality.
+const BASE_GATHER_EFF: f64 = 0.14;
+/// Streaming efficiency of the contiguous writeback + FusedSDPA reads.
+const STREAM_EFF: f64 = 0.82;
+/// vLLM_base dispatches TPC gather work in 8-block slices.
+const BASE_BLOCKS_PER_DISPATCH: f64 = 8.0;
+const BASE_DISPATCH_OVERHEAD: f64 = 3e-6;
+/// Dynamic-shape handling cost per step (bucketing miss / partial graph
+/// replay) in the baseline fork.
+const BASE_STEP_OVERHEAD: f64 = 180e-6;
+/// vLLM_base buckets the FusedSDPA shapes to the model max length.
+const BASE_BUCKET_LEN: usize = 4096;
+/// vLLM_opt's BlockList gather efficiency (block-granular random reads).
+const OPT_GATHER_EFF: f64 = 0.60;
+/// KV crosses HBM twice on Gaudi (QK^T pass + PV pass; no flash fusion).
+const OPT_KV_PASSES: f64 = 2.0;
+/// A100 fused PagedAttention kernel streams KV once.
+const A100_KV_EFF: f64 = 0.88;
+
+/// Result of a paged-attention execution.
+#[derive(Debug, Clone, Copy)]
+pub struct PagedAttnResult {
+    pub time: f64,
+    /// Output tokens per second for this step's batch.
+    pub tokens_per_sec: f64,
+    /// HBM bytes actually moved (diagnostic).
+    pub hbm_traffic: f64,
+}
+
+/// Model one PagedAttention decode step (single layer granularity — the
+/// model layer multiplies by layer count).
+pub fn run(imp: PagedAttnImpl, w: PagedAttnWork) -> PagedAttnResult {
+    let spec = imp.device().spec();
+    let (time, traffic) = match imp {
+        PagedAttnImpl::A100Paged => a100_time(&spec, w),
+        PagedAttnImpl::GaudiVllmOpt => opt_time(&spec, w),
+        PagedAttnImpl::GaudiVllmBase => base_time(&spec, w),
+    };
+    PagedAttnResult { time, tokens_per_sec: w.batch as f64 / time, hbm_traffic: traffic }
+}
+
+fn a100_time(spec: &DeviceSpec, w: PagedAttnWork) -> (f64, f64) {
+    let traffic = w.kv_bytes();
+    let mem = traffic / (spec.hbm_bandwidth * A100_KV_EFF);
+    // Tensor-core side is never the bound for decode GEMV shapes, but
+    // include it for completeness.
+    let compute = w.flops() / (spec.matrix_tflops * 0.25);
+    (spec.kernel_launch_overhead + mem.max(compute), traffic)
+}
+
+fn opt_time(spec: &DeviceSpec, w: PagedAttnWork) -> (f64, f64) {
+    // BlockList: gather only effectual blocks; pipeline gather (TPC) with
+    // the batched GEMM (MME). Both stages contend for HBM, so the pipeline
+    // overlaps compute but the pin traffic adds: one gather read + one
+    // extra pass (QK^T results cannot stay resident for PV at realistic
+    // batch sizes, and no flash-style fusion exists).
+    let kv = w.kv_bytes();
+    let gather = kv / (spec.hbm_bandwidth * OPT_GATHER_EFF);
+    let mme_stream = (OPT_KV_PASSES - 1.0) * kv / (spec.hbm_bandwidth * STREAM_EFF);
+    let gemm = w.flops() / (spec.matrix_tflops * 0.20);
+    // The graph compiler slices gather/bgemm; slicing overhead applies.
+    let sliced = graph_compiler::pipeline_chain(
+        spec,
+        &[gather, mme_stream.max(gemm)],
+        kv.min(spec.sram_bytes * 8.0),
+        true,
+    );
+    // HBM traffic is additive even when pipelined.
+    let mem_floor = gather + mme_stream;
+    (spec.kernel_launch_overhead + sliced.time.max(mem_floor), kv * OPT_KV_PASSES)
+}
+
+fn base_time(spec: &DeviceSpec, w: PagedAttnWork) -> (f64, f64) {
+    // BlockTable: gather *padded_len* worth of KV at fine granularity,
+    // write it back contiguously, then FusedSDPA reads it twice over the
+    // bucketed shape. No pipelining across the contiguous barrier.
+    let padded = w.padded_kv_bytes();
+    let bucket_len = w.padded_len.max(BASE_BUCKET_LEN.min(4096));
+    let bucketed =
+        w.batch as f64 * bucket_len as f64 * w.kv_bytes_per_token();
+    let gather = padded / (spec.hbm_bandwidth * BASE_GATHER_EFF);
+    let writeback = padded / (spec.hbm_bandwidth * STREAM_EFF);
+    let sdpa = 2.0 * bucketed / (spec.hbm_bandwidth * STREAM_EFF);
+    let n_blocks = (w.batch * w.padded_len / w.block_size) as f64;
+    let dispatch = (n_blocks / BASE_BLOCKS_PER_DISPATCH).ceil() * BASE_DISPATCH_OVERHEAD;
+    let time = BASE_STEP_OVERHEAD + dispatch + gather + writeback + sdpa;
+    (time, padded * 2.0 + bucketed * 2.0)
+}
+
+/// Flash-style prefill attention time (one layer, full batch).
+pub fn prefill_attention_time(
+    device: &Device,
+    batch: usize,
+    seq: usize,
+    n_q_heads: usize,
+    head_dim: usize,
+) -> f64 {
+    // Causal attention: ~half the S^2 work; flash kernels reach ~65-70% of
+    // matrix peak at these shapes.
+    let flops =
+        2.0 * 2.0 * batch as f64 * n_q_heads as f64 * (seq as f64).powi(2) * head_dim as f64 / 2.0;
+    let eff = match device.kind() {
+        DeviceKind::Gaudi2 => 0.62, // FusedSDPA
+        DeviceKind::A100 => 0.68,   // FlashAttention-2
+    };
+    device.spec.kernel_launch_overhead + flops / (device.spec.matrix_tflops * eff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
+    /// The Fig 17(a) sweep grid: sequence length × batch.
+    fn fig17a_grid() -> Vec<PagedAttnWork> {
+        let mut v = Vec::new();
+        for &s in &[512usize, 1024, 2048, 4096] {
+            for &b in &[8usize, 16, 32, 64] {
+                v.push(PagedAttnWork::llama8b(b, s));
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn fig17a_opt_avg_7x_over_base_at_zero_padding() {
+        let ratios: Vec<f64> = fig17a_grid()
+            .into_iter()
+            .map(|w| {
+                run(PagedAttnImpl::GaudiVllmBase, w).time / run(PagedAttnImpl::GaudiVllmOpt, w).time
+            })
+            .collect();
+        let avg = mean(&ratios);
+        assert!((avg - 7.4).abs() < 2.5, "avg speedup {avg} (ratios {ratios:?})");
+        for r in &ratios {
+            assert!(*r > 1.0, "opt must always win: {r}");
+        }
+    }
+
+    #[test]
+    fn fig17b_padding_amplifies_speedup() {
+        // seq 4K, batch 32; padding fraction 10%..90%.
+        let base_w = PagedAttnWork::llama8b(32, 4096);
+        let mut ratios = Vec::new();
+        for p in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+            // padded_len is capped by the 4K bucket: padding means the
+            // *effectual* length shrinks while the table stays 4K.
+            let eff_len = ((4096.0 * (1.0 - p)) as usize).max(1);
+            let w = PagedAttnWork { kv_len: eff_len, padded_len: 4096, ..base_w };
+            let r =
+                run(PagedAttnImpl::GaudiVllmBase, w).time / run(PagedAttnImpl::GaudiVllmOpt, w).time;
+            ratios.push(r);
+        }
+        let avg = mean(&ratios);
+        let max = ratios.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(ratios.windows(2).all(|w| w[1] > w[0]), "monotone in padding: {ratios:?}");
+        assert!((avg - 21.0).abs() < 9.0, "avg {avg}");
+        assert!((max - 55.7).abs() < 20.0, "max {max}");
+    }
+
+    #[test]
+    fn fig17c_opt_is_about_45pct_of_a100() {
+        let ratios: Vec<f64> = fig17a_grid()
+            .into_iter()
+            .map(|w| {
+                run(PagedAttnImpl::A100Paged, w).time / run(PagedAttnImpl::GaudiVllmOpt, w).time
+            })
+            .collect();
+        let avg = mean(&ratios);
+        assert!((avg - 0.45).abs() < 0.12, "opt/a100 {avg}");
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let w = PagedAttnWork::llama8b(32, 4096);
+        let opt = run(PagedAttnImpl::GaudiVllmOpt, w);
+        let base = run(PagedAttnImpl::GaudiVllmBase, w);
+        let a100 = run(PagedAttnImpl::A100Paged, w);
+        assert!(base.hbm_traffic > opt.hbm_traffic);
+        assert!(opt.hbm_traffic > a100.hbm_traffic);
+        // 32 seqs * 4096 tokens * 4096 B/token = 512 MiB effectual KV.
+        assert!((a100.hbm_traffic - 32.0 * 4096.0 * 4096.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn padding_helper() {
+        let w = PagedAttnWork::llama8b(8, 1000).with_padding(0.5);
+        assert_eq!(w.padded_len, 2000);
+        assert_eq!(w.kv_len, 1000);
+    }
+
+    #[test]
+    fn prefill_attention_scales_quadratically() {
+        let d = Device::new(DeviceKind::Gaudi2);
+        let t1 = prefill_attention_time(&d, 4, 512, 32, 128);
+        let t2 = prefill_attention_time(&d, 4, 1024, 32, 128);
+        assert!(t2 / t1 > 3.0 && t2 / t1 < 4.5, "ratio {}", t2 / t1);
+    }
+
+    #[test]
+    fn tokens_per_sec_consistent() {
+        let w = PagedAttnWork::llama8b(16, 1024);
+        let r = run(PagedAttnImpl::A100Paged, w);
+        assert!((r.tokens_per_sec - 16.0 / r.time).abs() < 1e-6);
+    }
+}

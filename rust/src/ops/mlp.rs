@@ -1,0 +1,151 @@
+//! MLP stacks and the DLRM DCNv2 interaction layer — the dense building
+//! blocks of the RecSys cost model (Fig 11).
+//!
+//! On Gaudi, every GEMM→activation pair is pipelined by the graph compiler
+//! (MME + TPC), but each fused op still pays the heavier HPU kernel
+//! dispatch; on A100 the activation is a fused cuBLAS epilogue. Small MLP
+//! layers are launch-bound, which is one of the two mechanisms (with
+//! fine-grained gathers) behind Gaudi's RecSys deficit.
+
+use crate::sim::device::{Device, GemmExec};
+use crate::sim::graph_compiler;
+use crate::sim::{Dtype, Dtype::Fp32};
+
+/// Extra per-layer dispatch cost on Gaudi for the RecSys dense path: the
+/// Gaudi SDK has no TorchRec integration, so every dense layer goes through
+/// the PyTorch→graph-compiler op dispatch individually instead of a fused
+/// captured graph (paper §3.5: SDK "currently lacks support for multi-device
+/// RecSys serving"; the single-device path is similarly immature).
+pub const GAUDI_DENSE_DISPATCH_OVERHEAD: f64 = 12e-6;
+
+/// Result of running a dense stack.
+#[derive(Debug, Clone)]
+pub struct DenseResult {
+    pub time: f64,
+    pub flops: f64,
+    /// Mean matrix-engine utilization across layers (power model input).
+    pub avg_matrix_util: f64,
+    /// Mean active MAC fraction (Gaudi power gating).
+    pub avg_active_fraction: f64,
+}
+
+/// Time for one GEMM + element-wise activation, pipelined where possible.
+fn layer_time(device: &Device, batch: usize, k: usize, n: usize, dtype: Dtype) -> (f64, GemmExec) {
+    let g = device.gemm(batch, k, n, dtype);
+    // Activation: stream the (batch × n) output through the vector engine.
+    let act_bytes = 2.0 * batch as f64 * n as f64 * dtype.bytes();
+    let act = act_bytes / (device.spec.hbm_bandwidth * device.spec.stream_efficiency);
+    let t = match device.kind() {
+        crate::config::DeviceKind::Gaudi2 => {
+            // Graph compiler pipelines MME and TPC through SRAM, but each
+            // layer pays the un-captured dispatch path.
+            GAUDI_DENSE_DISPATCH_OVERHEAD
+                + graph_compiler::pipeline2(&device.spec, g.time, act, act_bytes, true).time
+        }
+        crate::config::DeviceKind::A100 => g.time + act * 0.25, // fused epilogue
+    };
+    (device.spec.kernel_launch_overhead + t, g)
+}
+
+/// An MLP defined by its layer widths, e.g. bottom MLP `[13, 512, 256, 64]`
+/// (input dim first).
+pub fn mlp(device: &Device, batch: usize, widths: &[usize], dtype: Dtype) -> DenseResult {
+    assert!(widths.len() >= 2, "need at least input and one layer");
+    let mut time = 0.0;
+    let mut flops = 0.0;
+    let mut util = 0.0;
+    let mut active = 0.0;
+    let mut layers = 0.0;
+    for win in widths.windows(2) {
+        let (k, n) = (win[0], win[1]);
+        let (t, g) = layer_time(device, batch, k, n, dtype);
+        time += t;
+        flops += 2.0 * batch as f64 * k as f64 * n as f64;
+        util += g.utilization;
+        active += g.matrix_active_fraction;
+        layers += 1.0;
+    }
+    DenseResult {
+        time,
+        flops,
+        avg_matrix_util: util / layers,
+        avg_active_fraction: active / layers,
+    }
+}
+
+/// DCNv2 low-rank cross interaction: per layer
+/// `x_{l+1} = x0 ⊙ (U_l (V_l x_l) + b_l) + x_l` with rank-`r` factors,
+/// over a feature vector of `dim` elements.
+pub fn dcn_interaction(
+    device: &Device,
+    batch: usize,
+    dim: usize,
+    rank: usize,
+    layers: usize,
+) -> DenseResult {
+    let mut time = 0.0;
+    let mut flops = 0.0;
+    let mut util = 0.0;
+    let mut active = 0.0;
+    for _ in 0..layers {
+        let (t1, g1) = layer_time(device, batch, dim, rank, Fp32);
+        let (t2, g2) = layer_time(device, batch, rank, dim, Fp32);
+        time += t1 + t2;
+        flops += 2.0 * batch as f64 * (dim * rank + rank * dim) as f64;
+        util += (g1.utilization + g2.utilization) / 2.0;
+        active += (g1.matrix_active_fraction + g2.matrix_active_fraction) / 2.0;
+    }
+    DenseResult {
+        time,
+        flops,
+        avg_matrix_util: util / layers as f64,
+        avg_active_fraction: active / layers as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceKind;
+
+    #[test]
+    fn mlp_time_positive_and_grows_with_batch() {
+        let d = Device::new(DeviceKind::Gaudi2);
+        let small = mlp(&d, 128, &[512, 256, 64], Fp32);
+        let big = mlp(&d, 4096, &[512, 256, 64], Fp32);
+        assert!(small.time > 0.0);
+        assert!(big.time > small.time);
+        assert!((big.flops / small.flops - 32.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn small_mlps_are_launch_bound_on_gaudi() {
+        // At tiny batch, per-layer dispatch dominates; Gaudi's heavier
+        // launch makes it slower than A100 despite the stronger MME.
+        let g = mlp(&Device::new(DeviceKind::Gaudi2), 64, &[256, 64, 64, 1], Fp32);
+        let a = mlp(&Device::new(DeviceKind::A100), 64, &[256, 64, 64, 1], Fp32);
+        assert!(g.time > a.time, "gaudi {} a100 {}", g.time, a.time);
+    }
+
+    #[test]
+    fn large_mlps_favor_gaudi() {
+        let g = mlp(&Device::new(DeviceKind::Gaudi2), 8192, &[1024, 1024, 512, 256], Fp32);
+        let a = mlp(&Device::new(DeviceKind::A100), 8192, &[1024, 1024, 512, 256], Fp32);
+        assert!(g.time < a.time, "gaudi {} a100 {}", g.time, a.time);
+    }
+
+    #[test]
+    fn dcn_interaction_runs() {
+        let d = Device::new(DeviceKind::A100);
+        let r = dcn_interaction(&d, 1024, 512, 512, 3);
+        assert!(r.time > 0.0);
+        assert!(r.avg_matrix_util > 0.0 && r.avg_matrix_util <= 1.0);
+        assert!(r.flops > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mlp_requires_two_widths() {
+        mlp(&Device::new(DeviceKind::A100), 16, &[64], Fp32);
+    }
+}

@@ -1,0 +1,8 @@
+//! Operator-level models composed from the device simulators: the units of
+//! work that end-to-end applications (DLRM, Llama) and the serving engine
+//! schedule.
+
+pub mod attention;
+pub mod embedding;
+pub mod gemm;
+pub mod mlp;

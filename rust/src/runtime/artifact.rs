@@ -1,0 +1,209 @@
+//! Artifact manifest: `python/compile/aot.py` lowers the L2 JAX programs
+//! (which call the L1 Pallas kernels) to HLO **text** files under
+//! `artifacts/` and writes `manifest.json` describing each entry point's
+//! name, file and I/O shapes. The Rust side loads the manifest, compiles
+//! the HLO on the PJRT CPU client, and serves from the compiled
+//! executables — Python never runs on the request path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Dtype of a tensor crossing the artifact boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactDtype {
+    F32,
+    I32,
+}
+
+impl ArtifactDtype {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "float32" | "f32" => Ok(ArtifactDtype::F32),
+            "int32" | "i32" => Ok(ArtifactDtype::I32),
+            other => anyhow::bail!("unsupported artifact dtype '{other}'"),
+        }
+    }
+}
+
+/// Shape + dtype of one input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: ArtifactDtype,
+}
+
+impl TensorSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> anyhow::Result<TensorSpec> {
+        let shape = j
+            .req("shape")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape must be an array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = ArtifactDtype::parse(
+            j.req("dtype")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("dtype must be a string"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (model dims etc.).
+    pub meta: BTreeMap<String, f64>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let list = j
+            .req("entries")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("entries must be an array"))?;
+        let mut entries = BTreeMap::new();
+        for e in list {
+            let name = e
+                .req("name")
+                .map_err(|er| anyhow::anyhow!("{er}"))?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("name must be a string"))?
+                .to_string();
+            let file = PathBuf::from(
+                e.req("file")
+                    .map_err(|er| anyhow::anyhow!("{er}"))?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("file must be a string"))?,
+            );
+            let parse_specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                e.req(key)
+                    .map_err(|er| anyhow::anyhow!("{er}"))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("{key} must be an array"))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            let mut meta = BTreeMap::new();
+            if let Some(Json::Obj(m)) = e.get("meta") {
+                for (k, v) in m {
+                    if let Some(x) = v.as_f64() {
+                        meta.insert(k.clone(), x);
+                    }
+                }
+            }
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name,
+                    file,
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    meta,
+                },
+            );
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn entry(&self, name: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "entries": [
+        {
+          "name": "decode_step",
+          "file": "decode_step.hlo.txt",
+          "inputs": [
+            {"shape": [4], "dtype": "int32"},
+            {"shape": [2, 2, 4, 2, 128, 16], "dtype": "float32"},
+            {"shape": [], "dtype": "int32"}
+          ],
+          "outputs": [
+            {"shape": [4, 256], "dtype": "float32"},
+            {"shape": [2, 2, 4, 2, 128, 16], "dtype": "float32"}
+          ],
+          "meta": {"vocab": 256, "layers": 2}
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let e = m.entry("decode_step").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].dtype, ArtifactDtype::I32);
+        assert_eq!(e.outputs[0].shape, vec![4, 256]);
+        assert_eq!(e.outputs[0].num_elements(), 1024);
+        assert_eq!(e.meta["vocab"], 256.0);
+        assert_eq!(m.hlo_path(e), PathBuf::from("/tmp/a/decode_step.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        assert!(Manifest::parse("{}", PathBuf::from(".")).is_err());
+        assert!(Manifest::parse(r#"{"entries": [{"name": "x"}]}"#, PathBuf::from(".")).is_err());
+        assert!(Manifest::parse("not json", PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn scalar_shape_has_one_element() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        let e = m.entry("decode_step").unwrap();
+        assert_eq!(e.inputs[2].shape.len(), 0);
+        assert_eq!(e.inputs[2].num_elements(), 1);
+    }
+}

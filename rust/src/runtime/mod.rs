@@ -1,0 +1,188 @@
+//! PJRT runtime: loads AOT-compiled HLO text artifacts (produced by
+//! `python/compile/aot.py` from JAX/Pallas) and executes them on the PJRT
+//! CPU client via the `xla` crate. This is the only place the Rust side
+//! touches XLA; everything above works with plain `Vec<f32>`/`Vec<i32>`.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use artifact::{ArtifactDtype, ArtifactEntry, Manifest, TensorSpec};
+
+/// A host-side tensor crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => anyhow::bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => anyhow::bail!("expected i32 tensor"),
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        let dtype_ok = matches!(
+            (self, spec.dtype),
+            (HostTensor::F32(_), ArtifactDtype::F32) | (HostTensor::I32(_), ArtifactDtype::I32)
+        );
+        dtype_ok && self.len() == spec.num_elements()
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32(v) => xla::Literal::vec1(v),
+            HostTensor::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        Ok(match spec.dtype {
+            ArtifactDtype::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+            ArtifactDtype::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+/// A compiled entry point ready to execute.
+pub struct LoadedArtifact {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with host tensors; validates shapes/dtypes against the
+    /// manifest and unwraps the (tupled) outputs.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            anyhow::ensure!(
+                t.matches(spec),
+                "{}: input {i} mismatch (len {} vs spec {:?})",
+                self.entry.name,
+                t.len(),
+                spec
+            );
+            literals.push(t.to_literal(spec)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.entry.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.entry.name,
+            self.entry.outputs.len(),
+            parts.len()
+        );
+        parts
+            .iter()
+            .zip(&self.entry.outputs)
+            .map(|(l, spec)| HostTensor::from_literal(l, spec))
+            .collect()
+    }
+}
+
+/// The PJRT runtime: client + compiled-artifact cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, LoadedArtifact>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an entry point.
+    pub fn load(&mut self, name: &str) -> Result<&LoadedArtifact> {
+        if !self.cache.contains_key(name) {
+            let entry = self.manifest.entry(name)?.clone();
+            let path = self.manifest.hlo_path(&entry);
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?;
+            self.cache.insert(name.to_string(), LoadedArtifact { entry, exe });
+        }
+        Ok(&self.cache[name])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_spec_matching() {
+        let spec = TensorSpec { shape: vec![2, 3], dtype: ArtifactDtype::F32 };
+        assert!(HostTensor::F32(vec![0.0; 6]).matches(&spec));
+        assert!(!HostTensor::F32(vec![0.0; 5]).matches(&spec));
+        assert!(!HostTensor::I32(vec![0; 6]).matches(&spec));
+    }
+
+    #[test]
+    fn accessors() {
+        let t = HostTensor::I32(vec![1, 2, 3]);
+        assert_eq!(t.len(), 3);
+        assert!(t.as_i32().is_ok());
+        assert!(t.as_f32().is_err());
+        assert!(!t.is_empty());
+    }
+
+    // Full load/execute round-trips live in rust/tests/integration_runtime.rs
+    // (they need `make artifacts` to have run).
+}

@@ -1,0 +1,149 @@
+//! BlockTable vs BlockList — the two KV-cache index layouts of the §4.2
+//! case study (Fig 16), compiled from the same `KvBlockManager` state.
+//!
+//! * `BlockTable` (vLLM_base): a 2D `[batch × max_blocks]` tensor padded
+//!   with zeros for shorter sequences. The padded entries cause redundant
+//!   KV block gathers on the device.
+//! * `BlockList` (vLLM_opt): a flat 1D concatenation of only the effectual
+//!   block indices plus per-sequence offsets (a CSR-style layout), which
+//!   eliminates padding work and lets the graph compiler slice the gather
+//!   for MME/TPC pipelining.
+
+use crate::serving::kv_cache::{BlockId, KvBlockManager};
+use crate::serving::request::RequestId;
+
+/// Zero-padded 2D layout (vLLM_base).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockTable {
+    pub batch: usize,
+    pub max_blocks: usize,
+    /// Row-major `[batch][max_blocks]`; 0 is used as the padding index
+    /// (like the Gaudi vLLM fork, block 0 is sacrificed as the pad target).
+    pub entries: Vec<BlockId>,
+    /// Real block count per row (for accounting; the device sees padding).
+    pub effectual: Vec<usize>,
+}
+
+impl BlockTable {
+    /// Build from manager state for the given batch of sequences.
+    pub fn build(mgr: &KvBlockManager, seqs: &[RequestId]) -> BlockTable {
+        let rows: Vec<&[BlockId]> =
+            seqs.iter().map(|id| mgr.blocks_of(*id).unwrap_or(&[])).collect();
+        let max_blocks = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+        let mut entries = Vec::with_capacity(seqs.len() * max_blocks);
+        let mut effectual = Vec::with_capacity(seqs.len());
+        for r in &rows {
+            entries.extend_from_slice(r);
+            entries.extend(std::iter::repeat(0).take(max_blocks - r.len()));
+            effectual.push(r.len());
+        }
+        BlockTable { batch: seqs.len(), max_blocks, entries, effectual }
+    }
+
+    /// Total entries the device will gather (including padding).
+    pub fn padded_entries(&self) -> usize {
+        self.batch * self.max_blocks
+    }
+
+    /// Fraction of entries that are zero padding — the x-axis of Fig 17(b).
+    pub fn padding_fraction(&self) -> f64 {
+        let total = self.padded_entries();
+        if total == 0 {
+            return 0.0;
+        }
+        let real: usize = self.effectual.iter().sum();
+        1.0 - real as f64 / total as f64
+    }
+}
+
+/// Flat effectual layout (vLLM_opt).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockList {
+    pub batch: usize,
+    /// Concatenated effectual block ids.
+    pub blocks: Vec<BlockId>,
+    /// CSR-style row offsets: row i spans `blocks[offsets[i]..offsets[i+1]]`.
+    pub offsets: Vec<usize>,
+}
+
+impl BlockList {
+    pub fn build(mgr: &KvBlockManager, seqs: &[RequestId]) -> BlockList {
+        let mut blocks = Vec::new();
+        let mut offsets = Vec::with_capacity(seqs.len() + 1);
+        offsets.push(0);
+        for id in seqs {
+            blocks.extend_from_slice(mgr.blocks_of(*id).unwrap_or(&[]));
+            offsets.push(blocks.len());
+        }
+        BlockList { batch: seqs.len(), blocks, offsets }
+    }
+
+    /// Entries the device gathers — exactly the effectual blocks.
+    pub fn entries(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn row(&self, i: usize) -> &[BlockId] {
+        &self.blocks[self.offsets[i]..self.offsets[i + 1]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr_with(lens: &[usize]) -> (KvBlockManager, Vec<RequestId>) {
+        let mut m = KvBlockManager::new(256, 128, 0.0);
+        let ids: Vec<RequestId> = (0..lens.len() as u64).collect();
+        for (i, &l) in lens.iter().enumerate() {
+            m.allocate(i as u64, l).unwrap();
+        }
+        (m, ids)
+    }
+
+    #[test]
+    fn table_pads_to_longest_row() {
+        let (m, ids) = mgr_with(&[128, 512, 256]); // 1, 4, 2 blocks
+        let t = BlockTable::build(&m, &ids);
+        assert_eq!(t.max_blocks, 4);
+        assert_eq!(t.padded_entries(), 12);
+        assert_eq!(t.effectual, vec![1, 4, 2]);
+        // 7 real of 12 → padding fraction 5/12.
+        assert!((t.padding_fraction() - 5.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn list_has_no_padding() {
+        let (m, ids) = mgr_with(&[128, 512, 256]);
+        let l = BlockList::build(&m, &ids);
+        assert_eq!(l.entries(), 7);
+        assert_eq!(l.offsets, vec![0, 1, 5, 7]);
+        assert_eq!(l.row(1).len(), 4);
+    }
+
+    #[test]
+    fn same_manager_state_same_effectual_blocks() {
+        let (m, ids) = mgr_with(&[300, 700]);
+        let t = BlockTable::build(&m, &ids);
+        let l = BlockList::build(&m, &ids);
+        let real: usize = t.effectual.iter().sum();
+        assert_eq!(real, l.entries());
+    }
+
+    #[test]
+    fn equal_lengths_zero_padding() {
+        let (m, ids) = mgr_with(&[512, 512, 512]);
+        let t = BlockTable::build(&m, &ids);
+        assert_eq!(t.padding_fraction(), 0.0);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let (m, _) = mgr_with(&[]);
+        let t = BlockTable::build(&m, &[]);
+        assert_eq!(t.padded_entries(), 0);
+        assert_eq!(t.padding_fraction(), 0.0);
+        let l = BlockList::build(&m, &[]);
+        assert_eq!(l.entries(), 0);
+    }
+}

@@ -1,0 +1,353 @@
+//! The serving engine: a discrete-event loop driving the scheduler against
+//! a pluggable `Backend`. With `SimBackend` the clock is virtual and step
+//! durations come from the device simulators (this is how Fig 17(d,e) is
+//! regenerated); with `PjrtBackend` (`real_engine.rs`) the same scheduler
+//! and block bookkeeping drive real HLO executables under the wall clock.
+
+use crate::config::{DeviceKind, ServingConfig};
+use crate::models::llama::{self, LlamaConfig};
+use crate::ops::attention::{self, PagedAttnImpl, PagedAttnWork};
+use crate::serving::metrics::{MetricsCollector, RequestMetrics};
+use crate::serving::request::{Request, RequestId};
+use crate::serving::scheduler::{Scheduler, Step};
+use crate::serving::trace::{Trace, TraceEvent, TraceStepKind};
+
+/// A batch of decode work handed to the backend.
+#[derive(Debug, Clone)]
+pub struct DecodeWork {
+    pub kv_lens: Vec<usize>,
+    /// Padded table width in blocks × block_size (vLLM_base) — equals the
+    /// longest sequence rounded up to a block.
+    pub padded_len: usize,
+    /// Zero-padding fraction of the BlockTable layout.
+    pub padding_fraction: f64,
+    pub use_block_list: bool,
+}
+
+/// Execution backend abstraction.
+pub trait Backend {
+    /// Process prompts (lengths given); returns step duration in seconds.
+    fn prefill(&mut self, prompt_lens: &[usize]) -> f64;
+    /// One decode step; returns step duration in seconds.
+    fn decode(&mut self, work: &DecodeWork) -> f64;
+}
+
+/// Simulated-device backend: Llama cost model + PagedAttention operator.
+pub struct SimBackend {
+    pub model: LlamaConfig,
+    pub device: DeviceKind,
+    pub tp: usize,
+    pub block_size: usize,
+}
+
+impl SimBackend {
+    pub fn new(model: LlamaConfig, cfg: &ServingConfig) -> SimBackend {
+        SimBackend {
+            model,
+            device: cfg.device,
+            tp: cfg.tensor_parallel,
+            block_size: cfg.block_size,
+        }
+    }
+}
+
+impl Backend for SimBackend {
+    fn prefill(&mut self, prompt_lens: &[usize]) -> f64 {
+        if prompt_lens.is_empty() {
+            return 0.0;
+        }
+        // Cost model treats the chunk as one batched prefill at the mean
+        // length (token count preserved).
+        let tokens: usize = prompt_lens.iter().sum();
+        let mean_len = (tokens / prompt_lens.len()).max(1);
+        llama::prefill_cost(&self.model, self.device, prompt_lens.len(), mean_len, self.tp).time
+    }
+
+    fn decode(&mut self, work: &DecodeWork) -> f64 {
+        let batch = work.kv_lens.len();
+        if batch == 0 {
+            return 0.0;
+        }
+                // Weight streaming + allreduce via the model layer.
+        let mean_kv = (work.kv_lens.iter().sum::<usize>() / batch).max(1);
+        let base = llama::decode_step_cost(&self.model, self.device, batch, mean_kv, self.tp);
+        // Replace the model's default attention with the layout-specific
+        // operator: BlockTable (padded) vs BlockList (effectual).
+        let attn_work = PagedAttnWork {
+            batch,
+            kv_len: mean_kv,
+            padded_len: work.padded_len.max(mean_kv),
+            n_q_heads: self.model.n_q_heads / self.tp,
+            n_kv_heads: (self.model.n_kv_heads / self.tp).max(1),
+            head_dim: self.model.head_dim,
+            block_size: self.block_size,
+        };
+        let (default_impl, this_impl) = match self.device {
+            DeviceKind::Gaudi2 => (
+                PagedAttnImpl::GaudiVllmOpt,
+                if work.use_block_list {
+                    PagedAttnImpl::GaudiVllmOpt
+                } else {
+                    PagedAttnImpl::GaudiVllmBase
+                },
+            ),
+            DeviceKind::A100 => (PagedAttnImpl::A100Paged, PagedAttnImpl::A100Paged),
+        };
+        let default_attn = self.model.layers as f64
+            * attention::run(
+                default_impl,
+                PagedAttnWork { padded_len: mean_kv, ..attn_work },
+            )
+            .time;
+        let this_attn = self.model.layers as f64 * attention::run(this_impl, attn_work).time;
+        base.time - default_attn + this_attn
+    }
+}
+
+/// The engine: owns the scheduler, a backend and the virtual clock.
+pub struct Engine<B: Backend> {
+    pub sched: Scheduler,
+    backend: B,
+    clock: f64,
+    pub metrics: MetricsCollector,
+    /// Requests not yet arrived, sorted by arrival time.
+    pending: std::collections::VecDeque<Request>,
+    steps_executed: u64,
+    /// Step-level execution trace (bounded ring buffer).
+    pub trace: Trace,
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(cfg: ServingConfig, backend: B) -> Engine<B> {
+        Engine {
+            sched: Scheduler::new(cfg),
+            backend,
+            clock: 0.0,
+            metrics: MetricsCollector::default(),
+            pending: std::collections::VecDeque::new(),
+            steps_executed: 0,
+            trace: Trace::new(4096),
+        }
+    }
+
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    pub fn steps_executed(&self) -> u64 {
+        self.steps_executed
+    }
+
+    /// Enqueue a request for (future) arrival. Binary-search insert keeps
+    /// the queue sorted without a full re-sort per submit (§Perf opt-2).
+    pub fn submit(&mut self, req: Request) {
+        let pos = self.pending.partition_point(|r| r.arrival <= req.arrival);
+        self.pending.insert(pos, req);
+    }
+
+    /// Move arrived requests into the scheduler.
+    fn admit_arrivals(&mut self) {
+        while let Some(first) = self.pending.front() {
+            if first.arrival <= self.clock {
+                let req = self.pending.pop_front().expect("front checked");
+                self.sched.submit(req);
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Run until every submitted request is finished. Returns the summary.
+    pub fn run_to_completion(&mut self) -> crate::serving::metrics::MetricsSummary {
+        loop {
+            self.admit_arrivals();
+            if !self.sched.has_work() {
+                if let Some(next) = self.pending.front() {
+                    // Idle until the next arrival.
+                    self.clock = next.arrival;
+                    continue;
+                }
+                break;
+            }
+            self.step();
+        }
+        self.metrics.makespan = self.clock;
+        self.metrics.summary()
+    }
+
+    /// Execute one scheduling step.
+    pub fn step(&mut self) {
+        self.admit_arrivals();
+        match self.sched.schedule() {
+            Step::Prefill(ids) => {
+                let lens: Vec<usize> =
+                    ids.iter().map(|id| self.sched.seq(*id).req.prompt_len).collect();
+                let tokens: usize = lens.iter().sum();
+                let t0 = self.clock;
+                let dt = self.backend.prefill(&lens);
+                self.clock += dt;
+                self.steps_executed += 1;
+                self.trace.record(TraceEvent {
+                    t_start: t0,
+                    kind: TraceStepKind::Prefill,
+                    batch: ids.len(),
+                    tokens,
+                    duration: dt,
+                    kv_blocks_used: self.sched.kv.num_allocated(),
+                });
+            }
+            Step::Decode(ids) => {
+                let work = self.decode_work(&ids);
+                let t0 = self.clock;
+                let dt = self.backend.decode(&work);
+                self.clock += dt;
+                self.steps_executed += 1;
+                self.sched.complete_decode(&ids, self.clock);
+                self.trace.record(TraceEvent {
+                    t_start: t0,
+                    kind: TraceStepKind::Decode,
+                    batch: ids.len(),
+                    tokens: ids.len(),
+                    duration: dt,
+                    kv_blocks_used: self.sched.kv.num_allocated(),
+                });
+                for id in self.sched.take_finished() {
+                    let m = RequestMetrics::from_sequence(self.sched.seq(id));
+                    self.metrics.record(m);
+                }
+            }
+            Step::Idle => {
+                // No schedulable work (all blocked); advance to next arrival
+                // or bail (run_to_completion handles termination).
+                if let Some(next) = self.pending.front() {
+                    self.clock = next.arrival.max(self.clock + 1e-6);
+                } else {
+                    // Avoid an infinite loop on a stuck schedule.
+                    self.clock += 1e-6;
+                }
+            }
+        }
+    }
+
+    /// Build the backend work descriptor. Padding metrics are computed
+    /// directly from the block manager's per-sequence block counts —
+    /// materializing the full BlockTable/BlockList here doubled the
+    /// per-step cost for no benefit (§Perf opt-1); the layout structures
+    /// themselves are still exercised by the real engine and tests.
+    fn decode_work(&self, ids: &[RequestId]) -> DecodeWork {
+        let kv_lens = self.sched.kv_lens(ids);
+        let use_block_list = self.sched.config().use_block_list;
+        let block_size = self.sched.config().block_size;
+        let mut max_blocks = 0usize;
+        let mut total_blocks = 0usize;
+        for id in ids {
+            let nb = self.sched.kv.blocks_of(*id).map_or(0, |b| b.len());
+            max_blocks = max_blocks.max(nb);
+            total_blocks += nb;
+        }
+        let padded = ids.len() * max_blocks;
+        DecodeWork {
+            padded_len: max_blocks * block_size,
+            padding_fraction: if padded == 0 {
+                0.0
+            } else {
+                1.0 - total_blocks as f64 / padded as f64
+            },
+            kv_lens,
+            use_block_list,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(use_block_list: bool) -> ServingConfig {
+        ServingConfig {
+            device: DeviceKind::Gaudi2,
+            num_blocks: 2048,
+            max_decode_batch: 16,
+            use_block_list,
+            ..Default::default()
+        }
+    }
+
+    fn engine(use_block_list: bool) -> Engine<SimBackend> {
+        let cfg = small_cfg(use_block_list);
+        let backend = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
+        Engine::new(cfg, backend)
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let mut e = engine(true);
+        for i in 0..8 {
+            e.submit(Request::new(i, 100, 20, 0.0));
+        }
+        let s = e.run_to_completion();
+        assert_eq!(s.requests, 8);
+        assert!(s.mean_ttft > 0.0);
+        assert!(s.mean_tpot > 0.0);
+        assert!(s.throughput_tps > 0.0);
+        // All KV returned.
+        assert_eq!(e.sched.kv.num_free(), e.sched.kv.num_blocks());
+    }
+
+    #[test]
+    fn block_list_engine_outperforms_block_table() {
+        // The Fig 17(d) headline at the engine level: same workload,
+        // vLLM_opt (BlockList) vs vLLM_base (BlockTable), variable lengths
+        // to induce padding.
+        let run = |ubl: bool| {
+            let mut e = engine(ubl);
+            for i in 0..12 {
+                // Mixed lengths -> padding in the BlockTable layout.
+                let prompt = 64 + (i as usize % 4) * 512;
+                e.submit(Request::new(i, prompt, 32 + (i as usize % 3) * 64, 0.0));
+            }
+            e.run_to_completion().throughput_tps
+        };
+        let opt = run(true);
+        let base = run(false);
+        assert!(opt > 2.0 * base, "opt {opt} base {base}");
+    }
+
+    #[test]
+    fn staggered_arrivals_respected() {
+        let mut e = engine(true);
+        e.submit(Request::new(0, 100, 10, 0.0));
+        e.submit(Request::new(1, 100, 10, 1000.0)); // arrives much later
+        let s = e.run_to_completion();
+        assert_eq!(s.requests, 2);
+        assert!(e.clock() >= 1000.0);
+        // Second request's TTFT measured from its own arrival, so small.
+        assert!(s.p99_ttft < 10.0, "ttft {}", s.p99_ttft);
+    }
+
+    #[test]
+    fn decode_work_padding_reflects_length_skew() {
+        let mut e = engine(false);
+        e.submit(Request::new(0, 128, 4, 0.0));
+        e.submit(Request::new(1, 1024, 4, 0.0));
+        // Prefill both, then inspect the first decode work.
+        e.step();
+        let ids: Vec<RequestId> = e.sched.running_ids().to_vec();
+        let w = e.decode_work(&ids);
+        assert!(w.padding_fraction > 0.3, "padding {}", w.padding_fraction);
+        assert_eq!(w.padded_len, 1024);
+    }
+
+    #[test]
+    fn throughput_saturates_with_batch_size() {
+        // More concurrent requests -> better weight-streaming amortization.
+        let run = |n: u64| {
+            let mut e = engine(true);
+            for i in 0..n {
+                e.submit(Request::new(i, 100, 50, 0.0));
+            }
+            e.run_to_completion().throughput_tps
+        };
+        assert!(run(16) > 4.0 * run(1), "batching should amortize decode");
+    }
+}

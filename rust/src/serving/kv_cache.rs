@@ -1,0 +1,202 @@
+//! Paged KV-cache block manager — the PagedAttention memory substrate
+//! (paper §4.2 / vLLM). Fixed-size token blocks are allocated on demand
+//! per sequence; freeing returns blocks to a free list. The manager is
+//! the single source of truth the BlockTable / BlockList layouts are
+//! compiled from, and its invariants (no double allocation, conservation,
+//! watermark) are property-tested in `rust/tests/proptests.rs`.
+
+use crate::serving::request::RequestId;
+use crate::util::fasthash::FastMap;
+use crate::util::ceil_div;
+
+/// Physical block index.
+pub type BlockId = u32;
+
+/// Paged KV-cache block manager.
+#[derive(Debug, Clone)]
+pub struct KvBlockManager {
+    block_size: usize,
+    num_blocks: usize,
+    free: Vec<BlockId>,
+    /// Per-sequence ordered block lists (logical → physical).
+    table: FastMap<RequestId, Vec<BlockId>>,
+    /// Free-block watermark kept in reserve for running sequences.
+    watermark_blocks: usize,
+}
+
+/// Why an allocation was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocError {
+    /// Not enough free blocks at all.
+    OutOfBlocks,
+    /// Enough blocks, but the request would dip below the watermark.
+    BelowWatermark,
+}
+
+impl KvBlockManager {
+    pub fn new(num_blocks: usize, block_size: usize, watermark: f64) -> Self {
+        assert!(num_blocks > 0 && block_size > 0);
+        assert!((0.0..0.5).contains(&watermark));
+        KvBlockManager {
+            block_size,
+            num_blocks,
+            free: (0..num_blocks as BlockId).rev().collect(),
+            table: FastMap::default(),
+            watermark_blocks: (watermark * num_blocks as f64).ceil() as usize,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    pub fn num_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn num_allocated(&self) -> usize {
+        self.num_blocks - self.free.len()
+    }
+
+    /// Blocks needed to hold `tokens`.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        ceil_div(tokens, self.block_size)
+    }
+
+    /// Can a *new* sequence of `tokens` be admitted without dipping below
+    /// the watermark?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_for(tokens) + self.watermark_blocks <= self.free.len()
+    }
+
+    /// Allocate blocks so sequence `id` can hold `tokens` total. Grows the
+    /// existing allocation; never shrinks. New sequences respect the
+    /// watermark; growth of existing sequences may consume the reserve.
+    pub fn allocate(&mut self, id: RequestId, tokens: usize) -> Result<(), AllocError> {
+        let needed_total = self.blocks_for(tokens);
+        let have = self.table.get(&id).map_or(0, |v| v.len());
+        if needed_total <= have {
+            return Ok(());
+        }
+        let grow = needed_total - have;
+        let is_new = have == 0;
+        if grow > self.free.len() {
+            return Err(AllocError::OutOfBlocks);
+        }
+        if is_new && grow + self.watermark_blocks > self.free.len() {
+            return Err(AllocError::BelowWatermark);
+        }
+        let entry = self.table.entry(id).or_default();
+        for _ in 0..grow {
+            entry.push(self.free.pop().expect("checked length"));
+        }
+        Ok(())
+    }
+
+    /// Free all blocks of sequence `id` (finish or preemption).
+    pub fn free(&mut self, id: RequestId) {
+        if let Some(blocks) = self.table.remove(&id) {
+            self.free.extend(blocks);
+        }
+    }
+
+    /// The physical block list of a sequence (ordered by logical index).
+    pub fn blocks_of(&self, id: RequestId) -> Option<&[BlockId]> {
+        self.table.get(&id).map(|v| v.as_slice())
+    }
+
+    /// All sequences currently holding blocks.
+    pub fn holders(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.table.keys().copied()
+    }
+
+    /// Invariant check used by tests: every block is either free or owned
+    /// by exactly one sequence.
+    pub fn check_conservation(&self) -> bool {
+        let mut seen = vec![false; self.num_blocks];
+        for &b in &self.free {
+            if seen[b as usize] {
+                return false;
+            }
+            seen[b as usize] = true;
+        }
+        for blocks in self.table.values() {
+            for &b in blocks {
+                if seen[b as usize] {
+                    return false;
+                }
+                seen[b as usize] = true;
+            }
+        }
+        seen.into_iter().all(|x| x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_grow_free_roundtrip() {
+        let mut m = KvBlockManager::new(16, 128, 0.0);
+        m.allocate(1, 100).unwrap(); // 1 block
+        assert_eq!(m.blocks_of(1).unwrap().len(), 1);
+        m.allocate(1, 300).unwrap(); // grow to 3
+        assert_eq!(m.blocks_of(1).unwrap().len(), 3);
+        assert_eq!(m.num_free(), 13);
+        // No shrink on smaller request.
+        m.allocate(1, 10).unwrap();
+        assert_eq!(m.blocks_of(1).unwrap().len(), 3);
+        m.free(1);
+        assert_eq!(m.num_free(), 16);
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn out_of_blocks() {
+        let mut m = KvBlockManager::new(4, 128, 0.0);
+        m.allocate(1, 512).unwrap(); // all 4
+        assert_eq!(m.allocate(2, 1), Err(AllocError::OutOfBlocks));
+        m.free(1);
+        m.allocate(2, 1).unwrap();
+    }
+
+    #[test]
+    fn watermark_blocks_new_sequences_only() {
+        let mut m = KvBlockManager::new(10, 128, 0.2); // 2 reserved
+        m.allocate(1, 128 * 7).unwrap(); // 7 blocks, 3 free
+        // New sequence wanting 2 blocks would leave 1 < watermark 2.
+        assert!(!m.can_admit(128 * 2));
+        assert_eq!(m.allocate(2, 128 * 2), Err(AllocError::BelowWatermark));
+        // But the existing sequence may grow into the reserve.
+        m.allocate(1, 128 * 9).unwrap();
+        assert_eq!(m.num_free(), 1);
+    }
+
+    #[test]
+    fn conservation_under_churn() {
+        let mut m = KvBlockManager::new(32, 16, 0.05);
+        for i in 0..8 {
+            m.allocate(i, 16 * (i as usize % 4 + 1)).unwrap();
+        }
+        for i in (0..8).step_by(2) {
+            m.free(i);
+        }
+        for i in 8..12 {
+            let _ = m.allocate(i, 64);
+        }
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn blocks_for_rounding() {
+        let m = KvBlockManager::new(8, 128, 0.0);
+        assert_eq!(m.blocks_for(1), 1);
+        assert_eq!(m.blocks_for(128), 1);
+        assert_eq!(m.blocks_for(129), 2);
+    }
+}

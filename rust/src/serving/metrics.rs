@@ -1,0 +1,131 @@
+//! Serving metrics: TTFT (time-to-first-token), TPOT (time-per-output-
+//! token), end-to-end latency and throughput — the SLO metrics of
+//! Fig 17(d,e).
+
+use crate::serving::request::Sequence;
+use crate::util::stats::{mean, percentile};
+
+/// Metrics for one completed request.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestMetrics {
+    pub ttft: f64,
+    pub tpot: f64,
+    pub e2e: f64,
+    pub output_tokens: usize,
+}
+
+impl RequestMetrics {
+    /// Extract from a finished sequence.
+    pub fn from_sequence(s: &Sequence) -> RequestMetrics {
+        let first = s.first_token_time.expect("finished sequence has first token");
+        let finish = s.finish_time.expect("finished sequence has finish time");
+        let ttft = first - s.req.arrival;
+        let decode_span = finish - first;
+        let tpot = if s.generated > 1 { decode_span / (s.generated - 1) as f64 } else { 0.0 };
+        RequestMetrics { ttft, tpot, e2e: finish - s.req.arrival, output_tokens: s.generated }
+    }
+}
+
+/// Aggregate over a run.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsCollector {
+    per_request: Vec<RequestMetrics>,
+    /// Engine-clock span of the run (set by the engine at the end).
+    pub makespan: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct MetricsSummary {
+    pub requests: usize,
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    pub mean_tpot: f64,
+    pub p99_tpot: f64,
+    pub mean_e2e: f64,
+    /// Output tokens per second over the makespan.
+    pub throughput_tps: f64,
+    /// Requests per second over the makespan.
+    pub throughput_rps: f64,
+}
+
+impl MetricsCollector {
+    pub fn record(&mut self, m: RequestMetrics) {
+        self.per_request.push(m);
+    }
+
+    pub fn len(&self) -> usize {
+        self.per_request.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.per_request.is_empty()
+    }
+
+    pub fn summary(&self) -> MetricsSummary {
+        let ttfts: Vec<f64> = self.per_request.iter().map(|m| m.ttft).collect();
+        let tpots: Vec<f64> =
+            self.per_request.iter().filter(|m| m.output_tokens > 1).map(|m| m.tpot).collect();
+        let e2es: Vec<f64> = self.per_request.iter().map(|m| m.e2e).collect();
+        let tokens: usize = self.per_request.iter().map(|m| m.output_tokens).sum();
+        let span = self.makespan.max(1e-12);
+        MetricsSummary {
+            requests: self.per_request.len(),
+            mean_ttft: mean(&ttfts),
+            p99_ttft: percentile(&ttfts, 99.0),
+            mean_tpot: mean(&tpots),
+            p99_tpot: percentile(&tpots, 99.0),
+            mean_e2e: mean(&e2es),
+            throughput_tps: tokens as f64 / span,
+            throughput_rps: self.per_request.len() as f64 / span,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::request::{Phase, Request};
+
+    fn finished_seq(arrival: f64, first: f64, finish: f64, gen: usize) -> Sequence {
+        let mut s = Sequence::new(Request::new(1, 10, gen, arrival));
+        s.phase = Phase::Finished;
+        s.generated = gen;
+        s.first_token_time = Some(first);
+        s.finish_time = Some(finish);
+        s
+    }
+
+    #[test]
+    fn request_metrics_math() {
+        let m = RequestMetrics::from_sequence(&finished_seq(1.0, 1.5, 2.5, 11));
+        assert!((m.ttft - 0.5).abs() < 1e-12);
+        assert!((m.tpot - 0.1).abs() < 1e-12);
+        assert!((m.e2e - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_token_has_zero_tpot() {
+        let m = RequestMetrics::from_sequence(&finished_seq(0.0, 0.2, 0.2, 1));
+        assert_eq!(m.tpot, 0.0);
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let mut c = MetricsCollector::default();
+        for i in 0..10 {
+            c.record(RequestMetrics {
+                ttft: 0.1 * (i + 1) as f64,
+                tpot: 0.01,
+                e2e: 1.0,
+                output_tokens: 100,
+            });
+        }
+        c.makespan = 10.0;
+        let s = c.summary();
+        assert_eq!(s.requests, 10);
+        assert!((s.mean_ttft - 0.55).abs() < 1e-9);
+        assert!((s.throughput_tps - 100.0).abs() < 1e-9);
+        assert!((s.throughput_rps - 1.0).abs() < 1e-9);
+        assert!(s.p99_ttft >= s.mean_ttft);
+    }
+}

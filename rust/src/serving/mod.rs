@@ -1,0 +1,15 @@
+//! The L3 serving framework — a vLLM-style engine (the paper's §4.2 case
+//! study) implemented as a real coordinator: admission router, continuous
+//! batcher, paged KV-cache block manager, BlockTable/BlockList layouts,
+//! and pluggable execution backends (simulated devices or real PJRT
+//! executables). All block bookkeeping is identical in both paths.
+
+pub mod block_table;
+pub mod engine;
+pub mod kv_cache;
+pub mod metrics;
+pub mod real_engine;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod trace;

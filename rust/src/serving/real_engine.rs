@@ -1,0 +1,257 @@
+//! Real-numerics serving engine: drives the AOT-compiled tiny-Llama
+//! artifacts (L2 JAX + L1 Pallas, lowered to HLO) through the PJRT
+//! runtime with slot-based continuous batching and greedy decoding.
+//!
+//! Shapes are static (PJRT CPU has no dynamic shapes), so the engine
+//! manages a fixed number of batch *slots*: a free slot is filled by the
+//! next waiting request (its prompt processed by the `prefill` artifact),
+//! and every `decode_step` call advances all occupied slots by one token.
+//! Paging therefore lives at the slot/position level here, while the
+//! simulated engine (`engine.rs`) exercises the full block-manager path —
+//! see DESIGN.md §6 for the trade-off.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{HostTensor, Runtime};
+use crate::serving::metrics::{MetricsCollector, MetricsSummary, RequestMetrics};
+use crate::serving::request::{Phase, Request, Sequence};
+
+/// Model geometry discovered from the artifact manifest metadata.
+#[derive(Debug, Clone, Copy)]
+pub struct RealModelDims {
+    pub batch_slots: usize,
+    pub max_seq: usize,
+    pub prompt_pad: usize,
+    pub vocab: usize,
+    /// Flattened KV-cache element count.
+    pub kv_elems: usize,
+}
+
+/// One occupied slot.
+#[derive(Debug, Clone)]
+struct Slot {
+    seq: Sequence,
+    /// Tokens for the sequence (prompt then generated).
+    tokens: Vec<i32>,
+    /// Current position (tokens in KV).
+    pos: usize,
+}
+
+/// PJRT-backed LLM serving engine.
+pub struct PjrtLlmEngine {
+    rt: Runtime,
+    dims: RealModelDims,
+    slots: Vec<Option<Slot>>,
+    waiting: VecDeque<(Request, Vec<i32>)>,
+    /// Flat model weights, produced once by the `init_llama_weights`
+    /// artifact (no weights ever constructed host-side).
+    weights: Vec<f32>,
+    /// Host-resident KV cache, re-fed to the artifact every step.
+    kv: Vec<f32>,
+    pub metrics: MetricsCollector,
+    start: Instant,
+    pub tokens_generated: u64,
+    pub steps: u64,
+}
+
+impl PjrtLlmEngine {
+    /// Load `init_llama_weights`, `prefill` and `decode_step` from the
+    /// artifact directory and materialize the weights.
+    pub fn new(artifacts_dir: &str) -> Result<PjrtLlmEngine> {
+        let mut rt = Runtime::new(artifacts_dir)?;
+        let entry = rt.load("decode_step").context("loading decode_step artifact")?;
+        let meta = &entry.entry.meta;
+        let get = |k: &str| -> Result<usize> {
+            meta.get(k)
+                .map(|x| *x as usize)
+                .ok_or_else(|| anyhow::anyhow!("decode_step meta missing '{k}'"))
+        };
+        let dims = RealModelDims {
+            batch_slots: get("batch")?,
+            max_seq: get("max_seq")?,
+            prompt_pad: get("prompt_pad")?,
+            vocab: get("vocab")?,
+            kv_elems: entry.entry.inputs[2].num_elements(),
+        };
+        rt.load("prefill").context("loading prefill artifact")?;
+        let init = rt.load("init_llama_weights").context("loading weight init artifact")?;
+        let weights = init.run(&[])?.remove(0).as_f32()?.to_vec();
+        Ok(PjrtLlmEngine {
+            rt,
+            dims,
+            slots: (0..dims.batch_slots).map(|_| None).collect(),
+            waiting: VecDeque::new(),
+            weights,
+            kv: vec![0.0; dims.kv_elems],
+            metrics: MetricsCollector::default(),
+            start: Instant::now(),
+            tokens_generated: 0,
+            steps: 0,
+        })
+    }
+
+    pub fn dims(&self) -> RealModelDims {
+        self.dims
+    }
+
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Submit a request with concrete prompt token ids.
+    pub fn submit(&mut self, req: Request, prompt: Vec<i32>) -> Result<()> {
+        anyhow::ensure!(prompt.len() == req.prompt_len, "prompt length mismatch");
+        anyhow::ensure!(prompt.len() <= self.dims.prompt_pad, "prompt exceeds prompt_pad");
+        anyhow::ensure!(
+            req.prompt_len + req.max_new_tokens <= self.dims.max_seq,
+            "request exceeds max_seq"
+        );
+        self.waiting.push_back((req, prompt));
+        Ok(())
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || self.slots.iter().any(|s| s.is_some())
+    }
+
+    /// Admit waiting requests into free slots, running the prefill
+    /// artifact for each (prompt padded to `prompt_pad`). The first
+    /// generated token comes from the prefill's last-position logits, so
+    /// TTFT is measured at prefill completion, like a real server.
+    fn admit(&mut self) -> Result<()> {
+        for slot_idx in 0..self.slots.len() {
+            if self.slots[slot_idx].is_some() {
+                continue;
+            }
+            let Some((req, prompt)) = self.waiting.pop_front() else { break };
+            let mut padded = prompt.clone();
+            padded.resize(self.dims.prompt_pad, 0);
+            let plen = prompt.len();
+            let pf = self.rt.load("prefill")?;
+            let outputs = pf.run(&[
+                HostTensor::F32(self.weights.clone()),
+                HostTensor::I32(padded),
+                HostTensor::F32(std::mem::take(&mut self.kv)),
+                HostTensor::I32(vec![slot_idx as i32]),
+                HostTensor::I32(vec![plen as i32]),
+            ])?;
+            // outputs: (last-position logits [vocab], kv')
+            let logits = outputs[0].as_f32()?;
+            self.kv = match &outputs[1] {
+                HostTensor::F32(v) => v.clone(),
+                _ => anyhow::bail!("prefill kv output must be f32"),
+            };
+            let first = argmax(logits) as i32;
+            let now = self.now();
+            let mut seq = Sequence::new(req);
+            seq.phase = Phase::Running;
+            seq.kv_len = plen;
+            seq.generated = 1;
+            seq.first_token_time = Some(now);
+            self.tokens_generated += 1;
+            let mut tokens = prompt;
+            tokens.push(first);
+            if seq.is_done() {
+                seq.phase = Phase::Finished;
+                seq.finish_time = Some(now);
+                self.metrics.record(RequestMetrics::from_sequence(&seq));
+            } else {
+                self.slots[slot_idx] = Some(Slot { seq, tokens, pos: plen });
+            }
+        }
+        Ok(())
+    }
+
+    /// One decode step for all occupied slots.
+    fn decode_step(&mut self) -> Result<()> {
+        let b = self.dims.batch_slots;
+        let mut tokens = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        let mut active = vec![false; b];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(slot) = s {
+                tokens[i] = *slot.tokens.last().unwrap();
+                positions[i] = slot.pos as i32;
+                active[i] = true;
+            }
+        }
+        if !active.iter().any(|&a| a) {
+            return Ok(());
+        }
+        let de = self.rt.load("decode_step")?;
+        let outputs = de.run(&[
+            HostTensor::F32(self.weights.clone()),
+            HostTensor::I32(tokens),
+            HostTensor::F32(std::mem::take(&mut self.kv)),
+            HostTensor::I32(positions),
+        ])?;
+        let logits = outputs[0].as_f32()?.to_vec();
+        self.kv = match &outputs[1] {
+            HostTensor::F32(v) => v.clone(),
+            _ => anyhow::bail!("decode kv output must be f32"),
+        };
+        self.steps += 1;
+        let now = self.now();
+        for i in 0..b {
+            if !active[i] {
+                continue;
+            }
+            let slot = self.slots[i].as_mut().unwrap();
+            // Greedy argmax over this slot's logits row.
+            let next = argmax(&logits[i * self.dims.vocab..(i + 1) * self.dims.vocab]) as i32;
+            slot.tokens.push(next);
+            slot.pos += 1;
+            slot.seq.kv_len += 1;
+            slot.seq.generated += 1;
+            self.tokens_generated += 1;
+            if slot.seq.is_done() || slot.pos + 1 >= self.dims.max_seq {
+                slot.seq.phase = Phase::Finished;
+                slot.seq.finish_time = Some(now);
+                self.metrics.record(RequestMetrics::from_sequence(&slot.seq));
+                self.slots[i] = None;
+            }
+        }
+        Ok(())
+    }
+
+    /// Run until all submitted requests complete; returns the summary and
+    /// all generated token streams (request id order of completion).
+    pub fn run_to_completion(&mut self) -> Result<MetricsSummary> {
+        self.start = Instant::now();
+        while self.has_work() {
+            self.admit()?;
+            self.decode_step()?;
+        }
+        self.metrics.makespan = self.now();
+        Ok(self.metrics.summary())
+    }
+}
+
+/// Index of the maximum element (greedy sampling).
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PjrtLlmEngine itself requires compiled artifacts; its integration
+    // tests live in rust/tests/integration_runtime.rs and
+    // examples/e2e_real_serving.rs.
+
+    #[test]
+    fn argmax_picks_maximum() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 3.0]), 1); // first max wins
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

@@ -1,0 +1,96 @@
+//! Request and sequence state for the serving engine.
+
+/// Unique request identifier.
+pub type RequestId = u64;
+
+/// An inference request as submitted to the router.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Prompt length in tokens. (The simulated path only needs lengths;
+    /// the real PJRT path carries token ids separately.)
+    pub prompt_len: usize,
+    /// Number of tokens to generate.
+    pub max_new_tokens: usize,
+    /// Arrival time (seconds, engine clock).
+    pub arrival: f64,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt_len: usize, max_new_tokens: usize, arrival: f64) -> Self {
+        assert!(prompt_len > 0 && max_new_tokens > 0);
+        Request { id, prompt_len, max_new_tokens, arrival }
+    }
+}
+
+/// Lifecycle phase of a sequence inside the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Queued, no KV blocks allocated.
+    Waiting,
+    /// Prompt processed or being processed; producing tokens.
+    Running,
+    /// Preempted under memory pressure; KV freed, must re-prefill.
+    Preempted,
+    /// Generation complete.
+    Finished,
+}
+
+/// Engine-internal state of one sequence.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub req: Request,
+    pub phase: Phase,
+    /// Tokens currently in the KV cache (prompt + generated).
+    pub kv_len: usize,
+    /// Generated tokens so far.
+    pub generated: usize,
+    /// Engine-clock time of first generated token (TTFT measurement).
+    pub first_token_time: Option<f64>,
+    /// Engine-clock time of completion.
+    pub finish_time: Option<f64>,
+    /// Times the sequence was preempted (diagnostics / fairness tests).
+    pub preemptions: usize,
+}
+
+impl Sequence {
+    pub fn new(req: Request) -> Self {
+        Sequence {
+            req,
+            phase: Phase::Waiting,
+            kv_len: 0,
+            generated: 0,
+            first_token_time: None,
+            finish_time: None,
+            preemptions: 0,
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.generated >= self.req.max_new_tokens
+    }
+
+    /// Total tokens the sequence will ever hold in KV.
+    pub fn max_kv_len(&self) -> usize {
+        self.req.prompt_len + self.req.max_new_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequence_lifecycle_fields() {
+        let s = Sequence::new(Request::new(1, 100, 50, 0.0));
+        assert_eq!(s.phase, Phase::Waiting);
+        assert_eq!(s.max_kv_len(), 150);
+        assert!(!s.is_done());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_prompt_rejected() {
+        Request::new(1, 0, 10, 0.0);
+    }
+}

@@ -1,0 +1,333 @@
+//! Continuous-batching scheduler (Orca/vLLM-style): interleaves prefills
+//! and decodes, bounded by `max_prefill_tokens`, `max_decode_batch`
+//! (the Fig 17(d) sweep knob) and KV-block availability; preempts the
+//! youngest running sequence when decode cannot grow its KV.
+
+use std::collections::VecDeque;
+
+use crate::util::fasthash::FastMap;
+use crate::config::ServingConfig;
+use crate::serving::kv_cache::{AllocError, KvBlockManager};
+use crate::serving::request::{Phase, Request, RequestId, Sequence};
+
+/// What the engine should execute next.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Step {
+    /// Process prompts for these request ids (chunked by token budget).
+    Prefill(Vec<RequestId>),
+    /// One decode iteration for these running sequences.
+    Decode(Vec<RequestId>),
+    /// Nothing schedulable right now.
+    Idle,
+}
+
+/// Continuous-batching scheduler + sequence store.
+#[derive(Debug)]
+pub struct Scheduler {
+    cfg: ServingConfig,
+    pub kv: KvBlockManager,
+    waiting: VecDeque<RequestId>,
+    running: Vec<RequestId>,
+    seqs: FastMap<RequestId, Sequence>,
+    /// Completed sequences (kept for metrics harvesting).
+    finished: Vec<RequestId>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: ServingConfig) -> Scheduler {
+        cfg.validate().expect("valid config");
+        let kv = KvBlockManager::new(cfg.num_blocks, cfg.block_size, cfg.watermark);
+        Scheduler {
+            cfg,
+            kv,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            seqs: FastMap::default(),
+            finished: Vec::new(),
+        }
+    }
+
+    pub fn config(&self) -> &ServingConfig {
+        &self.cfg
+    }
+
+    /// Admit a request into the waiting queue.
+    pub fn submit(&mut self, req: Request) {
+        assert!(
+            req.prompt_len + req.max_new_tokens <= self.cfg.max_seq_len,
+            "request exceeds max_seq_len"
+        );
+        let id = req.id;
+        let prev = self.seqs.insert(id, Sequence::new(req));
+        assert!(prev.is_none(), "duplicate request id {id}");
+        self.waiting.push_back(id);
+    }
+
+    pub fn seq(&self, id: RequestId) -> &Sequence {
+        &self.seqs[&id]
+    }
+
+    pub fn seq_mut(&mut self, id: RequestId) -> &mut Sequence {
+        self.seqs.get_mut(&id).unwrap()
+    }
+
+    pub fn num_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Drain ids of finished sequences (for metrics collection).
+    pub fn take_finished(&mut self) -> Vec<RequestId> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Sequences in decode order (FCFS by arrival).
+    pub fn running_ids(&self) -> &[RequestId] {
+        &self.running
+    }
+
+    /// Decide the next step. vLLM policy: admit prefills while the decode
+    /// batch has headroom and blocks allow; otherwise decode.
+    pub fn schedule(&mut self) -> Step {
+        // 1. Try to start prefills (prefill-prioritized continuous batching).
+        let mut prefill: Vec<RequestId> = Vec::new();
+        let mut token_budget = self.cfg.max_prefill_tokens;
+        while let Some(&id) = self.waiting.front() {
+            if self.running.len() + prefill.len() >= self.cfg.max_decode_batch {
+                break;
+            }
+            let s = &self.seqs[&id];
+            if s.req.prompt_len > token_budget {
+                break;
+            }
+            if !self.kv.can_admit(s.req.prompt_len) {
+                break;
+            }
+            self.kv.allocate(id, s.req.prompt_len).expect("can_admit checked");
+            token_budget -= s.req.prompt_len;
+            self.waiting.pop_front();
+            prefill.push(id);
+        }
+        if !prefill.is_empty() {
+            for &id in &prefill {
+                let s = self.seqs.get_mut(&id).unwrap();
+                s.phase = Phase::Running;
+                s.kv_len = s.req.prompt_len;
+                self.running.push(id);
+            }
+            return Step::Prefill(prefill);
+        }
+
+        // 2. Decode: grow each running sequence's KV by one token, up to
+        // max_decode_batch sequences; preempt the youngest on OOM.
+        if self.running.is_empty() {
+            return Step::Idle;
+        }
+        let batch: Vec<RequestId> =
+            self.running.iter().copied().take(self.cfg.max_decode_batch).collect();
+        let mut scheduled = Vec::with_capacity(batch.len());
+        for id in batch {
+            let kv_len = self.seqs[&id].kv_len;
+            match self.kv.allocate(id, kv_len + 1) {
+                Ok(()) => scheduled.push(id),
+                Err(AllocError::OutOfBlocks | AllocError::BelowWatermark) => {
+                    // Preempt the *youngest* running sequence to make room.
+                    if let Some(victim) = self.running.last().copied() {
+                        if victim != id || self.running.len() > 1 {
+                            self.preempt(victim);
+                            // Retry this sequence if it wasn't the victim.
+                            if victim != id {
+                                if self.kv.allocate(id, kv_len + 1).is_ok() {
+                                    scheduled.push(id);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if scheduled.is_empty() {
+            return Step::Idle;
+        }
+        Step::Decode(scheduled)
+    }
+
+    /// Record the outcome of an executed decode step: each sequence gained
+    /// one token at engine time `now`.
+    pub fn complete_decode(&mut self, ids: &[RequestId], now: f64) {
+        for &id in ids {
+            let s = self.seqs.get_mut(&id).unwrap();
+            s.kv_len += 1;
+            s.generated += 1;
+            if s.first_token_time.is_none() {
+                s.first_token_time = Some(now);
+            }
+            if s.is_done() {
+                s.phase = Phase::Finished;
+                s.finish_time = Some(now);
+            }
+        }
+        // Retire finished sequences.
+        let done: Vec<RequestId> =
+            ids.iter().copied().filter(|id| self.seqs[id].phase == Phase::Finished).collect();
+        for id in done {
+            self.running.retain(|&r| r != id);
+            self.kv.free(id);
+            self.finished.push(id);
+        }
+    }
+
+    /// Preempt a running sequence: free its KV and put it back at the
+    /// *front* of the waiting queue (recompute-style preemption).
+    fn preempt(&mut self, id: RequestId) {
+        self.running.retain(|&r| r != id);
+        self.kv.free(id);
+        let s = self.seqs.get_mut(&id).unwrap();
+        s.phase = Phase::Preempted;
+        s.kv_len = 0;
+        // Preserve generated count semantics: recompute regenerates the
+        // same tokens, so keep `generated` but require full re-prefill of
+        // prompt + generated so far.
+        s.preemptions += 1;
+        self.waiting.push_front(id);
+    }
+
+    /// Current decode KV lengths (for the backend's cost model).
+    pub fn kv_lens(&self, ids: &[RequestId]) -> Vec<usize> {
+        ids.iter().map(|id| self.seqs[id].kv_len).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceKind;
+
+    fn cfg(max_decode_batch: usize, num_blocks: usize) -> ServingConfig {
+        ServingConfig {
+            device: DeviceKind::Gaudi2,
+            max_decode_batch,
+            num_blocks,
+            block_size: 128,
+            max_prefill_tokens: 4096,
+            max_seq_len: 4096,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prefill_then_decode_then_finish() {
+        let mut s = Scheduler::new(cfg(8, 64));
+        s.submit(Request::new(1, 100, 2, 0.0));
+        assert_eq!(s.schedule(), Step::Prefill(vec![1]));
+        assert_eq!(s.num_running(), 1);
+        assert_eq!(s.schedule(), Step::Decode(vec![1]));
+        s.complete_decode(&[1], 0.1);
+        assert_eq!(s.seq(1).first_token_time, Some(0.1));
+        assert_eq!(s.schedule(), Step::Decode(vec![1]));
+        s.complete_decode(&[1], 0.2);
+        assert_eq!(s.seq(1).phase, Phase::Finished);
+        assert_eq!(s.take_finished(), vec![1]);
+        assert_eq!(s.schedule(), Step::Idle);
+        assert!(s.kv.check_conservation());
+        assert_eq!(s.kv.num_free(), 64);
+    }
+
+    #[test]
+    fn decode_batch_capped() {
+        let mut s = Scheduler::new(cfg(2, 256));
+        for i in 0..4 {
+            s.submit(Request::new(i, 64, 10, 0.0));
+        }
+        // Only 2 admitted (max_decode_batch).
+        match s.schedule() {
+            Step::Prefill(ids) => assert_eq!(ids.len(), 2),
+            other => panic!("{other:?}"),
+        }
+        match s.schedule() {
+            Step::Decode(ids) => assert_eq!(ids.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prefill_token_budget_chunks_admission() {
+        let mut s = Scheduler::new(Scheduler::new(cfg(16, 256)).cfg.clone());
+        for i in 0..4 {
+            s.submit(Request::new(i, 2000, 4, 0.0));
+        }
+        match s.schedule() {
+            // 4096-token budget fits two 2000-token prompts.
+            Step::Prefill(ids) => assert_eq!(ids.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn preemption_under_memory_pressure() {
+        // 8 blocks of 128 = 1024 tokens capacity; two sequences that want
+        // to grow past it.
+        let mut s = Scheduler::new(cfg(4, 8));
+        s.submit(Request::new(1, 384, 400, 0.0));
+        s.submit(Request::new(2, 384, 400, 0.0));
+        let _ = s.schedule(); // prefill both (3 blocks each, 2 free)
+        assert_eq!(s.num_running(), 2);
+        // Decode until blocks run out; the younger (2) gets preempted.
+        let mut preempted = false;
+        for step in 0..400 {
+            match s.schedule() {
+                Step::Decode(ids) => {
+                    let now = step as f64;
+                    s.complete_decode(&ids, now);
+                }
+                Step::Prefill(ids) => {
+                    // Re-admission of the preempted sequence.
+                    assert!(preempted, "unexpected prefill before preemption");
+                    assert_eq!(ids, vec![2]);
+                    break;
+                }
+                Step::Idle => break,
+            }
+            if s.seq(2).phase == Phase::Preempted {
+                preempted = true;
+                assert_eq!(s.seq(2).preemptions, 1);
+                assert!(s.kv.check_conservation());
+            }
+        }
+        assert!(preempted, "expected a preemption");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate request id")]
+    fn duplicate_ids_rejected() {
+        let mut s = Scheduler::new(cfg(4, 16));
+        s.submit(Request::new(7, 10, 5, 0.0));
+        s.submit(Request::new(7, 10, 5, 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds max_seq_len")]
+    fn oversized_request_rejected() {
+        let mut s = Scheduler::new(cfg(4, 16));
+        s.submit(Request::new(1, 4000, 200, 0.0));
+    }
+
+    #[test]
+    fn fcfs_order_preserved() {
+        let mut s = Scheduler::new(cfg(8, 256));
+        for i in 0..5 {
+            s.submit(Request::new(i, 64, 3, i as f64));
+        }
+        match s.schedule() {
+            Step::Prefill(ids) => assert_eq!(ids, vec![0, 1, 2, 3, 4]),
+            other => panic!("{other:?}"),
+        }
+    }
+}

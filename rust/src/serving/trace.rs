@@ -1,0 +1,187 @@
+//! Step-level execution tracing for the serving engine: a timeline of
+//! scheduling decisions (step kind, batch size, KV occupancy, simulated
+//! duration) that can be exported as CSV for offline analysis — the
+//! observability substrate a production deployment of this coordinator
+//! would need, and the tool used to debug the Fig 17(d) SLO knee.
+
+/// Kind of an executed step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceStepKind {
+    Prefill,
+    Decode,
+    Idle,
+}
+
+impl TraceStepKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceStepKind::Prefill => "prefill",
+            TraceStepKind::Decode => "decode",
+            TraceStepKind::Idle => "idle",
+        }
+    }
+}
+
+/// One traced step.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Engine clock at step start.
+    pub t_start: f64,
+    pub kind: TraceStepKind,
+    /// Sequences in the step.
+    pub batch: usize,
+    /// Tokens processed (prompt tokens for prefill, batch for decode).
+    pub tokens: usize,
+    /// Step duration (simulated or wall).
+    pub duration: f64,
+    /// KV blocks in use after the step.
+    pub kv_blocks_used: usize,
+}
+
+/// Ring-buffer trace collector (bounded memory, keeps the newest events).
+#[derive(Debug, Clone)]
+pub struct Trace {
+    events: Vec<TraceEvent>,
+    capacity: usize,
+    head: usize,
+    total_recorded: u64,
+}
+
+impl Trace {
+    pub fn new(capacity: usize) -> Trace {
+        assert!(capacity > 0);
+        Trace { events: Vec::with_capacity(capacity), capacity, head: 0, total_recorded: 0 }
+    }
+
+    pub fn record(&mut self, ev: TraceEvent) {
+        if self.events.len() < self.capacity {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % self.capacity;
+        }
+        self.total_recorded += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn total_recorded(&self) -> u64 {
+        self.total_recorded
+    }
+
+    /// Events in chronological order.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events[self.head..].iter().chain(self.events[..self.head].iter())
+    }
+
+    /// Fraction of traced time spent in decode steps (batching health).
+    pub fn decode_time_share(&self) -> f64 {
+        let mut decode = 0.0;
+        let mut total = 0.0;
+        for e in self.iter() {
+            total += e.duration;
+            if e.kind == TraceStepKind::Decode {
+                decode += e.duration;
+            }
+        }
+        if total == 0.0 {
+            0.0
+        } else {
+            decode / total
+        }
+    }
+
+    /// Mean decode batch size (weighted by step count).
+    pub fn mean_decode_batch(&self) -> f64 {
+        let decodes: Vec<usize> =
+            self.iter().filter(|e| e.kind == TraceStepKind::Decode).map(|e| e.batch).collect();
+        if decodes.is_empty() {
+            0.0
+        } else {
+            decodes.iter().sum::<usize>() as f64 / decodes.len() as f64
+        }
+    }
+
+    /// CSV export: t_start,kind,batch,tokens,duration,kv_blocks_used.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t_start,kind,batch,tokens,duration,kv_blocks_used\n");
+        for e in self.iter() {
+            out.push_str(&format!(
+                "{:.9},{},{},{},{:.9},{}\n",
+                e.t_start,
+                e.kind.name(),
+                e.batch,
+                e.tokens,
+                e.duration,
+                e.kv_blocks_used
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, kind: TraceStepKind, batch: usize, dur: f64) -> TraceEvent {
+        TraceEvent { t_start: t, kind, batch, tokens: batch, duration: dur, kv_blocks_used: 10 }
+    }
+
+    #[test]
+    fn records_in_order() {
+        let mut tr = Trace::new(8);
+        for i in 0..5 {
+            tr.record(ev(i as f64, TraceStepKind::Decode, 4, 0.1));
+        }
+        let ts: Vec<f64> = tr.iter().map(|e| e.t_start).collect();
+        assert_eq!(ts, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(tr.total_recorded(), 5);
+    }
+
+    #[test]
+    fn ring_buffer_keeps_newest() {
+        let mut tr = Trace::new(3);
+        for i in 0..7 {
+            tr.record(ev(i as f64, TraceStepKind::Decode, 1, 0.1));
+        }
+        let ts: Vec<f64> = tr.iter().map(|e| e.t_start).collect();
+        assert_eq!(ts, vec![4.0, 5.0, 6.0]);
+        assert_eq!(tr.len(), 3);
+        assert_eq!(tr.total_recorded(), 7);
+    }
+
+    #[test]
+    fn aggregates() {
+        let mut tr = Trace::new(16);
+        tr.record(ev(0.0, TraceStepKind::Prefill, 2, 0.3));
+        tr.record(ev(0.3, TraceStepKind::Decode, 8, 0.6));
+        tr.record(ev(0.9, TraceStepKind::Decode, 4, 0.1));
+        assert!((tr.decode_time_share() - 0.7).abs() < 1e-12);
+        assert!((tr.mean_decode_batch() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut tr = Trace::new(4);
+        tr.record(ev(0.0, TraceStepKind::Idle, 0, 0.0));
+        let csv = tr.to_csv();
+        assert!(csv.starts_with("t_start,kind"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("idle"));
+    }
+
+    #[test]
+    fn empty_trace_sane() {
+        let tr = Trace::new(4);
+        assert!(tr.is_empty());
+        assert_eq!(tr.decode_time_share(), 0.0);
+        assert_eq!(tr.mean_decode_batch(), 0.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Unified device façade over the per-engine simulators: one entry point
+//! for "run a GEMM / stream op / gather on this device" that dispatches to
+//! the MME or Tensor-Core model and carries the spec + power model along.
+
+use crate::config::{DeviceKind, DeviceSpec};
+use crate::sim::power::{Activity, PowerModel};
+use crate::sim::{memory, mme, tensor_core, Dtype};
+
+/// Execution result common to both matrix engines.
+#[derive(Debug, Clone)]
+pub struct GemmExec {
+    pub time: f64,
+    pub achieved_flops: f64,
+    /// achieved / device matrix peak.
+    pub utilization: f64,
+    pub memory_bound: bool,
+    /// Gaudi: fraction of MME powered on; A100: always 1.0.
+    pub matrix_active_fraction: f64,
+    /// Human-readable engine configuration (geometry or CTA tile).
+    pub config: String,
+}
+
+/// A simulated device: spec + power model.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub spec: DeviceSpec,
+    pub power: PowerModel,
+}
+
+impl Device {
+    pub fn new(kind: DeviceKind) -> Device {
+        Device { spec: kind.spec(), power: PowerModel::for_device(kind) }
+    }
+
+    pub fn kind(&self) -> DeviceKind {
+        self.spec.kind
+    }
+
+    /// Run GEMM (m,k,n) on the device's matrix engine.
+    pub fn gemm(&self, m: usize, k: usize, n: usize, dtype: Dtype) -> GemmExec {
+        match self.spec.kind {
+            DeviceKind::Gaudi2 => {
+                let r = mme::run_gemm(&self.spec, m, k, n, dtype);
+                GemmExec {
+                    time: r.time,
+                    achieved_flops: r.achieved_flops,
+                    utilization: r.utilization,
+                    memory_bound: r.memory_bound,
+                    matrix_active_fraction: r.active_mac_fraction,
+                    config: r.geometry.label(),
+                }
+            }
+            DeviceKind::A100 => {
+                let r = tensor_core::run_gemm(&self.spec, m, k, n, dtype);
+                GemmExec {
+                    time: r.time,
+                    achieved_flops: r.achieved_flops,
+                    utilization: r.utilization,
+                    memory_bound: r.memory_bound,
+                    matrix_active_fraction: 1.0,
+                    config: format!("{}x{}", r.tile.0, r.tile.1),
+                }
+            }
+        }
+    }
+
+    /// Random gather of `n_vectors` × `vec_bytes`.
+    pub fn gather(&self, n_vectors: f64, vec_bytes: f64) -> memory::GatherResult {
+        memory::random_access(&self.spec, memory::AccessDir::Gather, n_vectors, vec_bytes)
+    }
+
+    /// Random scatter of `n_vectors` × `vec_bytes`.
+    pub fn scatter(&self, n_vectors: f64, vec_bytes: f64) -> memory::GatherResult {
+        memory::random_access(&self.spec, memory::AccessDir::Scatter, n_vectors, vec_bytes)
+    }
+
+    /// Average power draw (watts) for a GEMM-dominated phase.
+    pub fn gemm_power(&self, exec: &GemmExec, hbm_util: f64) -> f64 {
+        self.power.power(Activity {
+            matrix_util: exec.utilization / exec.matrix_active_fraction.max(1e-6),
+            matrix_active_fraction: exec.matrix_active_fraction,
+            vector_util: 0.1, // epilogue / activation work
+            hbm_util,
+            comm_util: 0.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_dispatches_per_device() {
+        let g = Device::new(DeviceKind::Gaudi2).gemm(8192, 8192, 8192, Dtype::Bf16);
+        let a = Device::new(DeviceKind::A100).gemm(8192, 8192, 8192, Dtype::Bf16);
+        // Fig 4: Gaudi-2 consistently outperforms A100 on GEMM.
+        assert!(g.achieved_flops > a.achieved_flops);
+        assert!(g.config.contains('x'));
+        assert_eq!(a.matrix_active_fraction, 1.0);
+    }
+
+    #[test]
+    fn fig4_gaudi_wins_all_explored_shapes() {
+        let gd = Device::new(DeviceKind::Gaudi2);
+        let ad = Device::new(DeviceKind::A100);
+        for &(m, k, n) in &[
+            (512usize, 512usize, 512usize),
+            (1024, 1024, 1024),
+            (2048, 2048, 2048),
+            (4096, 4096, 4096),
+            (8192, 8192, 8192),
+            (4096, 4096, 16),
+            (8192, 8192, 16),
+            (16384, 16384, 16),
+        ] {
+            let g = gd.gemm(m, k, n, Dtype::Bf16);
+            let a = ad.gemm(m, k, n, Dtype::Bf16);
+            assert!(
+                g.achieved_flops >= a.achieved_flops,
+                "({m},{k},{n}): gaudi {} < a100 {}",
+                g.achieved_flops / 1e12,
+                a.achieved_flops / 1e12
+            );
+        }
+    }
+
+    #[test]
+    fn gather_uses_memory_model() {
+        let d = Device::new(DeviceKind::Gaudi2);
+        let r = d.gather(1e6, 256.0);
+        assert!(r.utilization > 0.3 && r.utilization < 0.8);
+    }
+
+    #[test]
+    fn gemm_power_within_tdp() {
+        let d = Device::new(DeviceKind::Gaudi2);
+        let e = d.gemm(8192, 8192, 8192, Dtype::Bf16);
+        let p = d.gemm_power(&e, 0.3);
+        assert!(p > 100.0 && p <= d.spec.tdp_watts, "power {p}");
+    }
+}

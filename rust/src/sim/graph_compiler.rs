@@ -1,0 +1,157 @@
+//! Gaudi graph-compiler pipelining model (paper §2.2 "Graph compiler").
+//!
+//! When an MME operation feeds a TPC operation (or vice versa), the graph
+//! compiler breaks both into independent sub-operation slices and overlaps
+//! them through on-chip shared SRAM, hiding the shorter stage under the
+//! longer one. Whether slicing is *possible* depends on the program
+//! structure the user wrote at the PyTorch level — the core finding of the
+//! vLLM case study (§4.2): vLLM_base's contiguous re-gather creates a full
+//! barrier (no slicing), while vLLM_opt's BlockList form exposes
+//! independent per-block slices.
+
+use crate::config::DeviceSpec;
+
+/// Per-slice scheduling overhead (synchronization + descriptor setup).
+pub const SLICE_OVERHEAD_S: f64 = 2.0e-6;
+
+/// Maximum slice count the compiler will generate.
+pub const MAX_SLICES: usize = 64;
+
+/// Result of scheduling a producer→consumer pair.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineResult {
+    pub time: f64,
+    pub n_slices: usize,
+    /// time saved vs serial execution, as a fraction of serial time.
+    pub overlap_gain: f64,
+}
+
+/// Pipeline two dependent stages of durations `a` then `b` (seconds),
+/// streaming `working_set_bytes` between them through shared SRAM.
+///
+/// With `n` slices the schedule costs `(a+b)/n` to fill/drain plus
+/// `max(a,b)·(n-1)/n` of steady state, plus per-slice overhead. The
+/// compiler picks the best `n` subject to each slice's working set fitting
+/// in SRAM — callers pass `sliceable = false` when the program structure
+/// (e.g. a contiguous re-gather) forbids slicing.
+pub fn pipeline2(
+    spec: &DeviceSpec,
+    a: f64,
+    b: f64,
+    working_set_bytes: f64,
+    sliceable: bool,
+) -> PipelineResult {
+    assert!(a >= 0.0 && b >= 0.0);
+    let serial = a + b;
+    if !sliceable || serial == 0.0 {
+        return PipelineResult { time: serial, n_slices: 1, overlap_gain: 0.0 };
+    }
+    // Minimum slices so one slice's inter-stage buffer fits in (half of)
+    // shared SRAM (double buffering).
+    let min_slices = ((working_set_bytes / (spec.sram_bytes / 2.0)).ceil() as usize).max(1);
+    let mut best = PipelineResult { time: serial, n_slices: 1, overlap_gain: 0.0 };
+    for n in slice_candidates(min_slices) {
+        let nf = n as f64;
+        let t = serial / nf + a.max(b) * (nf - 1.0) / nf + nf as f64 * SLICE_OVERHEAD_S;
+        if t < best.time {
+            best = PipelineResult { time: t, n_slices: n, overlap_gain: (serial - t) / serial };
+        }
+    }
+    best
+}
+
+/// Slice counts to evaluate: the dense range up to `MAX_SLICES` when the
+/// SRAM constraint allows it, otherwise a small geometric ladder above the
+/// forced minimum (very large working sets, e.g. gradient buckets).
+fn slice_candidates(min_slices: usize) -> Vec<usize> {
+    if min_slices <= MAX_SLICES {
+        (min_slices..=MAX_SLICES).collect()
+    } else {
+        vec![min_slices, min_slices * 2, min_slices * 4]
+    }
+}
+
+/// Pipeline a chain of dependent stages (e.g. TPC gather → MME bgemm →
+/// TPC softmax). Adjacent pairs overlap; the chain time approaches
+/// `max(stages) + sum(others)/n`.
+pub fn pipeline_chain(
+    spec: &DeviceSpec,
+    stages: &[f64],
+    working_set_bytes: f64,
+    sliceable: bool,
+) -> PipelineResult {
+    let serial: f64 = stages.iter().sum();
+    if !sliceable || stages.len() <= 1 || serial == 0.0 {
+        return PipelineResult { time: serial, n_slices: 1, overlap_gain: 0.0 };
+    }
+    let min_slices = ((working_set_bytes / (spec.sram_bytes / 2.0)).ceil() as usize).max(1);
+    let bottleneck = stages.iter().cloned().fold(0.0_f64, f64::max);
+    let mut best = PipelineResult { time: serial, n_slices: 1, overlap_gain: 0.0 };
+    for n in slice_candidates(min_slices) {
+        let nf = n as f64;
+        // Fill/drain of the non-bottleneck stages + steady state on the
+        // bottleneck + scheduling overhead per slice per stage boundary.
+        let t = bottleneck * (nf - 1.0) / nf
+            + serial / nf
+            + nf * (stages.len() - 1) as f64 * SLICE_OVERHEAD_S;
+        if t < best.time {
+            best = PipelineResult { time: t, n_slices: n, overlap_gain: (serial - t) / serial };
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceKind;
+
+    fn spec() -> DeviceSpec {
+        DeviceKind::Gaudi2.spec()
+    }
+
+    #[test]
+    fn balanced_stages_approach_half_serial() {
+        let r = pipeline2(&spec(), 1e-3, 1e-3, 1e6, true);
+        assert!(r.time < 1.15e-3, "time {}", r.time);
+        assert!(r.overlap_gain > 0.40);
+        assert!(r.n_slices > 4);
+    }
+
+    #[test]
+    fn unsliceable_is_serial() {
+        let r = pipeline2(&spec(), 1e-3, 1e-3, 1e6, false);
+        assert_eq!(r.time, 2e-3);
+        assert_eq!(r.n_slices, 1);
+        assert_eq!(r.overlap_gain, 0.0);
+    }
+
+    #[test]
+    fn imbalanced_stages_bounded_by_bottleneck() {
+        let r = pipeline2(&spec(), 10e-3, 1e-3, 1e6, true);
+        assert!(r.time >= 10e-3);
+        assert!(r.time < 10.4e-3, "time {}", r.time);
+    }
+
+    #[test]
+    fn tiny_stages_do_not_oversplit() {
+        // Slice overhead must keep the compiler from slicing microscopic ops.
+        let r = pipeline2(&spec(), 3e-6, 3e-6, 1e3, true);
+        assert!(r.n_slices <= 2, "slices {}", r.n_slices);
+    }
+
+    #[test]
+    fn chain_bounded_by_bottleneck() {
+        let r = pipeline_chain(&spec(), &[2e-3, 5e-3, 1e-3], 4e6, true);
+        assert!(r.time >= 5e-3 && r.time < 6.2e-3, "time {}", r.time);
+        let serial = pipeline_chain(&spec(), &[2e-3, 5e-3, 1e-3], 4e6, false);
+        assert_eq!(serial.time, 8e-3);
+    }
+
+    #[test]
+    fn sram_limits_minimum_slices() {
+        // Working set 10x SRAM forces at least ~20 slices w/ double buffering.
+        let r = pipeline2(&spec(), 1e-3, 1e-3, 10.0 * spec().sram_bytes, true);
+        assert!(r.n_slices >= 20, "slices {}", r.n_slices);
+    }
+}

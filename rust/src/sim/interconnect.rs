@@ -1,0 +1,90 @@
+//! Intra-node interconnect topologies (paper §2.1 "Communication").
+//!
+//! * HLS-Gaudi-2: every pair of the 8 devices is wired **point-to-point**
+//!   with 3×100 GbE RoCE links (37.5 GB/s per direction per pair; 21 of the
+//!   24 ports). A device's usable egress therefore *scales with the number
+//!   of participants*: `(n-1) × 37.5 GB/s`.
+//! * DGX A100: all devices hang off **NVSwitch**, so each GPU gets its full
+//!   300 GB/s NVLink bandwidth regardless of how many GPUs communicate.
+//!
+//! This asymmetry is the whole mechanism of Fig 10 / Key Takeaway #4.
+
+use crate::config::DeviceKind;
+use crate::util::units::GB;
+
+/// Maximum devices per server node (both systems).
+pub const NODE_SIZE: usize = 8;
+
+/// Node-level interconnect.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Topology {
+    /// Full point-to-point mesh; `pair_bandwidth` per direction per pair.
+    P2pMesh { pair_bandwidth: f64, latency: f64 },
+    /// Central switch; `device_bandwidth` per direction per device.
+    Switch { device_bandwidth: f64, latency: f64 },
+}
+
+impl Topology {
+    /// The node topology shipped with each device family.
+    pub fn for_device(kind: DeviceKind) -> Topology {
+        match kind {
+            // 3 × 100 GbE per pair; RoCE hop latency.
+            DeviceKind::Gaudi2 => {
+                Topology::P2pMesh { pair_bandwidth: 37.5 * GB, latency: 12e-6 }
+            }
+            // NVSwitch: 300 GB/s per direction per GPU; NVLink hop latency
+            // (chunk pipelining hides most of the per-hop cost).
+            DeviceKind::A100 => Topology::Switch { device_bandwidth: 300.0 * GB, latency: 3e-6 },
+        }
+    }
+
+    /// Usable per-device egress bandwidth when `n` devices participate.
+    pub fn egress_bandwidth(&self, n: usize) -> f64 {
+        assert!((2..=NODE_SIZE).contains(&n), "participants {n}");
+        match self {
+            Topology::P2pMesh { pair_bandwidth, .. } => (n as f64 - 1.0) * pair_bandwidth,
+            Topology::Switch { device_bandwidth, .. } => *device_bandwidth,
+        }
+    }
+
+    /// Per-step latency (alpha term).
+    pub fn step_latency(&self) -> f64 {
+        match self {
+            Topology::P2pMesh { latency, .. } | Topology::Switch { latency, .. } => *latency,
+        }
+    }
+
+    /// Nominal aggregate per-device bandwidth used as the utilization
+    /// denominator (both nodes: 300 GB/s, per the paper).
+    pub fn nominal_bandwidth(&self) -> f64 {
+        300.0 * GB
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaudi_egress_scales_with_participants() {
+        let t = Topology::for_device(DeviceKind::Gaudi2);
+        // Paper: 2 devices -> 300 Gbps (37.5 GB/s) = 1/8 of max 2.4 Tbps.
+        assert!((t.egress_bandwidth(2) - 37.5 * GB).abs() < 1.0);
+        assert!((t.egress_bandwidth(8) - 262.5 * GB).abs() < 1.0);
+        let r = t.egress_bandwidth(2) / t.egress_bandwidth(8);
+        assert!((r - 1.0 / 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a100_egress_flat() {
+        let t = Topology::for_device(DeviceKind::A100);
+        assert_eq!(t.egress_bandwidth(2), t.egress_bandwidth(8));
+        assert!((t.egress_bandwidth(4) - 300.0 * GB).abs() < 1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_single_participant() {
+        Topology::for_device(DeviceKind::A100).egress_bandwidth(1);
+    }
+}

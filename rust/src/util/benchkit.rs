@@ -1,0 +1,147 @@
+//! Micro-benchmark harness — in-tree replacement for criterion (not
+//! vendored offline). Used by every `benches/bench_*.rs` target
+//! (`cargo bench` with `harness = false`).
+//!
+//! Method: warmup, then timed batches until both a minimum wall time and a
+//! minimum iteration count are reached; reports mean/median/p95 per-iter
+//! time and iterations/sec.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::percentile;
+
+/// One benchmark's measured distribution.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner with fixed time/iteration budgets.
+pub struct Bencher {
+    pub min_time: Duration,
+    pub min_iters: u64,
+    pub warmup_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_time: Duration::from_millis(300),
+            min_iters: 30,
+            warmup_iters: 3,
+            results: Vec::new(),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fast settings for CI (tests call this to keep runtime short).
+    pub fn quick() -> Self {
+        Bencher {
+            min_time: Duration::from_millis(50),
+            min_iters: 10,
+            warmup_iters: 1,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark; `f` is a single iteration returning a value that
+    /// gets black-boxed.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while start.elapsed() < self.min_time || iters < self.min_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            iters += 1;
+            if iters > 10_000_000 {
+                break;
+            }
+        }
+        let mean_ns = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_nanos(mean_ns as u64),
+            median: Duration::from_nanos(percentile(&samples_ns, 50.0) as u64),
+            p95: Duration::from_nanos(percentile(&samples_ns, 95.0) as u64),
+        };
+        println!(
+            "bench {:<44} {:>10} iters  mean {:>12?}  median {:>12?}  p95 {:>12?}",
+            r.name, r.iters, r.mean, r.median, r.p95
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a closing summary (benches call this from `main`).
+    pub fn finish(&self, suite: &str) {
+        println!("== bench suite '{suite}': {} benchmarks ==", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::quick();
+        let r = b.bench("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            s
+        });
+        assert!(r.iters >= 10);
+        assert!(r.mean.as_nanos() > 0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn faster_code_is_faster() {
+        let mut b = Bencher::quick();
+        let fast = b.bench("fast", || black_box(1u64) + 1).mean;
+        let slow = b
+            .bench("slow", || {
+                let mut s = 0u64;
+                for i in 0..50_000 {
+                    s = s.wrapping_add(black_box(i));
+                }
+                s
+            })
+            .mean;
+        assert!(slow > fast, "slow {slow:?} fast {fast:?}");
+    }
+}

@@ -1,0 +1,43 @@
+//! Small shared utilities: statistics, report tables, unit helpers.
+
+pub mod benchkit;
+pub mod fasthash;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+pub mod units;
+
+/// Ceiling division for positive integers.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Relative error |a-b| / max(|b|, eps).
+#[inline]
+pub fn rel_err(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(8192, 512), 16);
+    }
+
+    #[test]
+    fn rel_err_basics() {
+        assert!(rel_err(1.0, 1.0) < 1e-12);
+        assert!((rel_err(1.1, 1.0) - 0.1).abs() < 1e-9);
+    }
+}

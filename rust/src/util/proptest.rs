@@ -1,0 +1,159 @@
+//! Tiny property-based testing harness — in-tree replacement for the
+//! `proptest` crate (not vendored offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and checks `prop`; on failure it performs greedy shrinking via the
+//! generator's `shrink` candidates and panics with the minimal
+//! counterexample. Used by `rust/tests/proptests.rs` for the block-manager,
+//! scheduler, collective and MME invariants.
+
+use crate::util::prng::Rng;
+use std::fmt::Debug;
+
+/// A value generator with optional shrinking.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller values; default = no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range(self.0 as u64, self.1 as u64) as usize
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut c = Vec::new();
+        if *v > self.0 {
+            c.push(self.0);
+            c.push(self.0 + (*v - self.0) / 2);
+            c.push(*v - 1);
+        }
+        c.dedup();
+        c
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub struct F64In(pub f64, pub f64);
+
+impl Gen for F64In {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        self.0 + rng.f64() * (self.1 - self.0)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        if *v > self.0 {
+            vec![self.0, self.0 + (*v - self.0) / 2.0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// Vec of a generator, with random length in [0, max_len].
+pub struct VecOf<G: Gen>(pub G, pub usize);
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = rng.below(self.1 as u64 + 1) as usize;
+        (0..len).map(|_| self.0.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut c = Vec::new();
+        if !v.is_empty() {
+            c.push(v[..v.len() / 2].to_vec());
+            c.push(v[..v.len() - 1].to_vec());
+            // Shrink one element.
+            for cand in self.0.shrink(&v[0]) {
+                let mut w = v.clone();
+                w[0] = cand;
+                c.push(w);
+            }
+        }
+        c
+    }
+}
+
+/// Pair of generators.
+pub struct PairOf<A: Gen, B: Gen>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut c: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        c.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        c
+    }
+}
+
+/// Run `prop` on `cases` random values; panic with a (shrunk)
+/// counterexample on failure.
+pub fn forall<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            // Greedy shrink.
+            let mut min = v.clone();
+            'outer: loop {
+                for cand in gen.shrink(&min) {
+                    if !prop(&cand) {
+                        min = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!("property failed at case {case}: minimal counterexample = {min:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(1, 200, &UsizeIn(0, 100), |&x| x <= 100);
+        forall(2, 200, &F64In(0.0, 1.0), |&x| (0.0..1.0).contains(&x));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_counterexample() {
+        forall(3, 500, &UsizeIn(0, 1000), |&x| x < 900);
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        let result = std::panic::catch_unwind(|| {
+            forall(4, 500, &UsizeIn(0, 10_000), |&x| x < 500);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land at exactly the boundary 500.
+        assert!(msg.contains("= 500"), "msg: {msg}");
+    }
+
+    #[test]
+    fn vec_and_pair_generators() {
+        forall(5, 100, &VecOf(UsizeIn(1, 9), 16), |v| {
+            v.len() <= 16 && v.iter().all(|&x| (1..=9).contains(&x))
+        });
+        forall(6, 100, &PairOf(UsizeIn(0, 4), F64In(-1.0, 1.0)), |(a, b)| {
+            *a <= 4 && (-1.0..1.0).contains(b)
+        });
+    }
+}

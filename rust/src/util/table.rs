@@ -1,0 +1,168 @@
+//! ASCII report tables — the harness prints the same rows/series the paper
+//! reports, so every figure regenerator renders through this module.
+
+/// A simple column-aligned table with a title, printed to stdout or rendered
+/// to a string (the harness integration tests assert over the rendering).
+#[derive(Debug, Clone)]
+pub struct Report {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Report { title: title.into(), header: Vec::new(), rows: Vec::new(), notes: Vec::new() }
+    }
+
+    pub fn header(&mut self, cols: &[&str]) -> &mut Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
+        self.rows.push(cols);
+        self
+    }
+
+    pub fn note(&mut self, note: impl Into<String>) -> &mut Self {
+        self.notes.push(note.into());
+        self
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Column-aligned rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i >= widths.len() {
+                    widths.push(cell.len());
+                } else {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        if !self.header.is_empty() {
+            let line: Vec<String> = self
+                .header
+                .iter()
+                .enumerate()
+                .map(|(i, h)| format!("{:>w$}", h, w = widths[i]))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+            let total: usize = widths.iter().sum::<usize>() + 2 * widths.len().saturating_sub(1);
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(c.len())))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        for note in &self.notes {
+            out.push_str(&format!("  note: {}\n", note));
+        }
+        out
+    }
+
+    /// Render as CSV (for plotting outside the harness).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        if !self.header.is_empty() {
+            out.push_str(&self.header.join(","));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a float with 3 significant-ish digits, fit for table cells.
+pub fn fmt3(x: f64) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    let a = x.abs();
+    if a == 0.0 {
+        "0".to_string()
+    } else if a >= 100.0 {
+        format!("{:.0}", x)
+    } else if a >= 10.0 {
+        format!("{:.1}", x)
+    } else if a >= 1.0 {
+        format!("{:.2}", x)
+    } else {
+        format!("{:.3}", x)
+    }
+}
+
+/// Format a ratio like "1.47x".
+pub fn fmt_ratio(x: f64) -> String {
+    format!("{:.2}x", x)
+}
+
+/// Format a fraction as a percentage like "64.2%".
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_rows_and_title() {
+        let mut r = Report::new("Fig X");
+        r.header(&["a", "bb"]);
+        r.row(vec!["1".into(), "2".into()]);
+        r.row(vec!["10".into(), "20".into()]);
+        let s = r.render();
+        assert!(s.contains("== Fig X =="));
+        assert!(s.contains("bb"));
+        assert!(s.contains("20"));
+        assert_eq!(r.num_rows(), 2);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut r = Report::new("t");
+        r.header(&["x", "y"]);
+        r.row(vec!["1".into(), "2".into()]);
+        let csv = r.to_csv();
+        assert_eq!(csv, "x,y\n1,2\n");
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt3(0.0), "0");
+        assert_eq!(fmt3(432.1), "432");
+        assert_eq!(fmt3(43.21), "43.2");
+        assert_eq!(fmt3(4.321), "4.32");
+        assert_eq!(fmt3(0.4321), "0.432");
+        assert_eq!(fmt_ratio(1.466), "1.47x");
+        assert_eq!(fmt_pct(0.642), "64.2%");
+    }
+}

@@ -1,0 +1,62 @@
+//! Unit constants and conversions. Convention across the crate:
+//! time in **seconds**, sizes in **bytes**, rates in **bytes/sec** or
+//! **FLOP/s** — all `f64`.
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+pub const KB: f64 = 1e3;
+pub const MB: f64 = 1e6;
+pub const GB: f64 = 1e9;
+pub const TB: f64 = 1e12;
+
+pub const GFLOPS: f64 = 1e9;
+pub const TFLOPS: f64 = 1e12;
+
+pub const US: f64 = 1e-6;
+pub const MS: f64 = 1e-3;
+
+/// Human-readable byte size.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= GIB {
+        format!("{:.1}GiB", b / GIB)
+    } else if b >= MIB {
+        format!("{:.1}MiB", b / MIB)
+    } else if b >= KIB {
+        format!("{:.1}KiB", b / KIB)
+    } else {
+        format!("{:.0}B", b)
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.2}s", s)
+    } else if s >= MS {
+        format!("{:.2}ms", s / MS)
+    } else {
+        format!("{:.1}us", s / US)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512B");
+        assert_eq!(fmt_bytes(2.0 * KIB), "2.0KiB");
+        assert_eq!(fmt_bytes(3.5 * MIB), "3.5MiB");
+        assert_eq!(fmt_bytes(96.0 * GIB), "96.0GiB");
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(fmt_time(2.5), "2.50s");
+        assert_eq!(fmt_time(1.5 * MS), "1.50ms");
+        assert_eq!(fmt_time(42.0 * US), "42.0us");
+    }
+}

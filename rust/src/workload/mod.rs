@@ -1,0 +1,134 @@
+//! Workload generators: fixed-length sweeps (§3.5), a Dynamic-Sonnet-like
+//! variable-length trace (Fig 17(d,e)), Poisson arrivals, and Zipf
+//! embedding-index streams for the RecSys benchmarks.
+
+use crate::serving::request::Request;
+use crate::util::prng::{Rng, Zipf};
+
+/// Fixed input/output length batch, all arriving at t=0 (§3.5 methodology:
+/// "a synthetic dataset with an input token length fixed at 100 and output
+/// token lengths swept from 25 to 400").
+pub fn fixed_batch(n: usize, input_len: usize, output_len: usize) -> Vec<Request> {
+    (0..n as u64).map(|i| Request::new(i, input_len, output_len, 0.0)).collect()
+}
+
+/// Dynamic-Sonnet-like workload: variable input lengths drawn from a
+/// bucketed mixture (512/1K/2K-token prompt buckets, jittered) and
+/// variable output lengths (lognormal-ish, capped), reproducing the
+/// dataset's dynamism for the Fig 17(d,e) serving experiments.
+#[derive(Debug, Clone)]
+pub struct DynamicSonnet {
+    pub max_input: usize,
+    pub max_output: usize,
+}
+
+impl Default for DynamicSonnet {
+    fn default() -> Self {
+        DynamicSonnet { max_input: 2048, max_output: 512 }
+    }
+}
+
+impl DynamicSonnet {
+    /// Generate `n` requests arriving by a Poisson process of `rate`
+    /// requests/sec (rate = infinity ⇒ all at t=0).
+    pub fn generate(&self, n: usize, rate: f64, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let buckets = [512usize, 1024, 2048];
+        (0..n as u64)
+            .map(|i| {
+                if rate.is_finite() {
+                    t += rng.exp(rate);
+                }
+                let bucket = *rng.choose(&buckets);
+                // Jitter within (50%, 100%] of the bucket.
+                let input = ((bucket as f64) * (0.5 + 0.5 * rng.f64())).round() as usize;
+                let input = input.clamp(16, self.max_input);
+                // Output: lognormal-ish around 128 tokens.
+                let out = (rng.normal(4.8, 0.6).exp()).round() as usize;
+                let output = out.clamp(8, self.max_output);
+                Request::new(i, input, output, t)
+            })
+            .collect()
+    }
+}
+
+/// Zipf-distributed embedding index stream for `tables` tables of
+/// `rows` rows: RecSys lookups are power-law distributed over hot items.
+pub struct EmbeddingTrace {
+    zipf: Zipf,
+    rng: Rng,
+    pub tables: usize,
+    pub rows: usize,
+}
+
+impl EmbeddingTrace {
+    pub fn new(tables: usize, rows: usize, skew: f64, seed: u64) -> EmbeddingTrace {
+        EmbeddingTrace { zipf: Zipf::new(rows as u64, skew), rng: Rng::new(seed), tables, rows }
+    }
+
+    /// Draw a batch of lookup indices: `batch × tables × pooling`.
+    pub fn batch(&mut self, batch: usize, pooling: usize) -> Vec<u32> {
+        let n = batch * self.tables * pooling;
+        (0..n).map(|_| self.zipf.sample(&mut self.rng) as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_batch_shape() {
+        let reqs = fixed_batch(8, 100, 25);
+        assert_eq!(reqs.len(), 8);
+        assert!(reqs.iter().all(|r| r.prompt_len == 100 && r.max_new_tokens == 25));
+        assert!(reqs.iter().all(|r| r.arrival == 0.0));
+    }
+
+    #[test]
+    fn dynamic_sonnet_variability() {
+        let w = DynamicSonnet::default();
+        let reqs = w.generate(200, f64::INFINITY, 7);
+        let inputs: Vec<usize> = reqs.iter().map(|r| r.prompt_len).collect();
+        let min = *inputs.iter().min().unwrap();
+        let max = *inputs.iter().max().unwrap();
+        assert!(max > 2 * min, "inputs should vary: {min}..{max}");
+        assert!(max <= 2048);
+        let outputs: Vec<usize> = reqs.iter().map(|r| r.max_new_tokens).collect();
+        assert!(outputs.iter().any(|&o| o > 150) && outputs.iter().any(|&o| o < 100));
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let w = DynamicSonnet::default();
+        let reqs = w.generate(50, 10.0, 3);
+        for pair in reqs.windows(2) {
+            assert!(pair[1].arrival >= pair[0].arrival);
+        }
+        let span = reqs.last().unwrap().arrival;
+        // ~50 requests at 10/sec -> about 5 seconds.
+        assert!(span > 2.0 && span < 12.0, "span {span}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let w = DynamicSonnet::default();
+        let a = w.generate(20, 5.0, 42);
+        let b = w.generate(20, 5.0, 42);
+        assert_eq!(
+            a.iter().map(|r| r.prompt_len).collect::<Vec<_>>(),
+            b.iter().map(|r| r.prompt_len).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn embedding_trace_is_skewed() {
+        let mut t = EmbeddingTrace::new(4, 10_000, 1.1, 9);
+        let batch = t.batch(64, 2);
+        assert_eq!(batch.len(), 64 * 4 * 2);
+        let hot = batch.iter().filter(|&&i| i < 100).count();
+        assert!(hot as f64 / batch.len() as f64 > 0.2, "hot share {hot}");
+        assert!(batch.iter().all(|&i| (i as usize) < 10_000));
+    }
+}

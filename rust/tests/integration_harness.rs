@@ -1,0 +1,33 @@
+//! Integration tests over the experiment harness: every registered
+//! table/figure regenerates, renders non-trivially, and exports CSV.
+
+use cuda_myth::harness;
+
+#[test]
+fn every_experiment_runs_and_renders() {
+    for e in harness::registry() {
+        let reports = (e.run)();
+        assert!(!reports.is_empty(), "{} produced no reports", e.id);
+        for r in &reports {
+            let text = r.render();
+            assert!(text.len() > 40, "{}: report too small", e.id);
+            assert!(text.contains("=="), "{}: missing title", e.id);
+        }
+    }
+}
+
+#[test]
+fn csv_export_has_header_and_rows() {
+    let reports = harness::run_experiment("fig4").unwrap();
+    let csv = reports[0].to_csv();
+    let lines: Vec<&str> = csv.lines().collect();
+    assert!(lines.len() > 5);
+    assert!(lines[0].contains(','));
+}
+
+#[test]
+fn run_all_covers_all_registry_entries() {
+    let n_reports = harness::run_all().len();
+    // Each experiment yields at least one report.
+    assert!(n_reports >= harness::registry().len());
+}

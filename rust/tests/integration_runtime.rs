@@ -1,0 +1,211 @@
+//! Integration tests for the AOT → PJRT path: load the HLO text artifacts
+//! produced by `python/compile/aot.py`, execute them on the CPU PJRT
+//! client, and check the numerics against host-side references.
+//!
+//! Requires `make artifacts` to have run; tests are skipped (pass
+//! trivially with a note) if the artifacts are missing so `cargo test`
+//! stays green in a fresh checkout.
+
+use cuda_myth::runtime::{HostTensor, Runtime};
+use cuda_myth::serving::real_engine::PjrtLlmEngine;
+use cuda_myth::serving::request::Request;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn stream_triad_matches_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("stream_triad").unwrap();
+    let n = exe.entry.inputs[0].num_elements();
+    let a: Vec<f32> = (0..n).map(|i| (i % 1000) as f32 * 0.25).collect();
+    let b: Vec<f32> = (0..n).map(|i| (i % 777) as f32 - 100.0).collect();
+    let out = exe.run(&[HostTensor::F32(a.clone()), HostTensor::F32(b.clone())]).unwrap();
+    let got = out[0].as_f32().unwrap();
+    assert_eq!(got.len(), n);
+    for i in (0..n).step_by(1009) {
+        let want = 3.0 * a[i] + b[i];
+        assert!((got[i] - want).abs() < 1e-4, "i={i}: {} vs {want}", got[i]);
+    }
+}
+
+#[test]
+fn embedding_gather_matches_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("embedding_gather").unwrap();
+    let rows = exe.entry.inputs[0].shape[0];
+    let dim = exe.entry.inputs[0].shape[1];
+    let (n_tables, batch) = (exe.entry.inputs[1].shape[0], exe.entry.inputs[1].shape[1]);
+    let tables: Vec<f32> = (0..rows * dim).map(|i| (i as f32).sin()).collect();
+    let rows_per = rows / n_tables;
+    let indices: Vec<i32> =
+        (0..n_tables * batch).map(|i| ((i * 7 + 3) % rows_per) as i32).collect();
+    let offsets: Vec<i32> = (0..n_tables).map(|t| (t * rows_per) as i32).collect();
+    let out = exe
+        .run(&[
+            HostTensor::F32(tables.clone()),
+            HostTensor::I32(indices.clone()),
+            HostTensor::I32(offsets.clone()),
+        ])
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    for t in 0..n_tables {
+        for b in 0..batch {
+            let row = indices[t * batch + b] as usize + offsets[t] as usize;
+            for d in (0..dim).step_by(17) {
+                let want = tables[row * dim + d];
+                let g = got[(t * batch + b) * dim + d];
+                assert!((g - want).abs() < 1e-6, "t={t} b={b} d={d}");
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_attention_artifact_runs_and_normalizes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("paged_attention").unwrap();
+    let batch = exe.entry.inputs[0].shape[0];
+    let d = exe.entry.inputs[0].shape[1];
+    let nb = exe.entry.inputs[1].shape[1];
+    let bs = exe.entry.inputs[1].shape[2];
+    let q: Vec<f32> = (0..batch * d).map(|i| ((i * 31) % 17) as f32 * 0.1 - 0.8).collect();
+    // V constant per block -> outputs are convex combinations of block ids.
+    let mut kv = vec![0.0f32; 2 * nb * bs * d];
+    for blk in 0..nb {
+        for t in 0..bs {
+            for x in 0..d {
+                kv[(blk * bs + t) * d + x] = ((blk + t + x) % 13) as f32 * 0.1; // K
+                kv[(nb * bs + blk * bs + t) * d + x] = blk as f32; // V = block id
+            }
+        }
+    }
+    let block_list: Vec<i32> = (0..nb as i32).collect();
+    let offsets: Vec<i32> = vec![0, 2, 4, 6, 8]; // 2 blocks per sequence
+    let lens: Vec<i32> = vec![bs as i32, (2 * bs) as i32, 5, (bs + 3) as i32];
+    let out = exe
+        .run(&[
+            HostTensor::F32(q),
+            HostTensor::F32(kv),
+            HostTensor::I32(block_list),
+            HostTensor::I32(offsets.clone()),
+            HostTensor::I32(lens.clone()),
+        ])
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    // Sequence 0 attends only tokens in block 0 (len = bs) -> output == 0.
+    for x in 0..d {
+        assert!(got[x].abs() < 1e-5, "seq0[{x}] = {}", got[x]);
+    }
+    // Sequence 2 (blocks 4,5; len 5 < bs) -> only block 4 -> output == 4.
+    for x in 0..d {
+        assert!((got[2 * d + x] - 4.0).abs() < 1e-4, "seq2[{x}] = {}", got[2 * d + x]);
+    }
+    // Sequence 1 spans blocks 2 and 3 -> output strictly between 2 and 3.
+    for x in 0..d {
+        let v = got[d + x];
+        assert!(v > 2.0 && v < 3.0, "seq1[{x}] = {v}");
+    }
+}
+
+#[test]
+fn dlrm_forward_artifact_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let weights = {
+        let init = rt.load("init_dlrm_weights").unwrap();
+        init.run(&[]).unwrap().remove(0)
+    };
+    let exe = rt.load("dlrm_forward").unwrap();
+    let batch = exe.entry.inputs[1].shape[0];
+    let dense_in = exe.entry.inputs[1].shape[1];
+    let idx_elems = exe.entry.inputs[2].num_elements();
+    let rows = exe.entry.meta["rows_per_table"] as usize;
+    let dense: Vec<f32> = (0..batch * dense_in).map(|i| (i % 7) as f32 * 0.1).collect();
+    let indices: Vec<i32> = (0..idx_elems).map(|i| ((i * 13) % rows) as i32).collect();
+    let out = exe
+        .run(&[weights.clone(), HostTensor::F32(dense.clone()), HostTensor::I32(indices.clone())])
+        .unwrap();
+    let scores = out[0].as_f32().unwrap();
+    assert_eq!(scores.len(), batch);
+    assert!(scores.iter().all(|s| s.is_finite()));
+    // Different indices must change the score (embeddings actually used).
+    let indices2: Vec<i32> = indices.iter().map(|&i| (i + 37) % rows as i32).collect();
+    let out2 =
+        exe.run(&[weights, HostTensor::F32(dense), HostTensor::I32(indices2)]).unwrap();
+    let scores2 = out2[0].as_f32().unwrap();
+    assert!(scores.iter().zip(scores2).any(|(a, b)| (a - b).abs() > 1e-6));
+}
+
+#[test]
+fn real_engine_serves_requests_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = PjrtLlmEngine::new(&dir).unwrap();
+    let dims = engine.dims();
+    // More requests than slots to exercise slot recycling.
+    let n_req = dims.batch_slots + 2;
+    for i in 0..n_req as u64 {
+        let prompt_len = 4 + (i as usize % 3);
+        let prompt: Vec<i32> = (0..prompt_len as i32).map(|t| (t * 7 + i as i32) % 50).collect();
+        engine
+            .submit(Request::new(i, prompt_len, 6 + (i as usize % 4), 0.0), prompt)
+            .unwrap();
+    }
+    let summary = engine.run_to_completion().unwrap();
+    assert_eq!(summary.requests, n_req);
+    assert!(summary.mean_ttft > 0.0);
+    assert!(summary.mean_tpot > 0.0);
+    assert!(summary.throughput_tps > 0.0);
+    assert!(engine.tokens_generated as usize >= n_req * 6);
+}
+
+#[test]
+fn decode_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let run_once = || {
+        let mut e = PjrtLlmEngine::new(&dir).unwrap();
+        e.submit(Request::new(0, 3, 5, 0.0), vec![11, 23, 42]).unwrap();
+        e.run_to_completion().unwrap();
+        e.tokens_generated
+    };
+    assert_eq!(run_once(), run_once());
+}
+
+#[test]
+fn flash_prefill_artifact_is_causal_attention() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let exe = rt.load("flash_prefill").unwrap();
+    let seq = exe.entry.inputs[0].shape[0];
+    let d = exe.entry.inputs[0].shape[1];
+    // V = row index: row i attends rows <= i (causal), so the output is a
+    // convex combination of 0..=i and must be bounded by i.
+    let q: Vec<f32> = (0..seq * d).map(|i| ((i * 13) % 7) as f32 * 0.2 - 0.5).collect();
+    let k: Vec<f32> = (0..seq * d).map(|i| ((i * 29) % 11) as f32 * 0.1).collect();
+    let v: Vec<f32> = (0..seq * d).map(|i| (i / d) as f32).collect();
+    let out = exe
+        .run(&[HostTensor::F32(q), HostTensor::F32(k), HostTensor::F32(v.clone())])
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    // Row 0 attends only itself: output == v[0] == 0.
+    for x in 0..d {
+        assert!(got[x].abs() < 1e-5, "row0[{x}] = {}", got[x]);
+    }
+    // Every row i's output lies in [0, i] (causal convex combination).
+    for i in 0..seq {
+        for x in 0..d {
+            let y = got[i * d + x];
+            assert!(y >= -1e-4 && y <= i as f32 + 1e-4, "row{i}[{x}] = {y}");
+        }
+    }
+}
