@@ -1,0 +1,60 @@
+//! Bench: the cluster simulator's own hot paths — the merged next-event
+//! loop across replicas must stay negligible against the simulated step
+//! times it dispatches, or fleet sweeps (`repro run cluster`) stop being
+//! interactive. Runs under the in-tree `util::benchkit` harness (the
+//! repo's criterion replacement; `cargo bench --bench bench_cluster`).
+
+use cuda_myth::config::ServingConfig;
+use cuda_myth::models::llama::LlamaConfig;
+use cuda_myth::serving::cluster::ClusterSim;
+use cuda_myth::serving::router::{RoutePolicy, Router};
+use cuda_myth::util::benchkit::{black_box, Bencher};
+use cuda_myth::workload::{DynamicSonnet, OpenLoopTrace};
+
+fn episode(replicas: usize, policy: RoutePolicy, n_requests: usize) -> usize {
+    let cfg = ServingConfig {
+        replicas,
+        route_policy: policy,
+        max_decode_batch: 16,
+        num_blocks: 4096,
+        ..Default::default()
+    };
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(DynamicSonnet::default().generate(n_requests, 60.0, 17));
+    let s = sim.run_to_completion();
+    s.requests
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.bench("router route/complete churn (least-loaded, 4 replicas)", || {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 4, 1 << 20);
+        let reqs = DynamicSonnet::default().generate(256, f64::INFINITY, 3);
+        let mut placed = Vec::with_capacity(reqs.len());
+        for req in &reqs {
+            placed.push(r.route(req).unwrap());
+        }
+        for (idx, req) in placed.iter().zip(&reqs) {
+            r.complete(*idx, req);
+        }
+        black_box(r.queued())
+    });
+
+    b.bench("open-loop trace generation (1k requests)", || {
+        black_box(OpenLoopTrace::new(200.0, 5.0).generate(23).len())
+    });
+
+    for &n in &[1usize, 2, 4] {
+        b.bench(
+            &format!("cluster e2e episode ({n} replica(s), 32 reqs, round-robin)"),
+            || black_box(episode(n, RoutePolicy::RoundRobin, 32)),
+        );
+    }
+
+    b.bench("cluster e2e episode (4 replicas, 32 reqs, least-loaded)", || {
+        black_box(episode(4, RoutePolicy::LeastLoaded, 32))
+    });
+
+    b.finish("cluster");
+}

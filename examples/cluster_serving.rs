@@ -1,0 +1,65 @@
+//! Cluster serving example: a data-parallel fleet of simulated Llama-3.1-8B
+//! engine replicas behind the admission router, serving an open-loop
+//! Dynamic-Sonnet-like load. Shows the deployment-sizing story: offered
+//! load fixed, replica count and route policy swept, fleet tail latency
+//! and goodput-under-SLO reported.
+//!
+//! ```bash
+//! cargo run --release --example cluster_serving
+//! ```
+
+use cuda_myth::config::{DeviceKind, ServingConfig};
+use cuda_myth::models::llama::LlamaConfig;
+use cuda_myth::serving::cluster::ClusterSim;
+use cuda_myth::serving::router::RoutePolicy;
+use cuda_myth::workload::OpenLoopTrace;
+
+const SLO_TTFT_S: f64 = 1.0;
+const SLO_TPOT_S: f64 = 0.1;
+
+fn main() {
+    let trace = OpenLoopTrace::new(24.0, 4.0);
+    let requests = trace.generate(29);
+    println!(
+        "== open-loop load: {:.0} req/s for {:.0}s -> {} requests ==",
+        trace.rate,
+        trace.duration,
+        requests.len()
+    );
+    println!(
+        "{:8} {:13} {:9} {:>10} {:>12} {:>12} {:>14} {:>9}",
+        "device", "policy", "replicas", "tok/s", "p99 TTFT ms", "p99 TPOT ms", "goodput req/s", "requeues"
+    );
+    for device in [DeviceKind::Gaudi2, DeviceKind::A100] {
+        for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded] {
+            for replicas in [1usize, 2, 4] {
+                let cfg = ServingConfig {
+                    device,
+                    replicas,
+                    route_policy: policy,
+                    max_decode_batch: 32,
+                    num_blocks: 8192,
+                    ..Default::default()
+                };
+                let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+                sim.submit_all(requests.clone());
+                let s = sim.run_to_completion();
+                let goodput = sim.fleet_metrics().goodput_under_slo(SLO_TTFT_S, SLO_TPOT_S);
+                println!(
+                    "{:8} {:13} {:9} {:10.1} {:12.1} {:12.2} {:14.2} {:9}",
+                    device.name(),
+                    policy.name(),
+                    replicas,
+                    s.throughput_tps,
+                    s.p99_ttft * 1e3,
+                    s.p99_tpot * 1e3,
+                    goodput,
+                    sim.requeues,
+                );
+            }
+        }
+        println!();
+    }
+    println!("Adding replicas trades fleet cost for tail latency until the SLO holds;");
+    println!("`repro run cluster` derives the iso-SLO Gaudi-2 vs A100 sizing table.");
+}

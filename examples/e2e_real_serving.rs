@@ -44,8 +44,8 @@ fn main() -> anyhow::Result<()> {
     let s = engine.run_to_completion()?;
     println!("\n== E2E real-numerics serving results ==");
     println!("requests completed : {}", s.requests);
-    println!("decode steps       : {}", engine.steps);
-    println!("tokens generated   : {}", engine.tokens_generated);
+    println!("decode steps       : {}", engine.steps());
+    println!("tokens generated   : {}", engine.tokens_generated());
     println!("throughput         : {:.1} tok/s, {:.2} req/s", s.throughput_tps, s.throughput_rps);
     println!("mean TTFT          : {:.1} ms (p99 {:.1} ms)", s.mean_ttft * 1e3, s.p99_ttft * 1e3);
     println!("mean TPOT          : {:.1} ms (p99 {:.1} ms)", s.mean_tpot * 1e3, s.p99_tpot * 1e3);

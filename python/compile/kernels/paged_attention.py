@@ -51,8 +51,10 @@ def _paged_attn_kernel(
         # Clamp so the load stays in bounds even for invalid iterations.
         slot = jnp.where(valid, lo + j, lo)
         blk = bl_ref[slot]
-        k = pl.load(kv_ref, (0, pl.dslice(blk, 1), slice(None), slice(None)))[0]
-        v = pl.load(kv_ref, (1, pl.dslice(blk, 1), slice(None), slice(None)))[0]
+        # jax >= 0.4.37 rejects bare int indices in pl.load (they reach the
+        # NDIndexer as shapeless Python ints); use length-1 dslices instead.
+        k = pl.load(kv_ref, (pl.dslice(0, 1), pl.dslice(blk, 1), slice(None), slice(None)))[0, 0]
+        v = pl.load(kv_ref, (pl.dslice(1, 1), pl.dslice(blk, 1), slice(None), slice(None)))[0, 0]
         s = (k.astype(jnp.float32) @ q) * scale  # [block_size]
         pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
         mask = (pos < seq_len) & valid

@@ -1,0 +1,82 @@
+"""Deterministic fallback for `hypothesis` when it isn't installed (the
+offline container has no package index). Implements just the surface
+`test_kernels.py` uses — `given`, `settings`, and the `integers`,
+`floats`, `sampled_from`, `data` strategies — drawing a small fixed
+number of seeded examples per test instead of hypothesis' adaptive
+search. No shrinking: a failure reports the concrete kwargs drawn.
+"""
+
+import numpy as np
+
+# Keep runtime bounded: Pallas interpret-mode kernels are slow.
+_MAX_EXAMPLES = 5
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng):
+        return self._sampler(rng)
+
+
+class _Data:
+    """Mimics hypothesis' interactive `data()` object."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy):
+        return strategy.sample(self._rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value, allow_nan=False, **_kw):
+        del allow_nan  # uniform draws are never NaN
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(0, len(opts)))])
+
+    @staticmethod
+    def data():
+        return _Strategy(_Data)
+
+
+def settings(max_examples=_MAX_EXAMPLES, deadline=None, **_kw):
+    del deadline
+
+    def deco(fn):
+        fn._fallback_max_examples = min(max_examples, _MAX_EXAMPLES)
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # NOTE: no functools.wraps — it would copy `fn`'s signature and
+        # make pytest treat the strategy kwargs as fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", _MAX_EXAMPLES)
+            for case in range(n):
+                rng = np.random.default_rng(0xC0FFEE + 7919 * case)
+                kwargs = {name: s.sample(rng) for name, s in strats.items()}
+                try:
+                    fn(**kwargs)
+                except Exception:
+                    print(f"fallback-given case {case}: kwargs = {kwargs!r}")
+                    raise
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

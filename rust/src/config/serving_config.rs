@@ -1,19 +1,22 @@
 //! Serving-engine configuration, loadable from JSON so the launcher
 //! (`repro serve --config <file>`) can be driven without recompiling.
+//! Covers both a single engine replica (scheduler/KV knobs) and the
+//! cluster deployment above it (`replicas`, `route_policy`, `max_queued`).
 
 use crate::config::DeviceKind;
+use crate::serving::router::RoutePolicy;
 use crate::util::json::Json;
 
-/// Configuration for the vLLM-style serving engine.
+/// Configuration for the vLLM-style serving engine / cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
     /// Target device for the simulated backend.
     pub device: DeviceKind,
-    /// Number of devices (tensor parallelism degree).
+    /// Number of devices (tensor parallelism degree) *per replica*.
     pub tensor_parallel: usize,
     /// KV-cache block size in tokens (vLLM default 128 on Gaudi, 16 on GPU).
     pub block_size: usize,
-    /// Total KV blocks available.
+    /// Total KV blocks available (per replica).
     pub num_blocks: usize,
     /// Maximum number of sequences decoded per step (Fig 17(d) knob).
     pub max_decode_batch: usize,
@@ -26,6 +29,14 @@ pub struct ServingConfig {
     pub use_block_list: bool,
     /// Fraction of blocks kept free before admitting new prefills.
     pub watermark: f64,
+    /// Data-parallel engine replicas behind the router
+    /// (`serving::cluster::ClusterSim`).
+    pub replicas: usize,
+    /// Router dispatch policy across replicas.
+    pub route_policy: RoutePolicy,
+    /// Router queue cap: maximum in-flight (routed, unfinished) requests
+    /// before admission returns backpressure.
+    pub max_queued: usize,
 }
 
 impl Default for ServingConfig {
@@ -40,6 +51,9 @@ impl Default for ServingConfig {
             max_seq_len: 4096,
             use_block_list: true,
             watermark: 0.01,
+            replicas: 1,
+            route_policy: RoutePolicy::RoundRobin,
+            max_queued: 4096,
         }
     }
 }
@@ -77,6 +91,16 @@ impl ServingConfig {
                 None => d.watermark,
                 Some(v) => v.as_f64().ok_or_else(|| anyhow::anyhow!("bad 'watermark'"))?,
             },
+            replicas: get_usize("replicas", d.replicas)?,
+            route_policy: match j.get("route_policy") {
+                None => d.route_policy,
+                Some(v) => {
+                    let name = v.as_str().ok_or_else(|| anyhow::anyhow!("bad 'route_policy'"))?;
+                    RoutePolicy::parse(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown route_policy '{name}'"))?
+                }
+            },
+            max_queued: get_usize("max_queued", d.max_queued)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -102,6 +126,9 @@ impl ServingConfig {
             ("max_seq_len", Json::Num(self.max_seq_len as f64)),
             ("use_block_list", Json::Bool(self.use_block_list)),
             ("watermark", Json::Num(self.watermark)),
+            ("replicas", Json::Num(self.replicas as f64)),
+            ("route_policy", Json::Str(self.route_policy.name().into())),
+            ("max_queued", Json::Num(self.max_queued as f64)),
         ])
         .dump()
     }
@@ -123,6 +150,12 @@ impl ServingConfig {
         if ![1, 2, 4, 8].contains(&self.tensor_parallel) {
             anyhow::bail!("tensor_parallel must be 1, 2, 4 or 8");
         }
+        if self.replicas == 0 {
+            anyhow::bail!("replicas must be > 0");
+        }
+        if self.max_queued == 0 {
+            anyhow::bail!("max_queued must be > 0");
+        }
         Ok(())
     }
 }
@@ -142,6 +175,9 @@ mod tests {
             max_decode_batch: 128,
             device: DeviceKind::A100,
             use_block_list: false,
+            replicas: 4,
+            route_policy: RoutePolicy::LeastLoaded,
+            max_queued: 512,
             ..Default::default()
         };
         let j = c.to_json();
@@ -154,6 +190,19 @@ mod tests {
         let c = ServingConfig::from_json(r#"{"max_decode_batch": 32}"#).unwrap();
         assert_eq!(c.max_decode_batch, 32);
         assert_eq!(c.block_size, ServingConfig::default().block_size);
+        assert_eq!(c.replicas, 1);
+        assert_eq!(c.route_policy, RoutePolicy::RoundRobin);
+    }
+
+    #[test]
+    fn cluster_fields_parse() {
+        let c = ServingConfig::from_json(
+            r#"{"replicas": 8, "route_policy": "least_loaded", "max_queued": 64}"#,
+        )
+        .unwrap();
+        assert_eq!(c.replicas, 8);
+        assert_eq!(c.route_policy, RoutePolicy::LeastLoaded);
+        assert_eq!(c.max_queued, 64);
     }
 
     #[test]
@@ -162,6 +211,9 @@ mod tests {
         assert!(ServingConfig::from_json(r#"{"tensor_parallel": 3}"#).is_err());
         assert!(ServingConfig::from_json(r#"{"watermark": 0.9}"#).is_err());
         assert!(ServingConfig::from_json(r#"{"device": "tpu9"}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"replicas": 0}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"route_policy": "hash9"}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"max_queued": 0}"#).is_err());
         assert!(ServingConfig::from_json("not json").is_err());
     }
 }

@@ -1,0 +1,168 @@
+//! Cluster experiment: the paper's Fig 17(d,e) serving comparison lifted
+//! to deployment scale. A fixed open-loop Dynamic-Sonnet-like offered
+//! load is served by fleets of 1/2/4 engine replicas per device
+//! (Gaudi-2 vs A100) under two router policies; the sweep reports fleet
+//! throughput, tail latency and goodput-under-SLO, then derives the
+//! iso-SLO sizing table: the smallest replica count per (device, policy)
+//! that meets the SLO — the "how many Gaudi-2 replace my A100s" question.
+
+use crate::config::{DeviceKind, ServingConfig};
+use crate::models::llama::LlamaConfig;
+use crate::serving::cluster::ClusterSim;
+use crate::serving::router::RoutePolicy;
+use crate::util::table::{fmt3, Report};
+use crate::workload::OpenLoopTrace;
+
+/// Offered load shared by every fleet in the sweep.
+const RATE_RPS: f64 = 24.0;
+const DURATION_S: f64 = 4.0;
+const SEED: u64 = 29;
+
+/// The SLO used for the sizing table (p99 TTFT / p99 TPOT).
+const SLO_TTFT_S: f64 = 1.0;
+const SLO_TPOT_S: f64 = 0.1;
+
+const REPLICA_SWEEP: [usize; 3] = [1, 2, 4];
+const POLICIES: [RoutePolicy; 2] = [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded];
+
+/// One fleet run's reported numbers.
+struct FleetPoint {
+    device: DeviceKind,
+    policy: RoutePolicy,
+    replicas: usize,
+    tps: f64,
+    p99_ttft: f64,
+    p99_tpot: f64,
+    goodput_rps: f64,
+    attainment: f64,
+    requeues: u64,
+}
+
+fn run_fleet(device: DeviceKind, policy: RoutePolicy, replicas: usize) -> FleetPoint {
+    let cfg = ServingConfig {
+        device,
+        replicas,
+        route_policy: policy,
+        max_decode_batch: 32,
+        num_blocks: 8192,
+        ..Default::default()
+    };
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(OpenLoopTrace::new(RATE_RPS, DURATION_S).generate(SEED));
+    let s = sim.run_to_completion();
+    let fleet = sim.fleet_metrics();
+    FleetPoint {
+        device,
+        policy,
+        replicas,
+        tps: s.throughput_tps,
+        p99_ttft: s.p99_ttft,
+        p99_tpot: s.p99_tpot,
+        goodput_rps: fleet.goodput_under_slo(SLO_TTFT_S, SLO_TPOT_S),
+        attainment: fleet.slo_attainment(SLO_TTFT_S, SLO_TPOT_S),
+        requeues: sim.requeues,
+    }
+}
+
+pub fn run() -> Vec<Report> {
+    let mut points: Vec<FleetPoint> = Vec::new();
+    for device in [DeviceKind::Gaudi2, DeviceKind::A100] {
+        for policy in POLICIES {
+            for replicas in REPLICA_SWEEP {
+                points.push(run_fleet(device, policy, replicas));
+            }
+        }
+    }
+
+    let mut sweep = Report::new(format!(
+        "Cluster sweep: {RATE_RPS} req/s open-loop Dynamic-Sonnet, Llama-3.1-8B \
+         (SLO: p99 TTFT <= {SLO_TTFT_S}s, p99 TPOT <= {SLO_TPOT_S}s)"
+    ));
+    sweep.header(&[
+        "device",
+        "policy",
+        "replicas",
+        "tok/s",
+        "p99 TTFT s",
+        "p99 TPOT s",
+        "goodput req/s",
+        "SLO attain",
+        "requeues",
+    ]);
+    for p in &points {
+        sweep.row(vec![
+            p.device.name().to_string(),
+            p.policy.name().to_string(),
+            p.replicas.to_string(),
+            fmt3(p.tps),
+            fmt3(p.p99_ttft),
+            fmt3(p.p99_tpot),
+            fmt3(p.goodput_rps),
+            fmt3(p.attainment),
+            p.requeues.to_string(),
+        ]);
+    }
+    sweep.note("goodput = SLO-compliant completions / fleet makespan");
+
+    // Iso-SLO sizing: smallest replica count meeting the SLO on >= 99% of
+    // requests, per (device, policy).
+    let mut iso = Report::new("Iso-SLO replica counts: Gaudi-2 vs A100");
+    iso.header(&["policy", "Gaudi-2 replicas", "A100 replicas", "ratio G2/A100"]);
+    for policy in POLICIES {
+        let min_for = |device: DeviceKind| -> Option<usize> {
+            REPLICA_SWEEP
+                .iter()
+                .copied()
+                .find(|&r| {
+                    points
+                        .iter()
+                        .any(|p| {
+                            p.device == device
+                                && p.policy == policy
+                                && p.replicas == r
+                                && p.attainment >= 0.99
+                        })
+                })
+        };
+        let fmt_min = |m: Option<usize>| match m {
+            Some(r) => r.to_string(),
+            None => format!(">{}", REPLICA_SWEEP[REPLICA_SWEEP.len() - 1]),
+        };
+        let g = min_for(DeviceKind::Gaudi2);
+        let a = min_for(DeviceKind::A100);
+        let ratio = match (g, a) {
+            (Some(g), Some(a)) => format!("{:.2}", g as f64 / a as f64),
+            _ => "n/a".to_string(),
+        };
+        iso.row(vec![policy.name().to_string(), fmt_min(g), fmt_min(a), ratio]);
+    }
+    iso.note(format!(
+        "smallest fleet with >= 99% of requests meeting p99-style SLO \
+         (TTFT <= {SLO_TTFT_S}s, TPOT <= {SLO_TPOT_S}s) at {RATE_RPS} req/s"
+    ));
+
+    vec![sweep, iso]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_reports_with_full_grids() {
+        let reports = run();
+        assert_eq!(reports.len(), 2);
+        // 2 devices x 2 policies x 3 replica counts.
+        assert_eq!(reports[0].num_rows(), 12);
+        // One sizing row per policy.
+        assert_eq!(reports[1].num_rows(), POLICIES.len());
+    }
+
+    #[test]
+    fn scaling_helps_the_fleet() {
+        let one = run_fleet(DeviceKind::Gaudi2, RoutePolicy::RoundRobin, 1);
+        let four = run_fleet(DeviceKind::Gaudi2, RoutePolicy::RoundRobin, 4);
+        assert!(four.p99_ttft <= one.p99_ttft, "{} vs {}", four.p99_ttft, one.p99_ttft);
+        assert!(four.attainment >= one.attainment);
+    }
+}

@@ -4,6 +4,7 @@
 //! `util::table`.
 
 pub mod ablations;
+pub mod cluster;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -41,6 +42,7 @@ pub fn registry() -> Vec<Experiment> {
         Experiment { id: "fig13", title: "Fig 13: LLM serving energy efficiency", run: fig13::run },
         Experiment { id: "fig15", title: "Fig 15: embedding lookup operators (DLRM case study)", run: fig15::run },
         Experiment { id: "fig17", title: "Fig 17: vLLM PagedAttention case study", run: fig17::run },
+        Experiment { id: "cluster", title: "Cluster: iso-SLO replica sizing, Gaudi-2 vs A100 (multi-replica serving)", run: cluster::run },
         Experiment { id: "abl-mme", title: "Ablation: MME reconfigurability", run: ablations::mme_reconfig },
         Experiment { id: "abl-watermark", title: "Ablation: KV watermark vs preemptions", run: ablations::watermark_sweep },
         Experiment { id: "ext-multi-recsys", title: "Extension: multi-device RecSys serving", run: ablations::multi_recsys },

@@ -16,8 +16,21 @@
 //! * [`models`] — end-to-end workload cost models: DLRM-DCNv2 (RM1/RM2) and
 //!   Llama-3.1 (8B/70B) with tensor parallelism.
 //! * [`serving`] — the L3 coordination contribution: a vLLM-style serving
-//!   engine (router, continuous batcher, paged KV-cache block manager)
-//!   that drives either the simulators or real PJRT executables.
+//!   stack (router, continuous batcher, paged KV-cache block manager)
+//!   that drives either the simulators or real PJRT executables, layered
+//!   for cluster-scale deployments:
+//!
+//!   ```text
+//!   Backend (SimBackend | PjrtBackend)    step costs: simulated / wall
+//!       └── EngineCore<B, ClockSource>    one shared step loop (scheduler,
+//!           │                             paged KV, trace, metrics)
+//!           └── ClusterSim                N replicas, merged virtual time
+//!               └── Router                dispatch + backpressure
+//!   ```
+//!
+//!   `ServingConfig { replicas, route_policy, max_queued, .. }` sizes the
+//!   fleet; `repro run cluster` produces the iso-SLO Gaudi-2 vs A100
+//!   replica-count comparison.
 //! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, lowered at
 //!   build time by `python/compile/aot.py`) and executes them on the PJRT
 //!   CPU client. Python is never on the request path.

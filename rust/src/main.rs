@@ -14,6 +14,7 @@
 use cuda_myth::config::ServingConfig;
 use cuda_myth::harness;
 use cuda_myth::models::llama::LlamaConfig;
+use cuda_myth::serving::cluster::ClusterSim;
 use cuda_myth::serving::engine::{Engine, SimBackend};
 use cuda_myth::serving::real_engine::PjrtLlmEngine;
 use cuda_myth::serving::request::Request;
@@ -92,6 +93,28 @@ fn cmd_serve(args: &[String]) -> i32 {
     let rate: f64 =
         flag_value(args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(f64::INFINITY);
     println!("serving config: {}", cfg.to_json());
+    if cfg.replicas > 1 {
+        // Data-parallel fleet behind the router (serving::cluster).
+        let replicas = cfg.replicas;
+        let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        for req in DynamicSonnet::default().generate(n, rate, 7) {
+            sim.submit(req);
+        }
+        let s = sim.run_to_completion();
+        println!(
+            "served {} requests over {} replicas ({}): {:.1} tok/s, mean TTFT {:.1} ms, \
+             p99 TTFT {:.1} ms, mean TPOT {:.2} ms, {} backpressure requeues",
+            s.requests,
+            replicas,
+            cfg.route_policy.name(),
+            s.throughput_tps,
+            s.mean_ttft * 1e3,
+            s.p99_ttft * 1e3,
+            s.mean_tpot * 1e3,
+            sim.requeues,
+        );
+        return 0;
+    }
     let backend = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
     let mut engine = Engine::new(cfg, backend);
     for req in DynamicSonnet::default().generate(n, rate, 7) {
@@ -144,8 +167,8 @@ fn cmd_real_serve(args: &[String]) -> i32 {
                 s.throughput_tps,
                 s.mean_ttft * 1e3,
                 s.mean_tpot * 1e3,
-                engine.steps,
-                engine.tokens_generated
+                engine.steps(),
+                engine.tokens_generated()
             );
             0
         }

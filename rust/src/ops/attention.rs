@@ -201,6 +201,32 @@ fn base_time(spec: &DeviceSpec, w: PagedAttnWork) -> (f64, f64) {
     (time, padded * 2.0 + bucketed * 2.0)
 }
 
+/// Cost one decode step over a ragged batch expressed as length buckets
+/// (one `PagedAttnWork` per bucket, each with its own `batch`).
+///
+/// On Gaudi every distinct bucketed shape is its own sliced kernel launch
+/// — shape bucketing is how the graph stack avoids recompilation — so
+/// per-bucket launch costs are real and additive (`GaudiVllmOpt`). The
+/// baseline fork's dynamic-shape step penalty is paid once per engine
+/// step regardless of bucket count, and the A100's fused kernel handles
+/// ragged lengths in a single launch, so those fixed costs are charged
+/// once and the extra copies the per-bucket `run` calls included are
+/// refunded.
+pub fn run_bucketed(imp: PagedAttnImpl, buckets: &[PagedAttnWork]) -> f64 {
+    if buckets.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = buckets.iter().map(|w| run(imp, *w).time).sum();
+    let extra = (buckets.len() - 1) as f64;
+    match imp {
+        PagedAttnImpl::GaudiVllmOpt => total,
+        PagedAttnImpl::GaudiVllmBase => total - extra * BASE_STEP_OVERHEAD,
+        PagedAttnImpl::A100Paged => {
+            total - extra * imp.device().spec().kernel_launch_overhead
+        }
+    }
+}
+
 /// Flash-style prefill attention time (one layer, full batch).
 pub fn prefill_attention_time(
     device: &Device,
@@ -301,6 +327,30 @@ mod tests {
         let w = PagedAttnWork::llama8b(8, 1000).with_padding(0.5);
         assert_eq!(w.padded_len, 2000);
         assert_eq!(w.kv_len, 1000);
+    }
+
+    #[test]
+    fn bucketed_costing_preserves_totals_and_charges_gaudi_launches() {
+        // Two buckets with the same total effectual KV as one merged call.
+        let merged = PagedAttnWork::llama8b(4, 816);
+        let buckets = [PagedAttnWork::llama8b(1, 3072), PagedAttnWork::llama8b(3, 64)];
+        // A100's fused ragged kernel: bucketing must be cost-neutral (the
+        // model is linear in total KV traffic; extra launches refunded).
+        let a_merged = run(PagedAttnImpl::A100Paged, merged).time;
+        let a_bucketed = run_bucketed(PagedAttnImpl::A100Paged, &buckets);
+        assert!(
+            (a_bucketed - a_merged).abs() / a_merged < 0.05,
+            "a100 merged {a_merged} bucketed {a_bucketed}"
+        );
+        // Gaudi opt: each bucket is a separate sliced launch, so the
+        // skewed (2-bucket) batch costs strictly more than one shape.
+        let g_merged = run(PagedAttnImpl::GaudiVllmOpt, merged).time;
+        let g_bucketed = run_bucketed(PagedAttnImpl::GaudiVllmOpt, &buckets);
+        assert!(g_bucketed > g_merged, "gaudi merged {g_merged} bucketed {g_bucketed}");
+        // Single bucket degenerates to `run`.
+        let one = run_bucketed(PagedAttnImpl::GaudiVllmOpt, &[merged]);
+        assert!((one - g_merged).abs() < 1e-15);
+        assert_eq!(run_bucketed(PagedAttnImpl::GaudiVllmOpt, &[]), 0.0);
     }
 
     #[test]

@@ -1,0 +1,275 @@
+//! Cluster-scale data-parallel serving simulator: N engine replicas behind
+//! the admission `Router`, advanced in one merged virtual-time event loop.
+//!
+//! This is the deployment shape the paper's §6 serving evaluation points
+//! at — vLLM-style fleets serve heavy traffic by running many independent
+//! engine replicas behind a router — and it turns the per-device question
+//! of Fig 17 into the production question: *how many Gaudi-2 vs A100
+//! replicas does a given SLO need?* (`repro run cluster`).
+//!
+//! Event loop (next-event dispatch): at every iteration the simulator
+//! either delivers the earliest pending arrival to the router (when it is
+//! due at or before the earliest busy replica's clock) or advances the
+//! replica with the smallest clock by one engine step. Replica clocks are
+//! therefore never rewound, arrivals are routed in order at their arrival
+//! times, and with one replica the step sequence is *identical* to a
+//! single `Engine` run (asserted bit-for-bit in
+//! `rust/tests/integration_cluster.rs`).
+//!
+//! Backpressure: when the router's global queue cap rejects an arrival
+//! (`QueueFull`), the request is requeued with its due time bumped just
+//! past the earliest busy replica's clock — it retries as soon as the
+//! fleet has made progress, preserving arrival order among retries. The
+//! request's *arrival* timestamp is untouched, so queueing delay from
+//! backpressure shows up in its TTFT, exactly as a client would see it.
+
+use std::collections::VecDeque;
+
+use crate::config::ServingConfig;
+use crate::models::llama::LlamaConfig;
+use crate::serving::engine::{Engine, SimBackend};
+use crate::serving::metrics::{MetricsCollector, MetricsSummary};
+use crate::serving::request::{Request, RequestId};
+use crate::serving::router::{QueueFull, Router};
+use crate::util::fasthash::FastMap;
+
+/// A multi-replica serving deployment under simulated time.
+pub struct ClusterSim {
+    replicas: Vec<Engine<SimBackend>>,
+    router: Router,
+    /// Pending cluster-level arrivals: (due time, request), sorted by due.
+    /// `due` equals the request's arrival unless backpressure requeued it.
+    queue: VecDeque<(f64, Request)>,
+    /// Which replica each routed request landed on.
+    assignment: FastMap<RequestId, usize>,
+    /// Backpressure events (requeues due to `QueueFull`).
+    pub requeues: u64,
+    completed: usize,
+}
+
+impl ClusterSim {
+    /// Build `cfg.replicas` identical engine replicas serving `model`,
+    /// fronted by a router with `cfg.route_policy` / `cfg.max_queued`.
+    pub fn new(cfg: &ServingConfig, model: LlamaConfig) -> ClusterSim {
+        cfg.validate().expect("valid config");
+        let router = Router::new(cfg.route_policy, cfg.replicas, cfg.max_queued);
+        let replicas = (0..cfg.replicas)
+            .map(|_| Engine::new(cfg.clone(), SimBackend::new(model, cfg)))
+            .collect();
+        ClusterSim {
+            replicas,
+            router,
+            queue: VecDeque::new(),
+            assignment: FastMap::default(),
+            requeues: 0,
+            completed: 0,
+        }
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replica(&self, i: usize) -> &Engine<SimBackend> {
+        &self.replicas[i]
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn completed(&self) -> usize {
+        self.completed
+    }
+
+    /// Replica index a request was routed to (after delivery).
+    pub fn assignment_of(&self, id: RequestId) -> Option<usize> {
+        self.assignment.get(&id).copied()
+    }
+
+    /// Queue a request for open-loop arrival at `req.arrival`.
+    pub fn submit(&mut self, req: Request) {
+        self.enqueue(req.arrival, req);
+    }
+
+    pub fn submit_all(&mut self, reqs: impl IntoIterator<Item = Request>) {
+        for r in reqs {
+            self.submit(r);
+        }
+    }
+
+    fn enqueue(&mut self, due: f64, req: Request) {
+        let pos = self.queue.partition_point(|(t, _)| *t <= due);
+        self.queue.insert(pos, (due, req));
+    }
+
+    /// Earliest clock among replicas that still have work.
+    fn earliest_busy(&self) -> Option<(usize, f64)> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.has_any_work())
+            .min_by(|a, b| a.1.clock().total_cmp(&b.1.clock()))
+            .map(|(i, e)| (i, e.clock()))
+    }
+
+    /// Route the front-of-queue request; requeue on backpressure.
+    fn deliver(&mut self) {
+        let (due, req) = self.queue.pop_front().expect("deliver called with a queued request");
+        match self.router.route(&req) {
+            Ok(idx) => {
+                self.assignment.insert(req.id, idx);
+                self.replicas[idx].submit(req);
+            }
+            Err(QueueFull) => {
+                self.requeues += 1;
+                let floor = match self.earliest_busy() {
+                    Some((_, t)) => t,
+                    None => panic!(
+                        "router backpressure with an idle fleet: queued={} but no \
+                         replica has work (max_queued too small for in-flight load?)",
+                        self.router.queued()
+                    ),
+                };
+                // Retry just after the fleet has made progress; the
+                // request's own arrival timestamp is preserved so the
+                // extra queueing delay lands in its TTFT.
+                self.enqueue(floor.max(due) + 1e-6, req);
+            }
+        }
+    }
+
+    /// Advance replica `i` by one discrete-event iteration and settle the
+    /// router's books for anything that finished.
+    fn step_replica(&mut self, i: usize) {
+        let done = self.replicas[i].advance();
+        for id in done {
+            let req = self.replicas[i].sched.seq(id).req.clone();
+            self.router.complete(i, &req);
+            self.completed += 1;
+        }
+    }
+
+    /// Run until every submitted request has completed; returns the
+    /// fleet-level summary (merged per-replica metrics over the fleet
+    /// makespan).
+    pub fn run_to_completion(&mut self) -> MetricsSummary {
+        loop {
+            let next_due = self.queue.front().map(|(t, _)| *t);
+            let busy = self.earliest_busy();
+            match (next_due, busy) {
+                (Some(t), Some((_, tc))) if t <= tc => self.deliver(),
+                (_, Some((i, _))) => self.step_replica(i),
+                (Some(_), None) => self.deliver(),
+                (None, None) => break,
+            }
+        }
+        for e in &mut self.replicas {
+            e.metrics.makespan = e.clock();
+        }
+        self.fleet_metrics().summary()
+    }
+
+    /// Merged per-replica metrics; makespan is the slowest replica's span.
+    pub fn fleet_metrics(&self) -> MetricsCollector {
+        let mut fleet = MetricsCollector::default();
+        for e in &self.replicas {
+            fleet.merge(&e.metrics);
+        }
+        fleet
+    }
+
+    /// Per-replica summaries computed over the *fleet* makespan, so
+    /// replica throughputs sum exactly to the fleet throughput.
+    pub fn replica_summaries(&self) -> Vec<MetricsSummary> {
+        let span = self.fleet_metrics().makespan;
+        self.replicas
+            .iter()
+            .map(|e| {
+                let mut m = e.metrics.clone();
+                m.makespan = span;
+                m.summary()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::router::RoutePolicy;
+    use crate::workload::DynamicSonnet;
+
+    fn cluster(replicas: usize, policy: RoutePolicy, max_queued: usize) -> ClusterSim {
+        let cfg = ServingConfig {
+            replicas,
+            route_policy: policy,
+            max_queued,
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            ..Default::default()
+        };
+        ClusterSim::new(&cfg, LlamaConfig::llama31_8b())
+    }
+
+    #[test]
+    fn fleet_drains_and_balances() {
+        let mut c = cluster(3, RoutePolicy::LeastLoaded, 10_000);
+        let reqs = DynamicSonnet::default().generate(45, 50.0, 21);
+        c.submit_all(reqs);
+        let s = c.run_to_completion();
+        assert_eq!(s.requests, 45);
+        assert_eq!(c.completed(), 45);
+        assert_eq!(c.router().queued(), 0);
+        // Every replica served something and returned all KV blocks.
+        for i in 0..3 {
+            let e = c.replica(i);
+            assert!(e.metrics.len() >= 5, "replica {i}: {}", e.metrics.len());
+            assert_eq!(e.sched.kv.num_free(), e.sched.kv.num_blocks());
+        }
+    }
+
+    #[test]
+    fn more_replicas_cut_tail_latency() {
+        let run = |n: usize| {
+            let mut c = cluster(n, RoutePolicy::RoundRobin, 10_000);
+            c.submit_all(DynamicSonnet::default().generate(48, 40.0, 7));
+            c.run_to_completion()
+        };
+        let one = run(1);
+        let four = run(4);
+        assert_eq!(one.requests, 48);
+        assert_eq!(four.requests, 48);
+        assert!(
+            four.p99_ttft < one.p99_ttft,
+            "4 replicas should cut p99 TTFT: {} vs {}",
+            four.p99_ttft,
+            one.p99_ttft
+        );
+    }
+
+    #[test]
+    fn backpressure_requeues_but_everything_completes() {
+        // A queue cap far below the burst size forces requeues.
+        let mut c = cluster(2, RoutePolicy::RoundRobin, 6);
+        c.submit_all(DynamicSonnet::default().generate(30, f64::INFINITY, 3));
+        let s = c.run_to_completion();
+        assert_eq!(s.requests, 30);
+        assert!(c.requeues > 0, "expected backpressure requeues");
+        assert_eq!(c.router().queued(), 0);
+    }
+
+    #[test]
+    fn affinity_assignment_is_stable_per_request_id() {
+        let mut c = cluster(4, RoutePolicy::Affinity, 10_000);
+        c.submit_all(DynamicSonnet::default().generate(32, 100.0, 9));
+        c.run_to_completion();
+        let mut c2 = cluster(4, RoutePolicy::Affinity, 10_000);
+        c2.submit_all(DynamicSonnet::default().generate(32, 100.0, 9));
+        c2.run_to_completion();
+        for id in 0..32u64 {
+            assert_eq!(c.assignment_of(id), c2.assignment_of(id), "id {id}");
+            assert!(c.assignment_of(id).is_some());
+        }
+    }
+}

@@ -1,20 +1,32 @@
-//! The serving engine: a discrete-event loop driving the scheduler against
-//! a pluggable `Backend`. With `SimBackend` the clock is virtual and step
-//! durations come from the device simulators (this is how Fig 17(d,e) is
-//! regenerated); with `PjrtBackend` (`real_engine.rs`) the same scheduler
-//! and block bookkeeping drive real HLO executables under the wall clock.
+//! The serving engine core: ONE discrete-event step loop driving the
+//! scheduler against a pluggable `Backend`, parameterized by a
+//! `ClockSource`. With `SimBackend` + `VirtualClock` the step durations
+//! come from the device simulators and time is advanced analytically
+//! (this is how Fig 17(d,e) is regenerated); with `PjrtBackend`
+//! (`real_engine.rs`) + `WallClock` the same scheduler, block bookkeeping,
+//! trace and metrics emission drive real HLO executables under the wall
+//! clock. `serving::cluster` composes N cores into a data-parallel fleet.
 
 use crate::config::{DeviceKind, ServingConfig};
 use crate::models::llama::{self, LlamaConfig};
 use crate::ops::attention::{self, PagedAttnImpl, PagedAttnWork};
 use crate::serving::metrics::{MetricsCollector, RequestMetrics};
-use crate::serving::request::{Request, RequestId};
+use crate::serving::request::{Phase, Request, RequestId};
 use crate::serving::scheduler::{Scheduler, Step};
 use crate::serving::trace::{Trace, TraceEvent, TraceStepKind};
+
+/// One prompt handed to the backend for prefill.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillItem {
+    pub id: RequestId,
+    pub prompt_len: usize,
+}
 
 /// A batch of decode work handed to the backend.
 #[derive(Debug, Clone)]
 pub struct DecodeWork {
+    /// Sequences in the step, in decode order (parallel to `kv_lens`).
+    pub ids: Vec<RequestId>,
     pub kv_lens: Vec<usize>,
     /// Padded table width in blocks × block_size (vLLM_base) — equals the
     /// longest sequence rounded up to a block.
@@ -24,12 +36,109 @@ pub struct DecodeWork {
     pub use_block_list: bool,
 }
 
-/// Execution backend abstraction.
+/// Execution backend abstraction. Implementations return the step
+/// duration in seconds — simulated for `SimBackend`, measured wall time
+/// for `PjrtBackend`.
 pub trait Backend {
-    /// Process prompts (lengths given); returns step duration in seconds.
-    fn prefill(&mut self, prompt_lens: &[usize]) -> f64;
+    /// Process prompts; returns step duration in seconds.
+    fn prefill(&mut self, batch: &[PrefillItem]) -> f64;
     /// One decode step; returns step duration in seconds.
     fn decode(&mut self, work: &DecodeWork) -> f64;
+    /// Whether prefill itself emits each sequence's first token (real
+    /// engines sample the prefill's last-position logits; the cost-model
+    /// backend produces no tokens, so its first token lands on the first
+    /// decode step).
+    fn prefill_emits_first_token(&self) -> bool {
+        false
+    }
+    /// A sequence finished: release any backend-side state, e.g. a PJRT
+    /// batch slot.
+    fn release(&mut self, _id: RequestId) {}
+    /// A sequence was preempted (KV freed; the scheduler will re-prefill
+    /// it later). Backends that cannot recompute must surface an error
+    /// here rather than silently corrupting generation state.
+    fn preempt(&mut self, id: RequestId) {
+        self.release(id);
+    }
+}
+
+/// Source of engine time. The step loop is written once against this
+/// trait; simulation jumps time analytically while the real engine lets
+/// wall time pass on its own.
+pub trait ClockSource {
+    /// Current engine time in seconds.
+    fn now(&self) -> f64;
+    /// A step reported duration `dt`; virtual clocks add it, wall clocks
+    /// ignore it (the time already passed while the backend ran).
+    fn advance(&mut self, dt: f64);
+    /// Idle until time `t` (never moves time backwards).
+    fn wait_until(&mut self, t: f64);
+}
+
+/// Analytic simulation clock.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    t: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { t: 0.0 }
+    }
+}
+
+impl ClockSource for VirtualClock {
+    fn now(&self) -> f64 {
+        self.t
+    }
+
+    fn advance(&mut self, dt: f64) {
+        self.t += dt;
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        self.t = self.t.max(t);
+    }
+}
+
+/// Wall clock anchored at an epoch (engine construction or run start).
+#[derive(Debug, Clone)]
+pub struct WallClock {
+    start: std::time::Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { start: std::time::Instant::now() }
+    }
+
+    /// Re-anchor the epoch at the present instant (run start).
+    pub fn reset(&mut self) {
+        self.start = std::time::Instant::now();
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl ClockSource for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn advance(&mut self, _dt: f64) {
+        // Wall time advanced by itself while the backend executed.
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        let now = self.now();
+        if t > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(t - now));
+        }
+    }
 }
 
 /// Simulated-device backend: Llama cost model + PagedAttention operator.
@@ -49,18 +158,67 @@ impl SimBackend {
             block_size: cfg.block_size,
         }
     }
+
+    /// Attention geometry shared by every per-step costing call.
+    fn attn_geometry(&self, batch: usize, kv_len: usize, padded_len: usize) -> PagedAttnWork {
+        PagedAttnWork {
+            batch,
+            kv_len: kv_len.max(1),
+            padded_len: padded_len.max(kv_len.max(1)),
+            n_q_heads: self.model.n_q_heads / self.tp,
+            n_kv_heads: (self.model.n_kv_heads / self.tp).max(1),
+            head_dim: self.model.head_dim,
+            block_size: self.block_size,
+        }
+    }
+
+    /// Cost the layout-specific attention over a skewed batch by grouping
+    /// sequences into power-of-two block-count buckets and costing each
+    /// bucket at its own length, rather than collapsing the whole batch to
+    /// the mean KV length (which under-costs skewed batches: the long tail
+    /// pays super-linear gather/dispatch costs the mean never sees).
+    fn bucketed_attention_time(&self, imp: PagedAttnImpl, work: &DecodeWork) -> f64 {
+        // Bucket key: ceil(kv/block) rounded up to a power of two, so a
+        // 4-bucket batch costs 4 kernel slices, not `batch` of them.
+        let mut buckets: Vec<(usize, usize, usize)> = Vec::new(); // (key, n, sum_kv)
+        for &kv in &work.kv_lens {
+            let blocks = crate::util::ceil_div(kv.max(1), self.block_size).max(1);
+            let key = blocks.next_power_of_two();
+            match buckets.iter_mut().find(|b| b.0 == key) {
+                Some(b) => {
+                    b.1 += 1;
+                    b.2 += kv.max(1);
+                }
+                None => buckets.push((key, 1, kv.max(1))),
+            }
+        }
+        let works: Vec<PagedAttnWork> = buckets
+            .iter()
+            .map(|&(_, n, sum_kv)| {
+                let mean_kv = (sum_kv / n).max(1);
+                // BlockTable pads every row to the global table width;
+                // BlockList and the fused A100 kernel read effectual KV.
+                let padded = match imp {
+                    PagedAttnImpl::GaudiVllmBase => work.padded_len.max(mean_kv),
+                    _ => mean_kv,
+                };
+                self.attn_geometry(n, mean_kv, padded)
+            })
+            .collect();
+        self.model.layers as f64 * attention::run_bucketed(imp, &works)
+    }
 }
 
 impl Backend for SimBackend {
-    fn prefill(&mut self, prompt_lens: &[usize]) -> f64 {
-        if prompt_lens.is_empty() {
+    fn prefill(&mut self, batch: &[PrefillItem]) -> f64 {
+        if batch.is_empty() {
             return 0.0;
         }
         // Cost model treats the chunk as one batched prefill at the mean
         // length (token count preserved).
-        let tokens: usize = prompt_lens.iter().sum();
-        let mean_len = (tokens / prompt_lens.len()).max(1);
-        llama::prefill_cost(&self.model, self.device, prompt_lens.len(), mean_len, self.tp).time
+        let tokens: usize = batch.iter().map(|i| i.prompt_len).sum();
+        let mean_len = (tokens / batch.len()).max(1);
+        llama::prefill_cost(&self.model, self.device, batch.len(), mean_len, self.tp).time
     }
 
     fn decode(&mut self, work: &DecodeWork) -> f64 {
@@ -68,20 +226,12 @@ impl Backend for SimBackend {
         if batch == 0 {
             return 0.0;
         }
-                // Weight streaming + allreduce via the model layer.
+        // Weight streaming + allreduce via the model layer.
         let mean_kv = (work.kv_lens.iter().sum::<usize>() / batch).max(1);
         let base = llama::decode_step_cost(&self.model, self.device, batch, mean_kv, self.tp);
-        // Replace the model's default attention with the layout-specific
-        // operator: BlockTable (padded) vs BlockList (effectual).
-        let attn_work = PagedAttnWork {
-            batch,
-            kv_len: mean_kv,
-            padded_len: work.padded_len.max(mean_kv),
-            n_q_heads: self.model.n_q_heads / self.tp,
-            n_kv_heads: (self.model.n_kv_heads / self.tp).max(1),
-            head_dim: self.model.head_dim,
-            block_size: self.block_size,
-        };
+        // Replace the model's default attention (costed at the mean KV
+        // length, exactly as `decode_step_cost` folded it in) with the
+        // layout-specific operator costed per KV-length bucket.
         let (default_impl, this_impl) = match self.device {
             DeviceKind::Gaudi2 => (
                 PagedAttnImpl::GaudiVllmOpt,
@@ -94,21 +244,20 @@ impl Backend for SimBackend {
             DeviceKind::A100 => (PagedAttnImpl::A100Paged, PagedAttnImpl::A100Paged),
         };
         let default_attn = self.model.layers as f64
-            * attention::run(
-                default_impl,
-                PagedAttnWork { padded_len: mean_kv, ..attn_work },
-            )
-            .time;
-        let this_attn = self.model.layers as f64 * attention::run(this_impl, attn_work).time;
+            * attention::run(default_impl, self.attn_geometry(batch, mean_kv, mean_kv)).time;
+        let this_attn = self.bucketed_attention_time(this_impl, work);
         base.time - default_attn + this_attn
     }
 }
 
-/// The engine: owns the scheduler, a backend and the virtual clock.
-pub struct Engine<B: Backend> {
+/// The engine core: owns the scheduler, a backend and a clock source.
+/// This is the single step loop shared by the simulated engine
+/// (`Engine<SimBackend>`), the real PJRT engine (`real_engine.rs`) and
+/// every replica of `serving::cluster::ClusterSim`.
+pub struct EngineCore<B: Backend, C: ClockSource = VirtualClock> {
     pub sched: Scheduler,
     backend: B,
-    clock: f64,
+    clock: C,
     pub metrics: MetricsCollector,
     /// Requests not yet arrived, sorted by arrival time.
     pending: std::collections::VecDeque<Request>,
@@ -117,12 +266,21 @@ pub struct Engine<B: Backend> {
     pub trace: Trace,
 }
 
-impl<B: Backend> Engine<B> {
+/// The classic simulated engine: `EngineCore` on a virtual clock.
+pub type Engine<B> = EngineCore<B, VirtualClock>;
+
+impl<B: Backend> EngineCore<B, VirtualClock> {
     pub fn new(cfg: ServingConfig, backend: B) -> Engine<B> {
-        Engine {
+        EngineCore::with_clock(cfg, backend, VirtualClock::new())
+    }
+}
+
+impl<B: Backend, C: ClockSource> EngineCore<B, C> {
+    pub fn with_clock(cfg: ServingConfig, backend: B, clock: C) -> EngineCore<B, C> {
+        EngineCore {
             sched: Scheduler::new(cfg),
             backend,
-            clock: 0.0,
+            clock,
             metrics: MetricsCollector::default(),
             pending: std::collections::VecDeque::new(),
             steps_executed: 0,
@@ -131,7 +289,19 @@ impl<B: Backend> Engine<B> {
     }
 
     pub fn clock(&self) -> f64 {
-        self.clock
+        self.clock.now()
+    }
+
+    pub fn clock_mut(&mut self) -> &mut C {
+        &mut self.clock
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
     }
 
     pub fn steps_executed(&self) -> u64 {
@@ -145,10 +315,26 @@ impl<B: Backend> Engine<B> {
         self.pending.insert(pos, req);
     }
 
+    /// Anything left to do, now or in the future?
+    pub fn has_any_work(&self) -> bool {
+        self.sched.has_work() || !self.pending.is_empty()
+    }
+
+    /// Time of this engine's next event: now if the scheduler has work,
+    /// otherwise the next pending arrival. `None` when fully drained.
+    /// (`ClusterSim` merges these across replicas for next-event dispatch.)
+    pub fn next_event_time(&self) -> Option<f64> {
+        if self.sched.has_work() {
+            Some(self.clock.now())
+        } else {
+            self.pending.front().map(|r| r.arrival)
+        }
+    }
+
     /// Move arrived requests into the scheduler.
     fn admit_arrivals(&mut self) {
         while let Some(first) = self.pending.front() {
-            if first.arrival <= self.clock {
+            if first.arrival <= self.clock.now() {
                 let req = self.pending.pop_front().expect("front checked");
                 self.sched.submit(req);
             } else {
@@ -159,34 +345,48 @@ impl<B: Backend> Engine<B> {
 
     /// Run until every submitted request is finished. Returns the summary.
     pub fn run_to_completion(&mut self) -> crate::serving::metrics::MetricsSummary {
-        loop {
-            self.admit_arrivals();
-            if !self.sched.has_work() {
-                if let Some(next) = self.pending.front() {
-                    // Idle until the next arrival.
-                    self.clock = next.arrival;
-                    continue;
-                }
-                break;
-            }
-            self.step();
+        while self.has_any_work() {
+            self.advance();
         }
-        self.metrics.makespan = self.clock;
+        self.metrics.makespan = self.clock.now();
         self.metrics.summary()
     }
 
-    /// Execute one scheduling step.
-    pub fn step(&mut self) {
+    /// One discrete-event iteration: admit due arrivals and either execute
+    /// a step or idle-jump to the next arrival. Returns the ids of
+    /// requests that finished during the iteration.
+    pub fn advance(&mut self) -> Vec<RequestId> {
         self.admit_arrivals();
+        if !self.sched.has_work() {
+            if let Some(next) = self.pending.front() {
+                // Idle until the next arrival.
+                let t = next.arrival;
+                self.clock.wait_until(t);
+            }
+            return Vec::new();
+        }
+        self.step()
+    }
+
+    /// Execute one scheduling step. Returns newly finished request ids.
+    pub fn step(&mut self) -> Vec<RequestId> {
+        self.admit_arrivals();
+        let mut finished = Vec::new();
         match self.sched.schedule() {
             Step::Prefill(ids) => {
-                let lens: Vec<usize> =
-                    ids.iter().map(|id| self.sched.seq(*id).req.prompt_len).collect();
-                let tokens: usize = lens.iter().sum();
-                let t0 = self.clock;
-                let dt = self.backend.prefill(&lens);
-                self.clock += dt;
+                let items: Vec<PrefillItem> = ids
+                    .iter()
+                    .map(|id| PrefillItem {
+                        id: *id,
+                        prompt_len: self.sched.seq(*id).req.prompt_len,
+                    })
+                    .collect();
+                let tokens: usize = items.iter().map(|i| i.prompt_len).sum();
+                let t0 = self.clock.now();
+                let dt = self.backend.prefill(&items);
+                self.clock.advance(dt);
                 self.steps_executed += 1;
+                let now = self.clock.now();
                 self.trace.record(TraceEvent {
                     t_start: t0,
                     kind: TraceStepKind::Prefill,
@@ -195,14 +395,32 @@ impl<B: Backend> Engine<B> {
                     duration: dt,
                     kv_blocks_used: self.sched.kv.num_allocated(),
                 });
+                if self.backend.prefill_emits_first_token() {
+                    for &id in &ids {
+                        let s = self.sched.seq_mut(id);
+                        // Only the first prefill of a sequence emits a
+                        // token; a recompute-preemption re-prefill merely
+                        // restores already-generated state.
+                        if s.generated == 0 {
+                            s.generated = 1;
+                            s.first_token_time = Some(now);
+                            if s.is_done() {
+                                s.phase = Phase::Finished;
+                                s.finish_time = Some(now);
+                            }
+                        }
+                    }
+                    self.sched.retire_finished(&ids);
+                    finished.extend(self.harvest_finished());
+                }
             }
             Step::Decode(ids) => {
                 let work = self.decode_work(&ids);
-                let t0 = self.clock;
+                let t0 = self.clock.now();
                 let dt = self.backend.decode(&work);
-                self.clock += dt;
+                self.clock.advance(dt);
                 self.steps_executed += 1;
-                self.sched.complete_decode(&ids, self.clock);
+                self.sched.complete_decode(&ids, self.clock.now());
                 self.trace.record(TraceEvent {
                     t_start: t0,
                     kind: TraceStepKind::Decode,
@@ -211,22 +429,36 @@ impl<B: Backend> Engine<B> {
                     duration: dt,
                     kv_blocks_used: self.sched.kv.num_allocated(),
                 });
-                for id in self.sched.take_finished() {
-                    let m = RequestMetrics::from_sequence(self.sched.seq(id));
-                    self.metrics.record(m);
-                }
+                finished.extend(self.harvest_finished());
             }
             Step::Idle => {
                 // No schedulable work (all blocked); advance to next arrival
-                // or bail (run_to_completion handles termination).
-                if let Some(next) = self.pending.front() {
-                    self.clock = next.arrival.max(self.clock + 1e-6);
-                } else {
-                    // Avoid an infinite loop on a stuck schedule.
-                    self.clock += 1e-6;
-                }
+                // or nudge time forward (run_to_completion handles
+                // termination).
+                let bump = self.clock.now() + 1e-6;
+                let target = match self.pending.front() {
+                    Some(next) => next.arrival.max(bump),
+                    None => bump,
+                };
+                self.clock.wait_until(target);
             }
         }
+        // Preempted sequences also leave the backend (KV recomputed later).
+        for id in self.sched.take_preempted() {
+            self.backend.preempt(id);
+        }
+        finished
+    }
+
+    /// Drain finished sequences into metrics and release backend state.
+    fn harvest_finished(&mut self) -> Vec<RequestId> {
+        let done = self.sched.take_finished();
+        for &id in &done {
+            let m = RequestMetrics::from_sequence(self.sched.seq(id));
+            self.metrics.record(m);
+            self.backend.release(id);
+        }
+        done
     }
 
     /// Build the backend work descriptor. Padding metrics are computed
@@ -247,6 +479,7 @@ impl<B: Backend> Engine<B> {
         }
         let padded = ids.len() * max_blocks;
         DecodeWork {
+            ids: ids.to_vec(),
             padded_len: max_blocks * block_size,
             padding_fraction: if padded == 0 {
                 0.0
@@ -336,6 +569,7 @@ mod tests {
         let w = e.decode_work(&ids);
         assert!(w.padding_fraction > 0.3, "padding {}", w.padding_fraction);
         assert_eq!(w.padded_len, 1024);
+        assert_eq!(w.ids, ids);
     }
 
     #[test]
@@ -349,5 +583,41 @@ mod tests {
             e.run_to_completion().throughput_tps
         };
         assert!(run(16) > 4.0 * run(1), "batching should amortize decode");
+    }
+
+    #[test]
+    fn skewed_batch_costs_more_than_uniform_at_same_total_kv() {
+        // Bucketed costing: one 3072-token + three 64-token sequences must
+        // not be costed like four ~816-token sequences (the mean collapse).
+        let cfg = small_cfg(true);
+        let mut be = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
+        let mk = |kv_lens: Vec<usize>| {
+            let n = kv_lens.len();
+            let max = *kv_lens.iter().max().unwrap();
+            DecodeWork {
+                ids: (0..n as u64).collect(),
+                padded_len: crate::util::ceil_div(max, cfg.block_size) * cfg.block_size,
+                padding_fraction: 0.0,
+                kv_lens,
+                use_block_list: true,
+            }
+        };
+        let skewed = be.decode(&mk(vec![3072, 64, 64, 64]));
+        let uniform = be.decode(&mk(vec![816, 816, 816, 816]));
+        assert!(
+            skewed > uniform,
+            "skew must cost extra: skewed {skewed} uniform {uniform}"
+        );
+    }
+
+    #[test]
+    fn virtual_clock_semantics() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        c.wait_until(1.0); // never backwards
+        assert_eq!(c.now(), 1.5);
+        c.wait_until(3.0);
+        assert_eq!(c.now(), 3.0);
     }
 }

@@ -1,13 +1,16 @@
 //! Serving metrics: TTFT (time-to-first-token), TPOT (time-per-output-
 //! token), end-to-end latency and throughput — the SLO metrics of
-//! Fig 17(d,e).
+//! Fig 17(d,e). `MetricsCollector` instances merge, so
+//! `serving::cluster::ClusterSim` folds per-replica collectors into
+//! fleet-level percentiles and goodput-under-SLO.
 
-use crate::serving::request::Sequence;
+use crate::serving::request::{RequestId, Sequence};
 use crate::util::stats::{mean, percentile};
 
 /// Metrics for one completed request.
 #[derive(Debug, Clone, Copy)]
 pub struct RequestMetrics {
+    pub id: RequestId,
     pub ttft: f64,
     pub tpot: f64,
     pub e2e: f64,
@@ -22,7 +25,18 @@ impl RequestMetrics {
         let ttft = first - s.req.arrival;
         let decode_span = finish - first;
         let tpot = if s.generated > 1 { decode_span / (s.generated - 1) as f64 } else { 0.0 };
-        RequestMetrics { ttft, tpot, e2e: finish - s.req.arrival, output_tokens: s.generated }
+        RequestMetrics {
+            id: s.req.id,
+            ttft,
+            tpot,
+            e2e: finish - s.req.arrival,
+            output_tokens: s.generated,
+        }
+    }
+
+    /// Does this request meet a (TTFT, TPOT) service-level objective?
+    pub fn meets_slo(&self, ttft_slo: f64, tpot_slo: f64) -> bool {
+        self.ttft <= ttft_slo && self.tpot <= tpot_slo
     }
 }
 
@@ -38,8 +52,10 @@ pub struct MetricsCollector {
 pub struct MetricsSummary {
     pub requests: usize,
     pub mean_ttft: f64,
+    pub p50_ttft: f64,
     pub p99_ttft: f64,
     pub mean_tpot: f64,
+    pub p50_tpot: f64,
     pub p99_tpot: f64,
     pub mean_e2e: f64,
     /// Output tokens per second over the makespan.
@@ -61,6 +77,41 @@ impl MetricsCollector {
         self.per_request.is_empty()
     }
 
+    /// Per-request metrics, in completion order.
+    pub fn per_request(&self) -> &[RequestMetrics] {
+        &self.per_request
+    }
+
+    /// Total output tokens over all completed requests.
+    pub fn output_tokens(&self) -> usize {
+        self.per_request.iter().map(|m| m.output_tokens).sum()
+    }
+
+    /// Fold another collector (e.g. one replica's) into this one. The
+    /// merged makespan is the max — replicas run concurrently, so the
+    /// fleet span is the slowest replica's span.
+    pub fn merge(&mut self, other: &MetricsCollector) {
+        self.per_request.extend_from_slice(&other.per_request);
+        self.makespan = self.makespan.max(other.makespan);
+    }
+
+    /// Goodput under a (TTFT, TPOT) SLO: completed-and-compliant requests
+    /// per second over the makespan — the deployment-sizing metric of the
+    /// cluster experiment.
+    pub fn goodput_under_slo(&self, ttft_slo: f64, tpot_slo: f64) -> f64 {
+        let ok = self.per_request.iter().filter(|m| m.meets_slo(ttft_slo, tpot_slo)).count();
+        ok as f64 / self.makespan.max(1e-12)
+    }
+
+    /// Fraction of completed requests meeting the SLO.
+    pub fn slo_attainment(&self, ttft_slo: f64, tpot_slo: f64) -> f64 {
+        if self.per_request.is_empty() {
+            return 0.0;
+        }
+        let ok = self.per_request.iter().filter(|m| m.meets_slo(ttft_slo, tpot_slo)).count();
+        ok as f64 / self.per_request.len() as f64
+    }
+
     pub fn summary(&self) -> MetricsSummary {
         let ttfts: Vec<f64> = self.per_request.iter().map(|m| m.ttft).collect();
         let tpots: Vec<f64> =
@@ -71,8 +122,10 @@ impl MetricsCollector {
         MetricsSummary {
             requests: self.per_request.len(),
             mean_ttft: mean(&ttfts),
+            p50_ttft: percentile(&ttfts, 50.0),
             p99_ttft: percentile(&ttfts, 99.0),
             mean_tpot: mean(&tpots),
+            p50_tpot: percentile(&tpots, 50.0),
             p99_tpot: percentile(&tpots, 99.0),
             mean_e2e: mean(&e2es),
             throughput_tps: tokens as f64 / span,
@@ -95,30 +148,30 @@ mod tests {
         s
     }
 
+    fn m(id: RequestId, ttft: f64) -> RequestMetrics {
+        RequestMetrics { id, ttft, tpot: 0.01, e2e: 1.0, output_tokens: 100 }
+    }
+
     #[test]
     fn request_metrics_math() {
-        let m = RequestMetrics::from_sequence(&finished_seq(1.0, 1.5, 2.5, 11));
-        assert!((m.ttft - 0.5).abs() < 1e-12);
-        assert!((m.tpot - 0.1).abs() < 1e-12);
-        assert!((m.e2e - 1.5).abs() < 1e-12);
+        let rm = RequestMetrics::from_sequence(&finished_seq(1.0, 1.5, 2.5, 11));
+        assert_eq!(rm.id, 1);
+        assert!((rm.ttft - 0.5).abs() < 1e-12);
+        assert!((rm.tpot - 0.1).abs() < 1e-12);
+        assert!((rm.e2e - 1.5).abs() < 1e-12);
     }
 
     #[test]
     fn single_token_has_zero_tpot() {
-        let m = RequestMetrics::from_sequence(&finished_seq(0.0, 0.2, 0.2, 1));
-        assert_eq!(m.tpot, 0.0);
+        let rm = RequestMetrics::from_sequence(&finished_seq(0.0, 0.2, 0.2, 1));
+        assert_eq!(rm.tpot, 0.0);
     }
 
     #[test]
     fn summary_aggregates() {
         let mut c = MetricsCollector::default();
         for i in 0..10 {
-            c.record(RequestMetrics {
-                ttft: 0.1 * (i + 1) as f64,
-                tpot: 0.01,
-                e2e: 1.0,
-                output_tokens: 100,
-            });
+            c.record(m(i, 0.1 * (i + 1) as f64));
         }
         c.makespan = 10.0;
         let s = c.summary();
@@ -127,5 +180,35 @@ mod tests {
         assert!((s.throughput_tps - 100.0).abs() < 1e-9);
         assert!((s.throughput_rps - 1.0).abs() < 1e-9);
         assert!(s.p99_ttft >= s.mean_ttft);
+        assert!(s.p50_ttft <= s.p99_ttft);
+        assert_eq!(c.output_tokens(), 1000);
+    }
+
+    #[test]
+    fn merge_concatenates_and_takes_max_makespan() {
+        let mut a = MetricsCollector::default();
+        a.record(m(0, 0.1));
+        a.makespan = 4.0;
+        let mut b = MetricsCollector::default();
+        b.record(m(1, 0.3));
+        b.record(m(2, 0.2));
+        b.makespan = 9.0;
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.makespan, 9.0);
+        // Fleet tokens = sum of replica tokens.
+        assert_eq!(a.output_tokens(), 300);
+    }
+
+    #[test]
+    fn goodput_and_attainment() {
+        let mut c = MetricsCollector::default();
+        c.record(m(0, 0.1)); // compliant (ttft <= 0.2)
+        c.record(m(1, 0.5)); // violates TTFT SLO
+        c.makespan = 2.0;
+        assert!((c.goodput_under_slo(0.2, 0.05) - 0.5).abs() < 1e-12);
+        assert!((c.slo_attainment(0.2, 0.05) - 0.5).abs() < 1e-12);
+        // Tightening the TPOT SLO below 0.01 kills both.
+        assert_eq!(c.goodput_under_slo(0.2, 0.001), 0.0);
     }
 }

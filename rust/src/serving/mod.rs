@@ -1,10 +1,22 @@
-//! The L3 serving framework — a vLLM-style engine (the paper's §4.2 case
-//! study) implemented as a real coordinator: admission router, continuous
-//! batcher, paged KV-cache block manager, BlockTable/BlockList layouts,
-//! and pluggable execution backends (simulated devices or real PJRT
-//! executables). All block bookkeeping is identical in both paths.
+//! The L3 serving framework — a vLLM-style stack (the paper's §4.2 case
+//! study) implemented as a real coordinator, layered as:
+//!
+//! ```text
+//! Backend (SimBackend | PjrtBackend)     step costs: simulated or wall
+//!     └── EngineCore<B, ClockSource>     ONE step loop: scheduler +
+//!         │                              paged-KV bookkeeping + trace +
+//!         │                              metrics emission
+//!         └── ClusterSim                 N replicas, merged virtual-time
+//!             └── Router                 admission + dispatch policies,
+//!                                        global queue cap (backpressure)
+//! ```
+//!
+//! All block bookkeeping is identical in the simulated and real paths;
+//! the cluster layer turns the per-device reproduction into a
+//! deployment-scale simulator (`repro run cluster`).
 
 pub mod block_table;
+pub mod cluster;
 pub mod engine;
 pub mod kv_cache;
 pub mod metrics;

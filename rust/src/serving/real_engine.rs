@@ -2,22 +2,32 @@
 //! artifacts (L2 JAX + L1 Pallas, lowered to HLO) through the PJRT
 //! runtime with slot-based continuous batching and greedy decoding.
 //!
-//! Shapes are static (PJRT CPU has no dynamic shapes), so the engine
-//! manages a fixed number of batch *slots*: a free slot is filled by the
-//! next waiting request (its prompt processed by the `prefill` artifact),
-//! and every `decode_step` call advances all occupied slots by one token.
-//! Paging therefore lives at the slot/position level here, while the
-//! simulated engine (`engine.rs`) exercises the full block-manager path —
-//! see DESIGN.md §6 for the trade-off.
+//! Since the multi-layer unification, this file no longer owns a step
+//! loop: `PjrtBackend` implements `serving::engine::Backend` (prefill =
+//! run the `prefill` artifact per admitted prompt, decode = one
+//! `decode_step` artifact call for all occupied slots) and the shared
+//! `EngineCore` drives it under a `WallClock`. Scheduling, KV-block
+//! bookkeeping, tracing and metrics emission are therefore *identical*
+//! to the simulated path — the only difference is where step durations
+//! come from.
+//!
+//! Shapes are static (PJRT CPU has no dynamic shapes), so the backend
+//! maps each running request onto a fixed batch *slot*; the engine
+//! config pins `max_decode_batch` to the slot count and sizes the block
+//! pool so KV pressure can never preempt (a preempted slot would need
+//! token-level recompute the artifacts do not express).
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::config::{DeviceKind, ServingConfig};
 use crate::runtime::{HostTensor, Runtime};
-use crate::serving::metrics::{MetricsCollector, MetricsSummary, RequestMetrics};
-use crate::serving::request::{Phase, Request, Sequence};
+use crate::serving::engine::{Backend, DecodeWork, EngineCore, PrefillItem, WallClock};
+use crate::serving::metrics::{MetricsCollector, MetricsSummary};
+use crate::serving::request::{Request, RequestId};
+use crate::util::ceil_div;
+use crate::util::fasthash::FastMap;
 
 /// Model geometry discovered from the artifact manifest metadata.
 #[derive(Debug, Clone, Copy)]
@@ -30,37 +40,39 @@ pub struct RealModelDims {
     pub kv_elems: usize,
 }
 
-/// One occupied slot.
+/// Per-request generation state held by the backend.
 #[derive(Debug, Clone)]
-struct Slot {
-    seq: Sequence,
+struct SlotState {
+    slot: usize,
     /// Tokens for the sequence (prompt then generated).
     tokens: Vec<i32>,
     /// Current position (tokens in KV).
     pos: usize,
 }
 
-/// PJRT-backed LLM serving engine.
-pub struct PjrtLlmEngine {
+/// PJRT execution backend: owns the runtime, weights, the host-resident
+/// KV buffer and the slot map. Step durations are measured wall time.
+pub struct PjrtBackend {
     rt: Runtime,
     dims: RealModelDims,
-    slots: Vec<Option<Slot>>,
-    waiting: VecDeque<(Request, Vec<i32>)>,
     /// Flat model weights, produced once by the `init_llama_weights`
     /// artifact (no weights ever constructed host-side).
     weights: Vec<f32>,
     /// Host-resident KV cache, re-fed to the artifact every step.
     kv: Vec<f32>,
-    pub metrics: MetricsCollector,
-    start: Instant,
+    /// slot index -> occupying request.
+    slots: Vec<Option<RequestId>>,
+    state: FastMap<RequestId, SlotState>,
+    /// Prompts staged at submit time, consumed at (first) prefill.
+    prompts: FastMap<RequestId, Vec<i32>>,
     pub tokens_generated: u64,
     pub steps: u64,
+    /// First artifact error; the engine wrapper surfaces it and aborts.
+    error: Option<anyhow::Error>,
 }
 
-impl PjrtLlmEngine {
-    /// Load `init_llama_weights`, `prefill` and `decode_step` from the
-    /// artifact directory and materialize the weights.
-    pub fn new(artifacts_dir: &str) -> Result<PjrtLlmEngine> {
+impl PjrtBackend {
+    fn new(artifacts_dir: &str) -> Result<PjrtBackend> {
         let mut rt = Runtime::new(artifacts_dir)?;
         let entry = rt.load("decode_step").context("loading decode_step artifact")?;
         let meta = &entry.entry.meta;
@@ -79,104 +91,69 @@ impl PjrtLlmEngine {
         rt.load("prefill").context("loading prefill artifact")?;
         let init = rt.load("init_llama_weights").context("loading weight init artifact")?;
         let weights = init.run(&[])?.remove(0).as_f32()?.to_vec();
-        Ok(PjrtLlmEngine {
+        Ok(PjrtBackend {
             rt,
             dims,
-            slots: (0..dims.batch_slots).map(|_| None).collect(),
-            waiting: VecDeque::new(),
             weights,
             kv: vec![0.0; dims.kv_elems],
-            metrics: MetricsCollector::default(),
-            start: Instant::now(),
+            slots: (0..dims.batch_slots).map(|_| None).collect(),
+            state: FastMap::default(),
+            prompts: FastMap::default(),
             tokens_generated: 0,
             steps: 0,
+            error: None,
         })
     }
 
-    pub fn dims(&self) -> RealModelDims {
-        self.dims
+    fn take_error(&mut self) -> Option<anyhow::Error> {
+        self.error.take()
     }
 
-    fn now(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
-    }
-
-    /// Submit a request with concrete prompt token ids.
-    pub fn submit(&mut self, req: Request, prompt: Vec<i32>) -> Result<()> {
-        anyhow::ensure!(prompt.len() == req.prompt_len, "prompt length mismatch");
-        anyhow::ensure!(prompt.len() <= self.dims.prompt_pad, "prompt exceeds prompt_pad");
-        anyhow::ensure!(
-            req.prompt_len + req.max_new_tokens <= self.dims.max_seq,
-            "request exceeds max_seq"
-        );
-        self.waiting.push_back((req, prompt));
+    /// Run one prompt through the `prefill` artifact; the last-position
+    /// logits give the first generated token, like a real server.
+    fn prefill_one(&mut self, id: RequestId, prompt: Vec<i32>) -> Result<()> {
+        let slot_idx = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .expect("scheduler caps running sequences at the slot count");
+        let plen = prompt.len();
+        let mut padded = prompt.clone();
+        padded.resize(self.dims.prompt_pad, 0);
+        let pf = self.rt.load("prefill")?;
+        let outputs = pf.run(&[
+            HostTensor::F32(self.weights.clone()),
+            HostTensor::I32(padded),
+            HostTensor::F32(std::mem::take(&mut self.kv)),
+            HostTensor::I32(vec![slot_idx as i32]),
+            HostTensor::I32(vec![plen as i32]),
+        ])?;
+        // outputs: (last-position logits [vocab], kv')
+        let logits = outputs[0].as_f32()?;
+        self.kv = match &outputs[1] {
+            HostTensor::F32(v) => v.clone(),
+            _ => anyhow::bail!("prefill kv output must be f32"),
+        };
+        let first = argmax(logits) as i32;
+        self.tokens_generated += 1;
+        let mut tokens = prompt;
+        tokens.push(first);
+        self.slots[slot_idx] = Some(id);
+        self.state.insert(id, SlotState { slot: slot_idx, tokens, pos: plen });
         Ok(())
     }
 
-    pub fn has_work(&self) -> bool {
-        !self.waiting.is_empty() || self.slots.iter().any(|s| s.is_some())
-    }
-
-    /// Admit waiting requests into free slots, running the prefill
-    /// artifact for each (prompt padded to `prompt_pad`). The first
-    /// generated token comes from the prefill's last-position logits, so
-    /// TTFT is measured at prefill completion, like a real server.
-    fn admit(&mut self) -> Result<()> {
-        for slot_idx in 0..self.slots.len() {
-            if self.slots[slot_idx].is_some() {
-                continue;
-            }
-            let Some((req, prompt)) = self.waiting.pop_front() else { break };
-            let mut padded = prompt.clone();
-            padded.resize(self.dims.prompt_pad, 0);
-            let plen = prompt.len();
-            let pf = self.rt.load("prefill")?;
-            let outputs = pf.run(&[
-                HostTensor::F32(self.weights.clone()),
-                HostTensor::I32(padded),
-                HostTensor::F32(std::mem::take(&mut self.kv)),
-                HostTensor::I32(vec![slot_idx as i32]),
-                HostTensor::I32(vec![plen as i32]),
-            ])?;
-            // outputs: (last-position logits [vocab], kv')
-            let logits = outputs[0].as_f32()?;
-            self.kv = match &outputs[1] {
-                HostTensor::F32(v) => v.clone(),
-                _ => anyhow::bail!("prefill kv output must be f32"),
-            };
-            let first = argmax(logits) as i32;
-            let now = self.now();
-            let mut seq = Sequence::new(req);
-            seq.phase = Phase::Running;
-            seq.kv_len = plen;
-            seq.generated = 1;
-            seq.first_token_time = Some(now);
-            self.tokens_generated += 1;
-            let mut tokens = prompt;
-            tokens.push(first);
-            if seq.is_done() {
-                seq.phase = Phase::Finished;
-                seq.finish_time = Some(now);
-                self.metrics.record(RequestMetrics::from_sequence(&seq));
-            } else {
-                self.slots[slot_idx] = Some(Slot { seq, tokens, pos: plen });
-            }
-        }
-        Ok(())
-    }
-
-    /// One decode step for all occupied slots.
-    fn decode_step(&mut self) -> Result<()> {
+    /// One `decode_step` artifact call advancing every sequence in `ids`.
+    fn decode_batch(&mut self, ids: &[RequestId]) -> Result<()> {
         let b = self.dims.batch_slots;
         let mut tokens = vec![0i32; b];
         let mut positions = vec![0i32; b];
         let mut active = vec![false; b];
-        for (i, s) in self.slots.iter().enumerate() {
-            if let Some(slot) = s {
-                tokens[i] = *slot.tokens.last().unwrap();
-                positions[i] = slot.pos as i32;
-                active[i] = true;
-            }
+        for id in ids {
+            let st = self.state.get(id).expect("decoded sequence has a slot");
+            tokens[st.slot] = *st.tokens.last().expect("slot has tokens");
+            positions[st.slot] = st.pos as i32;
+            active[st.slot] = true;
         }
         if !active.iter().any(|&a| a) {
             return Ok(());
@@ -194,39 +171,152 @@ impl PjrtLlmEngine {
             _ => anyhow::bail!("decode kv output must be f32"),
         };
         self.steps += 1;
-        let now = self.now();
-        for i in 0..b {
-            if !active[i] {
-                continue;
-            }
-            let slot = self.slots[i].as_mut().unwrap();
+        for id in ids {
+            let st = self.state.get_mut(id).expect("decoded sequence has a slot");
             // Greedy argmax over this slot's logits row.
-            let next = argmax(&logits[i * self.dims.vocab..(i + 1) * self.dims.vocab]) as i32;
-            slot.tokens.push(next);
-            slot.pos += 1;
-            slot.seq.kv_len += 1;
-            slot.seq.generated += 1;
+            let row = &logits[st.slot * self.dims.vocab..(st.slot + 1) * self.dims.vocab];
+            st.tokens.push(argmax(row) as i32);
+            st.pos += 1;
             self.tokens_generated += 1;
-            if slot.seq.is_done() || slot.pos + 1 >= self.dims.max_seq {
-                slot.seq.phase = Phase::Finished;
-                slot.seq.finish_time = Some(now);
-                self.metrics.record(RequestMetrics::from_sequence(&slot.seq));
-                self.slots[i] = None;
-            }
         }
         Ok(())
     }
+}
 
-    /// Run until all submitted requests complete; returns the summary and
-    /// all generated token streams (request id order of completion).
-    pub fn run_to_completion(&mut self) -> Result<MetricsSummary> {
-        self.start = Instant::now();
-        while self.has_work() {
-            self.admit()?;
-            self.decode_step()?;
+impl Backend for PjrtBackend {
+    fn prefill(&mut self, batch: &[PrefillItem]) -> f64 {
+        let t0 = Instant::now();
+        if self.error.is_none() {
+            for item in batch {
+                let prompt = self
+                    .prompts
+                    .get(&item.id)
+                    .cloned()
+                    .expect("prompt staged at submit");
+                if let Err(e) = self.prefill_one(item.id, prompt) {
+                    self.error = Some(e);
+                    break;
+                }
+            }
         }
-        self.metrics.makespan = self.now();
-        Ok(self.metrics.summary())
+        t0.elapsed().as_secs_f64()
+    }
+
+    fn decode(&mut self, work: &DecodeWork) -> f64 {
+        let t0 = Instant::now();
+        if self.error.is_none() {
+            if let Err(e) = self.decode_batch(&work.ids) {
+                self.error = Some(e);
+            }
+        }
+        t0.elapsed().as_secs_f64()
+    }
+
+    fn prefill_emits_first_token(&self) -> bool {
+        true
+    }
+
+    fn release(&mut self, id: RequestId) {
+        if let Some(st) = self.state.remove(&id) {
+            self.slots[st.slot] = None;
+        }
+        self.prompts.remove(&id);
+    }
+
+    fn preempt(&mut self, id: RequestId) {
+        // The artifacts express no token-level recompute: a preempted
+        // sequence cannot be restored. `PjrtLlmEngine::new` sizes the
+        // block pool so this is unreachable; surface a hard error rather
+        // than silently truncating output if that invariant ever breaks.
+        self.release(id);
+        if self.error.is_none() {
+            self.error = Some(anyhow::anyhow!(
+                "request {id} was preempted, but the PJRT backend cannot recompute \
+                 sequences (static slots); the engine's KV pool must be sized so \
+                 preemption never occurs"
+            ));
+        }
+    }
+}
+
+/// PJRT-backed LLM serving engine: the shared `EngineCore` step loop over
+/// a [`PjrtBackend`] and a wall clock.
+pub struct PjrtLlmEngine {
+    core: EngineCore<PjrtBackend, WallClock>,
+}
+
+impl PjrtLlmEngine {
+    /// Load `init_llama_weights`, `prefill` and `decode_step` from the
+    /// artifact directory and materialize the weights.
+    pub fn new(artifacts_dir: &str) -> Result<PjrtLlmEngine> {
+        let backend = PjrtBackend::new(artifacts_dir)?;
+        let dims = backend.dims;
+        // Static-shape serving config: one scheduler seat per batch slot,
+        // and a block pool sized so KV pressure can never force the
+        // preemption path (the artifacts cannot recompute a sequence).
+        let block_size = 16;
+        let cfg = ServingConfig {
+            device: DeviceKind::Gaudi2, // wall-clock path; device model unused
+            tensor_parallel: 1,
+            block_size,
+            num_blocks: dims.batch_slots * ceil_div(dims.max_seq, block_size),
+            max_decode_batch: dims.batch_slots,
+            max_prefill_tokens: dims.max_seq * dims.batch_slots.max(1),
+            max_seq_len: dims.max_seq,
+            use_block_list: true,
+            watermark: 0.0,
+            ..Default::default()
+        };
+        Ok(PjrtLlmEngine { core: EngineCore::with_clock(cfg, backend, WallClock::new()) })
+    }
+
+    pub fn dims(&self) -> RealModelDims {
+        self.core.backend().dims
+    }
+
+    /// Tokens generated so far (always current, even after an error).
+    pub fn tokens_generated(&self) -> u64 {
+        self.core.backend().tokens_generated
+    }
+
+    /// Decode steps executed so far (always current, even after an error).
+    pub fn steps(&self) -> u64 {
+        self.core.backend().steps
+    }
+
+    pub fn metrics(&self) -> &MetricsCollector {
+        &self.core.metrics
+    }
+
+    /// Submit a request with concrete prompt token ids.
+    pub fn submit(&mut self, req: Request, prompt: Vec<i32>) -> Result<()> {
+        let dims = self.core.backend().dims;
+        anyhow::ensure!(prompt.len() == req.prompt_len, "prompt length mismatch");
+        anyhow::ensure!(prompt.len() <= dims.prompt_pad, "prompt exceeds prompt_pad");
+        anyhow::ensure!(
+            req.prompt_len + req.max_new_tokens <= dims.max_seq,
+            "request exceeds max_seq"
+        );
+        self.core.backend_mut().prompts.insert(req.id, prompt);
+        self.core.submit(req);
+        Ok(())
+    }
+
+    pub fn has_work(&self) -> bool {
+        self.core.has_any_work()
+    }
+
+    /// Run until all submitted requests complete; returns the summary.
+    pub fn run_to_completion(&mut self) -> Result<MetricsSummary> {
+        self.core.clock_mut().reset();
+        while self.core.has_any_work() {
+            self.core.advance();
+            if let Some(e) = self.core.backend_mut().take_error() {
+                return Err(e);
+            }
+        }
+        self.core.metrics.makespan = self.core.clock();
+        Ok(self.core.metrics.summary())
     }
 }
 

@@ -16,6 +16,29 @@ pub enum RoutePolicy {
     Affinity,
 }
 
+impl RoutePolicy {
+    pub const ALL: [RoutePolicy; 3] =
+        [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::Affinity];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::LeastLoaded => "least_loaded",
+            RoutePolicy::Affinity => "affinity",
+        }
+    }
+
+    /// Parse a config-file name (see `ServingConfig::from_json`).
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "round_robin" | "rr" => Some(RoutePolicy::RoundRobin),
+            "least_loaded" | "ll" => Some(RoutePolicy::LeastLoaded),
+            "affinity" => Some(RoutePolicy::Affinity),
+            _ => None,
+        }
+    }
+}
+
 /// Router over `n` engine replicas. The router does not own the engines;
 /// it assigns requests to replica indices so deployments can pump each
 /// replica on its own thread.
@@ -128,6 +151,15 @@ mod tests {
         assert_eq!(r.route(&req(2, 10)), Err(QueueFull));
         r.complete(0, &req(0, 10));
         assert!(r.route(&req(2, 10)).is_ok());
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in RoutePolicy::ALL {
+            assert_eq!(RoutePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("nope"), None);
     }
 
     #[test]

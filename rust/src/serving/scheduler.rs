@@ -31,6 +31,9 @@ pub struct Scheduler {
     seqs: FastMap<RequestId, Sequence>,
     /// Completed sequences (kept for metrics harvesting).
     finished: Vec<RequestId>,
+    /// Sequences preempted since the last drain (so the engine can release
+    /// backend-side state, e.g. a PJRT batch slot).
+    preempted: Vec<RequestId>,
 }
 
 impl Scheduler {
@@ -44,6 +47,7 @@ impl Scheduler {
             running: Vec::new(),
             seqs: FastMap::default(),
             finished: Vec::new(),
+            preempted: Vec::new(),
         }
     }
 
@@ -86,6 +90,11 @@ impl Scheduler {
     /// Drain ids of finished sequences (for metrics collection).
     pub fn take_finished(&mut self) -> Vec<RequestId> {
         std::mem::take(&mut self.finished)
+    }
+
+    /// Drain ids of sequences preempted since the last call.
+    pub fn take_preempted(&mut self) -> Vec<RequestId> {
+        std::mem::take(&mut self.preempted)
     }
 
     /// Sequences in decode order (FCFS by arrival).
@@ -175,6 +184,14 @@ impl Scheduler {
             }
         }
         // Retire finished sequences.
+        self.retire_finished(ids);
+    }
+
+    /// Retire any of `ids` whose phase is `Finished`: drop them from the
+    /// running set, free their KV and queue them for metrics harvesting.
+    /// (Also used by the engine when a prefill itself completes a request —
+    /// real backends emit the first token from the prefill logits.)
+    pub fn retire_finished(&mut self, ids: &[RequestId]) {
         let done: Vec<RequestId> =
             ids.iter().copied().filter(|id| self.seqs[id].phase == Phase::Finished).collect();
         for id in done {
@@ -197,6 +214,7 @@ impl Scheduler {
         // prompt + generated so far.
         s.preemptions += 1;
         self.waiting.push_front(id);
+        self.preempted.push(id);
     }
 
     /// Current decode KV lengths (for the backend's cost model).

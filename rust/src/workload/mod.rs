@@ -53,6 +53,51 @@ impl DynamicSonnet {
     }
 }
 
+/// Open-loop arrival trace targeted at the cluster simulator: the
+/// Dynamic-Sonnet length mixture sustained at a Poisson `rate` for
+/// `duration` seconds. Unlike `DynamicSonnet::generate` (a fixed request
+/// *count*), an open-loop trace fixes the *offered load*, which is what
+/// deployment sizing sweeps over — the fleet either keeps up or queueing
+/// delay (and router backpressure) grows without bound.
+#[derive(Debug, Clone)]
+pub struct OpenLoopTrace {
+    pub workload: DynamicSonnet,
+    /// Offered load in requests/second.
+    pub rate: f64,
+    /// Trace length in seconds.
+    pub duration: f64,
+}
+
+impl OpenLoopTrace {
+    pub fn new(rate: f64, duration: f64) -> OpenLoopTrace {
+        assert!(rate.is_finite() && rate > 0.0 && duration > 0.0);
+        OpenLoopTrace { workload: DynamicSonnet::default(), rate, duration }
+    }
+
+    /// Generate the trace (request count is Poisson-distributed around
+    /// `rate * duration`; ids are sequential from 0).
+    pub fn generate(&self, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity((self.rate * self.duration) as usize + 1);
+        let buckets = [512usize, 1024, 2048];
+        let mut id = 0u64;
+        loop {
+            t += rng.exp(self.rate);
+            if t > self.duration {
+                return out;
+            }
+            let bucket = *rng.choose(&buckets);
+            let input = (((bucket as f64) * (0.5 + 0.5 * rng.f64())).round() as usize)
+                .clamp(16, self.workload.max_input);
+            let output =
+                ((rng.normal(4.8, 0.6).exp()).round() as usize).clamp(8, self.workload.max_output);
+            out.push(Request::new(id, input, output, t));
+            id += 1;
+        }
+    }
+}
+
 /// Zipf-distributed embedding index stream for `tables` tables of
 /// `rows` rows: RecSys lookups are power-law distributed over hot items.
 pub struct EmbeddingTrace {
@@ -120,6 +165,23 @@ mod tests {
             a.iter().map(|r| r.prompt_len).collect::<Vec<_>>(),
             b.iter().map(|r| r.prompt_len).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn open_loop_trace_tracks_offered_load() {
+        let tr = OpenLoopTrace::new(20.0, 10.0);
+        let reqs = tr.generate(11);
+        // ~200 expected; allow generous Poisson slack.
+        assert!(reqs.len() > 120 && reqs.len() < 300, "n = {}", reqs.len());
+        assert!(reqs.iter().all(|r| r.arrival > 0.0 && r.arrival <= 10.0));
+        for pair in reqs.windows(2) {
+            assert!(pair[1].arrival >= pair[0].arrival);
+            assert_eq!(pair[1].id, pair[0].id + 1);
+        }
+        // Deterministic given the seed.
+        let again = tr.generate(11);
+        assert_eq!(reqs.len(), again.len());
+        assert!(reqs.iter().zip(&again).all(|(a, b)| a.prompt_len == b.prompt_len));
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! Integration tests for the cluster layer's conservation laws:
+//! every submitted request finishes exactly once, fleet token throughput
+//! equals the sum of replica throughputs, and a 1-replica `ClusterSim`
+//! reproduces the single-`Engine` path bit-for-bit on the same trace.
+
+use std::collections::HashMap;
+
+use cuda_myth::config::ServingConfig;
+use cuda_myth::models::llama::LlamaConfig;
+use cuda_myth::serving::cluster::ClusterSim;
+use cuda_myth::serving::engine::{Engine, SimBackend};
+use cuda_myth::serving::request::{Request, RequestId};
+use cuda_myth::serving::router::RoutePolicy;
+use cuda_myth::workload::{DynamicSonnet, OpenLoopTrace};
+
+fn trace() -> Vec<Request> {
+    DynamicSonnet::default().generate(40, 30.0, 42)
+}
+
+fn base_cfg(replicas: usize, policy: RoutePolicy) -> ServingConfig {
+    ServingConfig {
+        replicas,
+        route_policy: policy,
+        num_blocks: 8192,
+        max_decode_batch: 32,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn one_replica_cluster_matches_single_engine_bit_for_bit() {
+    // Single-engine reference on the same DynamicSonnet trace and seed.
+    let cfg = base_cfg(1, RoutePolicy::RoundRobin);
+    let backend = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
+    let mut engine = Engine::new(cfg.clone(), backend);
+    for r in trace() {
+        engine.submit(r);
+    }
+    let engine_summary = engine.run_to_completion();
+
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(trace());
+    let cluster_summary = sim.run_to_completion();
+
+    assert_eq!(cluster_summary.requests, engine_summary.requests);
+    // Identical per-request metrics — not approximately: the cluster loop
+    // must replay the exact same step sequence, so TTFT/TPOT/E2E are the
+    // same f64s.
+    let by_id = |ms: &[cuda_myth::serving::metrics::RequestMetrics]| -> HashMap<RequestId, (f64, f64, f64)> {
+        ms.iter().map(|m| (m.id, (m.ttft, m.tpot, m.e2e))).collect()
+    };
+    let single = by_id(engine.metrics.per_request());
+    let fleet_metrics = sim.fleet_metrics();
+    let fleet = by_id(fleet_metrics.per_request());
+    assert_eq!(single.len(), fleet.len());
+    for (id, s) in &single {
+        let f = fleet.get(id).unwrap_or_else(|| panic!("request {id} missing from cluster"));
+        assert!(s.0 == f.0 && s.1 == f.1 && s.2 == f.2, "request {id}: {s:?} vs {f:?}");
+    }
+    assert!(engine.metrics.makespan == fleet_metrics.makespan, "makespan must match exactly");
+    assert_eq!(sim.replica(0).steps_executed(), engine.steps_executed());
+}
+
+#[test]
+fn every_request_finishes_exactly_once() {
+    for policy in [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::Affinity] {
+        let reqs = trace();
+        let n = reqs.len();
+        let mut sim = ClusterSim::new(&base_cfg(3, policy), LlamaConfig::llama31_8b());
+        sim.submit_all(reqs);
+        let s = sim.run_to_completion();
+        assert_eq!(s.requests, n, "{policy:?}");
+        assert_eq!(sim.completed(), n, "{policy:?}");
+        let mut ids: Vec<RequestId> =
+            sim.fleet_metrics().per_request().iter().map(|m| m.id).collect();
+        ids.sort_unstable();
+        let expected: Vec<RequestId> = (0..n as u64).collect();
+        assert_eq!(ids, expected, "{policy:?}: finished set must be exactly the trace, once each");
+        assert_eq!(sim.router().queued(), 0, "{policy:?}");
+    }
+}
+
+#[test]
+fn fleet_throughput_is_the_sum_of_replica_throughputs() {
+    let reqs = trace();
+    let expected_tokens: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
+    let mut sim = ClusterSim::new(&base_cfg(3, RoutePolicy::LeastLoaded), LlamaConfig::llama31_8b());
+    sim.submit_all(reqs);
+    let fleet = sim.run_to_completion();
+    // Token conservation: the fleet emitted exactly the requested tokens.
+    let metrics = sim.fleet_metrics();
+    assert_eq!(metrics.output_tokens(), expected_tokens);
+    assert!(
+        (fleet.throughput_tps * metrics.makespan - expected_tokens as f64).abs() < 1e-6,
+        "tps x makespan must equal total tokens"
+    );
+    // Replica summaries over the fleet makespan sum to the fleet numbers.
+    let replica_tps: f64 = sim.replica_summaries().iter().map(|s| s.throughput_tps).sum();
+    assert!(
+        (replica_tps - fleet.throughput_tps).abs() / fleet.throughput_tps < 1e-9,
+        "sum of replica throughputs {replica_tps} != fleet {}",
+        fleet.throughput_tps
+    );
+    // And every replica returned its KV blocks.
+    for i in 0..sim.num_replicas() {
+        let e = sim.replica(i);
+        assert_eq!(e.sched.kv.num_free(), e.sched.kv.num_blocks());
+    }
+}
+
+#[test]
+fn open_loop_load_with_backpressure_conserves_requests() {
+    let reqs = OpenLoopTrace::new(30.0, 2.0).generate(13);
+    let n = reqs.len();
+    assert!(n > 20, "trace too small: {n}");
+    let mut cfg = base_cfg(2, RoutePolicy::RoundRobin);
+    cfg.max_queued = 8; // force requeues under the burst
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(reqs);
+    let s = sim.run_to_completion();
+    assert_eq!(s.requests, n);
+    assert!(sim.requeues > 0, "expected backpressure at max_queued=8");
+    // Requeued requests pay their queueing delay in TTFT, never lose it.
+    assert!(s.p99_ttft > 0.0);
+}

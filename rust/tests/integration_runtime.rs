@@ -166,7 +166,7 @@ fn real_engine_serves_requests_end_to_end() {
     assert!(summary.mean_ttft > 0.0);
     assert!(summary.mean_tpot > 0.0);
     assert!(summary.throughput_tps > 0.0);
-    assert!(engine.tokens_generated as usize >= n_req * 6);
+    assert!(engine.tokens_generated() as usize >= n_req * 6);
 }
 
 #[test]
@@ -176,7 +176,7 @@ fn decode_is_deterministic() {
         let mut e = PjrtLlmEngine::new(&dir).unwrap();
         e.submit(Request::new(0, 3, 5, 0.0), vec![11, 23, 42]).unwrap();
         e.run_to_completion().unwrap();
-        e.tokens_generated
+        e.tokens_generated()
     };
     assert_eq!(run_once(), run_once());
 }

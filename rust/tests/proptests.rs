@@ -6,6 +6,7 @@ use cuda_myth::config::{DeviceKind, ServingConfig};
 use cuda_myth::serving::block_table::{BlockList, BlockTable};
 use cuda_myth::serving::kv_cache::KvBlockManager;
 use cuda_myth::serving::request::Request;
+use cuda_myth::serving::router::{RoutePolicy, Router};
 use cuda_myth::serving::scheduler::{Scheduler, Step};
 use cuda_myth::sim::collective::{self, Collective, ALL_COLLECTIVES};
 use cuda_myth::sim::mme;
@@ -128,6 +129,87 @@ fn scheduler_never_exceeds_decode_batch_or_leaks_blocks() {
             s.kv.check_conservation()
         },
     );
+}
+
+#[test]
+fn router_load_accounting_balances_under_random_churn() {
+    // Random interleavings of route/complete: the router's queued count
+    // and per-replica loads must exactly track a reference model (so load
+    // can never go negative and `complete` is balanced against `route`),
+    // and backpressure must trigger exactly at `max_queued`.
+    struct Ops;
+    impl Gen for Ops {
+        type Value = Vec<(u8, u64)>; // (op kind, payload)
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (0..rng.range(1, 120)).map(|_| (rng.below(4) as u8, rng.next_u64())).collect()
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            if v.is_empty() {
+                vec![]
+            } else {
+                vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+            }
+        }
+    }
+    forall(31, 150, &Ops, |ops| {
+        for policy in RoutePolicy::ALL {
+            let (replicas, max_queued) = (3usize, 8usize);
+            let mut r = Router::new(policy, replicas, max_queued);
+            let mut outstanding: Vec<(usize, Request)> = Vec::new();
+            let mut model_load = vec![0u64; replicas];
+            let mut next_id = 0u64;
+            for &(op, payload) in ops {
+                if op < 3 {
+                    // Route a fresh request.
+                    let req =
+                        Request::new(next_id, 1 + (payload % 512) as usize, 1 + op as usize * 7, 0.0);
+                    next_id += 1;
+                    match r.route(&req) {
+                        Ok(idx) => {
+                            // Admission past the cap is a backpressure bug.
+                            if outstanding.len() >= max_queued || idx >= replicas {
+                                return false;
+                            }
+                            model_load[idx] += (req.prompt_len + req.max_new_tokens) as u64;
+                            outstanding.push((idx, req));
+                        }
+                        Err(_) => {
+                            // Rejection below the cap is a backpressure bug.
+                            if outstanding.len() < max_queued {
+                                return false;
+                            }
+                        }
+                    }
+                } else if !outstanding.is_empty() {
+                    // Complete a random outstanding request.
+                    let (idx, req) = outstanding.remove(payload as usize % outstanding.len());
+                    model_load[idx] -= (req.prompt_len + req.max_new_tokens) as u64;
+                    r.complete(idx, &req);
+                }
+                if r.queued() != outstanding.len() {
+                    return false;
+                }
+                for (i, &want) in model_load.iter().enumerate() {
+                    if r.load_of(i) != want {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn router_affinity_is_stable_per_request_id() {
+    forall(37, 300, &PairOf(UsizeIn(0, 1_000_000), UsizeIn(2, 9)), |&(id, replicas)| {
+        let mut r = Router::new(RoutePolicy::Affinity, replicas, 100);
+        let req = Request::new(id as u64, 10, 10, 0.0);
+        let a = r.route(&req).unwrap();
+        r.complete(a, &req);
+        let b = r.route(&req).unwrap();
+        a < replicas && a == b
+    });
 }
 
 #[test]

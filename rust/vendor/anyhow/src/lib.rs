@@ -1,0 +1,181 @@
+//! Minimal in-tree shim for the `anyhow` crate — the build container has
+//! no network access, so the real crate cannot be fetched. Implements the
+//! subset this repository uses: [`Error`], [`Result`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, and the [`Context`] extension trait
+//! for `Result` and `Option`.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error` — that is what allows the blanket
+//! `From<E: std::error::Error>` conversion to coexist with the reflexive
+//! `From<Error>` impl.
+
+use std::fmt;
+
+/// A context-carrying error: `msgs[0]` is the outermost context, the last
+/// entry is the root cause.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    pub fn new(msg: String) -> Error {
+        Error { msgs: vec![msg] }
+    }
+
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error::new(msg.to_string())
+    }
+
+    /// Wrap with an outer context message (what `.context(...)` does).
+    pub fn context(mut self, msg: impl fmt::Display) -> Error {
+        self.msgs.insert(0, msg.to_string());
+        self
+    }
+
+    /// The error chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.msgs.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.msgs.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, like real anyhow.
+            write!(f, "{}", self.msgs.join(": "))
+        } else {
+            write!(f, "{}", self.msgs.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.msgs.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{head}")?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for m in rest {
+                        write!(f, "\n    {m}")?;
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// `anyhow::Result<T>`, defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::new(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("loading artifact");
+        assert_eq!(format!("{e}"), "loading artifact");
+        assert_eq!(format!("{e:#}"), "loading artifact: missing");
+    }
+
+    #[test]
+    fn macros_and_context() {
+        fn inner(fail: bool) -> Result<u32> {
+            ensure!(!fail, "failed with code {}", 7);
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert_eq!(format!("{}", inner(true).unwrap_err()), "failed with code 7");
+
+        let got: Result<u32> = None.context("nothing here");
+        assert_eq!(format!("{}", got.unwrap_err()), "nothing here");
+
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.root_cause(), "x = 3");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "missing");
+    }
+}

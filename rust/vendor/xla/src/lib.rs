@@ -1,0 +1,161 @@
+//! Stub for the `xla` crate (PJRT bindings). The build container has
+//! neither network access nor an XLA/PJRT shared library, so this crate
+//! provides the exact API surface `runtime::Runtime` compiles against
+//! while reporting the PJRT client as unavailable at run time:
+//! `PjRtClient::cpu()` returns [`Error::Unavailable`], so every caller
+//! degrades gracefully (the real-numerics tests in
+//! `rust/tests/integration_runtime.rs` already skip when artifacts are
+//! missing, and `repro real-serve` prints the error and exits non-zero).
+//!
+//! Swapping in the real `xla` crate (e.g. LaurentMazare/xla-rs against
+//! `xla_extension`) requires no source changes above this layer — only a
+//! `Cargo.toml` dependency edit.
+
+use std::fmt;
+
+/// Errors surfaced by the stub. `Unavailable` is the only one produced in
+/// practice; `Other` exists so richer bindings can map onto the same type.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub has no PJRT runtime to execute on.
+    Unavailable(&'static str),
+    Other(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what} unavailable: built against the in-tree xla stub \
+                 (no PJRT runtime in this environment)"
+            ),
+            Error::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can carry across the boundary.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// A host-side tensor value. The stub keeps no storage — nothing can be
+/// executed, so nothing ever needs to be read back.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _private: () })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructed successfully).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client. `cpu()` is the stub's front door and always fails.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unavailable"), "{msg}");
+        assert!(msg.contains("stub"), "{msg}");
+    }
+
+    #[test]
+    fn literal_construction_is_cheap_and_reads_fail() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple().is_err());
+    }
+}
