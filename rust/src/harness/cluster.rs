@@ -5,22 +5,18 @@
 //! throughput, tail latency and goodput-under-SLO, then derives the
 //! iso-SLO sizing table: the smallest replica count per (device, policy)
 //! that meets the SLO — the "how many Gaudi-2 replace my A100s" question.
+//! A derived-claims report carries the 1-replica-equals-single-engine
+//! parity deltas (checked bitwise by `--check`) and the tail-latency
+//! scaling ratio.
 
 use crate::config::{DeviceKind, ServingConfig};
+use crate::harness::{Experiment, Params};
 use crate::models::llama::LlamaConfig;
+use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
 use crate::serving::cluster::ClusterSim;
+use crate::serving::engine::{Engine, SimBackend};
 use crate::serving::router::RoutePolicy;
-use crate::util::table::{fmt3, Report};
-use crate::workload::OpenLoopTrace;
-
-/// Offered load shared by every fleet in the sweep.
-const RATE_RPS: f64 = 24.0;
-const DURATION_S: f64 = 4.0;
-const SEED: u64 = 29;
-
-/// The SLO used for the sizing table (p99 TTFT / p99 TPOT).
-const SLO_TTFT_S: f64 = 1.0;
-const SLO_TPOT_S: f64 = 0.1;
+use crate::workload::{DynamicSonnet, OpenLoopTrace};
 
 const REPLICA_SWEEP: [usize; 3] = [1, 2, 4];
 const POLICIES: [RoutePolicy; 2] = [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded];
@@ -38,7 +34,27 @@ struct FleetPoint {
     requeues: u64,
 }
 
-fn run_fleet(device: DeviceKind, policy: RoutePolicy, replicas: usize) -> FleetPoint {
+struct Knobs {
+    rate_rps: f64,
+    duration_s: f64,
+    seed: u64,
+    slo_ttft_s: f64,
+    slo_tpot_s: f64,
+}
+
+impl Knobs {
+    fn from(params: &Params) -> Knobs {
+        Knobs {
+            rate_rps: params.get_or("rate_rps", 24.0),
+            duration_s: params.get_or("duration_s", 4.0),
+            seed: params.get_or("seed", 29.0) as u64,
+            slo_ttft_s: params.get_or("slo_ttft_s", 1.0),
+            slo_tpot_s: params.get_or("slo_tpot_s", 0.1),
+        }
+    }
+}
+
+fn run_fleet(k: &Knobs, device: DeviceKind, policy: RoutePolicy, replicas: usize) -> FleetPoint {
     let cfg = ServingConfig {
         device,
         replicas,
@@ -48,7 +64,7 @@ fn run_fleet(device: DeviceKind, policy: RoutePolicy, replicas: usize) -> FleetP
         ..Default::default()
     };
     let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
-    sim.submit_all(OpenLoopTrace::new(RATE_RPS, DURATION_S).generate(SEED));
+    sim.submit_all(OpenLoopTrace::new(k.rate_rps, k.duration_s).generate(k.seed));
     let s = sim.run_to_completion();
     let fleet = sim.fleet_metrics();
     FleetPoint {
@@ -58,90 +74,243 @@ fn run_fleet(device: DeviceKind, policy: RoutePolicy, replicas: usize) -> FleetP
         tps: s.throughput_tps,
         p99_ttft: s.p99_ttft,
         p99_tpot: s.p99_tpot,
-        goodput_rps: fleet.goodput_under_slo(SLO_TTFT_S, SLO_TPOT_S),
-        attainment: fleet.slo_attainment(SLO_TTFT_S, SLO_TPOT_S),
+        goodput_rps: fleet.goodput_under_slo(k.slo_ttft_s, k.slo_tpot_s),
+        attainment: fleet.slo_attainment(k.slo_ttft_s, k.slo_tpot_s),
         requeues: sim.requeues,
     }
 }
 
-pub fn run() -> Vec<Report> {
-    let mut points: Vec<FleetPoint> = Vec::new();
-    for device in [DeviceKind::Gaudi2, DeviceKind::A100] {
-        for policy in POLICIES {
-            for replicas in REPLICA_SWEEP {
-                points.push(run_fleet(device, policy, replicas));
+/// Max absolute per-request metric delta (TTFT/TPOT/E2E) over *paired*
+/// requests, makespan/step-count deltas, requests compared, and the
+/// count of pairing mismatches between a 1-replica cluster and a bare
+/// engine on the same trace — all zero iff the cluster replays the
+/// exact step sequence. Every value stays finite so the JSON artifact
+/// remains valid evidence even when parity regresses.
+fn parity_deltas() -> (f64, f64, u64, usize, usize) {
+    let cfg = ServingConfig {
+        replicas: 1,
+        num_blocks: 8192,
+        max_decode_batch: 32,
+        ..Default::default()
+    };
+    let trace = || DynamicSonnet::default().generate(40, 30.0, 42);
+
+    let backend = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
+    let mut engine = Engine::new(cfg.clone(), backend);
+    for r in trace() {
+        engine.submit(r);
+    }
+    engine.run_to_completion();
+
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(trace());
+    sim.run_to_completion();
+    let fleet = sim.fleet_metrics();
+
+    let mut max_delta = 0.0f64;
+    let mut mismatches = engine.metrics.len().abs_diff(fleet.len());
+    for m in engine.metrics.per_request() {
+        match fleet.per_request().iter().find(|f| f.id == m.id) {
+            Some(f) => {
+                max_delta = max_delta
+                    .max((m.ttft - f.ttft).abs())
+                    .max((m.tpot - f.tpot).abs())
+                    .max((m.e2e - f.e2e).abs());
             }
+            None => mismatches += 1,
         }
     }
+    let makespan_delta = (engine.metrics.makespan - fleet.makespan).abs();
+    let steps_delta = engine.steps_executed().abs_diff(sim.replica(0).steps_executed());
+    (max_delta, makespan_delta, steps_delta, engine.metrics.len(), mismatches)
+}
 
-    let mut sweep = Report::new(format!(
-        "Cluster sweep: {RATE_RPS} req/s open-loop Dynamic-Sonnet, Llama-3.1-8B \
-         (SLO: p99 TTFT <= {SLO_TTFT_S}s, p99 TPOT <= {SLO_TPOT_S}s)"
-    ));
-    sweep.header(&[
-        "device",
-        "policy",
-        "replicas",
-        "tok/s",
-        "p99 TTFT s",
-        "p99 TPOT s",
-        "goodput req/s",
-        "SLO attain",
-        "requeues",
-    ]);
-    for p in &points {
-        sweep.row(vec![
-            p.device.name().to_string(),
-            p.policy.name().to_string(),
-            p.replicas.to_string(),
-            fmt3(p.tps),
-            fmt3(p.p99_ttft),
-            fmt3(p.p99_tpot),
-            fmt3(p.goodput_rps),
-            fmt3(p.attainment),
-            p.requeues.to_string(),
+pub struct Cluster;
+
+impl Experiment for Cluster {
+    fn id(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn title(&self) -> &'static str {
+        "Cluster: iso-SLO replica sizing, Gaudi-2 vs A100 (multi-replica serving)"
+    }
+
+    fn params(&self) -> Params {
+        Params::new()
+            .with("rate_rps", 24.0)
+            .with("duration_s", 4.0)
+            .with("seed", 29.0)
+            .with("slo_ttft_s", 1.0)
+            .with("slo_tpot_s", 0.1)
+    }
+
+    fn run(&self, params: &Params) -> Vec<Report> {
+        let k = Knobs::from(params);
+        let mut points: Vec<FleetPoint> = Vec::new();
+        for device in [DeviceKind::Gaudi2, DeviceKind::A100] {
+            for policy in POLICIES {
+                for replicas in REPLICA_SWEEP {
+                    points.push(run_fleet(&k, device, policy, replicas));
+                }
+            }
+        }
+
+        let mut sweep = Report::new(format!(
+            "Cluster sweep: {} req/s open-loop Dynamic-Sonnet, Llama-3.1-8B \
+             (SLO: p99 TTFT <= {}s, p99 TPOT <= {}s)",
+            k.rate_rps, k.slo_ttft_s, k.slo_tpot_s
+        ));
+        sweep.header(&[
+            "device",
+            "policy",
+            "replicas",
+            "tok/s",
+            "p99 TTFT s",
+            "p99 TPOT s",
+            "goodput req/s",
+            "SLO attain",
+            "requeues",
         ]);
-    }
-    sweep.note("goodput = SLO-compliant completions / fleet makespan");
+        for p in &points {
+            sweep.row(vec![
+                Cell::text(p.device.name()),
+                Cell::text(p.policy.name()),
+                Cell::count(p.replicas),
+                Cell::val(p.tps, Unit::TokPerSec),
+                Cell::val(p.p99_ttft, Unit::Seconds),
+                Cell::val(p.p99_tpot, Unit::Seconds),
+                Cell::val(p.goodput_rps, Unit::ReqPerSec),
+                Cell::val(p.attainment, Unit::Percent),
+                Cell::count(p.requeues as usize),
+            ]);
+        }
+        sweep.note("goodput = SLO-compliant completions / fleet makespan");
 
-    // Iso-SLO sizing: smallest replica count meeting the SLO on >= 99% of
-    // requests, per (device, policy).
-    let mut iso = Report::new("Iso-SLO replica counts: Gaudi-2 vs A100");
-    iso.header(&["policy", "Gaudi-2 replicas", "A100 replicas", "ratio G2/A100"]);
-    for policy in POLICIES {
-        let min_for = |device: DeviceKind| -> Option<usize> {
-            REPLICA_SWEEP
-                .iter()
-                .copied()
-                .find(|&r| {
-                    points
-                        .iter()
-                        .any(|p| {
-                            p.device == device
-                                && p.policy == policy
-                                && p.replicas == r
-                                && p.attainment >= 0.99
-                        })
+        // Iso-SLO sizing: smallest replica count meeting the SLO on >= 99%
+        // of requests, per (device, policy).
+        let mut iso = Report::new("Iso-SLO replica counts: Gaudi-2 vs A100");
+        iso.header(&["policy", "Gaudi-2 replicas", "A100 replicas", "ratio G2/A100"]);
+        for policy in POLICIES {
+            let min_for = |device: DeviceKind| -> Option<usize> {
+                REPLICA_SWEEP.iter().copied().find(|&r| {
+                    points.iter().any(|p| {
+                        p.device == device
+                            && p.policy == policy
+                            && p.replicas == r
+                            && p.attainment >= 0.99
+                    })
                 })
-        };
-        let fmt_min = |m: Option<usize>| match m {
-            Some(r) => r.to_string(),
-            None => format!(">{}", REPLICA_SWEEP[REPLICA_SWEEP.len() - 1]),
-        };
-        let g = min_for(DeviceKind::Gaudi2);
-        let a = min_for(DeviceKind::A100);
-        let ratio = match (g, a) {
-            (Some(g), Some(a)) => format!("{:.2}", g as f64 / a as f64),
-            _ => "n/a".to_string(),
-        };
-        iso.row(vec![policy.name().to_string(), fmt_min(g), fmt_min(a), ratio]);
-    }
-    iso.note(format!(
-        "smallest fleet with >= 99% of requests meeting p99-style SLO \
-         (TTFT <= {SLO_TTFT_S}s, TPOT <= {SLO_TPOT_S}s) at {RATE_RPS} req/s"
-    ));
+            };
+            let fmt_min = |m: Option<usize>| match m {
+                Some(r) => Cell::count(r),
+                None => Cell::text(format!(">{}", REPLICA_SWEEP[REPLICA_SWEEP.len() - 1])),
+            };
+            let g = min_for(DeviceKind::Gaudi2);
+            let a = min_for(DeviceKind::A100);
+            let ratio = match (g, a) {
+                (Some(g), Some(a)) => Cell::val(g as f64 / a as f64, Unit::Ratio),
+                _ => Cell::text("n/a"),
+            };
+            iso.row(vec![Cell::text(policy.name()), fmt_min(g), fmt_min(a), ratio]);
+        }
+        iso.note(format!(
+            "smallest fleet with >= 99% of requests meeting p99-style SLO \
+             (TTFT <= {}s, TPOT <= {}s) at {} req/s",
+            k.slo_ttft_s, k.slo_tpot_s, k.rate_rps
+        ));
 
-    vec![sweep, iso]
+        // Derived claims: engine/cluster parity and tail-latency scaling.
+        let (max_delta, makespan_delta, steps_delta, parity_n, mismatches) = parity_deltas();
+        let scaling = {
+            let find = |r: usize| {
+                points
+                    .iter()
+                    .find(|p| {
+                        p.device == DeviceKind::Gaudi2
+                            && p.policy == RoutePolicy::RoundRobin
+                            && p.replicas == r
+                    })
+                    .expect("sweep covers the full grid")
+            };
+            find(1).p99_ttft / find(4).p99_ttft.max(1e-12)
+        };
+        let mut claims = Report::new("Cluster derived claims");
+        claims.header(&["claim", "value"]);
+        claims.row(vec![
+            Cell::text("1-replica max per-request metric delta vs engine (s)"),
+            Cell::val(max_delta, Unit::Seconds),
+        ]);
+        claims.row(vec![
+            Cell::text("1-replica makespan delta vs engine (s)"),
+            Cell::val(makespan_delta, Unit::Seconds),
+        ]);
+        claims.row(vec![
+            Cell::text("1-replica step-count delta vs engine"),
+            Cell::val(steps_delta as f64, Unit::Count),
+        ]);
+        claims.row(vec![
+            Cell::text("parity requests compared"),
+            Cell::count(parity_n),
+        ]);
+        claims.row(vec![
+            Cell::text("parity id mismatches"),
+            Cell::count(mismatches),
+        ]);
+        claims.row(vec![
+            Cell::text("p99 TTFT improvement, 1 -> 4 replicas (Gaudi-2, RR)"),
+            Cell::val(scaling, Unit::Ratio),
+        ]);
+        claims.note("parity deltas are exact-zero by construction of the merged event loop");
+
+        vec![sweep, iso, claims]
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "cluster.bitwise_parity",
+                "a 1-replica cluster replays the single engine bit-for-bit",
+                Selector::cell(
+                    "Cluster derived claims",
+                    "1-replica max per-request metric delta vs engine (s)",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "cluster.step_parity",
+                "the 1-replica cluster executes exactly the engine's step sequence",
+                Selector::cell(
+                    "Cluster derived claims",
+                    "1-replica step-count delta vs engine",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "cluster.pairing_parity",
+                "every engine request appears exactly once in the 1-replica cluster run",
+                Selector::cell("Cluster derived claims", "parity id mismatches", "value"),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "cluster.scaling_cuts_tail",
+                "scaling 1 -> 4 replicas does not worsen p99 TTFT",
+                Selector::cell(
+                    "Cluster derived claims",
+                    "p99 TTFT improvement, 1 -> 4 replicas (Gaudi-2, RR)",
+                    "value",
+                ),
+                Check::Ge(1.0),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    Cluster.run(&Cluster.params())
 }
 
 #[cfg(test)]
@@ -149,20 +318,41 @@ mod tests {
     use super::*;
 
     #[test]
-    fn two_reports_with_full_grids() {
+    fn three_reports_with_full_grids() {
         let reports = run();
-        assert_eq!(reports.len(), 2);
+        assert_eq!(reports.len(), 3);
         // 2 devices x 2 policies x 3 replica counts.
         assert_eq!(reports[0].num_rows(), 12);
         // One sizing row per policy.
         assert_eq!(reports[1].num_rows(), POLICIES.len());
+        assert_eq!(reports[2].num_rows(), 6);
     }
 
     #[test]
     fn scaling_helps_the_fleet() {
-        let one = run_fleet(DeviceKind::Gaudi2, RoutePolicy::RoundRobin, 1);
-        let four = run_fleet(DeviceKind::Gaudi2, RoutePolicy::RoundRobin, 4);
+        let k = Knobs::from(&Cluster.params());
+        let one = run_fleet(&k, DeviceKind::Gaudi2, RoutePolicy::RoundRobin, 1);
+        let four = run_fleet(&k, DeviceKind::Gaudi2, RoutePolicy::RoundRobin, 4);
         assert!(four.p99_ttft <= one.p99_ttft, "{} vs {}", four.p99_ttft, one.p99_ttft);
         assert!(four.attainment >= one.attainment);
+    }
+
+    #[test]
+    fn parity_is_bitwise() {
+        let (max_delta, makespan_delta, steps_delta, n, mismatches) = parity_deltas();
+        assert_eq!(max_delta, 0.0);
+        assert_eq!(makespan_delta, 0.0);
+        assert_eq!(steps_delta, 0);
+        assert_eq!(n, 40);
+        assert_eq!(mismatches, 0);
+    }
+
+    #[test]
+    fn expectations_pass() {
+        let reports = run();
+        for e in Cluster.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

@@ -1,59 +1,100 @@
 //! Fig 10: bus-bandwidth utilization of the six collectives (HCCL vs
-//! NCCL), payloads 2 KB – 32 MB, 2/4/8 participating devices.
+//! NCCL), payloads 2 KB – 32 MB, 2/4/8 participating devices — one typed
+//! report per collective plus a winners summary at the 8-device / 32 MiB
+//! headline point.
 
 use crate::config::DeviceKind;
+use crate::harness::{Experiment, Params};
+use crate::report::{Agg, Cell, Check, Expectation, Report, Selector, Unit};
 use crate::sim::collective::{self, ALL_COLLECTIVES};
-use crate::util::table::{fmt_pct, Report};
-use crate::util::units::{fmt_bytes, KIB, MIB};
+use crate::util::units::{KIB, MIB};
 
-pub fn run() -> Vec<Report> {
-    let sizes = [2.0 * KIB, 32.0 * KIB, 512.0 * KIB, 2.0 * MIB, 32.0 * MIB];
-    let mut out = Vec::new();
-    for coll in ALL_COLLECTIVES {
-        let mut r = Report::new(format!("Fig 10: {} bus bandwidth utilization", coll.name()));
-        r.header(&["size", "G-2dev", "G-4dev", "G-8dev", "A-2dev", "A-4dev", "A-8dev"]);
-        for &s in &sizes {
-            let mut row = vec![fmt_bytes(s)];
-            for kind in [DeviceKind::Gaudi2, DeviceKind::A100] {
-                for n in [2usize, 4, 8] {
-                    row.push(fmt_pct(collective::run(kind, coll, n, s).utilization));
-                }
-            }
-            r.row(row);
-        }
-        let g8 = collective::run(DeviceKind::Gaudi2, coll, 8, 32.0 * MIB).utilization;
-        let a8 = collective::run(DeviceKind::A100, coll, 8, 32.0 * MIB).utilization;
-        r.note(format!(
-            "at 8 devices / 32 MiB: Gaudi {} vs A100 {} -> {}",
-            fmt_pct(g8),
-            fmt_pct(a8),
-            if g8 > a8 { "Gaudi wins" } else { "A100 wins" }
-        ));
-        out.push(r);
+pub struct Fig10;
+
+impl Experiment for Fig10 {
+    fn id(&self) -> &'static str {
+        "fig10"
     }
-    vec![merge(out)]
+
+    fn title(&self) -> &'static str {
+        "Fig 10: collective communication bus bandwidth"
+    }
+
+    fn run(&self, _params: &Params) -> Vec<Report> {
+        let sizes = [2.0 * KIB, 32.0 * KIB, 512.0 * KIB, 2.0 * MIB, 32.0 * MIB];
+        let headline = 32.0 * MIB;
+        let mut out = Vec::new();
+        // Winners at the paper's headline point (8 devices, 32 MiB),
+        // captured from the same simulator calls that fill the panels.
+        let mut winners = Report::new("Fig 10 summary: winners at 8 devices / 32 MiB");
+        winners.header(&["collective", "Gaudi-2", "A100", "Gaudi wins"]);
+        for coll in ALL_COLLECTIVES {
+            let mut r = Report::new(format!("Fig 10: {} bus bandwidth utilization", coll.name()));
+            r.header(&["size", "G-2dev", "G-4dev", "G-8dev", "A-2dev", "A-4dev", "A-8dev"]);
+            let (mut g8, mut a8) = (0.0f64, 0.0f64);
+            for &s in &sizes {
+                let mut row = vec![Cell::val(s, Unit::Bytes)];
+                for kind in [DeviceKind::Gaudi2, DeviceKind::A100] {
+                    for n in [2usize, 4, 8] {
+                        let util = collective::run(kind, coll, n, s).utilization;
+                        if n == 8 && s == headline {
+                            match kind {
+                                DeviceKind::Gaudi2 => g8 = util,
+                                DeviceKind::A100 => a8 = util,
+                            }
+                        }
+                        row.push(Cell::val(util, Unit::Percent));
+                    }
+                }
+                r.row(row);
+            }
+            out.push(r);
+            winners.row(vec![
+                Cell::text(coll.name()),
+                Cell::val(g8, Unit::Percent),
+                Cell::val(a8, Unit::Percent),
+                Cell::count(usize::from(g8 > a8)),
+            ]);
+        }
+        winners.note("paper: the P2P mesh wins 5 of 6 collectives at scale");
+        out.push(winners);
+        out
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![Expectation::new(
+            "fig10.gaudi_wins_five_of_six",
+            "Gaudi-2 wins 5 of the 6 collectives at 8 devices / 32 MiB",
+            Selector::column("Fig 10 summary", "Gaudi wins", Agg::Sum),
+            Check::EqExact(5.0),
+        )]
+    }
 }
 
-/// The paper presents the six collectives as one figure; merge the panels
-/// under one report for `repro run fig10`.
-fn merge(panels: Vec<Report>) -> Report {
-    let mut all = Report::new("Fig 10: collective communication (6 panels)");
-    all.header(&["panel"]);
-    for p in panels {
-        all.row(vec![p.render()]);
-    }
-    all
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    Fig10.run(&Fig10.params())
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn six_panels_and_gaudi_wins_five() {
-        let reports = super::run();
-        let text = reports[0].render();
-        let gaudi_wins = text.matches("Gaudi wins").count();
-        let a100_wins = text.matches("A100 wins").count();
-        assert_eq!(gaudi_wins, 5, "{text}");
-        assert_eq!(a100_wins, 1);
+        let reports = run();
+        assert_eq!(reports.len(), 7, "six collectives + winners summary");
+        let wins = reports[6].series("Gaudi wins").unwrap();
+        assert_eq!(wins.sum(), 5.0);
+        assert_eq!(wins.values.len(), 6);
+    }
+
+    #[test]
+    fn expectations_pass() {
+        let reports = run();
+        for e in Fig10.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

@@ -2,70 +2,106 @@
 //! (a) performance heatmap, (b) energy-efficiency heatmap.
 
 use crate::config::DeviceKind;
+use crate::harness::{Experiment, Params};
 use crate::models::dlrm::{self, DlrmConfig};
-use crate::util::stats::mean;
-use crate::util::table::{fmt_ratio, Report};
+use crate::report::{Agg, Cell, Check, Expectation, Report, Selector, Unit};
 
-pub fn run() -> Vec<Report> {
-    let mut out = Vec::new();
-    for cfg in [DlrmConfig::rm1(), DlrmConfig::rm2()] {
-        let mut perf = Report::new(format!("Fig 11(a): {} speedup (Gaudi-2 over A100)", cfg.name));
-        perf.header(&["batch", "dim32", "dim64", "dim128", "dim256", "dim512"]);
-        let mut energy =
-            Report::new(format!("Fig 11(b): {} energy-efficiency (Gaudi-2 over A100)", cfg.name));
-        energy.header(&["batch", "dim32", "dim64", "dim128", "dim256", "dim512"]);
-        let mut speedups = Vec::new();
-        let mut effs = Vec::new();
-        for &batch in &[256usize, 1024, 4096, 16384] {
-            let mut prow = vec![batch.to_string()];
-            let mut erow = vec![batch.to_string()];
-            for &dim in &[32usize, 64, 128, 256, 512] {
-                let g = dlrm::serve(&cfg, DeviceKind::Gaudi2, batch, dim);
-                let a = dlrm::serve(&cfg, DeviceKind::A100, batch, dim);
-                let s = a.time / g.time;
-                let e = g.samples_per_joule(batch) / a.samples_per_joule(batch);
-                speedups.push(s);
-                effs.push(e);
-                prow.push(fmt_ratio(s));
-                erow.push(fmt_ratio(e));
-            }
-            perf.row(prow);
-            energy.row(erow);
-        }
-        perf.note(format!(
-            "avg speedup {} (paper: {} ~{})",
-            fmt_ratio(mean(&speedups)),
-            cfg.name,
-            if cfg.name == "RM1" { "0.78x" } else { "0.82x" }
-        ));
-        energy.note(format!("avg energy-eff {} (paper: ~0.78x combined)", fmt_ratio(mean(&effs))));
-        out.push(perf);
-        out.push(energy);
+pub struct Fig11;
+
+impl Experiment for Fig11 {
+    fn id(&self) -> &'static str {
+        "fig11"
     }
-    out
+
+    fn title(&self) -> &'static str {
+        "Fig 11: RecSys (RM1/RM2) speedup + energy"
+    }
+
+    fn run(&self, _params: &Params) -> Vec<Report> {
+        let mut out = Vec::new();
+        for cfg in [DlrmConfig::rm1(), DlrmConfig::rm2()] {
+            let mut perf =
+                Report::new(format!("Fig 11(a): {} speedup (Gaudi-2 over A100)", cfg.name));
+            perf.header(&["batch", "dim32", "dim64", "dim128", "dim256", "dim512"]);
+            let mut energy =
+                Report::new(format!("Fig 11(b): {} energy-efficiency (Gaudi-2 over A100)", cfg.name));
+            energy.header(&["batch", "dim32", "dim64", "dim128", "dim256", "dim512"]);
+            for &batch in &[256usize, 1024, 4096, 16384] {
+                let mut prow = vec![Cell::count(batch)];
+                let mut erow = vec![Cell::count(batch)];
+                for &dim in &[32usize, 64, 128, 256, 512] {
+                    let g = dlrm::serve(&cfg, DeviceKind::Gaudi2, batch, dim);
+                    let a = dlrm::serve(&cfg, DeviceKind::A100, batch, dim);
+                    prow.push(Cell::val(a.time / g.time, Unit::Ratio));
+                    erow.push(Cell::val(
+                        g.samples_per_joule(batch) / a.samples_per_joule(batch),
+                        Unit::Ratio,
+                    ));
+                }
+                perf.row(prow);
+                energy.row(erow);
+            }
+            perf.note(format!(
+                "paper: {} averages ~{}",
+                cfg.name,
+                if cfg.name == "RM1" { "0.78x" } else { "0.82x" }
+            ));
+            energy.note("paper: ~0.78x energy-efficiency combined");
+            out.push(perf);
+            out.push(energy);
+        }
+        out
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "fig11.rm1_avg_speedup",
+                "Gaudi-2 trails the A100 on RM1 (~0.78x average over the grid)",
+                Selector::body("RM1 speedup", Agg::Mean),
+                Check::Within { target: 0.78, tol: 0.12 },
+            ),
+            Expectation::new(
+                "fig11.rm2_avg_speedup",
+                "Gaudi-2 trails the A100 on RM2 (~0.82x average over the grid)",
+                Selector::body("RM2 speedup", Agg::Mean),
+                Check::Within { target: 0.82, tol: 0.12 },
+            ),
+            Expectation::new(
+                "fig11.gaudi_near_parity_somewhere",
+                "wide-vector large-batch cells reach (near-)parity",
+                Selector::body("RM2 speedup", Agg::Max),
+                Check::Ge(0.95),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    Fig11.run(&Fig11.params())
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn four_heatmaps() {
-        let reports = super::run();
+        let reports = run();
         assert_eq!(reports.len(), 4);
-        // Every heatmap is 4 batch rows x 5 dim cols.
         for r in &reports {
             assert_eq!(r.num_rows(), 4);
+            assert_eq!(r.body_values().len(), 20, "{}", r.title());
         }
     }
 
     #[test]
-    fn gaudi_wins_somewhere_and_loses_overall() {
-        let text: String = super::run().iter().map(|r| r.render()).collect();
-        // Wide-vector large-batch cells exceed 1x; notes show a <1x average.
-        assert!(text.contains("avg speedup 0."), "{text}");
-        let has_win = text
-            .lines()
-            .filter(|l| l.contains('x') && !l.contains("avg"))
-            .any(|l| l.split_whitespace().skip(1).any(|c| c.starts_with('1') && c.ends_with('x')));
-        assert!(has_win, "expected at least one >1x cell\n{text}");
+    fn expectations_pass() {
+        let reports = run();
+        for e in Fig11.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

@@ -2,16 +2,15 @@
 //! device) and 70B (2/4/8-way TP); (b) prefill/decode latency breakdown.
 
 use crate::config::DeviceKind;
+use crate::harness::{Experiment, Params};
 use crate::models::llama::{self, LlamaConfig};
-use crate::util::stats::mean;
-use crate::util::table::{fmt_ratio, Report};
-use crate::util::units::fmt_time;
+use crate::report::{Agg, Cell, Check, Expectation, Report, Selector, Unit};
 
 const BATCHES: [usize; 3] = [4, 16, 64];
 const OUTPUTS: [usize; 4] = [25, 100, 200, 400];
 const INPUT: usize = 100;
 
-fn speedup_heatmap(cfg: &LlamaConfig, tp: usize) -> (Report, f64) {
+fn speedup_heatmap(cfg: &LlamaConfig, tp: usize) -> Report {
     let title = if tp == 1 {
         format!("Fig 12(a): {} speedup, single device", cfg.name)
     } else {
@@ -21,75 +20,119 @@ fn speedup_heatmap(cfg: &LlamaConfig, tp: usize) -> (Report, f64) {
     let mut header = vec!["batch".to_string()];
     header.extend(OUTPUTS.iter().map(|o| format!("out{o}")));
     r.header(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
-    let mut all = Vec::new();
     for &b in &BATCHES {
-        let mut row = vec![b.to_string()];
+        let mut row = vec![Cell::count(b)];
         for &o in &OUTPUTS {
             let g = llama::serve_fixed(cfg, DeviceKind::Gaudi2, b, INPUT, o, tp);
             let a = llama::serve_fixed(cfg, DeviceKind::A100, b, INPUT, o, tp);
-            let s = a.total_time() / g.total_time();
-            all.push(s);
-            row.push(fmt_ratio(s));
+            row.push(Cell::val(a.total_time() / g.total_time(), Unit::Ratio));
         }
         r.row(row);
     }
-    let avg = mean(&all);
-    r.note(format!("avg {}", fmt_ratio(avg)));
-    (r, avg)
+    r
 }
 
-pub fn run() -> Vec<Report> {
-    let cfg8 = LlamaConfig::llama31_8b();
-    let cfg70 = LlamaConfig::llama31_70b();
-    let mut out = Vec::new();
-    let (r, _) = speedup_heatmap(&cfg8, 1);
-    out.push(r);
-    for tp in [2usize, 4, 8] {
-        let (r, _) = speedup_heatmap(&cfg70, tp);
-        out.push(r);
+pub struct Fig12;
+
+impl Experiment for Fig12 {
+    fn id(&self) -> &'static str {
+        "fig12"
     }
 
-    // (b) latency breakdown, batch 64.
-    let mut br = Report::new("Fig 12(b): prefill/decode latency breakdown (8B, batch 64, Gaudi-2)");
-    br.header(&["in len", "out len", "prefill", "decode", "prefill share"]);
-    for &(i, o) in
-        &[(100usize, 25usize), (100, 100), (100, 400), (400, 100), (1600, 100), (6400, 100)]
-    {
-        let c = llama::serve_fixed(&cfg8, DeviceKind::Gaudi2, 64, i, o, 1);
-        br.row(vec![
-            i.to_string(),
-            o.to_string(),
-            fmt_time(c.prefill_time),
-            fmt_time(c.decode_time),
-            format!("{:.0}%", 100.0 * c.prefill_time / c.total_time()),
-        ]);
+    fn title(&self) -> &'static str {
+        "Fig 12: LLM serving speedup + latency breakdown"
     }
-    br.note("paper: decode dominates as output grows; prefill share rises with input length");
-    out.push(br);
-    out
+
+    fn run(&self, _params: &Params) -> Vec<Report> {
+        let cfg8 = LlamaConfig::llama31_8b();
+        let cfg70 = LlamaConfig::llama31_70b();
+        let mut out = Vec::new();
+        out.push(speedup_heatmap(&cfg8, 1));
+        for tp in [2usize, 4, 8] {
+            out.push(speedup_heatmap(&cfg70, tp));
+        }
+
+        // (b) latency breakdown, batch 64.
+        let mut br =
+            Report::new("Fig 12(b): prefill/decode latency breakdown (8B, batch 64, Gaudi-2)");
+        br.header(&["in len", "out len", "prefill ms", "decode ms", "prefill share"]);
+        for &(i, o) in
+            &[(100usize, 25usize), (100, 100), (100, 400), (400, 100), (1600, 100), (6400, 100)]
+        {
+            let c = llama::serve_fixed(&cfg8, DeviceKind::Gaudi2, 64, i, o, 1);
+            br.row(vec![
+                Cell::count(i),
+                Cell::count(o),
+                Cell::val(c.prefill_time * 1e3, Unit::Millis),
+                Cell::val(c.decode_time * 1e3, Unit::Millis),
+                Cell::val(c.prefill_time / c.total_time(), Unit::Percent),
+            ]);
+        }
+        br.note("paper: decode dominates as output grows; prefill share rises with input length");
+        out.push(br);
+        out
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "fig12.8b_single_device_speedup",
+                "Gaudi-2 serves 8B ~1.47x faster than A100 on average",
+                Selector::body("speedup, single device", Agg::Mean),
+                Check::Within { target: 1.47, tol: 0.20 },
+            ),
+            Expectation::new(
+                "fig12.70b_tp8_speedup",
+                "the 70B TP-8 advantage averages ~1.35x",
+                Selector::body("speedup, 8 devices", Agg::Mean),
+                Check::Within { target: 1.35, tol: 0.15 },
+            ),
+            Expectation::new(
+                "fig12.gaudi_wins_every_cell",
+                "Gaudi-2 wins every (batch, output) cell of the single-device grid",
+                Selector::body("speedup, single device", Agg::Min),
+                Check::Ge(1.0),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    Fig12.run(&Fig12.params())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::models::llama::LlamaConfig;
+    use crate::util::stats::mean;
 
     #[test]
     fn single_device_avg_near_paper() {
-        let (_, avg) = speedup_heatmap(&LlamaConfig::llama31_8b(), 1);
+        let avg = mean(&speedup_heatmap(&LlamaConfig::llama31_8b(), 1).body_values());
         assert!((avg - 1.47).abs() < 0.2, "avg {avg}");
     }
 
     #[test]
     fn speedup_grows_with_tp() {
         let cfg = LlamaConfig::llama31_70b();
-        let (_, a2) = speedup_heatmap(&cfg, 2);
-        let (_, a8) = speedup_heatmap(&cfg, 8);
+        let a2 = mean(&speedup_heatmap(&cfg, 2).body_values());
+        let a8 = mean(&speedup_heatmap(&cfg, 8).body_values());
         assert!(a8 > a2, "tp8 {a8} vs tp2 {a2}");
     }
 
     #[test]
     fn five_reports() {
         assert_eq!(run().len(), 5);
+    }
+
+    #[test]
+    fn expectations_pass() {
+        let reports = run();
+        for e in Fig12.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

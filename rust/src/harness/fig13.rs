@@ -2,15 +2,16 @@
 //! serving (tokens per joule), single device (8B) and TP 2/4/8 (70B).
 
 use crate::config::DeviceKind;
+use crate::harness::{Experiment, Params};
 use crate::models::llama::{self, LlamaConfig};
-use crate::util::stats::mean;
-use crate::util::table::{fmt_ratio, Report};
+use crate::report::{Agg, Cell, Check, Expectation, Report, Selector, Unit};
 
 const BATCHES: [usize; 3] = [4, 16, 64];
 const OUTPUTS: [usize; 4] = [25, 100, 200, 400];
 const INPUT: usize = 100;
 
-fn energy_heatmap(cfg: &LlamaConfig, tp: usize) -> (Report, f64, f64) {
+/// Heatmap of tokens-per-joule ratios plus the grid's mean power ratio.
+fn energy_heatmap(cfg: &LlamaConfig, tp: usize) -> (Report, f64) {
     let title = if tp == 1 {
         format!("Fig 13: {} energy-efficiency, single device", cfg.name)
     } else {
@@ -20,52 +21,96 @@ fn energy_heatmap(cfg: &LlamaConfig, tp: usize) -> (Report, f64, f64) {
     let mut header = vec!["batch".to_string()];
     header.extend(OUTPUTS.iter().map(|o| format!("out{o}")));
     r.header(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
-    let mut effs = Vec::new();
     let mut powers = Vec::new();
     for &b in &BATCHES {
-        let mut row = vec![b.to_string()];
+        let mut row = vec![Cell::count(b)];
         for &o in &OUTPUTS {
             let g = llama::serve_fixed(cfg, DeviceKind::Gaudi2, b, INPUT, o, tp);
             let a = llama::serve_fixed(cfg, DeviceKind::A100, b, INPUT, o, tp);
-            let e = g.tokens_per_joule(b, o) / a.tokens_per_joule(b, o);
-            effs.push(e);
+            row.push(Cell::val(g.tokens_per_joule(b, o) / a.tokens_per_joule(b, o), Unit::Ratio));
             powers.push(g.avg_power / a.avg_power);
-            row.push(fmt_ratio(e));
         }
         r.row(row);
     }
-    let avg = mean(&effs);
-    let pw = mean(&powers);
-    r.note(format!("avg energy-eff {}, avg power ratio {}", fmt_ratio(avg), fmt_ratio(pw)));
-    (r, avg, pw)
+    (r, crate::util::stats::mean(&powers))
 }
 
-pub fn run() -> Vec<Report> {
-    let mut out = Vec::new();
-    let (r, _, _) = energy_heatmap(&LlamaConfig::llama31_8b(), 1);
-    out.push(r);
-    for tp in [2usize, 4, 8] {
-        let (r, _, _) = energy_heatmap(&LlamaConfig::llama31_70b(), tp);
-        out.push(r);
+pub struct Fig13;
+
+impl Experiment for Fig13 {
+    fn id(&self) -> &'static str {
+        "fig13"
     }
-    out
+
+    fn title(&self) -> &'static str {
+        "Fig 13: LLM serving energy efficiency"
+    }
+
+    fn run(&self, _params: &Params) -> Vec<Report> {
+        let mut out = Vec::new();
+        let mut power = Report::new("Fig 13 power: mean draw ratio (Gaudi-2 / A100) per config");
+        power.header(&["config", "power ratio"]);
+        let (r, pw) = energy_heatmap(&LlamaConfig::llama31_8b(), 1);
+        out.push(r);
+        power.row(vec![Cell::text("8B tp1"), Cell::val(pw, Unit::Ratio)]);
+        for tp in [2usize, 4, 8] {
+            let (r, pw) = energy_heatmap(&LlamaConfig::llama31_70b(), tp);
+            out.push(r);
+            power.row(vec![Cell::text(format!("70B tp{tp}")), Cell::val(pw, Unit::Ratio)]);
+        }
+        power.note("paper: Gaudi draws ~88% of the A100's power at multi-device");
+        out.push(power);
+        out
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "fig13.8b_energy_efficiency",
+                "single-device 8B serving is ~1.48x more energy-efficient on Gaudi-2",
+                Selector::body("energy-efficiency, single device", Agg::Mean),
+                Check::Within { target: 1.48, tol: 0.30 },
+            ),
+            Expectation::new(
+                "fig13.multi_device_power",
+                "at 70B TP-8, Gaudi-2 draws ~88% of the A100's power",
+                Selector::cell("Fig 13 power", "70B tp8", "power ratio"),
+                Check::Within { target: 0.88, tol: 0.15 },
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    Fig13.run(&Fig13.params())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn four_heatmaps_and_power_summary() {
+        let reports = run();
+        assert_eq!(reports.len(), 5);
+        assert_eq!(reports[4].num_rows(), 4);
+    }
 
     #[test]
     fn single_device_eff_near_paper() {
-        // Paper: 1.48x average for single-device 8B serving.
-        let (_, avg, _) = energy_heatmap(&LlamaConfig::llama31_8b(), 1);
+        let (r, _) = energy_heatmap(&LlamaConfig::llama31_8b(), 1);
+        let avg = mean(&r.body_values());
         assert!((avg - 1.48).abs() < 0.3, "avg {avg}");
     }
 
     #[test]
-    fn multi_device_power_below_a100() {
-        // Paper: Gaudi draws ~88% of A100's power at multi-device.
-        let (_, _, pw) = energy_heatmap(&LlamaConfig::llama31_70b(), 8);
-        assert!((pw - 0.88).abs() < 0.15, "power ratio {pw}");
+    fn expectations_pass() {
+        let reports = run();
+        for e in Fig13.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

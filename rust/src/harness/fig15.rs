@@ -1,10 +1,10 @@
 //! Fig 15: embedding-lookup operator study (§4.1) — SDK-SingleTable,
 //! custom SingleTable, BatchedTable (Gaudi TPC-C) vs FBGEMM (A100).
 
+use crate::harness::{Experiment, Params};
 use crate::ops::embedding::{self, rm2_work, EmbeddingImpl};
+use crate::report::{Agg, Cell, Check, Expectation, Report, Selector, Unit};
 use crate::sim::Dtype;
-use crate::util::stats::mean;
-use crate::util::table::{fmt_pct, fmt_ratio, Report};
 
 const IMPLS: [EmbeddingImpl; 4] = [
     EmbeddingImpl::GaudiSdkSingleTable,
@@ -13,73 +13,107 @@ const IMPLS: [EmbeddingImpl; 4] = [
     EmbeddingImpl::A100Fbgemm,
 ];
 
-pub fn run() -> Vec<Report> {
-    // (a) utilization vs number of tables at low batch, 256 B vectors,
-    // normalized to SingleTable @ 1 table.
-    let mut a = Report::new("Fig 15(a): utilization vs #tables (batch 64, 256 B), normalized");
-    a.header(&["tables", "SingleTable", "BatchedTable"]);
-    let base = embedding::run(
-        EmbeddingImpl::GaudiSingleTable,
-        embedding::EmbeddingWork { tables: 1, batch: 64, pooling: 1, vec_bytes: 256.0 },
-        Dtype::Fp32,
-    )
-    .bandwidth_utilization;
-    for tables in [1usize, 2, 4, 8, 16] {
-        let w = embedding::EmbeddingWork { tables, batch: 64, pooling: 1, vec_bytes: 256.0 };
-        let s = embedding::run(EmbeddingImpl::GaudiSingleTable, w, Dtype::Fp32);
-        let b = embedding::run(EmbeddingImpl::GaudiBatchedTable, w, Dtype::Fp32);
-        a.row(vec![
-            tables.to_string(),
-            fmt_ratio(s.bandwidth_utilization / base),
-            fmt_ratio(b.bandwidth_utilization / base),
-        ]);
-    }
-    a.note("BatchedTable grows with table count; SingleTable stays flat");
+pub struct Fig15;
 
-    // (b,c,d) utilization heatmaps per implementation.
-    let mut out = vec![a];
-    for imp in IMPLS {
-        let mut r = Report::new(format!("Fig 15(b-d): {} bandwidth utilization", imp.name()));
-        r.header(&["batch", "64B", "128B", "256B", "512B", "1KB", "2KB"]);
-        let mut utils = Vec::new();
-        for &batch in &[256usize, 1024, 4096, 16384] {
-            let mut row = vec![batch.to_string()];
-            for &v in &[64.0f64, 128.0, 256.0, 512.0, 1024.0, 2048.0] {
-                let u = embedding::run(imp, rm2_work(batch, v), Dtype::Fp32)
-                    .bandwidth_utilization;
-                utils.push(u);
-                row.push(fmt_pct(u));
-            }
-            r.row(row);
-        }
-        let peak = utils.iter().cloned().fold(f64::MIN, f64::max);
-        r.note(format!("avg {} peak {}", fmt_pct(mean(&utils)), fmt_pct(peak)));
-        out.push(r);
+impl Experiment for Fig15 {
+    fn id(&self) -> &'static str {
+        "fig15"
     }
-    out.last_mut().unwrap().note(
-        "paper: BatchedTable 34.2% avg / 70.5% peak vs A100 38.7% / 81.8%; \
-         BatchedTable = 1.52x SingleTable; SDK = 37% of A100",
-    );
-    out
+
+    fn title(&self) -> &'static str {
+        "Fig 15: embedding lookup operators (DLRM case study)"
+    }
+
+    fn run(&self, _params: &Params) -> Vec<Report> {
+        // (a) utilization vs number of tables at low batch, 256 B vectors,
+        // normalized to SingleTable @ 1 table.
+        let mut a = Report::new("Fig 15(a): utilization vs #tables (batch 64, 256 B), normalized");
+        a.header(&["tables", "SingleTable", "BatchedTable"]);
+        let base = embedding::run(
+            EmbeddingImpl::GaudiSingleTable,
+            embedding::EmbeddingWork { tables: 1, batch: 64, pooling: 1, vec_bytes: 256.0 },
+            Dtype::Fp32,
+        )
+        .bandwidth_utilization;
+        for tables in [1usize, 2, 4, 8, 16] {
+            let w = embedding::EmbeddingWork { tables, batch: 64, pooling: 1, vec_bytes: 256.0 };
+            let s = embedding::run(EmbeddingImpl::GaudiSingleTable, w, Dtype::Fp32);
+            let b = embedding::run(EmbeddingImpl::GaudiBatchedTable, w, Dtype::Fp32);
+            a.row(vec![
+                Cell::count(tables),
+                Cell::val(s.bandwidth_utilization / base, Unit::Ratio),
+                Cell::val(b.bandwidth_utilization / base, Unit::Ratio),
+            ]);
+        }
+        a.note("BatchedTable grows with table count; SingleTable stays flat");
+
+        // (b,c,d) utilization heatmaps per implementation.
+        let mut out = vec![a];
+        for imp in IMPLS {
+            let mut r = Report::new(format!("Fig 15(b-d): {} bandwidth utilization", imp.name()));
+            r.header(&["batch", "64B", "128B", "256B", "512B", "1KB", "2KB"]);
+            for &batch in &[256usize, 1024, 4096, 16384] {
+                let mut row = vec![Cell::count(batch)];
+                for &v in &[64.0f64, 128.0, 256.0, 512.0, 1024.0, 2048.0] {
+                    let u =
+                        embedding::run(imp, rm2_work(batch, v), Dtype::Fp32).bandwidth_utilization;
+                    row.push(Cell::val(u, Unit::Percent));
+                }
+                r.row(row);
+            }
+            out.push(r);
+        }
+        out.last_mut().unwrap().note(
+            "paper: BatchedTable 34.2% avg / 70.5% peak vs A100 38.7% / 81.8%; \
+             BatchedTable = 1.52x SingleTable; SDK = 37% of A100",
+        );
+        out
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "fig15.batched_avg_utilization",
+                "BatchedTable averages ~34.2% bandwidth utilization over the RM2 grid",
+                Selector::body("BatchedTable bandwidth", Agg::Mean),
+                Check::Between(0.26, 0.42),
+            ),
+            Expectation::new(
+                "fig15.batched_scales_with_tables",
+                "BatchedTable scales with table count, beating the flat SingleTable baseline",
+                Selector::cell("Fig 15(a)", "16", "BatchedTable"),
+                Check::Ge(1.2),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    Fig15.run(&Fig15.params())
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+    use crate::util::stats::mean;
+
     #[test]
     fn five_reports_with_batched_avg_in_band() {
-        let reports = super::run();
+        let reports = run();
         assert_eq!(reports.len(), 5);
-        let batched = reports
-            .iter()
-            .find(|r| r.title().contains("BatchedTable bandwidth"))
-            .unwrap()
-            .render();
-        // avg note in the 26-42% band around the paper's 34.2%.
-        let avg_line = batched.lines().find(|l| l.contains("avg")).unwrap();
-        let pct: f64 = avg_line
-            .split_whitespace()
-            .find_map(|w| w.strip_suffix('%').and_then(|x| x.parse().ok()))
-            .unwrap();
-        assert!((26.0..42.0).contains(&pct), "batched avg {pct}%");
+        let batched =
+            reports.iter().find(|r| r.title().contains("BatchedTable bandwidth")).unwrap();
+        let avg = mean(&batched.body_values());
+        assert!((0.26..0.42).contains(&avg), "batched avg {avg}");
+    }
+
+    #[test]
+    fn expectations_pass() {
+        let reports = run();
+        for e in Fig15.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

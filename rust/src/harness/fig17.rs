@@ -4,92 +4,133 @@
 //! run through the real serving engine.
 
 use crate::config::{DeviceKind, ServingConfig};
+use crate::harness::{Experiment, Params};
 use crate::models::llama::LlamaConfig;
 use crate::ops::attention::{run as attn, PagedAttnImpl, PagedAttnWork};
+use crate::report::{Agg, Cell, Check, Expectation, Report, Selector, Unit};
 use crate::serving::engine::{Engine, SimBackend};
-use crate::util::stats::mean;
-use crate::util::table::{fmt3, fmt_ratio, Report};
 use crate::workload::DynamicSonnet;
 
-pub fn run() -> Vec<Report> {
-    let mut out = Vec::new();
+pub struct Fig17;
 
-    // (a) opt vs base, 0% padding, seq x batch.
-    let mut a = Report::new("Fig 17(a): vLLM_opt speedup over vLLM_base (0% padding)");
-    a.header(&["seq len", "b8", "b16", "b32", "b64"]);
-    let mut ratios = Vec::new();
-    for &s in &[512usize, 1024, 2048, 4096] {
-        let mut row = vec![s.to_string()];
-        for &b in &[8usize, 16, 32, 64] {
-            let w = PagedAttnWork::llama8b(b, s);
+impl Experiment for Fig17 {
+    fn id(&self) -> &'static str {
+        "fig17"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 17: vLLM PagedAttention case study"
+    }
+
+    fn params(&self) -> Params {
+        Params::new().with("requests", 96.0).with("seed", 17.0)
+    }
+
+    fn run(&self, params: &Params) -> Vec<Report> {
+        let requests = params.get_or("requests", 96.0) as usize;
+        let seed = params.get_or("seed", 17.0) as u64;
+        let mut out = Vec::new();
+
+        // (a) opt vs base, 0% padding, seq x batch.
+        let mut a = Report::new("Fig 17(a): vLLM_opt speedup over vLLM_base (0% padding)");
+        a.header(&["seq len", "b8", "b16", "b32", "b64"]);
+        for &s in &[512usize, 1024, 2048, 4096] {
+            let mut row = vec![Cell::count(s)];
+            for &b in &[8usize, 16, 32, 64] {
+                let w = PagedAttnWork::llama8b(b, s);
+                let r = attn(PagedAttnImpl::GaudiVllmBase, w).time
+                    / attn(PagedAttnImpl::GaudiVllmOpt, w).time;
+                row.push(Cell::val(r, Unit::Ratio));
+            }
+            a.row(row);
+        }
+        a.note("paper: 7.4x average");
+        out.push(a);
+
+        // (b) padding sweep at seq 4K, batch 32.
+        let mut b = Report::new("Fig 17(b): speedup vs zero-padded fraction (seq 4K, batch 32)");
+        b.header(&["padding", "speedup"]);
+        for p in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+            let eff_len = ((4096.0 * (1.0 - p)) as usize).max(1);
+            let w = PagedAttnWork {
+                kv_len: eff_len,
+                padded_len: 4096,
+                ..PagedAttnWork::llama8b(32, 4096)
+            };
             let r = attn(PagedAttnImpl::GaudiVllmBase, w).time
                 / attn(PagedAttnImpl::GaudiVllmOpt, w).time;
-            ratios.push(r);
-            row.push(fmt_ratio(r));
+            b.row(vec![Cell::val(p, Unit::Percent), Cell::val(r, Unit::Ratio)]);
         }
-        a.row(row);
-    }
-    a.note(format!("avg {} (paper: 7.4x)", fmt_ratio(mean(&ratios))));
-    out.push(a);
+        b.note("paper: avg 21x, max 55.7x");
+        out.push(b);
 
-    // (b) padding sweep at seq 4K, batch 32.
-    let mut b = Report::new("Fig 17(b): speedup vs zero-padded fraction (seq 4K, batch 32)");
-    b.header(&["padding", "speedup"]);
-    let mut pr = Vec::new();
-    for p in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
-        let eff_len = ((4096.0 * (1.0 - p)) as usize).max(1);
-        let w = PagedAttnWork { kv_len: eff_len, padded_len: 4096, ..PagedAttnWork::llama8b(32, 4096) };
-        let r =
-            attn(PagedAttnImpl::GaudiVllmBase, w).time / attn(PagedAttnImpl::GaudiVllmOpt, w).time;
-        pr.push(r);
-        b.row(vec![format!("{:.0}%", p * 100.0), fmt_ratio(r)]);
-    }
-    b.note(format!(
-        "avg {} max {} (paper: avg 21x, max 55.7x)",
-        fmt_ratio(mean(&pr)),
-        fmt_ratio(pr.iter().cloned().fold(f64::MIN, f64::max))
-    ));
-    out.push(b);
-
-    // (c) opt vs A100.
-    let mut c = Report::new("Fig 17(c): vLLM_opt (Gaudi-2) vs A100 PagedAttention");
-    c.header(&["seq len", "b8", "b16", "b32", "b64"]);
-    let mut cr = Vec::new();
-    for &s in &[512usize, 1024, 2048, 4096] {
-        let mut row = vec![s.to_string()];
-        for &bsz in &[8usize, 16, 32, 64] {
-            let w = PagedAttnWork::llama8b(bsz, s);
-            let r =
-                attn(PagedAttnImpl::A100Paged, w).time / attn(PagedAttnImpl::GaudiVllmOpt, w).time;
-            cr.push(r);
-            row.push(fmt_ratio(r));
+        // (c) opt vs A100.
+        let mut c = Report::new("Fig 17(c): vLLM_opt (Gaudi-2) vs A100 PagedAttention");
+        c.header(&["seq len", "b8", "b16", "b32", "b64"]);
+        for &s in &[512usize, 1024, 2048, 4096] {
+            let mut row = vec![Cell::count(s)];
+            for &bsz in &[8usize, 16, 32, 64] {
+                let w = PagedAttnWork::llama8b(bsz, s);
+                let r = attn(PagedAttnImpl::A100Paged, w).time
+                    / attn(PagedAttnImpl::GaudiVllmOpt, w).time;
+                row.push(Cell::val(r, Unit::Ratio));
+            }
+            c.row(row);
         }
-        c.row(row);
-    }
-    c.note(format!("avg {} (paper: 45% of A100)", fmt_ratio(mean(&cr))));
-    out.push(c);
+        c.note("paper: 45% of A100");
+        out.push(c);
 
-    // (d, e) end-to-end serving through the engine.
-    let mut d = Report::new("Fig 17(d,e): e2e serving vs max decode batch (Dynamic-Sonnet-like)");
-    d.header(&["max batch", "thpt tok/s (Gaudi)", "TTFT ms", "TPOT ms", "thpt tok/s (A100)"]);
-    for &mb in &[8usize, 16, 32, 64, 128] {
-        let g = serve_once(DeviceKind::Gaudi2, mb);
-        let a100 = serve_once(DeviceKind::A100, mb);
-        d.row(vec![
-            mb.to_string(),
-            fmt3(g.0),
-            fmt3(g.1 * 1e3),
-            fmt3(g.2 * 1e3),
-            fmt3(a100.0),
-        ]);
+        // (d, e) end-to-end serving through the engine.
+        let mut d = Report::new("Fig 17(d,e): e2e serving vs max decode batch (Dynamic-Sonnet-like)");
+        d.header(&["max batch", "Gaudi tok/s", "TTFT ms", "TPOT ms", "A100 tok/s", "G/A"]);
+        for &mb in &[8usize, 16, 32, 64, 128] {
+            let g = serve_once(DeviceKind::Gaudi2, mb, requests, seed);
+            let a100 = serve_once(DeviceKind::A100, mb, requests, seed);
+            d.row(vec![
+                Cell::count(mb),
+                Cell::val(g.0, Unit::TokPerSec),
+                Cell::val(g.1 * 1e3, Unit::Millis),
+                Cell::val(g.2 * 1e3, Unit::Millis),
+                Cell::val(a100.0, Unit::TokPerSec),
+                Cell::val(g.0 / a100.0, Unit::Ratio),
+            ]);
+        }
+        d.note("throughput rises then TTFT/TPOT degrade as the batch knob grows (paper Fig 17(d,e))");
+        out.push(d);
+        out
     }
-    d.note("throughput rises then TTFT/TPOT degrade as the batch knob grows (paper Fig 17(d,e))");
-    out.push(d);
-    out
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "fig17.opt_over_base",
+                "vLLM_opt beats vLLM_base by ~7.4x on average (0% padding grid)",
+                Selector::body("vLLM_opt speedup over vLLM_base", Agg::Mean),
+                Check::Within { target: 7.4, tol: 2.5 },
+            ),
+            Expectation::new(
+                "fig17.opt_vs_a100_kernel",
+                "the optimized kernel still runs at ~45% of the A100's",
+                Selector::body("vLLM_opt (Gaudi-2) vs A100", Agg::Mean),
+                Check::Within { target: 0.45, tol: 0.12 },
+            ),
+            Expectation::new(
+                "fig17.e2e_parity",
+                "end-to-end serving reaches rough parity with A100 at batch 64 (Amdahl)",
+                Selector::cell("Fig 17(d,e)", "64", "G/A"),
+                Check::Between(0.75, 1.45),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    Fig17.run(&Fig17.params())
 }
 
 /// Run the simulated engine once; returns (tokens/s, mean TTFT, mean TPOT).
-pub fn serve_once(device: DeviceKind, max_batch: usize) -> (f64, f64, f64) {
+pub fn serve_once(device: DeviceKind, max_batch: usize, requests: usize, seed: u64) -> (f64, f64, f64) {
     let cfg = ServingConfig {
         device,
         max_decode_batch: max_batch,
@@ -102,7 +143,7 @@ pub fn serve_once(device: DeviceKind, max_batch: usize) -> (f64, f64, f64) {
     };
     let backend = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
     let mut engine = Engine::new(cfg, backend);
-    for req in DynamicSonnet::default().generate(96, f64::INFINITY, 17) {
+    for req in DynamicSonnet::default().generate(requests, f64::INFINITY, seed) {
         engine.submit(req);
     }
     let s = engine.run_to_completion();
@@ -120,19 +161,18 @@ mod tests {
 
     #[test]
     fn throughput_grows_then_tpot_degrades() {
-        let (t8, _, p8) = serve_once(DeviceKind::Gaudi2, 8);
-        let (t64, _, p64) = serve_once(DeviceKind::Gaudi2, 64);
+        let (t8, _, p8) = serve_once(DeviceKind::Gaudi2, 8, 96, 17);
+        let (t64, _, p64) = serve_once(DeviceKind::Gaudi2, 64, 96, 17);
         assert!(t64 > t8, "throughput should grow: {t8} -> {t64}");
         assert!(p64 > p8, "TPOT should degrade with batch: {p8} -> {p64}");
     }
 
     #[test]
-    fn e2e_parity_with_a100() {
-        // Paper: vLLM_opt Gaudi-2 reaches ~parity end-to-end (Amdahl:
-        // PagedAttention is only part of the step).
-        let (g, _, _) = serve_once(DeviceKind::Gaudi2, 64);
-        let (a, _, _) = serve_once(DeviceKind::A100, 64);
-        let ratio = g / a;
-        assert!((0.75..1.45).contains(&ratio), "e2e ratio {ratio}");
+    fn expectations_pass() {
+        let reports = run();
+        for e in Fig17.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

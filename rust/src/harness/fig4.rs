@@ -2,37 +2,99 @@
 //! (N=16) GEMM shapes on Gaudi-2 and A100.
 
 use crate::config::DeviceKind;
+use crate::harness::{Experiment, Params};
 use crate::ops::gemm;
+use crate::report::{Agg, Cell, Check, Expectation, Report, Selector, Unit};
 use crate::sim::Dtype;
-use crate::util::table::{fmt3, Report};
 
-pub fn run() -> Vec<Report> {
-    let mut r = Report::new("Fig 4: GEMM roofline (BF16)");
-    r.header(&["shape (M,K,N)", "AI (FLOP/B)", "Gaudi-2 TF", "A100 TF", "bound(G)", "bound(A)"]);
-    for (m, k, n) in gemm::fig4_shapes() {
-        let g = gemm::run(DeviceKind::Gaudi2, m, k, n, Dtype::Bf16);
-        let a = gemm::run(DeviceKind::A100, m, k, n, Dtype::Bf16);
-        r.row(vec![
-            format!("{m}x{k}x{n}"),
-            fmt3(g.intensity),
-            fmt3(g.exec.achieved_flops / 1e12),
-            fmt3(a.exec.achieved_flops / 1e12),
-            if g.exec.memory_bound { "mem" } else { "mme" }.into(),
-            if a.exec.memory_bound { "mem" } else { "tc" }.into(),
-        ]);
+pub struct Fig4;
+
+impl Experiment for Fig4 {
+    fn id(&self) -> &'static str {
+        "fig4"
     }
-    r.note("paper: Gaudi-2 reaches 429 TF at 8192^3 (99.3% of 432 peak) and wins every shape");
-    vec![r]
+
+    fn title(&self) -> &'static str {
+        "Fig 4: GEMM roofline (achieved TFLOPS, BF16)"
+    }
+
+    fn run(&self, _params: &Params) -> Vec<Report> {
+        let mut r = Report::new("Fig 4: GEMM roofline (BF16)");
+        r.header(&[
+            "shape (M,K,N)",
+            "AI (FLOP/B)",
+            "Gaudi-2 TF",
+            "A100 TF",
+            "G/A",
+            "util(G)",
+            "bound(G)",
+            "bound(A)",
+        ]);
+        for (m, k, n) in gemm::fig4_shapes() {
+            let g = gemm::run(DeviceKind::Gaudi2, m, k, n, Dtype::Bf16);
+            let a = gemm::run(DeviceKind::A100, m, k, n, Dtype::Bf16);
+            r.row(vec![
+                Cell::text(format!("{m}x{k}x{n}")),
+                Cell::val(g.intensity, Unit::FlopPerByte),
+                Cell::val(g.exec.achieved_flops / 1e12, Unit::Tflops),
+                Cell::val(a.exec.achieved_flops / 1e12, Unit::Tflops),
+                Cell::val(g.exec.achieved_flops / a.exec.achieved_flops, Unit::Ratio),
+                Cell::val(g.exec.utilization, Unit::Percent),
+                Cell::text(if g.exec.memory_bound { "mem" } else { "mme" }),
+                Cell::text(if a.exec.memory_bound { "mem" } else { "tc" }),
+            ]);
+        }
+        r.note("paper: Gaudi-2 reaches 429 TF at 8192^3 (99.3% of 432 peak) and wins every shape");
+        vec![r]
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "fig4.peak_tflops",
+                "Gaudi-2 reaches >= 425 achieved TFLOPS at the 8192^3 GEMM",
+                Selector::cell("Fig 4", "8192x8192x8192", "Gaudi-2 TF"),
+                Check::Ge(425.0),
+            ),
+            Expectation::new(
+                "fig4.peak_util",
+                "the 8192^3 point runs at 99.3% of the 432 TF peak",
+                Selector::cell("Fig 4", "8192x8192x8192", "util(G)"),
+                Check::Within { target: 0.993, tol: 0.01 },
+            ),
+            Expectation::new(
+                "fig4.gaudi_wins_every_shape",
+                "Gaudi-2 beats the A100 on every Fig 4 shape",
+                Selector::column("Fig 4", "G/A", Agg::Min),
+                Check::Ge(1.0),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    Fig4.run(&Fig4.params())
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn headline_point_present() {
-        let reports = super::run();
-        let text = reports[0].render();
-        assert!(text.contains("8192x8192x8192"));
-        // 429 +- a few TFLOPS at the headline point.
-        assert!(text.contains("429") || text.contains("428") || text.contains("430"), "{text}");
+        let reports = run();
+        let peak = reports[0].value_at("8192x8192x8192", "Gaudi-2 TF").unwrap();
+        assert!((peak.x - 429.0).abs() < 4.0, "peak {}", peak.x);
+        assert_eq!(peak.unit, Unit::Tflops);
+    }
+
+    #[test]
+    fn expectations_pass() {
+        let reports = run();
+        for e in Fig4.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

@@ -1,59 +1,109 @@
 //! Fig 5: compute-utilization heatmaps — (a) square GEMMs along M=K=N,
-//! (b) irregular GEMMs (M=K large, N small).
+//! (b) irregular GEMMs (M=K large, N small) — plus a typed summary of the
+//! paper's aggregate gap claims.
 
 use crate::config::DeviceKind;
+use crate::harness::{Experiment, Params};
 use crate::ops::gemm;
+use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
 use crate::sim::Dtype;
 use crate::util::stats::mean;
-use crate::util::table::{fmt_pct, Report};
 
+pub struct Fig5;
+
+impl Experiment for Fig5 {
+    fn id(&self) -> &'static str {
+        "fig5"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 5: GEMM compute utilization heatmaps"
+    }
+
+    fn run(&self, _params: &Params) -> Vec<Report> {
+        let mut sq = Report::new("Fig 5(a): square GEMM compute utilization (M=K=N)");
+        sq.header(&["size", "Gaudi-2", "A100", "gap (pp)"]);
+        let mut gaps = Vec::new();
+        for &s in &gemm::SQUARE_SIZES {
+            let g = gemm::run(DeviceKind::Gaudi2, s, s, s, Dtype::Bf16);
+            let a = gemm::run(DeviceKind::A100, s, s, s, Dtype::Bf16);
+            let gap = g.exec.utilization - a.exec.utilization;
+            gaps.push(gap);
+            sq.row(vec![
+                Cell::count(s),
+                Cell::val(g.exec.utilization, Unit::Percent),
+                Cell::val(a.exec.utilization, Unit::Percent),
+                Cell::val(100.0 * gap, Unit::Pp),
+            ]);
+        }
+
+        let mut irr = Report::new("Fig 5(b): irregular GEMM compute utilization (N fixed small)");
+        irr.header(&["shape (M=K, N)", "Gaudi-2", "A100", "gap (pp)"]);
+        for (m, k, n) in gemm::fig5_irregular_grid() {
+            let g = gemm::run(DeviceKind::Gaudi2, m, k, n, Dtype::Bf16);
+            let a = gemm::run(DeviceKind::A100, m, k, n, Dtype::Bf16);
+            let gap = g.exec.utilization - a.exec.utilization;
+            gaps.push(gap);
+            irr.row(vec![
+                Cell::text(format!("({m}, {n})")),
+                Cell::val(g.exec.utilization, Unit::Percent),
+                Cell::val(a.exec.utilization, Unit::Percent),
+                Cell::val(100.0 * gap, Unit::Pp),
+            ]);
+        }
+
+        // Aggregates over BOTH panels — the note of the old rendering,
+        // now typed so --check can regress them.
+        let avg = 100.0 * mean(&gaps);
+        let max = 100.0 * gaps.iter().cloned().fold(f64::MIN, f64::max);
+        let mut summary = Report::new("Fig 5 summary: utilization gap, Gaudi-2 minus A100");
+        summary.header(&["aggregate", "gap (pp)"]);
+        summary.row(vec![Cell::text("avg gap"), Cell::val(avg, Unit::Pp)]);
+        summary.row(vec![Cell::text("max gap"), Cell::val(max, Unit::Pp)]);
+        summary.note("paper: +4.5pp average, +32pp max (at 2048^3)");
+        vec![sq, irr, summary]
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "fig5.avg_gap",
+                "Gaudi-2's utilization averages ~4.5pp above the A100's over the GEMM grids",
+                Selector::cell("Fig 5 summary", "avg gap", "gap (pp)"),
+                Check::Within { target: 4.5, tol: 4.0 },
+            ),
+            Expectation::new(
+                "fig5.max_gap",
+                "the largest gap is ~32pp (the 2048^3 wave-quantization cliff)",
+                Selector::cell("Fig 5 summary", "max gap", "gap (pp)"),
+                Check::Within { target: 32.0, tol: 14.0 },
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
 pub fn run() -> Vec<Report> {
-    let mut sq = Report::new("Fig 5(a): square GEMM compute utilization (M=K=N)");
-    sq.header(&["size", "Gaudi-2", "A100", "gap (pp)"]);
-    let mut gaps = Vec::new();
-    for &s in &gemm::SQUARE_SIZES {
-        let g = gemm::run(DeviceKind::Gaudi2, s, s, s, Dtype::Bf16);
-        let a = gemm::run(DeviceKind::A100, s, s, s, Dtype::Bf16);
-        let gap = g.exec.utilization - a.exec.utilization;
-        gaps.push(gap);
-        sq.row(vec![
-            format!("{s}"),
-            fmt_pct(g.exec.utilization),
-            fmt_pct(a.exec.utilization),
-            format!("{:+.1}", 100.0 * gap),
-        ]);
-    }
-
-    let mut irr = Report::new("Fig 5(b): irregular GEMM compute utilization (N fixed small)");
-    irr.header(&["shape (M=K, N)", "Gaudi-2", "A100", "gap (pp)"]);
-    for (m, k, n) in gemm::fig5_irregular_grid() {
-        let g = gemm::run(DeviceKind::Gaudi2, m, k, n, Dtype::Bf16);
-        let a = gemm::run(DeviceKind::A100, m, k, n, Dtype::Bf16);
-        let gap = g.exec.utilization - a.exec.utilization;
-        gaps.push(gap);
-        irr.row(vec![
-            format!("({m}, {n})"),
-            fmt_pct(g.exec.utilization),
-            fmt_pct(a.exec.utilization),
-            format!("{:+.1}", 100.0 * gap),
-        ]);
-    }
-    let avg = mean(&gaps);
-    let max = gaps.iter().cloned().fold(f64::MIN, f64::max);
-    irr.note(format!(
-        "avg gap {:+.1}pp (paper: +4.5pp), max {:+.1}pp (paper: +32pp @2048^3)",
-        100.0 * avg,
-        100.0 * max
-    ));
-    vec![sq, irr]
+    Fig5.run(&Fig5.params())
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
-    fn two_heatmaps_with_notes() {
-        let reports = super::run();
-        assert_eq!(reports.len(), 2);
-        assert!(reports[1].render().contains("avg gap"));
+    fn two_heatmaps_and_a_summary() {
+        let reports = run();
+        assert_eq!(reports.len(), 3);
+        assert!(reports[2].value_at("avg gap", "gap (pp)").is_some());
+    }
+
+    #[test]
+    fn expectations_pass() {
+        let reports = run();
+        for e in Fig5.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

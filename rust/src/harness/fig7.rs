@@ -3,76 +3,109 @@
 //! configurable MME vs a fixed 256x256x2 output-stationary array.
 
 use crate::config::DeviceKind;
+use crate::harness::{Experiment, Params};
+use crate::report::{Agg, Cell, Check, Expectation, Report, Selector, Unit};
 use crate::sim::mme::{self, MME_CLOCK_HZ};
 use crate::sim::systolic::{self, Geometry};
 use crate::sim::Dtype;
-use crate::util::table::{fmt_pct, Report};
 
 const K: usize = 16384;
 const SIZES: [usize; 7] = [64, 128, 256, 512, 1024, 2048, 8192];
 
-pub fn run() -> Vec<Report> {
-    let spec = DeviceKind::Gaudi2.spec();
+pub struct Fig7;
 
-    let mut geo = Report::new("Fig 7(a): MME geometry picked per (M, N), K=16384");
-    let mut header = vec!["M \\ N".to_string()];
-    header.extend(SIZES.iter().map(|n| n.to_string()));
-    geo.header(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
-    let mut util = Report::new("Fig 7(b): resulting MME compute utilization");
-    util.header(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
-    for &m in &SIZES {
-        let mut grow = vec![m.to_string()];
-        let mut urow = vec![m.to_string()];
-        for &n in &SIZES {
-            let r = mme::run_gemm(&spec, m, K, n, Dtype::Bf16);
-            let gated = if r.active_mac_fraction < 1.0 { "*" } else { "" };
-            grow.push(format!("{}{}", r.geometry.label(), gated));
-            urow.push(fmt_pct(r.utilization));
+impl Experiment for Fig7 {
+    fn id(&self) -> &'static str {
+        "fig7"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fig 7: MME geometry configurability"
+    }
+
+    fn run(&self, _params: &Params) -> Vec<Report> {
+        let spec = DeviceKind::Gaudi2.spec();
+
+        let mut geo = Report::new("Fig 7(a): MME geometry picked per (M, N), K=16384");
+        let mut header = vec!["M \\ N".to_string()];
+        header.extend(SIZES.iter().map(|n| n.to_string()));
+        geo.header(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        let mut util = Report::new("Fig 7(b): resulting MME compute utilization");
+        util.header(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for &m in &SIZES {
+            let mut grow = vec![Cell::count(m)];
+            let mut urow = vec![Cell::count(m)];
+            for &n in &SIZES {
+                let r = mme::run_gemm(&spec, m, K, n, Dtype::Bf16);
+                let gated = if r.active_mac_fraction < 1.0 { "*" } else { "" };
+                grow.push(Cell::text(format!("{}{}", r.geometry.label(), gated)));
+                urow.push(Cell::val(r.utilization, Unit::Percent));
+            }
+            geo.row(grow);
+            util.row(urow);
         }
-        geo.row(grow);
-        util.row(urow);
-    }
-    geo.note("* = power-gated subset of the MAC array (gray configs in the paper)");
+        geo.note("* = power-gated subset of the MAC array (gray configs in the paper)");
 
-    let mut cmp = Report::new("Fig 7(c): configurable MME vs fixed 256x256x2 array (M=K=16384)");
-    cmp.header(&["N", "configurable", "fixed", "improvement (pp)"]);
-    for &n in &[16usize, 32, 64, 128, 256, 512] {
-        let conf = mme::run_gemm(&spec, 16384, K, n, Dtype::Bf16);
-        let fixed_t = systolic::gemm_cycles(Geometry::new(256, 256, 2), 16384, K, n);
-        let mem_time = mme::gemm_traffic_bytes(16384, K, n, Dtype::Bf16)
-            / (spec.hbm_bandwidth * 0.90);
-        let fixed_time = (fixed_t.cycles / MME_CLOCK_HZ).max(mem_time);
-        let fixed_util = mme::gemm_flops(16384, K, n) / fixed_time / spec.matrix_tflops;
-        cmp.row(vec![
-            n.to_string(),
-            fmt_pct(conf.utilization),
-            fmt_pct(fixed_util),
-            format!("{:+.1}", 100.0 * (conf.utilization - fixed_util)),
-        ]);
+        let mut cmp =
+            Report::new("Fig 7(c): configurable MME vs fixed 256x256x2 array (M=K=16384)");
+        cmp.header(&["N", "configurable", "fixed", "improvement (pp)"]);
+        for &n in &[16usize, 32, 64, 128, 256, 512] {
+            let conf = mme::run_gemm(&spec, 16384, K, n, Dtype::Bf16);
+            let fixed_t = systolic::gemm_cycles(Geometry::new(256, 256, 2), 16384, K, n);
+            let mem_time =
+                mme::gemm_traffic_bytes(16384, K, n, Dtype::Bf16) / (spec.hbm_bandwidth * 0.90);
+            let fixed_time = (fixed_t.cycles / MME_CLOCK_HZ).max(mem_time);
+            let fixed_util = mme::gemm_flops(16384, K, n) / fixed_time / spec.matrix_tflops;
+            cmp.row(vec![
+                Cell::count(n),
+                Cell::val(conf.utilization, Unit::Percent),
+                Cell::val(fixed_util, Unit::Percent),
+                Cell::val(100.0 * (conf.utilization - fixed_util), Unit::Pp),
+            ]);
+        }
+        cmp.note("paper: configurability buys up to ~15pp of utilization");
+        vec![geo, util, cmp]
     }
-    cmp.note("paper: configurability buys up to ~15pp of utilization");
-    vec![geo, util, cmp]
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![Expectation::new(
+            "fig7.reconfig_peak_benefit",
+            "configurability buys a double-digit utilization improvement on skinny N",
+            Selector::column("Fig 7(c)", "improvement (pp)", Agg::Max),
+            Check::Between(8.0, 25.0),
+        )]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    Fig7.run(&Fig7.params())
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn improvement_peaks_in_paper_band() {
-        let reports = super::run();
-        let text = reports[2].render();
-        // At least one N shows a >8pp improvement and none exceeds ~25pp.
-        let improvements: Vec<f64> = text
-            .lines()
-            .filter_map(|l| l.split_whitespace().last())
-            .filter_map(|s| s.strip_prefix('+').and_then(|x| x.parse::<f64>().ok()))
-            .collect();
-        assert!(improvements.iter().any(|&x| x > 8.0), "{improvements:?}");
-        assert!(improvements.iter().all(|&x| x < 25.0), "{improvements:?}");
+        let reports = run();
+        let improvements = reports[2].series("improvement (pp)").unwrap();
+        assert!(improvements.max() > 8.0, "{:?}", improvements.values);
+        assert!(improvements.max() < 25.0, "{:?}", improvements.values);
     }
 
     #[test]
     fn small_gemms_power_gate() {
-        let reports = super::run();
+        let reports = run();
         assert!(reports[0].render().contains('*'), "expected power-gated configs");
+    }
+
+    #[test]
+    fn expectations_pass() {
+        let reports = run();
+        for e in Fig7.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

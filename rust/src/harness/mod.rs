@@ -1,7 +1,9 @@
 //! Experiment harness: regenerates every table and figure of the paper's
-//! evaluation section (`repro run <exp>`, `repro list`). Each module
-//! returns `Report`s — the same rows/series the paper plots — rendered by
-//! `util::table`.
+//! evaluation section (`repro run <exp>`, `repro list`). Each experiment
+//! implements the [`Experiment`] trait: it declares its [`Params`], emits
+//! typed [`Report`]s (raw numbers + units, rendered by `util::table`,
+//! exported as JSON artifacts), and carries the paper's headline claims
+//! as typed [`Expectation`]s checked by `repro run --check`.
 
 pub mod ablations;
 pub mod cluster;
@@ -18,47 +20,134 @@ pub mod fig8;
 pub mod fig9;
 pub mod table1;
 
-use crate::util::table::Report;
+use crate::report::{Expectation, ExpectationResult, Report};
+use crate::util::json::Json;
 
-/// A runnable experiment (one paper table/figure).
-pub struct Experiment {
-    pub id: &'static str,
-    pub title: &'static str,
-    pub run: fn() -> Vec<Report>,
+/// Named numeric parameters of an experiment (sweep rates, seeds, SLOs).
+/// Declared by `Experiment::params`, read back in `run`, and recorded in
+/// the JSON artifact so every emitted number carries its provenance.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Params {
+    entries: Vec<(String, f64)>,
+}
+
+impl Params {
+    pub fn new() -> Params {
+        Params::default()
+    }
+
+    /// Set (or replace) a parameter; builder-style.
+    pub fn with(mut self, key: &str, value: f64) -> Params {
+        match self.entries.iter_mut().find(|(k, _)| k == key) {
+            Some(e) => e.1 = value,
+            None => self.entries.push((key.to_string(), value)),
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<f64> {
+        self.entries.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+
+    pub fn get_or(&self, key: &str, dflt: f64) -> f64 {
+        self.get(key).unwrap_or(dflt)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> + '_ {
+        self.entries.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.entries.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect())
+    }
+}
+
+/// A runnable experiment (one paper table/figure, ablation or extension).
+pub trait Experiment {
+    /// Stable CLI id (`repro run <id>`, artifact file name).
+    fn id(&self) -> &'static str;
+    /// Human title shown by `repro list`.
+    fn title(&self) -> &'static str;
+    /// Default parameters; recorded in the JSON artifact.
+    fn params(&self) -> Params {
+        Params::new()
+    }
+    /// Regenerate the experiment's reports under `params`.
+    fn run(&self, params: &Params) -> Vec<Report>;
+    /// The paper's headline claims over this experiment's reports.
+    fn expectations(&self) -> Vec<Expectation> {
+        Vec::new()
+    }
 }
 
 /// All experiments, in paper order.
-pub fn registry() -> Vec<Experiment> {
+pub fn registry() -> Vec<Box<dyn Experiment>> {
     vec![
-        Experiment { id: "table1", title: "Table 1: A100 vs Gaudi-2 specification ratios", run: table1::run },
-        Experiment { id: "fig4", title: "Fig 4: GEMM roofline (achieved TFLOPS, BF16)", run: fig4::run },
-        Experiment { id: "fig5", title: "Fig 5: GEMM compute utilization heatmaps", run: fig5::run },
-        Experiment { id: "fig7", title: "Fig 7: MME geometry configurability", run: fig7::run },
-        Experiment { id: "fig8", title: "Fig 8: STREAM microbenchmarks on TPC", run: fig8::run },
-        Experiment { id: "fig9", title: "Fig 9: vector gather/scatter bandwidth utilization", run: fig9::run },
-        Experiment { id: "fig10", title: "Fig 10: collective communication bus bandwidth", run: fig10::run },
-        Experiment { id: "fig11", title: "Fig 11: RecSys (RM1/RM2) speedup + energy", run: fig11::run },
-        Experiment { id: "fig12", title: "Fig 12: LLM serving speedup + latency breakdown", run: fig12::run },
-        Experiment { id: "fig13", title: "Fig 13: LLM serving energy efficiency", run: fig13::run },
-        Experiment { id: "fig15", title: "Fig 15: embedding lookup operators (DLRM case study)", run: fig15::run },
-        Experiment { id: "fig17", title: "Fig 17: vLLM PagedAttention case study", run: fig17::run },
-        Experiment { id: "cluster", title: "Cluster: iso-SLO replica sizing, Gaudi-2 vs A100 (multi-replica serving)", run: cluster::run },
-        Experiment { id: "abl-mme", title: "Ablation: MME reconfigurability", run: ablations::mme_reconfig },
-        Experiment { id: "abl-watermark", title: "Ablation: KV watermark vs preemptions", run: ablations::watermark_sweep },
-        Experiment { id: "ext-multi-recsys", title: "Extension: multi-device RecSys serving", run: ablations::multi_recsys },
-        Experiment { id: "ext-training", title: "Extension: training-step comparison", run: ablations::training },
-        Experiment { id: "ext-gaudi3", title: "Extension: Gaudi-3 projection", run: ablations::gaudi3_projection },
+        Box::new(table1::Table1),
+        Box::new(fig4::Fig4),
+        Box::new(fig5::Fig5),
+        Box::new(fig7::Fig7),
+        Box::new(fig8::Fig8),
+        Box::new(fig9::Fig9),
+        Box::new(fig10::Fig10),
+        Box::new(fig11::Fig11),
+        Box::new(fig12::Fig12),
+        Box::new(fig13::Fig13),
+        Box::new(fig15::Fig15),
+        Box::new(fig17::Fig17),
+        Box::new(cluster::Cluster),
+        Box::new(ablations::AblMme),
+        Box::new(ablations::AblWatermark),
+        Box::new(ablations::ExtMultiRecsys),
+        Box::new(ablations::ExtTraining),
+        Box::new(ablations::ExtGaudi3),
     ]
 }
 
-/// Run one experiment by id; returns its reports or None if unknown.
+/// Look up one experiment by id.
+pub fn find(id: &str) -> Option<Box<dyn Experiment>> {
+    registry().into_iter().find(|e| e.id() == id)
+}
+
+/// Run one experiment by id under its default params; None if unknown.
 pub fn run_experiment(id: &str) -> Option<Vec<Report>> {
-    registry().into_iter().find(|e| e.id == id).map(|e| (e.run)())
+    find(id).map(|e| e.run(&e.params()))
 }
 
 /// Run everything (the `repro run all` path).
 pub fn run_all() -> Vec<Report> {
-    registry().into_iter().flat_map(|e| (e.run)()).collect()
+    registry().iter().flat_map(|e| e.run(&e.params())).collect()
+}
+
+/// Evaluate an experiment's expectations over already-produced reports.
+pub fn evaluate(e: &dyn Experiment, reports: &[Report]) -> Vec<ExpectationResult> {
+    e.expectations().iter().map(|x| x.evaluate(reports)).collect()
+}
+
+/// Schema tag of the per-experiment JSON artifact.
+pub const ARTIFACT_SCHEMA: &str = "cuda-myth/experiment-v1";
+
+/// The per-experiment JSON artifact written by `repro run --json`:
+/// schema tag, id/title, the params the run used, every report with raw
+/// typed cells, and the evaluated paper-claim expectations.
+pub fn artifact_json(
+    e: &dyn Experiment,
+    params: &Params,
+    reports: &[Report],
+    results: &[ExpectationResult],
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str(ARTIFACT_SCHEMA.into())),
+        ("experiment", Json::Str(e.id().into())),
+        ("title", Json::Str(e.title().into())),
+        ("params", params.to_json()),
+        ("reports", Json::Arr(reports.iter().map(|r| r.to_json()).collect())),
+        ("expectations", Json::Arr(results.iter().map(|r| r.to_json()).collect())),
+    ])
 }
 
 #[cfg(test)]
@@ -67,17 +156,43 @@ mod tests {
 
     #[test]
     fn registry_covers_every_table_and_figure() {
-        let ids: Vec<&str> = registry().iter().map(|e| e.id).collect();
+        let ids: Vec<&str> = registry().iter().map(|e| e.id()).collect();
         for required in [
             "table1", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-            "fig13", "fig15", "fig17",
+            "fig13", "fig15", "fig17", "cluster",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
+        assert_eq!(ids.len(), 18, "registry must keep all 18 entries");
     }
 
     #[test]
     fn unknown_experiment_is_none() {
         assert!(run_experiment("fig99").is_none());
+        assert!(find("fig99").is_none());
+    }
+
+    #[test]
+    fn params_set_get_and_json() {
+        let p = Params::new().with("rate", 24.0).with("seed", 29.0).with("rate", 30.0);
+        assert_eq!(p.get("rate"), Some(30.0));
+        assert_eq!(p.get_or("missing", 7.0), 7.0);
+        assert_eq!(p.iter().count(), 2);
+        let j = p.to_json();
+        assert_eq!(j.get("rate").unwrap().as_f64(), Some(30.0));
+    }
+
+    #[test]
+    fn artifact_shape_is_schema_stable() {
+        let e = find("table1").unwrap();
+        let params = e.params();
+        let reports = e.run(&params);
+        let results = evaluate(e.as_ref(), &reports);
+        let j = artifact_json(e.as_ref(), &params, &reports, &results);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(ARTIFACT_SCHEMA));
+        assert_eq!(parsed.get("experiment").unwrap().as_str(), Some("table1"));
+        assert!(!parsed.get("reports").unwrap().as_arr().unwrap().is_empty());
+        assert!(!parsed.get("expectations").unwrap().as_arr().unwrap().is_empty());
     }
 }

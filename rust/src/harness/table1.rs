@@ -1,42 +1,102 @@
 //! Table 1: NVIDIA A100 vs Intel Gaudi-2 specification comparison.
 
 use crate::config::DeviceSpec;
-use crate::util::table::{fmt3, Report};
+use crate::harness::{Experiment, Params};
+use crate::report::{Agg, Cell, Check, Expectation, Report, Selector, Unit};
 use crate::util::units::{GB, TB, TFLOPS};
 
+pub struct Table1;
+
+impl Experiment for Table1 {
+    fn id(&self) -> &'static str {
+        "table1"
+    }
+
+    fn title(&self) -> &'static str {
+        "Table 1: A100 vs Gaudi-2 specification ratios"
+    }
+
+    fn run(&self, _params: &Params) -> Vec<Report> {
+        let g = DeviceSpec::gaudi2();
+        let a = DeviceSpec::a100();
+        let mut r = Report::new("Table 1: A100 vs Gaudi-2");
+        r.header(&["metric", "A100", "Gaudi-2", "ratio"]);
+        let mut row = |name: &str, av: f64, gv: f64, unit: Unit| {
+            r.row(vec![
+                Cell::text(name),
+                Cell::val(av, unit),
+                Cell::val(gv, unit),
+                Cell::val(gv / av, Unit::Ratio),
+            ]);
+        };
+        row("Matrix TFLOPS (BF16)", a.matrix_tflops / TFLOPS, g.matrix_tflops / TFLOPS, Unit::Tflops);
+        row("Vector TFLOPS (BF16)", a.vector_tflops / TFLOPS, g.vector_tflops / TFLOPS, Unit::Tflops);
+        row("HBM capacity (GB)", a.hbm_capacity / GB, g.hbm_capacity / GB, Unit::Gigabytes);
+        row("HBM bandwidth (TB/s)", a.hbm_bandwidth / TB, g.hbm_bandwidth / TB, Unit::TbPerSec);
+        row("SRAM capacity (MB)", a.sram_bytes / 1e6, g.sram_bytes / 1e6, Unit::Megabytes);
+        row("Comm bandwidth (GB/s)", a.comm_bandwidth / GB, g.comm_bandwidth / GB, Unit::GbPerSec);
+        row("Power (TDP, W)", a.tdp_watts, g.tdp_watts, Unit::Watts);
+        r.note("paper Table 1 ratios: 1.4x / 0.3x / 1.2x / 1.2x / 1.2x / 1.0x / 1.5x");
+        vec![r]
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "table1.matrix_ratio",
+                "Gaudi-2 has ~1.4x the A100's BF16 matrix TFLOPS",
+                Selector::cell("Table 1", "Matrix TFLOPS (BF16)", "ratio"),
+                Check::Within { target: 1.4, tol: 0.05 },
+            ),
+            Expectation::new(
+                "table1.vector_ratio",
+                "Gaudi-2 has only ~0.3x the A100's vector TFLOPS",
+                Selector::cell("Table 1", "Vector TFLOPS (BF16)", "ratio"),
+                Check::Within { target: 0.3, tol: 0.05 },
+            ),
+            Expectation::new(
+                "table1.power_ratio",
+                "Gaudi-2's TDP is ~1.5x the A100's",
+                Selector::cell("Table 1", "Power (TDP, W)", "ratio"),
+                Check::Within { target: 1.5, tol: 0.05 },
+            ),
+            Expectation::new(
+                "table1.all_rows",
+                "all seven specification rows are present",
+                Selector::column("Table 1", "ratio", Agg::Min),
+                Check::Ge(0.1),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
 pub fn run() -> Vec<Report> {
-    let g = DeviceSpec::gaudi2();
-    let a = DeviceSpec::a100();
-    let mut r = Report::new("Table 1: A100 vs Gaudi-2");
-    r.header(&["metric", "A100", "Gaudi-2", "ratio"]);
-    let mut row = |name: &str, av: f64, gv: f64, unit: &str| {
-        r.row(vec![
-            name.to_string(),
-            format!("{} {unit}", fmt3(av)),
-            format!("{} {unit}", fmt3(gv)),
-            format!("{:.1}x", gv / av),
-        ]);
-    };
-    row("Matrix TFLOPS (BF16)", a.matrix_tflops / TFLOPS, g.matrix_tflops / TFLOPS, "TF");
-    row("Vector TFLOPS (BF16)", a.vector_tflops / TFLOPS, g.vector_tflops / TFLOPS, "TF");
-    row("HBM capacity", a.hbm_capacity / GB, g.hbm_capacity / GB, "GB");
-    row("HBM bandwidth", a.hbm_bandwidth / TB, g.hbm_bandwidth / TB, "TB/s");
-    row("SRAM capacity", a.sram_bytes / 1e6, g.sram_bytes / 1e6, "MB");
-    row("Comm bandwidth", a.comm_bandwidth / GB, g.comm_bandwidth / GB, "GB/s");
-    row("Power (TDP)", a.tdp_watts, g.tdp_watts, "W");
-    r.note("paper Table 1 ratios: 1.4x / 0.3x / 1.2x / 1.2x / 1.2x / 1.0x / 1.5x");
-    vec![r]
+    Table1.run(&Table1.params())
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
-    fn renders_all_rows() {
-        let reports = super::run();
+    fn renders_all_rows_with_typed_ratios() {
+        let reports = run();
         assert_eq!(reports.len(), 1);
         assert_eq!(reports[0].num_rows(), 7);
-        let text = reports[0].render();
-        assert!(text.contains("1.4x"));
-        assert!(text.contains("1.5x"));
+        let matrix = reports[0].value_at("Matrix TFLOPS (BF16)", "ratio").unwrap();
+        assert_eq!(matrix.unit, Unit::Ratio);
+        assert!((matrix.x - 1.3846).abs() < 0.01, "{}", matrix.x);
+        let power = reports[0].value_at("Power (TDP, W)", "ratio").unwrap();
+        assert!((power.x - 1.5).abs() < 0.05, "{}", power.x);
+    }
+
+    #[test]
+    fn expectations_pass() {
+        let reports = run();
+        for e in Table1.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
     }
 }

@@ -35,14 +35,24 @@
 //!   build time by `python/compile/aot.py`) and executes them on the PJRT
 //!   CPU client. Python is never on the request path.
 //! * [`harness`] — regenerates every table and figure in the paper's
-//!   evaluation section (`repro run <exp>`).
+//!   evaluation section. Each entry implements the `Experiment` trait
+//!   (`id` / `title` / `params` / `run` / `expectations`); `repro run
+//!   <exp|all> [--json] [--out DIR] [--check]` renders ASCII, writes one
+//!   `BENCH_<id>.json` artifact per experiment, and regression-checks the
+//!   paper's headline claims.
+//! * [`report`] — the typed result model underneath the harness:
+//!   `Value` (raw `f64` + `Unit`), `Cell`/`Report` tables that render to
+//!   ASCII/CSV/JSON, `Series` column views, and `Expectation` paper-claim
+//!   assertions. `util::table` is the ASCII/CSV renderer over this model.
 //! * [`workload`] — synthetic workload generators (fixed-length sweeps,
-//!   Dynamic-Sonnet-like variable-length traces, Zipf embedding indices).
+//!   Dynamic-Sonnet-like variable-length traces, Zipf embedding indices,
+//!   token-level prompts for the real-numerics engine).
 
 pub mod config;
 pub mod harness;
 pub mod models;
 pub mod ops;
+pub mod report;
 pub mod runtime;
 pub mod serving;
 pub mod sim;

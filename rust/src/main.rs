@@ -2,23 +2,33 @@
 //!
 //! ```text
 //! repro list                       # show every reproducible table/figure
-//! repro run <exp|all> [--csv]      # regenerate a paper table/figure
-//! repro serve [--config f.json] [--requests N] [--rate R]
-//!                                  # run the vLLM-style serving engine
-//!                                  # (simulated backend) on a
-//!                                  # Dynamic-Sonnet-like workload
-//! repro real-serve [--artifacts d] # serve the REAL tiny-Llama artifacts
+//! repro run <exp|all> [--csv] [--json] [--out DIR] [--check]
+//!                                  # regenerate a paper table/figure;
+//!                                  # --json prints one artifact per
+//!                                  # experiment, --out DIR writes them as
+//!                                  # BENCH_<id>.json, --check evaluates
+//!                                  # the paper-claim expectations and
+//!                                  # exits non-zero on any failure
+//! repro serve [--config f.json] [--requests N] [--rate R] [--json]
+//!                                  # run the vLLM-style serving cluster
+//!                                  # (1..N replicas, simulated backend)
+//!                                  # on a Dynamic-Sonnet-like workload
+//! repro real-serve [--artifacts d] [--requests N]
+//!                                  # serve the REAL tiny-Llama artifacts
 //!                                  # through PJRT (needs `make artifacts`)
 //! ```
+//!
+//! Malformed flag values and unrecognized flags are usage errors
+//! (exit 2), never silent fallbacks to defaults.
 
 use cuda_myth::config::ServingConfig;
-use cuda_myth::harness;
+use cuda_myth::harness::{self, Experiment};
 use cuda_myth::models::llama::LlamaConfig;
+use cuda_myth::report::expect::results_report;
 use cuda_myth::serving::cluster::ClusterSim;
-use cuda_myth::serving::engine::{Engine, SimBackend};
 use cuda_myth::serving::real_engine::PjrtLlmEngine;
-use cuda_myth::serving::request::Request;
-use cuda_myth::workload::DynamicSonnet;
+use cuda_myth::util::json::Json;
+use cuda_myth::workload::{DynamicSonnet, TokenPrompts};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -28,7 +38,10 @@ fn main() {
         Some("serve") => cmd_serve(&args[1..]),
         Some("real-serve") => cmd_real_serve(&args[1..]),
         _ => {
-            eprintln!("usage: repro <list|run <exp|all> [--csv]|serve [opts]|real-serve [opts]>");
+            eprintln!(
+                "usage: repro <list|run <exp|all> [--csv] [--json] [--out DIR] [--check]\
+                 |serve [opts]|real-serve [opts]>"
+            );
             2
         }
     };
@@ -38,46 +51,150 @@ fn main() {
 fn cmd_list() -> i32 {
     println!("experiments (repro run <id>):");
     for e in harness::registry() {
-        println!("  {:8} {}", e.id, e.title);
+        println!("  {:16} {}", e.id(), e.title());
     }
     0
 }
 
+/// `--name <value>`: Ok(None) if absent, Err if the value is missing —
+/// including when the next token is another `--flag` (a forgotten value
+/// must not silently swallow the following flag).
+fn flag_value<'a>(args: &'a [String], name: &str) -> Result<Option<&'a str>, String> {
+    match args.iter().position(|a| a == name) {
+        None => Ok(None),
+        Some(i) => match args.get(i + 1) {
+            Some(v) if !v.starts_with("--") => Ok(Some(v.as_str())),
+            _ => Err(format!("missing value for {name}")),
+        },
+    }
+}
+
+/// Typed flag with a default; a present-but-malformed value is an error,
+/// never a silent fallback.
+fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> Result<T, String> {
+    match flag_value(args, name)? {
+        None => Ok(default),
+        Some(v) => v.parse().map_err(|_| format!("invalid value '{v}' for {name}")),
+    }
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+/// Reject unrecognized `--flags`: a typo'd `--chek` must be a usage
+/// error, not a silently skipped check.
+fn reject_unknown_flags(args: &[String], known: &[&str]) -> Result<(), String> {
+    match args.iter().find(|a| a.starts_with("--") && !known.contains(&a.as_str())) {
+        Some(a) => Err(format!("unknown flag '{a}'")),
+        None => Ok(()),
+    }
+}
+
 fn cmd_run(args: &[String]) -> i32 {
+    const USAGE: &str = "usage: repro run <exp|all> [--csv] [--json] [--out DIR] [--check]";
     let Some(id) = args.first() else {
-        eprintln!("usage: repro run <exp|all> [--csv]");
+        eprintln!("{USAGE}");
         return 2;
     };
-    let csv = args.iter().any(|a| a == "--csv");
-    let reports = if id == "all" {
-        harness::run_all()
+    if let Err(e) = reject_unknown_flags(args, &["--csv", "--json", "--out", "--check"]) {
+        eprintln!("{e}\n{USAGE}");
+        return 2;
+    }
+    let csv = has_flag(args, "--csv");
+    let json = has_flag(args, "--json");
+    let check = has_flag(args, "--check");
+    let out_dir = match flag_value(args, "--out") {
+        Ok(d) => d.map(str::to_string),
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+    };
+    if csv && (json || out_dir.is_some()) {
+        eprintln!("--csv cannot be combined with --json/--out\n{USAGE}");
+        return 2;
+    }
+
+    let exps: Vec<Box<dyn Experiment>> = if id == "all" {
+        harness::registry()
     } else {
-        match harness::run_experiment(id) {
-            Some(r) => r,
+        match harness::find(id) {
+            Some(e) => vec![e],
             None => {
                 eprintln!("unknown experiment '{id}' (see `repro list`)");
                 return 2;
             }
         }
     };
-    for r in reports {
-        if csv {
-            println!("# {}", r.title());
-            print!("{}", r.to_csv());
+
+    if let Some(dir) = &out_dir {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("cannot create --out directory '{dir}': {e}");
+            return 1;
+        }
+    }
+
+    let emit_artifacts = json || out_dir.is_some();
+    let mut all_results = Vec::new();
+    for e in exps {
+        let params = e.params();
+        let reports = e.run(&params);
+        let results = harness::evaluate(e.as_ref(), &reports);
+        if emit_artifacts {
+            let artifact = harness::artifact_json(e.as_ref(), &params, &reports, &results);
+            match &out_dir {
+                Some(dir) => {
+                    let path = format!("{dir}/BENCH_{}.json", e.id());
+                    if let Err(err) = std::fs::write(&path, artifact.dump()) {
+                        eprintln!("cannot write '{path}': {err}");
+                        return 1;
+                    }
+                    println!("wrote {path}");
+                }
+                None => println!("{}", artifact.dump()),
+            }
         } else {
-            r.print();
+            for r in &reports {
+                if csv {
+                    println!("# {}", r.title());
+                    print!("{}", r.to_csv());
+                } else {
+                    r.print();
+                }
+            }
+        }
+        all_results.extend(results);
+    }
+
+    if check {
+        // In --json mode stdout is a pure NDJSON artifact stream; the
+        // human-readable PASS/FAIL table goes to stderr.
+        let table = results_report(&all_results).render();
+        if emit_artifacts {
+            eprintln!("{table}");
+        } else {
+            println!("{table}");
+        }
+        if all_results.iter().any(|r| !r.pass) {
+            return 1;
         }
     }
     0
 }
 
-fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
-}
-
 fn cmd_serve(args: &[String]) -> i32 {
+    const USAGE: &str = "usage: repro serve [--config f.json] [--requests N] [--rate R] [--json]";
+    if let Err(e) = reject_unknown_flags(args, &["--config", "--requests", "--rate", "--json"]) {
+        eprintln!("{e}\n{USAGE}");
+        return 2;
+    }
     let cfg = match flag_value(args, "--config") {
-        Some(path) => match std::fs::read_to_string(path)
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+        Ok(Some(path)) => match std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("{e}"))
             .and_then(|s| ServingConfig::from_json(&s))
         {
@@ -87,56 +204,76 @@ fn cmd_serve(args: &[String]) -> i32 {
                 return 2;
             }
         },
-        None => ServingConfig { num_blocks: 8192, ..Default::default() },
+        Ok(None) => ServingConfig { num_blocks: 8192, ..Default::default() },
     };
-    let n: usize = flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
-    let rate: f64 =
-        flag_value(args, "--rate").and_then(|v| v.parse().ok()).unwrap_or(f64::INFINITY);
-    println!("serving config: {}", cfg.to_json());
-    if cfg.replicas > 1 {
-        // Data-parallel fleet behind the router (serving::cluster).
-        let replicas = cfg.replicas;
-        let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
-        for req in DynamicSonnet::default().generate(n, rate, 7) {
-            sim.submit(req);
+    let (n, rate) = match (
+        parse_flag::<usize>(args, "--requests", 64),
+        parse_flag::<f64>(args, "--rate", f64::INFINITY),
+    ) {
+        (Ok(n), Ok(rate)) => (n, rate),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
         }
-        let s = sim.run_to_completion();
-        println!(
-            "served {} requests over {} replicas ({}): {:.1} tok/s, mean TTFT {:.1} ms, \
-             p99 TTFT {:.1} ms, mean TPOT {:.2} ms, {} backpressure requeues",
-            s.requests,
-            replicas,
-            cfg.route_policy.name(),
-            s.throughput_tps,
-            s.mean_ttft * 1e3,
-            s.p99_ttft * 1e3,
-            s.mean_tpot * 1e3,
-            sim.requeues,
-        );
+    };
+    let as_json = has_flag(args, "--json");
+    if !as_json {
+        println!("serving config: {}", cfg.to_json());
+    }
+
+    // One path for every fleet size: a 1-replica cluster is
+    // integration-tested bitwise-equal to the bare engine.
+    let replicas = cfg.replicas;
+    let policy = cfg.route_policy;
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(DynamicSonnet::default().generate(n, rate, 7));
+    let s = sim.run_to_completion();
+    if as_json {
+        // Pure-JSON stdout (pipe-friendly, like `repro run --json`).
+        let mut j = s.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("replicas".into(), Json::Num(replicas as f64));
+            m.insert("route_policy".into(), Json::Str(policy.name().into()));
+            m.insert("requeues".into(), Json::Num(sim.requeues as f64));
+        }
+        println!("{}", j.dump());
         return 0;
     }
-    let backend = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
-    let mut engine = Engine::new(cfg, backend);
-    for req in DynamicSonnet::default().generate(n, rate, 7) {
-        engine.submit(req);
-    }
-    let s = engine.run_to_completion();
     println!(
-        "served {} requests in {:.2}s (simulated): {:.1} tok/s, mean TTFT {:.1} ms, \
-         mean TPOT {:.2} ms, p99 TTFT {:.1} ms",
+        "served {} requests over {} replica(s) ({}): {:.1} tok/s, mean TTFT {:.1} ms, \
+         p99 TTFT {:.1} ms, mean TPOT {:.2} ms, {} backpressure requeues",
         s.requests,
-        engine.clock(),
+        replicas,
+        policy.name(),
         s.throughput_tps,
         s.mean_ttft * 1e3,
-        s.mean_tpot * 1e3,
         s.p99_ttft * 1e3,
+        s.mean_tpot * 1e3,
+        sim.requeues,
     );
     0
 }
 
 fn cmd_real_serve(args: &[String]) -> i32 {
-    let dir = flag_value(args, "--artifacts").unwrap_or("artifacts").to_string();
-    let n: usize = flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(8);
+    const USAGE: &str = "usage: repro real-serve [--artifacts DIR] [--requests N]";
+    if let Err(e) = reject_unknown_flags(args, &["--artifacts", "--requests"]) {
+        eprintln!("{e}\n{USAGE}");
+        return 2;
+    }
+    let dir = match flag_value(args, "--artifacts") {
+        Ok(d) => d.unwrap_or("artifacts").to_string(),
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+    };
+    let n = match parse_flag::<usize>(args, "--requests", 8) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+    };
     let mut engine = match PjrtLlmEngine::new(&dir) {
         Ok(e) => e,
         Err(e) => {
@@ -149,11 +286,19 @@ fn cmd_real_serve(args: &[String]) -> i32 {
         "loaded tiny-Llama artifacts: {} slots, max_seq {}, vocab {}",
         dims.batch_slots, dims.max_seq, dims.vocab
     );
-    for i in 0..n as u64 {
-        let plen = 4 + (i as usize % 5);
-        let prompt: Vec<i32> = (0..plen as i32).map(|t| (17 * t + i as i32 * 3) % 100).collect();
-        let out_len = 8 + (i as usize % 8);
-        if let Err(e) = engine.submit(Request::new(i, plen, out_len, 0.0), prompt) {
+    // Manifest dims are user data: reject degenerate shapes gracefully
+    // instead of tripping the generator's contract assert.
+    if dims.vocab == 0 || dims.prompt_pad == 0 || dims.max_seq <= dims.prompt_pad {
+        eprintln!(
+            "artifact dims unsuitable for serving: vocab {}, prompt_pad {}, max_seq {} \
+             (need vocab > 0 and max_seq > prompt_pad > 0)",
+            dims.vocab, dims.prompt_pad, dims.max_seq
+        );
+        return 1;
+    }
+    let prompts = TokenPrompts::new(dims.vocab, dims.prompt_pad, dims.max_seq);
+    for (req, prompt) in prompts.generate(n, 11) {
+        if let Err(e) = engine.submit(req, prompt) {
             eprintln!("submit failed: {e:#}");
             return 1;
         }

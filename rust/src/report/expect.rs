@@ -1,0 +1,348 @@
+//! Paper-claim regression checks: a typed selector over an experiment's
+//! reports plus a typed comparison. `Expectation`s replace the substring
+//! asserts that used to grep rendered ASCII — the claim "Gaudi-2 reaches
+//! >= 425 TFLOPS at 8192^3" is now a cell selector and a bound, evaluated
+//! by `repro run --check` (exit non-zero on any failure), folded into the
+//! per-experiment JSON artifacts, and enforced by the integration tests.
+
+use crate::util::json::Json;
+use crate::util::table::fmt3;
+
+use super::model::{Cell, Report, Series};
+
+/// How to reduce the selected cells to one number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Agg {
+    /// A single cell (requires a row label).
+    Cell,
+    Mean,
+    Min,
+    Max,
+    Sum,
+}
+
+impl Agg {
+    fn name(&self) -> &'static str {
+        match self {
+            Agg::Cell => "cell",
+            Agg::Mean => "mean",
+            Agg::Min => "min",
+            Agg::Max => "max",
+            Agg::Sum => "sum",
+        }
+    }
+}
+
+/// Addresses a number inside an experiment's reports: which report (title
+/// substring), which column (header name, or `"*"` for every value cell
+/// outside the row-label column), optionally which row (label match), and
+/// how to aggregate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Selector {
+    pub report: &'static str,
+    pub column: &'static str,
+    pub row: Option<&'static str>,
+    pub agg: Agg,
+}
+
+impl Selector {
+    /// One cell: `(report, row label, column)`.
+    pub fn cell(report: &'static str, row: &'static str, column: &'static str) -> Selector {
+        Selector { report, column, row: Some(row), agg: Agg::Cell }
+    }
+
+    /// Aggregate over one column's value cells.
+    pub fn column(report: &'static str, column: &'static str, agg: Agg) -> Selector {
+        Selector { report, column, row: None, agg }
+    }
+
+    /// Aggregate over every value cell outside the row-label column —
+    /// the "average over the heatmap grid" shape of claim.
+    pub fn body(report: &'static str, agg: Agg) -> Selector {
+        Selector { report, column: "*", row: None, agg }
+    }
+
+    /// Extract the addressed number, or explain what failed to resolve.
+    pub fn resolve(&self, reports: &[Report]) -> Result<f64, String> {
+        let rep = reports
+            .iter()
+            .find(|r| r.title().contains(self.report))
+            .ok_or_else(|| format!("no report titled like '{}'", self.report))?;
+        match (self.row, self.agg) {
+            (Some(row), Agg::Cell) => rep
+                .value_at(row, self.column)
+                .map(|v| v.x)
+                .ok_or_else(|| {
+                    format!("no value cell at row '{row}', column '{}' of '{}'", self.column, rep.title())
+                }),
+            (Some(_), agg) => Err(format!(
+                "a row label requires Agg::Cell, not Agg::{} (selector {})",
+                agg.name(),
+                self.describe()
+            )),
+            (None, Agg::Cell) => Err(format!(
+                "Agg::Cell requires a row label (selector {})",
+                self.describe()
+            )),
+            (None, agg) => {
+                let values: Vec<f64> = if self.column == "*" {
+                    rep.body_values()
+                } else {
+                    rep.series(self.column)
+                        .ok_or_else(|| {
+                            format!("no column '{}' in '{}'", self.column, rep.title())
+                        })?
+                        .values
+                };
+                if values.is_empty() {
+                    return Err(format!(
+                        "column '{}' of '{}' has no value cells",
+                        self.column,
+                        rep.title()
+                    ));
+                }
+                // One fold implementation: the Series methods.
+                let s = Series { column: self.column.to_string(), unit: None, values };
+                Ok(match agg {
+                    Agg::Cell => unreachable!("handled by the (None, Agg::Cell) arm"),
+                    Agg::Mean => s.mean(),
+                    Agg::Min => s.min(),
+                    Agg::Max => s.max(),
+                    Agg::Sum => s.sum(),
+                })
+            }
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self.row {
+            Some(row) => format!("{}[{row}].{}", self.report, self.column),
+            None => format!("{}({} {})", self.report, self.agg.name(), self.column),
+        }
+    }
+}
+
+/// The typed comparison against the paper's number.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Check {
+    Ge(f64),
+    Le(f64),
+    /// |actual - target| <= tol.
+    Within { target: f64, tol: f64 },
+    /// lo <= actual <= hi.
+    Between(f64, f64),
+    /// Bitwise equality (e.g. the 1-replica cluster parity claim).
+    EqExact(f64),
+}
+
+impl Check {
+    pub fn pass(&self, actual: f64) -> bool {
+        match *self {
+            Check::Ge(bound) => actual >= bound,
+            Check::Le(bound) => actual <= bound,
+            Check::Within { target, tol } => (actual - target).abs() <= tol,
+            Check::Between(lo, hi) => (lo..=hi).contains(&actual),
+            Check::EqExact(target) => actual == target,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match *self {
+            Check::Ge(bound) => format!(">= {}", fmt3(bound)),
+            Check::Le(bound) => format!("<= {}", fmt3(bound)),
+            Check::Within { target, tol } => format!("{} +- {}", fmt3(target), fmt3(tol)),
+            Check::Between(lo, hi) => format!("in [{}, {}]", fmt3(lo), fmt3(hi)),
+            Check::EqExact(target) => format!("== {} exactly", fmt3(target)),
+        }
+    }
+}
+
+/// One paper-claim assertion: where the number lives and what the paper
+/// says it should be.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Expectation {
+    /// Stable id, "<experiment>.<claim>" by convention.
+    pub id: &'static str,
+    /// The paper claim in words (shows up in artifacts and failures).
+    pub claim: &'static str,
+    pub selector: Selector,
+    pub check: Check,
+}
+
+impl Expectation {
+    pub fn new(
+        id: &'static str,
+        claim: &'static str,
+        selector: Selector,
+        check: Check,
+    ) -> Expectation {
+        Expectation { id, claim, selector, check }
+    }
+
+    pub fn evaluate(&self, reports: &[Report]) -> ExpectationResult {
+        match self.selector.resolve(reports) {
+            Ok(actual) => ExpectationResult {
+                id: self.id.to_string(),
+                claim: self.claim.to_string(),
+                pass: self.check.pass(actual),
+                actual: Some(actual),
+                detail: format!(
+                    "{} = {} (want {})",
+                    self.selector.describe(),
+                    fmt3(actual),
+                    self.check.describe()
+                ),
+            },
+            Err(why) => ExpectationResult {
+                id: self.id.to_string(),
+                claim: self.claim.to_string(),
+                pass: false,
+                actual: None,
+                detail: format!("selector failed: {why}"),
+            },
+        }
+    }
+}
+
+/// Outcome of evaluating one expectation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpectationResult {
+    pub id: String,
+    pub claim: String,
+    pub pass: bool,
+    pub actual: Option<f64>,
+    pub detail: String,
+}
+
+impl ExpectationResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("claim", Json::Str(self.claim.clone())),
+            ("pass", Json::Bool(self.pass)),
+            (
+                "actual",
+                match self.actual {
+                    Some(x) => Json::Num(x),
+                    None => Json::Null,
+                },
+            ),
+            ("detail", Json::Str(self.detail.clone())),
+        ])
+    }
+}
+
+/// Human-readable PASS/FAIL table over a batch of results (`repro run
+/// --check` prints this).
+pub fn results_report(results: &[ExpectationResult]) -> Report {
+    let mut r = Report::new("Paper-claim expectation checks");
+    r.header(&["expectation", "status", "detail"]);
+    for res in results {
+        r.row(vec![
+            Cell::text(res.id.clone()),
+            Cell::text(if res.pass { "PASS" } else { "FAIL" }),
+            Cell::text(res.detail.clone()),
+        ]);
+    }
+    let failed = results.iter().filter(|r| !r.pass).count();
+    r.note(format!("{} checks, {} failed", results.len(), failed));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::value::Unit;
+
+    fn reports() -> Vec<Report> {
+        let mut r = Report::new("Fig T: throughput");
+        r.header(&["batch", "tok/s", "note"]);
+        r.row(vec![Cell::count(8), Cell::val(100.0, Unit::TokPerSec), Cell::text("a")]);
+        r.row(vec![Cell::count(64), Cell::val(400.0, Unit::TokPerSec), Cell::text("b")]);
+        vec![r]
+    }
+
+    #[test]
+    fn cell_selector_resolves_by_row_label() {
+        let s = Selector::cell("Fig T", "64", "tok/s");
+        assert_eq!(s.resolve(&reports()), Ok(400.0));
+        assert!(Selector::cell("Fig T", "99", "tok/s").resolve(&reports()).is_err());
+        assert!(Selector::cell("Fig Z", "64", "tok/s").resolve(&reports()).is_err());
+    }
+
+    #[test]
+    fn column_and_body_aggregates() {
+        let r = reports();
+        assert_eq!(Selector::column("Fig T", "tok/s", Agg::Mean).resolve(&r), Ok(250.0));
+        assert_eq!(Selector::column("Fig T", "tok/s", Agg::Min).resolve(&r), Ok(100.0));
+        assert_eq!(Selector::column("Fig T", "tok/s", Agg::Sum).resolve(&r), Ok(500.0));
+        // body skips the row-label column and text cells.
+        assert_eq!(Selector::body("Fig T", Agg::Max).resolve(&r), Ok(400.0));
+        // text-only column has no value cells.
+        assert!(Selector::column("Fig T", "note", Agg::Mean).resolve(&r).is_err());
+        // Agg::Cell without a row label is rejected, not first-cell.
+        let bad = Selector { report: "Fig T", column: "tok/s", row: None, agg: Agg::Cell };
+        assert!(bad.resolve(&r).unwrap_err().contains("row label"));
+        // And a row label with a non-Cell agg is rejected, not silently
+        // treated as a cell lookup.
+        let bad2 = Selector { report: "Fig T", column: "tok/s", row: Some("64"), agg: Agg::Mean };
+        assert!(bad2.resolve(&r).unwrap_err().contains("Agg::Cell"));
+    }
+
+    #[test]
+    fn checks_compare_as_documented() {
+        assert!(Check::Ge(425.0).pass(429.0));
+        assert!(!Check::Ge(425.0).pass(400.0));
+        assert!(Check::Within { target: 1.47, tol: 0.2 }.pass(1.30));
+        assert!(!Check::Within { target: 1.47, tol: 0.2 }.pass(1.0));
+        assert!(Check::Between(8.0, 25.0).pass(14.9));
+        assert!(Check::EqExact(0.0).pass(0.0));
+        assert!(!Check::EqExact(0.0).pass(1e-300));
+    }
+
+    #[test]
+    fn evaluate_produces_result_and_json() {
+        let e = Expectation::new(
+            "figT.peak",
+            "throughput reaches 400 tok/s at batch 64",
+            Selector::cell("Fig T", "64", "tok/s"),
+            Check::Ge(390.0),
+        );
+        let res = e.evaluate(&reports());
+        assert!(res.pass);
+        assert_eq!(res.actual, Some(400.0));
+        let j = crate::util::json::Json::parse(&res.to_json().dump()).unwrap();
+        assert_eq!(j.get("pass").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("actual").unwrap().as_f64(), Some(400.0));
+    }
+
+    #[test]
+    fn unresolvable_selector_fails_closed() {
+        let e = Expectation::new(
+            "figT.broken",
+            "selector points nowhere",
+            Selector::cell("Fig T", "64", "no-such-col"),
+            Check::Ge(0.0),
+        );
+        let res = e.evaluate(&reports());
+        assert!(!res.pass);
+        assert!(res.actual.is_none());
+        assert!(res.detail.contains("selector failed"));
+    }
+
+    #[test]
+    fn results_table_counts_failures() {
+        let ok = ExpectationResult {
+            id: "a".into(),
+            claim: "c".into(),
+            pass: true,
+            actual: Some(1.0),
+            detail: "d".into(),
+        };
+        let bad = ExpectationResult { id: "b".into(), pass: false, ..ok.clone() };
+        let table = results_report(&[ok, bad]);
+        assert_eq!(table.num_rows(), 2);
+        assert!(table.render().contains("FAIL"));
+        assert!(table.notes()[0].contains("1 failed"));
+    }
+}

@@ -1,0 +1,30 @@
+//! Typed experiment reports: the data model every harness module emits.
+//!
+//! The paper's contribution is *quantitative* (Gaudi-2 at 99.3% of peak
+//! for 8192^3 GEMM, iso-SLO replica counts, energy-efficiency ratios), so
+//! reports carry raw numbers, not pre-formatted strings:
+//!
+//! * [`Value`] — an `f64` plus a [`Unit`] that fixes both the ASCII cell
+//!   formatting and the JSON serialization tag.
+//! * [`Cell`] / [`Report`] — a titled table of typed cells with headers
+//!   and notes; renders to the same ASCII tables as before
+//!   (`util::table` is the renderer), to CSV, and to JSON via
+//!   `util::json`.
+//! * [`Series`] — a typed column view (`report.series("tok/s")`) for
+//!   consumers that want the numbers back out.
+//! * [`Expectation`] — a paper-claim regression check: a cell/column
+//!   selector plus a typed comparison, evaluated by `repro run --check`
+//!   and by the integration tests (replacing substring asserts over
+//!   rendered tables).
+//!
+//! `repro run all --json --out bench/` writes one `BENCH_<id>.json`
+//! artifact per experiment (schema `cuda-myth/experiment-v1`), which is
+//! the machine-readable perf trajectory CI uploads per commit.
+
+pub mod expect;
+pub mod model;
+pub mod value;
+
+pub use expect::{Agg, Check, Expectation, ExpectationResult, Selector};
+pub use model::{Cell, Report, Series};
+pub use value::{Unit, Value};

@@ -1,0 +1,319 @@
+//! The report table model: typed cells, typed column views, and the
+//! JSON (de)serialization. ASCII/CSV rendering lives in `util::table`
+//! (a renderer over this model); the builder API (`new` / `header` /
+//! `row` / `note`) is unchanged from the stringly-typed predecessor so
+//! harness modules read the same — only the cells are typed now.
+
+use crate::util::json::{Json, JsonError};
+use crate::util::stats::mean;
+
+use super::value::{Unit, Value};
+
+/// One table cell: a text label or a typed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    Text(String),
+    Val(Value),
+}
+
+impl Cell {
+    pub fn text(s: impl Into<String>) -> Cell {
+        Cell::Text(s.into())
+    }
+
+    pub fn val(x: f64, unit: Unit) -> Cell {
+        Cell::Val(Value::new(x, unit))
+    }
+
+    pub fn count(n: usize) -> Cell {
+        Cell::Val(Value::new(n as f64, Unit::Count))
+    }
+
+    /// The typed value, if this is a value cell.
+    pub fn value(&self) -> Option<Value> {
+        match self {
+            Cell::Val(v) => Some(*v),
+            Cell::Text(_) => None,
+        }
+    }
+
+    /// ASCII rendering of the cell.
+    pub fn fmt(&self) -> String {
+        match self {
+            Cell::Text(s) => s.clone(),
+            Cell::Val(v) => v.fmt(),
+        }
+    }
+
+    /// Raw CSV rendering: full-precision numbers for values, the plain
+    /// text for labels (JSON carries the unit; CSV is for plotting).
+    pub fn to_csv_field(&self) -> String {
+        match self {
+            Cell::Text(s) => s.clone(),
+            Cell::Val(v) => format!("{}", v.x),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Cell::Text(s) => Json::Str(s.clone()),
+            Cell::Val(v) => v.to_json(),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Cell, JsonError> {
+        match j {
+            Json::Str(s) => Ok(Cell::Text(s.clone())),
+            Json::Obj(_) => Ok(Cell::Val(Value::from_json(j)?)),
+            _ => Err(JsonError("cell must be a string or a {v, unit} object".into())),
+        }
+    }
+}
+
+/// A typed column view: the numeric values of one column (text cells
+/// skipped), with the unit of the first value cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    pub column: String,
+    pub unit: Option<Unit>,
+    pub values: Vec<f64>,
+}
+
+impl Series {
+    pub fn mean(&self) -> f64 {
+        mean(&self.values)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.values.iter().sum()
+    }
+}
+
+/// A titled table of typed cells — what every experiment emits and what
+/// `util::table` renders to ASCII/CSV.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<Cell>>,
+    notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: impl Into<String>) -> Self {
+        Report { title: title.into(), header: Vec::new(), rows: Vec::new(), notes: Vec::new() }
+    }
+
+    pub fn header(&mut self, cols: &[&str]) -> &mut Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, note: impl Into<String>) -> &mut Self {
+        self.notes.push(note.into());
+        self
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    pub fn columns(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn rows(&self) -> &[Vec<Cell>] {
+        &self.rows
+    }
+
+    pub fn notes(&self) -> &[String] {
+        &self.notes
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn col_index(&self, column: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == column)
+    }
+
+    /// Typed view of one column by header name (text cells skipped).
+    pub fn series(&self, column: &str) -> Option<Series> {
+        let idx = self.col_index(column)?;
+        let vals: Vec<Value> =
+            self.rows.iter().filter_map(|r| r.get(idx).and_then(|c| c.value())).collect();
+        Some(Series {
+            column: column.to_string(),
+            unit: vals.first().map(|v| v.unit),
+            values: vals.iter().map(|v| v.x).collect(),
+        })
+    }
+
+    /// Every value cell outside the first (row-label) column — the
+    /// aggregate view heatmap claims use ("avg speedup over the grid").
+    pub fn body_values(&self) -> Vec<f64> {
+        self.rows
+            .iter()
+            .flat_map(|r| r.iter().skip(1))
+            .filter_map(|c| c.value().map(|v| v.x))
+            .collect()
+    }
+
+    /// The value at (row, column), where `row_label` matches the ASCII
+    /// rendering of the first cell of the row (the row label).
+    pub fn value_at(&self, row_label: &str, column: &str) -> Option<Value> {
+        let idx = self.col_index(column)?;
+        self.rows
+            .iter()
+            .find(|r| r.first().map(|c| c.fmt()) == Some(row_label.to_string()))
+            .and_then(|r| r.get(idx))
+            .and_then(|c| c.value())
+    }
+
+    /// Column-aligned ASCII rendering (see `util::table`).
+    pub fn render(&self) -> String {
+        crate::util::table::render_ascii(self)
+    }
+
+    /// Raw-number CSV rendering (see `util::table`).
+    pub fn to_csv(&self) -> String {
+        crate::util::table::render_csv(self)
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("columns", Json::Arr(self.header.iter().map(|h| Json::Str(h.clone())).collect())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| c.to_json()).collect()))
+                        .collect(),
+                ),
+            ),
+            ("notes", Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Report, JsonError> {
+        let title = j
+            .req("title")?
+            .as_str()
+            .ok_or_else(|| JsonError("report 'title' must be a string".into()))?
+            .to_string();
+        let str_arr = |key: &str| -> Result<Vec<String>, JsonError> {
+            j.req(key)?
+                .as_arr()
+                .ok_or_else(|| JsonError(format!("report '{key}' must be an array")))?
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| JsonError(format!("'{key}' entries must be strings")))
+                })
+                .collect()
+        };
+        let header = str_arr("columns")?;
+        let notes = str_arr("notes")?;
+        let rows = j
+            .req("rows")?
+            .as_arr()
+            .ok_or_else(|| JsonError("report 'rows' must be an array".into()))?
+            .iter()
+            .map(|r| {
+                r.as_arr()
+                    .ok_or_else(|| JsonError("each row must be an array".into()))?
+                    .iter()
+                    .map(Cell::from_json)
+                    .collect::<Result<Vec<Cell>, JsonError>>()
+            })
+            .collect::<Result<Vec<Vec<Cell>>, JsonError>>()?;
+        Ok(Report { title, header, rows, notes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report::new("Fig X: sample");
+        r.header(&["shape", "TF", "util"]);
+        r.row(vec![Cell::text("8192^3"), Cell::val(429.3, Unit::Tflops), Cell::val(0.993, Unit::Percent)]);
+        r.row(vec![Cell::text("1024^3"), Cell::val(118.0, Unit::Tflops), Cell::val(0.273, Unit::Percent)]);
+        r.note("a note");
+        r
+    }
+
+    #[test]
+    fn series_and_value_at() {
+        let r = sample();
+        let s = r.series("TF").unwrap();
+        assert_eq!(s.unit, Some(Unit::Tflops));
+        assert_eq!(s.values, vec![429.3, 118.0]);
+        assert!((s.mean() - 273.65).abs() < 1e-9);
+        assert_eq!(s.min(), 118.0);
+        assert_eq!(s.max(), 429.3);
+        let v = r.value_at("8192^3", "util").unwrap();
+        assert_eq!(v, Value::new(0.993, Unit::Percent));
+        assert!(r.value_at("missing", "util").is_none());
+        assert!(r.series("nope").is_none());
+    }
+
+    #[test]
+    fn body_values_skip_labels_and_text() {
+        let r = sample();
+        assert_eq!(r.body_values().len(), 4);
+        assert!(r.body_values().contains(&0.273));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_model_and_rendering() {
+        let r = sample();
+        let j = Json::parse(&r.to_json().dump()).unwrap();
+        let back = Report::from_json(&j).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.render(), r.render());
+        assert_eq!(back.to_csv(), r.to_csv());
+    }
+
+    #[test]
+    fn csv_is_raw_numbers() {
+        let csv = sample().to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "shape,TF,util");
+        assert_eq!(lines[1], "8192^3,429.3,0.993");
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        for bad in [
+            r#"{"columns": [], "rows": [], "notes": []}"#,
+            r#"{"title": "t", "columns": [1], "rows": [], "notes": []}"#,
+            r#"{"title": "t", "columns": [], "rows": [[true]], "notes": []}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Report::from_json(&j).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Typed scalar values: a raw `f64` plus a [`Unit`] that fixes the ASCII
+//! cell format and the JSON tag. The raw number is the source of truth —
+//! formatting is a pure function of `(x, unit)`, so the rendered tables
+//! and the JSON artifacts can never disagree on a value.
+
+use crate::util::json::{Json, JsonError};
+use crate::util::table::{fmt3, fmt_pct, fmt_ratio};
+use crate::util::units::fmt_bytes;
+
+/// Physical unit of a reported value.
+///
+/// Fractions (utilization, shares, SLO attainment) are stored as
+/// fractions in `[0, 1]` under [`Unit::Percent`] and *rendered* as
+/// percentages; percentage-point gaps ([`Unit::Pp`]) are stored already
+/// scaled (x100) and rendered signed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    Tflops,
+    Gflops,
+    /// Arithmetic intensity, FLOP per byte.
+    FlopPerByte,
+    GibPerSec,
+    GbPerSec,
+    TbPerSec,
+    Gigabytes,
+    Megabytes,
+    /// Raw byte sizes, rendered human-readable ("32.0MiB").
+    Bytes,
+    Millis,
+    Seconds,
+    TokPerSec,
+    ReqPerSec,
+    JoulePerTok,
+    /// Dimensionless ratio, rendered as "1.47x".
+    Ratio,
+    /// Fraction in [0, 1], rendered as "64.2%".
+    Percent,
+    /// Percentage points (already x100), rendered signed as "+4.5".
+    Pp,
+    Count,
+    Watts,
+}
+
+/// Every unit, for JSON tag parsing.
+pub const ALL_UNITS: [Unit; 19] = [
+    Unit::Tflops,
+    Unit::Gflops,
+    Unit::FlopPerByte,
+    Unit::GibPerSec,
+    Unit::GbPerSec,
+    Unit::TbPerSec,
+    Unit::Gigabytes,
+    Unit::Megabytes,
+    Unit::Bytes,
+    Unit::Millis,
+    Unit::Seconds,
+    Unit::TokPerSec,
+    Unit::ReqPerSec,
+    Unit::JoulePerTok,
+    Unit::Ratio,
+    Unit::Percent,
+    Unit::Pp,
+    Unit::Count,
+    Unit::Watts,
+];
+
+impl Unit {
+    /// Stable JSON tag (also usable as an axis label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Unit::Tflops => "TFLOPS",
+            Unit::Gflops => "GFLOPS",
+            Unit::FlopPerByte => "FLOP/B",
+            Unit::GibPerSec => "GiB/s",
+            Unit::GbPerSec => "GB/s",
+            Unit::TbPerSec => "TB/s",
+            Unit::Gigabytes => "GB",
+            Unit::Megabytes => "MB",
+            Unit::Bytes => "B",
+            Unit::Millis => "ms",
+            Unit::Seconds => "s",
+            Unit::TokPerSec => "tok/s",
+            Unit::ReqPerSec => "req/s",
+            Unit::JoulePerTok => "J/tok",
+            Unit::Ratio => "ratio",
+            Unit::Percent => "frac",
+            Unit::Pp => "pp",
+            Unit::Count => "count",
+            Unit::Watts => "W",
+        }
+    }
+
+    pub fn parse(tag: &str) -> Option<Unit> {
+        ALL_UNITS.iter().copied().find(|u| u.name() == tag)
+    }
+
+    /// Canonical ASCII cell rendering of `x` in this unit.
+    pub fn fmt(&self, x: f64) -> String {
+        match self {
+            Unit::Ratio => fmt_ratio(x),
+            Unit::Percent => fmt_pct(x),
+            Unit::Pp => format!("{:+.1}", x),
+            Unit::Bytes => fmt_bytes(x),
+            Unit::Count => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    format!("{}", x as i64)
+                } else {
+                    fmt3(x)
+                }
+            }
+            _ => fmt3(x),
+        }
+    }
+}
+
+/// A raw number with its unit — the atom of every report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Value {
+    pub x: f64,
+    pub unit: Unit,
+}
+
+impl Value {
+    pub fn new(x: f64, unit: Unit) -> Value {
+        Value { x, unit }
+    }
+
+    /// ASCII cell rendering (pure function of `(x, unit)`).
+    pub fn fmt(&self) -> String {
+        self.unit.fmt(self.x)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("v", Json::Num(self.x)), ("unit", Json::Str(self.unit.name().into()))])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Value, JsonError> {
+        let x = j
+            .req("v")?
+            .as_f64()
+            .ok_or_else(|| JsonError("value 'v' must be a number".into()))?;
+        let tag = j
+            .req("unit")?
+            .as_str()
+            .ok_or_else(|| JsonError("value 'unit' must be a string".into()))?;
+        let unit =
+            Unit::parse(tag).ok_or_else(|| JsonError(format!("unknown unit tag '{tag}'")))?;
+        Ok(Value { x, unit })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_tags_roundtrip() {
+        for u in ALL_UNITS {
+            assert_eq!(Unit::parse(u.name()), Some(u), "{u:?}");
+        }
+        assert_eq!(Unit::parse("furlongs"), None);
+    }
+
+    #[test]
+    fn canonical_formats() {
+        assert_eq!(Value::new(429.3, Unit::Tflops).fmt(), "429");
+        assert_eq!(Value::new(1.466, Unit::Ratio).fmt(), "1.47x");
+        assert_eq!(Value::new(0.642, Unit::Percent).fmt(), "64.2%");
+        assert_eq!(Value::new(4.5, Unit::Pp).fmt(), "+4.5");
+        assert_eq!(Value::new(-2.25, Unit::Pp).fmt(), "-2.2");
+        assert_eq!(Value::new(64.0, Unit::Count).fmt(), "64");
+        assert_eq!(Value::new(33554432.0, Unit::Bytes).fmt(), "32.0MiB");
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        for v in [
+            Value::new(429.31415926, Unit::Tflops),
+            Value::new(0.993, Unit::Percent),
+            Value::new(-7.25e-3, Unit::Seconds),
+            Value::new(8192.0, Unit::Count),
+        ] {
+            let j = Json::parse(&v.to_json().dump()).unwrap();
+            let back = Value::from_json(&j).unwrap();
+            assert_eq!(back, v, "raw f64 must survive the JSON round-trip bit-exactly");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_malformed() {
+        let bad = Json::parse(r#"{"v": 1.0, "unit": "parsecs"}"#).unwrap();
+        assert!(Value::from_json(&bad).is_err());
+        let missing = Json::parse(r#"{"v": 1.0}"#).unwrap();
+        assert!(Value::from_json(&missing).is_err());
+    }
+}

@@ -5,6 +5,7 @@
 //! fleet-level percentiles and goodput-under-SLO.
 
 use crate::serving::request::{RequestId, Sequence};
+use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 
 /// Metrics for one completed request.
@@ -62,6 +63,25 @@ pub struct MetricsSummary {
     pub throughput_tps: f64,
     /// Requests per second over the makespan.
     pub throughput_rps: f64,
+}
+
+impl MetricsSummary {
+    /// Machine-readable summary (times in seconds, throughputs per
+    /// second) — the `repro serve --json` payload.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("mean_ttft_s", Json::Num(self.mean_ttft)),
+            ("p50_ttft_s", Json::Num(self.p50_ttft)),
+            ("p99_ttft_s", Json::Num(self.p99_ttft)),
+            ("mean_tpot_s", Json::Num(self.mean_tpot)),
+            ("p50_tpot_s", Json::Num(self.p50_tpot)),
+            ("p99_tpot_s", Json::Num(self.p99_tpot)),
+            ("mean_e2e_s", Json::Num(self.mean_e2e)),
+            ("throughput_tok_per_s", Json::Num(self.throughput_tps)),
+            ("throughput_req_per_s", Json::Num(self.throughput_rps)),
+        ])
+    }
 }
 
 impl MetricsCollector {
@@ -198,6 +218,18 @@ mod tests {
         assert_eq!(a.makespan, 9.0);
         // Fleet tokens = sum of replica tokens.
         assert_eq!(a.output_tokens(), 300);
+    }
+
+    #[test]
+    fn summary_json_has_every_field() {
+        let mut c = MetricsCollector::default();
+        c.record(m(0, 0.25));
+        c.makespan = 2.0;
+        let j = crate::util::json::Json::parse(&c.summary().to_json().dump()).unwrap();
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("mean_ttft_s").unwrap().as_f64(), Some(0.25));
+        assert_eq!(j.get("throughput_tok_per_s").unwrap().as_f64(), Some(50.0));
+        assert_eq!(j.get("throughput_req_per_s").unwrap().as_f64(), Some(0.5));
     }
 
     #[test]

@@ -91,7 +91,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no Inf/NaN literal; emit null rather than
+                    // an unparseable token.
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{}", x));
@@ -345,6 +349,14 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let j2 = Json::parse(&j.dump()).unwrap();
         assert_eq!(j, j2);
+    }
+
+    #[test]
+    fn non_finite_numbers_dump_as_null() {
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        // The output stays parseable JSON.
+        assert_eq!(Json::parse(&Json::Num(f64::NEG_INFINITY).dump()).unwrap(), Json::Null);
     }
 
     #[test]

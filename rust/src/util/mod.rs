@@ -1,4 +1,5 @@
-//! Small shared utilities: statistics, report tables, unit helpers.
+//! Small shared utilities: statistics, the ASCII/CSV report renderer,
+//! JSON, PRNG, and unit helpers.
 
 pub mod benchkit;
 pub mod fasthash;

@@ -1,103 +1,76 @@
-//! ASCII report tables — the harness prints the same rows/series the paper
-//! reports, so every figure regenerator renders through this module.
+//! ASCII/CSV renderers over the typed report model (`crate::report`) plus
+//! the shared numeric formatters. The harness emits typed
+//! `report::Report`s; this module turns them into the column-aligned
+//! tables the CLI prints and the raw-number CSV used for plotting.
 
-/// A simple column-aligned table with a title, printed to stdout or rendered
-/// to a string (the harness integration tests assert over the rendering).
-#[derive(Debug, Clone)]
-pub struct Report {
-    title: String,
-    header: Vec<String>,
-    rows: Vec<Vec<String>>,
-    notes: Vec<String>,
-}
+use crate::report::Report;
 
-impl Report {
-    pub fn new(title: impl Into<String>) -> Self {
-        Report { title: title.into(), header: Vec::new(), rows: Vec::new(), notes: Vec::new() }
-    }
-
-    pub fn header(&mut self, cols: &[&str]) -> &mut Self {
-        self.header = cols.iter().map(|s| s.to_string()).collect();
-        self
-    }
-
-    pub fn row(&mut self, cols: Vec<String>) -> &mut Self {
-        self.rows.push(cols);
-        self
-    }
-
-    pub fn note(&mut self, note: impl Into<String>) -> &mut Self {
-        self.notes.push(note.into());
-        self
-    }
-
-    pub fn title(&self) -> &str {
-        &self.title
-    }
-
-    pub fn num_rows(&self) -> usize {
-        self.rows.len()
-    }
-
-    /// Column-aligned rendering.
-    pub fn render(&self) -> String {
-        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
-        for row in &self.rows {
-            for (i, cell) in row.iter().enumerate() {
-                if i >= widths.len() {
-                    widths.push(cell.len());
-                } else {
-                    widths[i] = widths[i].max(cell.len());
-                }
+/// Column-aligned ASCII rendering — the `repro run <exp>` output.
+pub fn render_ascii(r: &Report) -> String {
+    let header = r.columns();
+    let rows: Vec<Vec<String>> =
+        r.rows().iter().map(|row| row.iter().map(|c| c.fmt()).collect()).collect();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in &rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i >= widths.len() {
+                widths.push(cell.len());
+            } else {
+                widths[i] = widths[i].max(cell.len());
             }
         }
-        let mut out = String::new();
-        out.push_str(&format!("== {} ==\n", self.title));
-        if !self.header.is_empty() {
-            let line: Vec<String> = self
-                .header
-                .iter()
-                .enumerate()
-                .map(|(i, h)| format!("{:>w$}", h, w = widths[i]))
-                .collect();
-            out.push_str(&line.join("  "));
-            out.push('\n');
-            let total: usize = widths.iter().sum::<usize>() + 2 * widths.len().saturating_sub(1);
-            out.push_str(&"-".repeat(total));
-            out.push('\n');
-        }
-        for row in &self.rows {
-            let line: Vec<String> = row
-                .iter()
-                .enumerate()
-                .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(c.len())))
-                .collect();
-            out.push_str(&line.join("  "));
-            out.push('\n');
-        }
-        for note in &self.notes {
-            out.push_str(&format!("  note: {}\n", note));
-        }
-        out
     }
+    let mut out = String::new();
+    out.push_str(&format!("== {} ==\n", r.title()));
+    if !header.is_empty() {
+        let line: Vec<String> =
+            header.iter().enumerate().map(|(i, h)| format!("{:>w$}", h, w = widths[i])).collect();
+        out.push_str(&line.join("  "));
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len().saturating_sub(1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+    }
+    for row in &rows {
+        let line: Vec<String> = row
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(c.len())))
+            .collect();
+        out.push_str(&line.join("  "));
+        out.push('\n');
+    }
+    for note in r.notes() {
+        out.push_str(&format!("  note: {}\n", note));
+    }
+    out
+}
 
-    /// Render as CSV (for plotting outside the harness).
-    pub fn to_csv(&self) -> String {
-        let mut out = String::new();
-        if !self.header.is_empty() {
-            out.push_str(&self.header.join(","));
-            out.push('\n');
-        }
-        for row in &self.rows {
-            out.push_str(&row.join(","));
-            out.push('\n');
-        }
-        out
+/// Quote a CSV field if it contains a delimiter, quote or newline
+/// (RFC 4180), so labels like "Power (TDP, W)" stay one column.
+fn csv_escape(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
     }
+}
 
-    pub fn print(&self) {
-        println!("{}", self.render());
+/// CSV rendering with raw full-precision numbers (text cells pass
+/// through, quoted when needed; the JSON artifact carries the units).
+pub fn render_csv(r: &Report) -> String {
+    let mut out = String::new();
+    if !r.columns().is_empty() {
+        let header: Vec<String> = r.columns().iter().map(|h| csv_escape(h)).collect();
+        out.push_str(&header.join(","));
+        out.push('\n');
     }
+    for row in r.rows() {
+        let fields: Vec<String> = row.iter().map(|c| csv_escape(&c.to_csv_field())).collect();
+        out.push_str(&fields.join(","));
+        out.push('\n');
+    }
+    out
 }
 
 /// Format a float with 3 significant-ish digits, fit for table cells.
@@ -132,13 +105,14 @@ pub fn fmt_pct(x: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::report::{Cell, Report, Unit};
 
     #[test]
     fn render_contains_rows_and_title() {
         let mut r = Report::new("Fig X");
         r.header(&["a", "bb"]);
-        r.row(vec!["1".into(), "2".into()]);
-        r.row(vec!["10".into(), "20".into()]);
+        r.row(vec![Cell::count(1), Cell::count(2)]);
+        r.row(vec![Cell::count(10), Cell::count(20)]);
         let s = r.render();
         assert!(s.contains("== Fig X =="));
         assert!(s.contains("bb"));
@@ -150,9 +124,32 @@ mod tests {
     fn csv_roundtrip_shape() {
         let mut r = Report::new("t");
         r.header(&["x", "y"]);
-        r.row(vec!["1".into(), "2".into()]);
+        r.row(vec![Cell::count(1), Cell::count(2)]);
         let csv = r.to_csv();
         assert_eq!(csv, "x,y\n1,2\n");
+    }
+
+    #[test]
+    fn ascii_cells_are_the_typed_formatting() {
+        let mut r = Report::new("t");
+        r.header(&["shape", "util"]);
+        r.row(vec![Cell::text("8192^3"), Cell::val(0.993, Unit::Percent)]);
+        let s = r.render();
+        assert!(s.contains("99.3%"), "{s}");
+        // CSV carries the raw fraction, not the formatted percent.
+        assert!(r.to_csv().contains("0.993"), "{}", r.to_csv());
+    }
+
+    #[test]
+    fn csv_quotes_fields_with_delimiters() {
+        let mut r = Report::new("t");
+        r.header(&["metric", "v"]);
+        r.row(vec![Cell::text("Power (TDP, W)"), Cell::count(400)]);
+        r.row(vec![Cell::text("say \"hi\""), Cell::count(1)]);
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[1], "\"Power (TDP, W)\",400");
+        assert_eq!(lines[2], "\"say \"\"hi\"\"\",1");
     }
 
     #[test]

@@ -98,6 +98,44 @@ impl OpenLoopTrace {
     }
 }
 
+/// Deterministic synthetic token prompts for engines that consume real
+/// token ids (`repro real-serve` / `PjrtLlmEngine`): requests plus their
+/// prompt tokens from one seeded generator, so the real-numerics path
+/// shares workload code with the simulated-serving generators above
+/// instead of hand-rolling prompt loops inline.
+#[derive(Debug, Clone)]
+pub struct TokenPrompts {
+    /// Token ids are drawn uniformly below this bound.
+    pub vocab: usize,
+    /// Longest prompt to emit (the engine's `prompt_pad`).
+    pub max_prompt: usize,
+    /// Cap on prompt + generated tokens (the engine's `max_seq`).
+    pub max_total: usize,
+}
+
+impl TokenPrompts {
+    pub fn new(vocab: usize, max_prompt: usize, max_total: usize) -> TokenPrompts {
+        assert!(vocab > 0 && max_prompt > 0 && max_total > max_prompt);
+        TokenPrompts { vocab, max_prompt, max_total }
+    }
+
+    /// Generate `n` requests arriving at t=0 with short varied prompts
+    /// (4-8 tokens) and output budgets (8-15 tokens), clamped to the
+    /// engine's shape limits.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<(Request, Vec<i32>)> {
+        let mut rng = Rng::new(seed);
+        (0..n as u64)
+            .map(|i| {
+                let plen = (4 + rng.below(5) as usize).min(self.max_prompt);
+                let out = (8 + rng.below(8) as usize).min(self.max_total - plen).max(1);
+                let prompt: Vec<i32> =
+                    (0..plen).map(|_| rng.below(self.vocab as u64) as i32).collect();
+                (Request::new(i, plen, out, 0.0), prompt)
+            })
+            .collect()
+    }
+}
+
 /// Zipf-distributed embedding index stream for `tables` tables of
 /// `rows` rows: RecSys lookups are power-law distributed over hot items.
 pub struct EmbeddingTrace {
@@ -182,6 +220,25 @@ mod tests {
         let again = tr.generate(11);
         assert_eq!(reqs.len(), again.len());
         assert!(reqs.iter().zip(&again).all(|(a, b)| a.prompt_len == b.prompt_len));
+    }
+
+    #[test]
+    fn token_prompts_respect_engine_limits() {
+        let gen = TokenPrompts::new(100, 8, 20);
+        let batch = gen.generate(32, 11);
+        assert_eq!(batch.len(), 32);
+        for (req, prompt) in &batch {
+            assert_eq!(prompt.len(), req.prompt_len);
+            assert!(req.prompt_len >= 4 && req.prompt_len <= 8);
+            assert!(req.prompt_len + req.max_new_tokens <= 20);
+            assert!(req.max_new_tokens >= 1);
+            assert!(prompt.iter().all(|&t| (0..100).contains(&t)));
+            assert_eq!(req.arrival, 0.0);
+        }
+        // Deterministic given the seed; ids sequential.
+        let again = gen.generate(32, 11);
+        assert!(batch.iter().zip(&again).all(|(a, b)| a.1 == b.1 && a.0.id == b.0.id));
+        assert_eq!(batch[31].0.id, 31);
     }
 
     #[test]

@@ -1,28 +1,128 @@
-//! Integration tests over the experiment harness: every registered
-//! table/figure regenerates, renders non-trivially, and exports CSV.
+//! Integration tests over the experiment harness and the typed report
+//! model: every registered experiment regenerates, renders, exports CSV,
+//! round-trips through JSON, and passes its paper-claim `Expectation`s —
+//! the typed replacement for the old substring asserts over rendered
+//! ASCII.
 
-use cuda_myth::harness;
+use cuda_myth::harness::{self, Experiment};
+use cuda_myth::report::{Cell, Report, Unit, Value};
+use cuda_myth::util::json::Json;
+use cuda_myth::util::proptest::{forall, F64In, PairOf, UsizeIn};
 
 #[test]
 fn every_experiment_runs_and_renders() {
     for e in harness::registry() {
-        let reports = (e.run)();
-        assert!(!reports.is_empty(), "{} produced no reports", e.id);
+        let reports = e.run(&e.params());
+        assert!(!reports.is_empty(), "{} produced no reports", e.id());
         for r in &reports {
             let text = r.render();
-            assert!(text.len() > 40, "{}: report too small", e.id);
-            assert!(text.contains("=="), "{}: missing title", e.id);
+            assert!(text.len() > 40, "{}: report too small", e.id());
+            assert!(text.contains("=="), "{}: missing title", e.id());
         }
     }
 }
 
 #[test]
-fn csv_export_has_header_and_rows() {
+fn every_paper_claim_expectation_passes() {
+    // The typed successor of `repro run all --check`: every experiment's
+    // headline-claim expectations evaluate green over fresh reports.
+    let mut checked = 0;
+    for e in harness::registry() {
+        let reports = e.run(&e.params());
+        for res in harness::evaluate(e.as_ref(), &reports) {
+            assert!(res.pass, "{}: {} ({})", res.id, res.detail, res.claim);
+            checked += 1;
+        }
+    }
+    assert!(checked >= 20, "only {checked} expectations registered across the harness");
+}
+
+#[test]
+fn every_report_roundtrips_through_json() {
+    for e in harness::registry() {
+        for r in e.run(&e.params()) {
+            let dumped = r.to_json().dump();
+            let parsed = Json::parse(&dumped)
+                .unwrap_or_else(|err| panic!("{}: artifact JSON invalid: {err}", e.id()));
+            let back = Report::from_json(&parsed)
+                .unwrap_or_else(|err| panic!("{}: report JSON unreadable: {err}", e.id()));
+            assert_eq!(back, r, "{}: JSON round-trip must be lossless", e.id());
+        }
+    }
+}
+
+#[test]
+fn ascii_and_json_agree_on_every_cell() {
+    // Property over the full registry: for every cell, the ASCII table
+    // shows exactly the canonical formatting of the raw value that the
+    // JSON artifact carries — the two channels cannot drift apart.
+    for e in harness::registry() {
+        for r in e.run(&e.params()) {
+            let text = r.render();
+            let parsed = Report::from_json(&Json::parse(&r.to_json().dump()).unwrap()).unwrap();
+            for (row, prow) in r.rows().iter().zip(parsed.rows()) {
+                for (cell, pcell) in row.iter().zip(prow) {
+                    let shown = cell.fmt();
+                    assert_eq!(pcell.fmt(), shown, "{}: cell formatting drifted", e.id());
+                    assert!(
+                        text.contains(&shown),
+                        "{}: rendered table is missing cell '{shown}'",
+                        e.id()
+                    );
+                    if let (Some(v), Some(pv)) = (cell.value(), pcell.value()) {
+                        assert_eq!(pv, v, "{}: raw value changed across JSON", e.id());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn value_formatting_agrees_with_json_for_random_inputs() {
+    // Randomized cell property: a Value rebuilt from its JSON renders
+    // the identical ASCII string, across magnitudes and units.
+    let units = [Unit::Tflops, Unit::Ratio, Unit::Percent, Unit::Pp, Unit::Count, Unit::Millis];
+    forall(7, 500, &PairOf(F64In(-1e6, 1e6), UsizeIn(0, units.len() - 1)), |&(x, u)| {
+        let v = Value::new(x, units[u]);
+        let j = Json::parse(&v.to_json().dump()).unwrap();
+        let back = Value::from_json(&j).unwrap();
+        back == v && back.fmt() == v.fmt()
+    });
+}
+
+#[test]
+fn artifact_json_is_schema_stable_for_all() {
+    for e in harness::registry() {
+        let params = e.params();
+        let reports = e.run(&params);
+        let results = harness::evaluate(e.as_ref(), &reports);
+        let artifact = harness::artifact_json(e.as_ref(), &params, &reports, &results);
+        let j = Json::parse(&artifact.dump()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(harness::ARTIFACT_SCHEMA));
+        assert_eq!(j.get("experiment").unwrap().as_str(), Some(e.id()));
+        assert!(j.get("title").unwrap().as_str().is_some());
+        assert!(j.get("params").is_some());
+        let reps = j.get("reports").unwrap().as_arr().unwrap();
+        assert_eq!(reps.len(), reports.len());
+        let exps = j.get("expectations").unwrap().as_arr().unwrap();
+        assert_eq!(exps.len(), results.len());
+        for x in exps {
+            assert_eq!(x.get("pass").unwrap().as_bool(), Some(true), "{}", e.id());
+        }
+    }
+}
+
+#[test]
+fn csv_export_has_header_and_raw_rows() {
     let reports = harness::run_experiment("fig4").unwrap();
     let csv = reports[0].to_csv();
     let lines: Vec<&str> = csv.lines().collect();
     assert!(lines.len() > 5);
     assert!(lines[0].contains(','));
+    // CSV cells are raw numbers: the utilization column is a fraction,
+    // not a formatted percentage.
+    assert!(!csv.contains('%'), "CSV must carry raw values:\n{csv}");
 }
 
 #[test]
@@ -30,4 +130,23 @@ fn run_all_covers_all_registry_entries() {
     let n_reports = harness::run_all().len();
     // Each experiment yields at least one report.
     assert!(n_reports >= harness::registry().len());
+}
+
+#[test]
+fn typed_cells_beat_substring_matching() {
+    // The old string-contains asserts, migrated: the fig4 headline is a
+    // typed cell with a unit, not a substring of a rendered table.
+    let reports = harness::run_experiment("fig4").unwrap();
+    let peak = reports[0].value_at("8192x8192x8192", "Gaudi-2 TF").unwrap();
+    assert_eq!(peak.unit, Unit::Tflops);
+    assert!(peak.x >= 425.0, "{}", peak.x);
+    // And the same number is reachable as a column series.
+    let series = reports[0].series("Gaudi-2 TF").unwrap();
+    assert!(series.max() >= 425.0);
+    assert_eq!(series.values.len(), reports[0].num_rows());
+    // Text cells stay text.
+    assert!(matches!(
+        &reports[0].rows()[0][0],
+        Cell::Text(s) if s.contains('x')
+    ));
 }
