@@ -4,7 +4,7 @@
 //! interactive. Runs under the in-tree `util::benchkit` harness (the
 //! repo's criterion replacement; `cargo bench --bench bench_cluster`).
 
-use cuda_myth::config::ServingConfig;
+use cuda_myth::config::{DeviceKind, ServingConfig};
 use cuda_myth::models::llama::LlamaConfig;
 use cuda_myth::serving::cluster::ClusterSim;
 use cuda_myth::serving::router::{RoutePolicy, Router};
@@ -21,6 +21,25 @@ fn episode(replicas: usize, policy: RoutePolicy, n_requests: usize) -> usize {
     };
     let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
     sim.submit_all(DynamicSonnet::default().generate(n_requests, 60.0, 17));
+    let s = sim.run_to_completion();
+    s.requests
+}
+
+fn mixed_episode(n_requests: usize) -> usize {
+    let cfg = ServingConfig {
+        route_policy: RoutePolicy::PrefixAffinity,
+        max_decode_batch: 16,
+        num_blocks: 4096,
+        ..Default::default()
+    }
+    .with_fleet(vec![
+        DeviceKind::Gaudi2,
+        DeviceKind::Gaudi2,
+        DeviceKind::A100,
+        DeviceKind::A100,
+    ]);
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(DynamicSonnet::default().with_prefix_groups(8).generate(n_requests, 60.0, 17));
     let s = sim.run_to_completion();
     s.requests
 }
@@ -54,6 +73,27 @@ fn main() {
 
     b.bench("cluster e2e episode (4 replicas, 32 reqs, least-loaded)", || {
         black_box(episode(4, RoutePolicy::LeastLoaded, 32))
+    });
+
+    b.bench("router route/complete churn (prefix-affinity, 4 costs, 8 groups)", || {
+        let mut r = Router::with_costs(
+            RoutePolicy::PrefixAffinity,
+            vec![1.0, 1.0, 1.7, 1.7],
+            1 << 20,
+        );
+        let reqs = DynamicSonnet::default().with_prefix_groups(8).generate(256, f64::INFINITY, 3);
+        let mut placed = Vec::with_capacity(reqs.len());
+        for req in &reqs {
+            placed.push(r.route(req).unwrap());
+        }
+        for (idx, req) in placed.iter().zip(&reqs) {
+            r.complete(*idx, req);
+        }
+        black_box(r.queued())
+    });
+
+    b.bench("mixed-fleet e2e episode (2x Gaudi-2 + 2x A100, 32 reqs, prefix-affinity)", || {
+        black_box(mixed_episode(32))
     });
 
     b.finish("cluster");

@@ -60,6 +60,41 @@ fn main() {
         }
         println!();
     }
+    // Heterogeneous fleets: mixed Gaudi-2/A100 replicas behind one
+    // cost-aware prefix-affinity router, at one fixed offered load.
+    println!("== mixed fleets (4 replicas, prefix-affinity router) ==");
+    println!(
+        "{:24} {:>10} {:>12} {:>14} {:>9}",
+        "fleet", "tok/s", "p99 TTFT ms", "goodput req/s", "requeues"
+    );
+    let tagged = OpenLoopTrace::new(24.0, 4.0).with_prefix_groups(8).generate(29);
+    for gaudi in (0..=4usize).rev() {
+        let mut fleet = vec![DeviceKind::Gaudi2; gaudi];
+        fleet.extend(vec![DeviceKind::A100; 4 - gaudi]);
+        let label = format!("{}x Gaudi-2 + {}x A100", gaudi, 4 - gaudi);
+        let cfg = ServingConfig {
+            route_policy: RoutePolicy::PrefixAffinity,
+            max_decode_batch: 32,
+            num_blocks: 8192,
+            ..Default::default()
+        }
+        .with_fleet(fleet);
+        let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        sim.submit_all(tagged.clone());
+        let s = sim.run_to_completion();
+        let goodput = sim.fleet_metrics().goodput_under_slo(SLO_TTFT_S, SLO_TPOT_S);
+        println!(
+            "{:24} {:10.1} {:12.1} {:14.2} {:9}",
+            label,
+            s.throughput_tps,
+            s.p99_ttft * 1e3,
+            goodput,
+            sim.requeues,
+        );
+    }
+    println!();
     println!("Adding replicas trades fleet cost for tail latency until the SLO holds;");
-    println!("`repro run cluster` derives the iso-SLO Gaudi-2 vs A100 sizing table.");
+    println!("`repro run cluster` derives the iso-SLO Gaudi-2 vs A100 sizing table and");
+    println!("`repro run cluster-sweep` walks offered load across these fleet mixes to");
+    println!("trace the goodput-under-SLO frontier curves.");
 }

@@ -39,6 +39,15 @@ impl DeviceKind {
         }
     }
 
+    /// Canonical JSON/config tag — the emit side of [`DeviceKind::parse`]
+    /// (`parse(k.json_tag()) == Some(k)` for every kind).
+    pub fn json_tag(&self) -> &'static str {
+        match self {
+            DeviceKind::Gaudi2 => "gaudi2",
+            DeviceKind::A100 => "a100",
+        }
+    }
+
     pub const BOTH: [DeviceKind; 2] = [DeviceKind::Gaudi2, DeviceKind::A100];
 }
 
@@ -162,6 +171,9 @@ mod tests {
         assert_eq!(DeviceKind::Gaudi2.spec().kind, DeviceKind::Gaudi2);
         assert_eq!(DeviceKind::A100.spec().kind, DeviceKind::A100);
         assert_eq!(DeviceKind::Gaudi2.name(), "Gaudi-2");
+        for k in DeviceKind::BOTH {
+            assert_eq!(DeviceKind::parse(k.json_tag()), Some(k), "{k:?}");
+        }
     }
 
     #[test]

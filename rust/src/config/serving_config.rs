@@ -37,6 +37,10 @@ pub struct ServingConfig {
     /// Router queue cap: maximum in-flight (routed, unfinished) requests
     /// before admission returns backpressure.
     pub max_queued: usize,
+    /// Per-replica device kinds for heterogeneous fleets (mixed Gaudi-2 +
+    /// A100 behind one router). Empty means homogeneous: `replicas` copies
+    /// of `device`. When non-empty its length must equal `replicas`.
+    pub fleet: Vec<DeviceKind>,
 }
 
 impl Default for ServingConfig {
@@ -54,6 +58,7 @@ impl Default for ServingConfig {
             replicas: 1,
             route_policy: RoutePolicy::RoundRobin,
             max_queued: 4096,
+            fleet: Vec::new(),
         }
     }
 }
@@ -101,6 +106,27 @@ impl ServingConfig {
                 }
             },
             max_queued: get_usize("max_queued", d.max_queued)?,
+            fleet: match j.get("fleet") {
+                None => Vec::new(),
+                Some(v) => v
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("bad 'fleet' (want an array of device names)"))?
+                    .iter()
+                    .map(|entry| {
+                        let name = entry
+                            .as_str()
+                            .ok_or_else(|| anyhow::anyhow!("bad 'fleet' entry (want a string)"))?;
+                        DeviceKind::parse(name)
+                            .ok_or_else(|| anyhow::anyhow!("unknown fleet device '{name}'"))
+                    })
+                    .collect::<anyhow::Result<Vec<DeviceKind>>>()?,
+            },
+        };
+        // A fleet listed without an explicit replica count sizes the fleet.
+        let cfg = if !cfg.fleet.is_empty() && j.get("replicas").is_none() {
+            ServingConfig { replicas: cfg.fleet.len(), ..cfg }
+        } else {
+            cfg
         };
         cfg.validate()?;
         Ok(cfg)
@@ -108,16 +134,7 @@ impl ServingConfig {
 
     pub fn to_json(&self) -> String {
         Json::obj(vec![
-            (
-                "device",
-                Json::Str(
-                    match self.device {
-                        DeviceKind::Gaudi2 => "gaudi2",
-                        DeviceKind::A100 => "a100",
-                    }
-                    .into(),
-                ),
-            ),
+            ("device", Json::Str(self.device.json_tag().into())),
             ("tensor_parallel", Json::Num(self.tensor_parallel as f64)),
             ("block_size", Json::Num(self.block_size as f64)),
             ("num_blocks", Json::Num(self.num_blocks as f64)),
@@ -129,8 +146,31 @@ impl ServingConfig {
             ("replicas", Json::Num(self.replicas as f64)),
             ("route_policy", Json::Str(self.route_policy.name().into())),
             ("max_queued", Json::Num(self.max_queued as f64)),
+            (
+                "fleet",
+                Json::Arr(
+                    self.fleet.iter().map(|d| Json::Str(d.json_tag().into())).collect(),
+                ),
+            ),
         ])
         .dump()
+    }
+
+    /// The device of every replica: the explicit `fleet` when given,
+    /// otherwise `replicas` copies of `device`.
+    pub fn replica_devices(&self) -> Vec<DeviceKind> {
+        if self.fleet.is_empty() {
+            vec![self.device; self.replicas]
+        } else {
+            self.fleet.clone()
+        }
+    }
+
+    /// Heterogeneous-fleet constructor: one entry per replica.
+    pub fn with_fleet(mut self, fleet: Vec<DeviceKind>) -> ServingConfig {
+        self.replicas = fleet.len().max(1);
+        self.fleet = fleet;
+        self
     }
 
     /// Basic sanity validation; returns an error naming the bad field.
@@ -155,6 +195,13 @@ impl ServingConfig {
         }
         if self.max_queued == 0 {
             anyhow::bail!("max_queued must be > 0");
+        }
+        if !self.fleet.is_empty() && self.fleet.len() != self.replicas {
+            anyhow::bail!(
+                "fleet lists {} devices but replicas is {}",
+                self.fleet.len(),
+                self.replicas
+            );
         }
         Ok(())
     }
@@ -203,6 +250,33 @@ mod tests {
         assert_eq!(c.replicas, 8);
         assert_eq!(c.route_policy, RoutePolicy::LeastLoaded);
         assert_eq!(c.max_queued, 64);
+    }
+
+    #[test]
+    fn fleet_roundtrips_and_sizes_replicas() {
+        let c = ServingConfig::from_json(r#"{"fleet": ["gaudi2", "a100", "gaudi2"]}"#).unwrap();
+        assert_eq!(c.replicas, 3);
+        assert_eq!(
+            c.replica_devices(),
+            vec![DeviceKind::Gaudi2, DeviceKind::A100, DeviceKind::Gaudi2]
+        );
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        // Homogeneous config expands `device` x `replicas`.
+        let h = ServingConfig { replicas: 2, device: DeviceKind::A100, ..Default::default() };
+        assert_eq!(h.replica_devices(), vec![DeviceKind::A100; 2]);
+        // Builder keeps replicas in sync.
+        let b = ServingConfig::default().with_fleet(vec![DeviceKind::A100; 4]);
+        assert_eq!(b.replicas, 4);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_replica_mismatch_rejected() {
+        assert!(ServingConfig::from_json(r#"{"replicas": 2, "fleet": ["gaudi2"]}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fleet": ["warp9"]}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fleet": [3]}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fleet": "gaudi2"}"#).is_err());
     }
 
     #[test]

@@ -1,0 +1,391 @@
+//! Cluster-sweep experiment: open-loop latency-vs-load curves across
+//! heterogeneous fleet mixes — the paper's §7 iso-SLO sizing question
+//! generalized to mixed Gaudi-2/A100 deployments. Offered load walks a
+//! grid while the fleet mix steps from 100% Gaudi-2 through 75/50/25%
+//! mixes to 100% A100 (4 replicas behind one cost-aware PrefixAffinity
+//! router), producing one typed report per mix — the goodput-under-SLO
+//! frontier curves — plus a frontier summary and derived-claims report.
+//! `repro run cluster-sweep --json --out bench/` writes the whole sweep
+//! as `BENCH_cluster_sweep.json` for the CI bench-diff gate.
+
+use crate::config::{DeviceKind, ServingConfig};
+use crate::harness::{Experiment, Params};
+use crate::models::llama::LlamaConfig;
+use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
+use crate::serving::cluster::ClusterSim;
+use crate::serving::router::RoutePolicy;
+use crate::workload::OpenLoopTrace;
+
+/// Replicas per fleet (every mix is a 4-replica deployment, so curves
+/// compare mixes at equal fleet size).
+const FLEET_SIZE: usize = 4;
+
+/// (label, Gaudi-2 replica count) per mix; the rest are A100.
+const MIXES: [(&str, usize); 5] = [
+    ("Gaudi-2 100%", 4),
+    ("Gaudi-2 75% / A100 25%", 3),
+    ("Gaudi-2 50% / A100 50%", 2),
+    ("Gaudi-2 25% / A100 75%", 1),
+    ("A100 100%", 0),
+];
+
+struct Knobs {
+    load_min_rps: f64,
+    load_step_rps: f64,
+    load_points: usize,
+    duration_s: f64,
+    seed: u64,
+    slo_ttft_s: f64,
+    slo_tpot_s: f64,
+    prefix_groups: usize,
+}
+
+impl Knobs {
+    fn from(params: &Params) -> Knobs {
+        Knobs {
+            load_min_rps: params.get_or("load_min_rps", 8.0),
+            load_step_rps: params.get_or("load_step_rps", 8.0),
+            load_points: params.get_or("load_points", 4.0) as usize,
+            duration_s: params.get_or("duration_s", 3.0),
+            seed: params.get_or("seed", 29.0) as u64,
+            slo_ttft_s: params.get_or("slo_ttft_s", 1.0),
+            slo_tpot_s: params.get_or("slo_tpot_s", 0.1),
+            prefix_groups: params.get_or("prefix_groups", 8.0) as usize,
+        }
+    }
+
+    fn loads(&self) -> Vec<f64> {
+        (0..self.load_points.max(1))
+            .map(|i| self.load_min_rps + i as f64 * self.load_step_rps)
+            .collect()
+    }
+}
+
+fn mix_fleet(gaudi: usize) -> Vec<DeviceKind> {
+    let mut fleet = vec![DeviceKind::Gaudi2; gaudi];
+    fleet.extend(vec![DeviceKind::A100; FLEET_SIZE - gaudi]);
+    fleet
+}
+
+fn mix_config(gaudi: usize) -> ServingConfig {
+    ServingConfig {
+        route_policy: RoutePolicy::PrefixAffinity,
+        max_decode_batch: 32,
+        num_blocks: 8192,
+        ..Default::default()
+    }
+    .with_fleet(mix_fleet(gaudi))
+}
+
+/// One (mix, offered load) grid point.
+struct SweepPoint {
+    offered_rps: f64,
+    submitted: usize,
+    completed: usize,
+    tps: f64,
+    p99_ttft: f64,
+    p99_tpot: f64,
+    goodput_rps: f64,
+    attainment: f64,
+    requeues: u64,
+}
+
+fn run_point(k: &Knobs, gaudi: usize, rate: f64) -> SweepPoint {
+    let cfg = mix_config(gaudi);
+    let trace = OpenLoopTrace::new(rate, k.duration_s)
+        .with_prefix_groups(k.prefix_groups)
+        .generate(k.seed);
+    let submitted = trace.len();
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(trace);
+    let s = sim.run_to_completion();
+    let fleet = sim.fleet_metrics();
+    SweepPoint {
+        offered_rps: rate,
+        submitted,
+        completed: sim.completed(),
+        tps: s.throughput_tps,
+        p99_ttft: s.p99_ttft,
+        p99_tpot: s.p99_tpot,
+        goodput_rps: fleet.goodput_under_slo(k.slo_ttft_s, k.slo_tpot_s),
+        attainment: fleet.slo_attainment(k.slo_ttft_s, k.slo_tpot_s),
+        requeues: sim.requeues,
+    }
+}
+
+/// Max per-request metric delta between a `fleet: [gaudi2; 4]` cluster
+/// and the homogeneous `replicas: 4, device: gaudi2` path on the same
+/// trace — exact-zero by construction: a 100%-Gaudi mixed fleet must BE
+/// the homogeneous fleet (also pinned by `rust/tests/integration_cluster.rs`).
+fn mixed_vs_homogeneous_delta(k: &Knobs) -> f64 {
+    let trace = || {
+        OpenLoopTrace::new(k.load_min_rps, k.duration_s)
+            .with_prefix_groups(k.prefix_groups)
+            .generate(k.seed)
+    };
+    let run = |cfg: &ServingConfig| {
+        let mut sim = ClusterSim::new(cfg, LlamaConfig::llama31_8b());
+        sim.submit_all(trace());
+        sim.run_to_completion();
+        sim.fleet_metrics()
+    };
+    let mixed = run(&mix_config(FLEET_SIZE));
+    // Same knobs, but expressed as the homogeneous `device x replicas`
+    // config (mix_config already set replicas = FLEET_SIZE).
+    let mut homog_cfg = mix_config(FLEET_SIZE);
+    homog_cfg.fleet = Vec::new();
+    homog_cfg.device = DeviceKind::Gaudi2;
+    let homog = run(&homog_cfg);
+    let mut delta = mixed.len().abs_diff(homog.len()) as f64;
+    delta = delta.max((mixed.makespan - homog.makespan).abs());
+    for m in mixed.per_request() {
+        match homog.per_request().iter().find(|h| h.id == m.id) {
+            Some(h) => {
+                delta = delta
+                    .max((m.ttft - h.ttft).abs())
+                    .max((m.tpot - h.tpot).abs())
+                    .max((m.e2e - h.e2e).abs());
+            }
+            None => delta += 1.0,
+        }
+    }
+    delta
+}
+
+pub struct ClusterSweep;
+
+impl Experiment for ClusterSweep {
+    fn id(&self) -> &'static str {
+        "cluster_sweep"
+    }
+
+    fn title(&self) -> &'static str {
+        "Cluster sweep: goodput-under-SLO frontier across Gaudi-2/A100 fleet mixes"
+    }
+
+    fn params(&self) -> Params {
+        Params::new()
+            .with("load_min_rps", 8.0)
+            .with("load_step_rps", 8.0)
+            .with("load_points", 4.0)
+            .with("duration_s", 3.0)
+            .with("seed", 29.0)
+            .with("slo_ttft_s", 1.0)
+            .with("slo_tpot_s", 0.1)
+            .with("prefix_groups", 8.0)
+    }
+
+    fn run(&self, params: &Params) -> Vec<Report> {
+        let k = Knobs::from(params);
+        let loads = k.loads();
+        let mut reports = Vec::new();
+        // (mix label, per-load points), in MIXES order.
+        let mut curves: Vec<(&str, Vec<SweepPoint>)> = Vec::new();
+
+        for (label, gaudi) in MIXES {
+            let points: Vec<SweepPoint> =
+                loads.iter().map(|&rate| run_point(&k, gaudi, rate)).collect();
+            let mut r = Report::new(format!(
+                "Cluster load sweep [{label}]: {FLEET_SIZE} replicas, prefix-affinity \
+                 router (SLO: TTFT <= {}s, TPOT <= {}s)",
+                k.slo_ttft_s, k.slo_tpot_s
+            ));
+            r.header(&[
+                "offered",
+                "offered req/s",
+                "served",
+                "tok/s",
+                "p99 TTFT s",
+                "p99 TPOT s",
+                "goodput req/s",
+                "SLO attain",
+                "requeues",
+            ]);
+            for p in &points {
+                r.row(vec![
+                    Cell::text(format!("{:.0} rps", p.offered_rps)),
+                    Cell::val(p.offered_rps, Unit::ReqPerSec),
+                    Cell::count(p.completed),
+                    Cell::val(p.tps, Unit::TokPerSec),
+                    Cell::val(p.p99_ttft, Unit::Seconds),
+                    Cell::val(p.p99_tpot, Unit::Seconds),
+                    Cell::val(p.goodput_rps, Unit::ReqPerSec),
+                    Cell::val(p.attainment, Unit::Percent),
+                    Cell::count(p.requeues as usize),
+                ]);
+            }
+            r.note(format!(
+                "open-loop Dynamic-Sonnet at each offered load for {}s (seed {}), \
+                 {} shared-prefix groups",
+                k.duration_s, k.seed, k.prefix_groups
+            ));
+            reports.push(r);
+            curves.push((label, points));
+        }
+
+        // Frontier: largest offered load each mix sustains at >= 99%
+        // attainment — the paper-style goodput-under-SLO frontier.
+        let mut frontier = Report::new("Goodput-under-SLO frontier per fleet mix");
+        frontier.header(&[
+            "fleet mix",
+            "frontier load req/s",
+            "goodput @ frontier req/s",
+            "best goodput req/s",
+        ]);
+        for (label, points) in &curves {
+            let sustained = points.iter().rev().find(|p| p.attainment >= 0.99);
+            let best = points.iter().map(|p| p.goodput_rps).fold(0.0, f64::max);
+            match sustained {
+                Some(p) => frontier.row(vec![
+                    Cell::text(*label),
+                    Cell::val(p.offered_rps, Unit::ReqPerSec),
+                    Cell::val(p.goodput_rps, Unit::ReqPerSec),
+                    Cell::val(best, Unit::ReqPerSec),
+                ]),
+                None => frontier.row(vec![
+                    Cell::text(*label),
+                    Cell::text(format!("< {:.0}", k.load_min_rps)),
+                    Cell::text("n/a"),
+                    Cell::val(best, Unit::ReqPerSec),
+                ]),
+            };
+        }
+        frontier.note("frontier = largest swept load with >= 99% of requests meeting the SLO");
+        reports.push(frontier);
+
+        // Derived claims.
+        let conservation: usize = curves
+            .iter()
+            .flat_map(|(_, ps)| ps.iter())
+            .map(|p| p.submitted.abs_diff(p.completed))
+            .sum();
+        let max_goodput_ratio = curves
+            .iter()
+            .flat_map(|(_, ps)| ps.iter())
+            .map(|p| p.goodput_rps / p.offered_rps)
+            .fold(0.0, f64::max);
+        let grid_points: usize = curves.iter().map(|(_, ps)| ps.len()).sum();
+        let mut claims = Report::new("Cluster-sweep derived claims");
+        claims.header(&["claim", "value"]);
+        claims.row(vec![
+            Cell::text("100% Gaudi-2 fleet vs homogeneous cluster: max delta"),
+            Cell::val(mixed_vs_homogeneous_delta(&k), Unit::Seconds),
+        ]);
+        claims.row(vec![
+            Cell::text("request conservation violations over the grid"),
+            Cell::count(conservation),
+        ]);
+        claims.row(vec![
+            Cell::text("max goodput / offered ratio over the grid"),
+            Cell::val(max_goodput_ratio, Unit::Ratio),
+        ]);
+        claims.row(vec![Cell::text("grid points swept"), Cell::count(grid_points)]);
+        claims.note("the 100%-Gaudi-2 mix must replay the homogeneous fleet bit-for-bit");
+        reports.push(claims);
+
+        reports
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "cluster_sweep.mixed_homogeneous_parity",
+                "a 100%-Gaudi-2 mixed fleet is bitwise-equal to the homogeneous path",
+                Selector::cell(
+                    "Cluster-sweep derived claims",
+                    "100% Gaudi-2 fleet vs homogeneous cluster: max delta",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "cluster_sweep.conservation",
+                "every submitted request completes exactly once at every grid point",
+                Selector::cell(
+                    "Cluster-sweep derived claims",
+                    "request conservation violations over the grid",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "cluster_sweep.goodput_bounded_by_offered",
+                "goodput never exceeds offered load beyond Poisson slack",
+                Selector::cell(
+                    "Cluster-sweep derived claims",
+                    "max goodput / offered ratio over the grid",
+                    "value",
+                ),
+                Check::Le(1.5),
+            ),
+            Expectation::new(
+                "cluster_sweep.full_grid",
+                "the sweep covers at least one load for every fleet mix",
+                Selector::cell("Cluster-sweep derived claims", "grid points swept", "value"),
+                Check::Ge(MIXES.len() as f64),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    ClusterSweep.run(&ClusterSweep.params())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_params() -> Params {
+        // Two mix-loads at short duration keep the unit test quick; the
+        // full default grid runs under `repro run cluster-sweep` and the
+        // integration suite.
+        ClusterSweep
+            .params()
+            .with("load_points", 2.0)
+            .with("duration_s", 1.5)
+            .with("load_step_rps", 16.0)
+    }
+
+    #[test]
+    fn one_report_per_mix_plus_frontier_and_claims() {
+        let reports = ClusterSweep.run(&small_params());
+        assert_eq!(reports.len(), MIXES.len() + 2);
+        for (i, (label, _)) in MIXES.iter().enumerate() {
+            assert!(reports[i].title().contains(label), "report {i} mislabeled");
+            assert_eq!(reports[i].num_rows(), 2);
+        }
+        assert_eq!(reports[MIXES.len()].num_rows(), MIXES.len());
+    }
+
+    #[test]
+    fn parity_and_conservation_hold() {
+        let k = Knobs::from(&small_params());
+        assert_eq!(mixed_vs_homogeneous_delta(&k), 0.0);
+        let p = run_point(&k, 2, k.load_min_rps);
+        assert_eq!(p.submitted, p.completed);
+        assert!(p.goodput_rps <= p.offered_rps * 1.5);
+    }
+
+    #[test]
+    fn mix_fleets_are_well_formed() {
+        for (_, g) in MIXES {
+            let fleet = mix_fleet(g);
+            assert_eq!(fleet.len(), FLEET_SIZE);
+            assert_eq!(fleet.iter().filter(|d| **d == DeviceKind::Gaudi2).count(), g);
+            mix_config(g).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn expectations_pass_on_default_grid() {
+        // The full default grid is the artifact CI gates on; every
+        // expectation must hold there.
+        let reports = run();
+        for e in ClusterSweep.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
+    }
+}

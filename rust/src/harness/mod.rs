@@ -7,6 +7,7 @@
 
 pub mod ablations;
 pub mod cluster;
+pub mod cluster_sweep;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
@@ -100,6 +101,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(fig15::Fig15),
         Box::new(fig17::Fig17),
         Box::new(cluster::Cluster),
+        Box::new(cluster_sweep::ClusterSweep),
         Box::new(ablations::AblMme),
         Box::new(ablations::AblWatermark),
         Box::new(ablations::ExtMultiRecsys),
@@ -108,9 +110,12 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
     ]
 }
 
-/// Look up one experiment by id.
+/// Look up one experiment by id. Hyphens and underscores are
+/// interchangeable (`repro run cluster-sweep` finds `cluster_sweep` —
+/// ids stay underscore-only so the artifact file name is shell-friendly).
 pub fn find(id: &str) -> Option<Box<dyn Experiment>> {
-    registry().into_iter().find(|e| e.id() == id)
+    let canon = id.replace('-', "_");
+    registry().into_iter().find(|e| e.id() == canon)
 }
 
 /// Run one experiment by id under its default params; None if unknown.
@@ -159,17 +164,24 @@ mod tests {
         let ids: Vec<&str> = registry().iter().map(|e| e.id()).collect();
         for required in [
             "table1", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-            "fig13", "fig15", "fig17", "cluster",
+            "fig13", "fig15", "fig17", "cluster", "cluster_sweep",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
-        assert_eq!(ids.len(), 18, "registry must keep all 18 entries");
+        assert_eq!(ids.len(), 19, "registry must keep all 19 entries");
     }
 
     #[test]
     fn unknown_experiment_is_none() {
         assert!(run_experiment("fig99").is_none());
         assert!(find("fig99").is_none());
+    }
+
+    #[test]
+    fn find_accepts_hyphenated_ids() {
+        assert_eq!(find("cluster-sweep").unwrap().id(), "cluster_sweep");
+        assert_eq!(find("cluster_sweep").unwrap().id(), "cluster_sweep");
+        assert!(find("cluster-").is_none());
     }
 
     #[test]

@@ -24,13 +24,19 @@
 //!   Backend (SimBackend | PjrtBackend)    step costs: simulated / wall
 //!       └── EngineCore<B, ClockSource>    one shared step loop (scheduler,
 //!           │                             paged KV, trace, metrics)
-//!           └── ClusterSim                N replicas, merged virtual time
-//!               └── Router                dispatch + backpressure
+//!           └── ClusterSim                N replicas (homogeneous or a
+//!               │                         mixed Gaudi-2/A100 fleet),
+//!               │                         merged virtual time
+//!               ├── Router                dispatch (incl. cost-aware
+//!               │                         prefix affinity) + backpressure
+//!               │                         + drain
+//!               └── Autoscaler            goodput-driven scale-up/drain
 //!   ```
 //!
-//!   `ServingConfig { replicas, route_policy, max_queued, .. }` sizes the
-//!   fleet; `repro run cluster` produces the iso-SLO Gaudi-2 vs A100
-//!   replica-count comparison.
+//!   `ServingConfig { replicas, route_policy, max_queued, fleet, .. }`
+//!   sizes the fleet; `repro run cluster` produces the iso-SLO Gaudi-2 vs
+//!   A100 replica-count comparison and `repro run cluster-sweep` the
+//!   goodput-under-SLO frontier across fleet mixes.
 //! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, lowered at
 //!   build time by `python/compile/aot.py`) and executes them on the PJRT
 //!   CPU client. Python is never on the request path.
@@ -42,8 +48,10 @@
 //!   paper's headline claims.
 //! * [`report`] — the typed result model underneath the harness:
 //!   `Value` (raw `f64` + `Unit`), `Cell`/`Report` tables that render to
-//!   ASCII/CSV/JSON, `Series` column views, and `Expectation` paper-claim
-//!   assertions. `util::table` is the ASCII/CSV renderer over this model.
+//!   ASCII/CSV/JSON, `Series` column views, `Expectation` paper-claim
+//!   assertions, and the `diff` trend engine behind `repro bench-diff`
+//!   (the CI regression gate over `BENCH_*.json` artifact directories).
+//!   `util::table` is the ASCII/CSV renderer over this model.
 //! * [`workload`] — synthetic workload generators (fixed-length sweeps,
 //!   Dynamic-Sonnet-like variable-length traces, Zipf embedding indices,
 //!   token-level prompts for the real-numerics engine).

@@ -3,16 +3,25 @@
 //! ```text
 //! repro list                       # show every reproducible table/figure
 //! repro run <exp|all> [--csv] [--json] [--out DIR] [--check]
+//!           [--param k=v ...]
 //!                                  # regenerate a paper table/figure;
 //!                                  # --json prints one artifact per
 //!                                  # experiment, --out DIR writes them as
 //!                                  # BENCH_<id>.json, --check evaluates
 //!                                  # the paper-claim expectations and
-//!                                  # exits non-zero on any failure
+//!                                  # exits non-zero on any failure;
+//!                                  # --param overrides a declared
+//!                                  # experiment parameter (repeatable)
+//! repro bench-diff <baseline-dir> <candidate-dir> [--tolerance PCT]
+//!                                  # compare two BENCH_*.json artifact
+//!                                  # directories cell-by-cell; prints the
+//!                                  # typed delta table and exits non-zero
+//!                                  # on regressions beyond tolerance
 //! repro serve [--config f.json] [--requests N] [--rate R] [--json]
 //!                                  # run the vLLM-style serving cluster
-//!                                  # (1..N replicas, simulated backend)
-//!                                  # on a Dynamic-Sonnet-like workload
+//!                                  # (1..N replicas, homogeneous or a
+//!                                  # mixed Gaudi-2/A100 fleet, simulated
+//!                                  # backend) on a Dynamic-Sonnet load
 //! repro real-serve [--artifacts d] [--requests N]
 //!                                  # serve the REAL tiny-Llama artifacts
 //!                                  # through PJRT (needs `make artifacts`)
@@ -24,9 +33,11 @@
 use cuda_myth::config::ServingConfig;
 use cuda_myth::harness::{self, Experiment};
 use cuda_myth::models::llama::LlamaConfig;
+use cuda_myth::report::diff::{self, DiffOutcome};
 use cuda_myth::report::expect::results_report;
 use cuda_myth::serving::cluster::ClusterSim;
 use cuda_myth::serving::real_engine::PjrtLlmEngine;
+use cuda_myth::serving::router::RoutePolicy;
 use cuda_myth::util::json::Json;
 use cuda_myth::workload::{DynamicSonnet, TokenPrompts};
 
@@ -35,11 +46,13 @@ fn main() {
     let code = match args.first().map(|s| s.as_str()) {
         Some("list") => cmd_list(),
         Some("run") => cmd_run(&args[1..]),
+        Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("real-serve") => cmd_real_serve(&args[1..]),
         _ => {
             eprintln!(
-                "usage: repro <list|run <exp|all> [--csv] [--json] [--out DIR] [--check]\
+                "usage: repro <list|run <exp|all> [--csv] [--json] [--out DIR] [--check] \
+                 [--param k=v]|bench-diff <base> <cand> [--tolerance PCT]\
                  |serve [opts]|real-serve [opts]>"
             );
             2
@@ -78,6 +91,44 @@ fn parse_flag<T: std::str::FromStr>(args: &[String], name: &str, default: T) -> 
     }
 }
 
+/// Every occurrence of a repeatable `--name <value>` flag, in order.
+fn flag_values<'a>(args: &'a [String], name: &str) -> Result<Vec<&'a str>, String> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == name {
+            match args.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    out.push(v.as_str());
+                    i += 2;
+                    continue;
+                }
+                _ => return Err(format!("missing value for {name}")),
+            }
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+/// Parse repeated `--param k=v` overrides into typed pairs.
+fn parse_param_overrides(raw: &[&str]) -> Result<Vec<(String, f64)>, String> {
+    raw.iter()
+        .map(|s| {
+            let (k, v) = s
+                .split_once('=')
+                .ok_or_else(|| format!("invalid --param '{s}' (want key=value)"))?;
+            if k.is_empty() {
+                return Err(format!("invalid --param '{s}' (empty key)"));
+            }
+            let x: f64 = v
+                .parse()
+                .map_err(|_| format!("invalid --param value '{v}' for '{k}' (want a number)"))?;
+            Ok((k.to_string(), x))
+        })
+        .collect()
+}
+
 fn has_flag(args: &[String], name: &str) -> bool {
     args.iter().any(|a| a == name)
 }
@@ -92,12 +143,14 @@ fn reject_unknown_flags(args: &[String], known: &[&str]) -> Result<(), String> {
 }
 
 fn cmd_run(args: &[String]) -> i32 {
-    const USAGE: &str = "usage: repro run <exp|all> [--csv] [--json] [--out DIR] [--check]";
+    const USAGE: &str =
+        "usage: repro run <exp|all> [--csv] [--json] [--out DIR] [--check] [--param k=v ...]";
     let Some(id) = args.first() else {
         eprintln!("{USAGE}");
         return 2;
     };
-    if let Err(e) = reject_unknown_flags(args, &["--csv", "--json", "--out", "--check"]) {
+    if let Err(e) = reject_unknown_flags(args, &["--csv", "--json", "--out", "--check", "--param"])
+    {
         eprintln!("{e}\n{USAGE}");
         return 2;
     }
@@ -106,6 +159,14 @@ fn cmd_run(args: &[String]) -> i32 {
     let check = has_flag(args, "--check");
     let out_dir = match flag_value(args, "--out") {
         Ok(d) => d.map(str::to_string),
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+    };
+    let overrides = match flag_values(args, "--param").and_then(|raw| parse_param_overrides(&raw))
+    {
+        Ok(o) => o,
         Err(e) => {
             eprintln!("{e}\n{USAGE}");
             return 2;
@@ -128,6 +189,18 @@ fn cmd_run(args: &[String]) -> i32 {
         }
     };
 
+    // An override must name a parameter some selected experiment declares
+    // — a typo'd key must be a usage error, not a silent no-op sweep.
+    for (k, _) in &overrides {
+        if !exps.iter().any(|e| e.params().get(k).is_some()) {
+            eprintln!(
+                "--param '{k}' matches no declared parameter of the selected experiment(s)\n\
+                 {USAGE}"
+            );
+            return 2;
+        }
+    }
+
     if let Some(dir) = &out_dir {
         if let Err(e) = std::fs::create_dir_all(dir) {
             eprintln!("cannot create --out directory '{dir}': {e}");
@@ -138,7 +211,14 @@ fn cmd_run(args: &[String]) -> i32 {
     let emit_artifacts = json || out_dir.is_some();
     let mut all_results = Vec::new();
     for e in exps {
-        let params = e.params();
+        let mut params = e.params();
+        // Apply the overrides this experiment declares; the artifact
+        // records the overridden values as the run's provenance.
+        for (k, v) in &overrides {
+            if params.get(k).is_some() {
+                params = params.with(k, *v);
+            }
+        }
         let reports = e.run(&params);
         let results = harness::evaluate(e.as_ref(), &reports);
         if emit_artifacts {
@@ -183,6 +263,110 @@ fn cmd_run(args: &[String]) -> i32 {
     0
 }
 
+/// Sorted `BENCH_*.json` file names in `dir`.
+fn bench_artifact_files(dir: &str) -> Result<Vec<String>, String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("cannot read '{dir}': {e}"))?;
+    let mut names: Vec<String> = entries
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    names.sort();
+    Ok(names)
+}
+
+fn load_artifact(dir: &str, name: &str) -> Result<Json, String> {
+    let path = format!("{dir}/{name}");
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("cannot read '{path}': {e}"))?;
+    Json::parse(&text).map_err(|e| format!("'{path}': {e}"))
+}
+
+fn cmd_bench_diff(args: &[String]) -> i32 {
+    const USAGE: &str = "usage: repro bench-diff <baseline-dir> <candidate-dir> [--tolerance PCT]";
+    if let Err(e) = reject_unknown_flags(args, &["--tolerance"]) {
+        eprintln!("{e}\n{USAGE}");
+        return 2;
+    }
+    let positional: Vec<&String> = {
+        // Everything that is neither a flag nor a flag's value.
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if args[i].starts_with("--") {
+                i += 2; // flag + value
+                continue;
+            }
+            out.push(&args[i]);
+            i += 1;
+        }
+        out
+    };
+    let [baseline, candidate] = positional.as_slice() else {
+        eprintln!("{USAGE}");
+        return 2;
+    };
+    let tolerance = match parse_flag::<f64>(args, "--tolerance", 1.0) {
+        Ok(t) if t >= 0.0 => t,
+        Ok(t) => {
+            eprintln!("--tolerance must be >= 0, got {t}\n{USAGE}");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+    };
+
+    let (base_files, cand_files) = match (
+        bench_artifact_files(baseline),
+        bench_artifact_files(candidate),
+    ) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if base_files.is_empty() {
+        eprintln!("no BENCH_*.json artifacts in baseline '{baseline}'");
+        return 2;
+    }
+
+    let mut outcome = DiffOutcome::default();
+    for name in &base_files {
+        if !cand_files.contains(name) {
+            outcome.structural.push(format!("artifact {name} missing from candidate"));
+            continue;
+        }
+        let pair = load_artifact(baseline, name)
+            .and_then(|b| load_artifact(candidate, name).map(|c| (b, c)))
+            .and_then(|(b, c)| diff::diff_artifacts(&b, &c, tolerance));
+        match pair {
+            Ok(one) => outcome.merge(one),
+            Err(e) => {
+                eprintln!("diff failed for {name}: {e}");
+                return 2;
+            }
+        }
+    }
+    for name in &cand_files {
+        if !base_files.contains(name) {
+            outcome.additions.push(format!("new artifact {name}"));
+        }
+    }
+
+    outcome.to_report(tolerance).print();
+    if outcome.has_regressions() {
+        eprintln!(
+            "bench-diff: {} regression(s) beyond +-{tolerance}% (baseline '{baseline}', \
+             candidate '{candidate}')",
+            outcome.regressions()
+        );
+        return 1;
+    }
+    0
+}
+
 fn cmd_serve(args: &[String]) -> i32 {
     const USAGE: &str = "usage: repro serve [--config f.json] [--requests N] [--rate R] [--json]";
     if let Err(e) = reject_unknown_flags(args, &["--config", "--requests", "--rate", "--json"]) {
@@ -222,11 +406,27 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
 
     // One path for every fleet size: a 1-replica cluster is
-    // integration-tested bitwise-equal to the bare engine.
+    // integration-tested bitwise-equal to the bare engine. Heterogeneous
+    // fleets (`"fleet": ["gaudi2", "a100", ...]` in --config) run the
+    // same path with per-replica devices.
     let replicas = cfg.replicas;
+    let fleet_desc = cfg
+        .replica_devices()
+        .iter()
+        .map(|d| d.name())
+        .collect::<Vec<_>>()
+        .join("+");
     let policy = cfg.route_policy;
+    // Prefix-affinity routing needs prefix-tagged requests to have any
+    // warm cache to exploit; tagging is RNG-free, so the other policies'
+    // traces are byte-identical with or without it.
+    let workload = if policy == RoutePolicy::PrefixAffinity {
+        DynamicSonnet::default().with_prefix_groups(8)
+    } else {
+        DynamicSonnet::default()
+    };
     let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
-    sim.submit_all(DynamicSonnet::default().generate(n, rate, 7));
+    sim.submit_all(workload.generate(n, rate, 7));
     let s = sim.run_to_completion();
     if as_json {
         // Pure-JSON stdout (pipe-friendly, like `repro run --json`).
@@ -240,8 +440,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         return 0;
     }
     println!(
-        "served {} requests over {} replica(s) ({}): {:.1} tok/s, mean TTFT {:.1} ms, \
-         p99 TTFT {:.1} ms, mean TPOT {:.2} ms, {} backpressure requeues",
+        "served {} requests over {} replica(s) [{fleet_desc}] ({}): {:.1} tok/s, \
+         mean TTFT {:.1} ms, p99 TTFT {:.1} ms, mean TPOT {:.2} ms, \
+         {} backpressure requeues",
         s.requests,
         replicas,
         policy.name(),

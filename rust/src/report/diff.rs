@@ -1,0 +1,614 @@
+//! Cross-PR trend diff over `BENCH_*.json` experiment artifacts — the
+//! engine behind `repro bench-diff <baseline-dir> <candidate-dir>`.
+//!
+//! Two artifact sets are compared *cell by cell*: experiments match on
+//! their artifact `experiment` id, reports match on title, rows on their
+//! row label (first-cell rendering, with duplicate labels matched by
+//! occurrence), columns on header name. Every matched pair of value
+//! cells yields a signed percentage delta classified through the unit's
+//! [`Polarity`]: a worse-direction move beyond tolerance is a
+//! regression, a better-direction move an improvement, and for neutral
+//! units (ratios, counts, sizes) any beyond-tolerance drift is a
+//! regression — a deterministic simulator that quietly changed its
+//! numbers is exactly what the CI gate exists to catch. Structural gaps
+//! (missing experiment/report/row/column, unit changes, text-cell edits)
+//! and paper-claim expectations that flipped from PASS to FAIL are
+//! regressions too; candidate-only additions are reported as notes.
+
+use crate::report::model::{Cell, Report};
+use crate::report::value::{Polarity, Unit};
+use crate::util::json::Json;
+
+/// Classification of one beyond-tolerance cell move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Regressed,
+    Improved,
+}
+
+/// One compared cell whose move exceeds the tolerance.
+#[derive(Debug, Clone)]
+pub struct CellDelta {
+    pub experiment: String,
+    /// Report title.
+    pub report: String,
+    /// Row label (first cell of the row).
+    pub row: String,
+    pub column: String,
+    pub unit: Unit,
+    pub baseline: f64,
+    pub candidate: f64,
+    /// Signed percent change relative to the baseline magnitude.
+    pub pct: f64,
+    pub verdict: Verdict,
+}
+
+/// Aggregated outcome of diffing one or more artifact pairs.
+#[derive(Debug, Default)]
+pub struct DiffOutcome {
+    /// Value cells compared.
+    pub cells_compared: usize,
+    /// Beyond-tolerance cell moves (regressions and improvements).
+    pub deltas: Vec<CellDelta>,
+    /// Structural regressions: things the baseline had that the candidate
+    /// lost (experiments, reports, rows, columns, units, text content) and
+    /// expectations that flipped to FAIL.
+    pub structural: Vec<String>,
+    /// Candidate-only additions (informational, never a regression).
+    pub additions: Vec<String>,
+}
+
+impl DiffOutcome {
+    pub fn merge(&mut self, other: DiffOutcome) {
+        self.cells_compared += other.cells_compared;
+        self.deltas.extend(other.deltas);
+        self.structural.extend(other.structural);
+        self.additions.extend(other.additions);
+    }
+
+    pub fn regressions(&self) -> usize {
+        self.structural.len()
+            + self.deltas.iter().filter(|d| d.verdict == Verdict::Regressed).count()
+    }
+
+    pub fn improvements(&self) -> usize {
+        self.deltas.iter().filter(|d| d.verdict == Verdict::Improved).count()
+    }
+
+    pub fn has_regressions(&self) -> bool {
+        self.regressions() > 0
+    }
+
+    /// The typed delta table `repro bench-diff` prints (and CI uploads).
+    pub fn to_report(&self, tolerance_pct: f64) -> Report {
+        let mut r = Report::new(format!(
+            "Bench diff: candidate vs baseline (tolerance +-{tolerance_pct}%)"
+        ));
+        r.header(&[
+            "experiment",
+            "report / row / column",
+            "baseline",
+            "candidate",
+            "delta %",
+            "verdict",
+        ]);
+        for d in &self.deltas {
+            r.row(vec![
+                Cell::text(d.experiment.clone()),
+                Cell::text(format!("{} / {} / {}", d.report, d.row, d.column)),
+                Cell::val(d.baseline, d.unit),
+                Cell::val(d.candidate, d.unit),
+                Cell::val(d.pct, Unit::Pp),
+                Cell::text(match d.verdict {
+                    Verdict::Regressed => "REGRESSED",
+                    Verdict::Improved => "improved",
+                }),
+            ]);
+        }
+        for s in &self.structural {
+            r.row(vec![
+                Cell::text("-"),
+                Cell::text(s.clone()),
+                Cell::text("-"),
+                Cell::text("-"),
+                Cell::text("-"),
+                Cell::text("REGRESSED"),
+            ]);
+        }
+        for a in &self.additions {
+            r.note(format!("candidate-only: {a}"));
+        }
+        r.note(format!(
+            "{} cells compared, {} beyond tolerance ({} regressions, {} improvements), \
+             {} structural regressions",
+            self.cells_compared,
+            self.deltas.len(),
+            self.regressions() - self.structural.len(),
+            self.improvements(),
+            self.structural.len()
+        ));
+        r
+    }
+}
+
+/// Occurrence-tagged key so duplicate labels still pair deterministically.
+fn keyed(labels: impl Iterator<Item = String>) -> Vec<(String, usize)> {
+    let mut seen: Vec<(String, usize)> = Vec::new();
+    labels
+        .map(|label| {
+            let occ = match seen.iter_mut().find(|(l, _)| *l == label) {
+                Some(e) => {
+                    e.1 += 1;
+                    e.1
+                }
+                None => {
+                    seen.push((label.clone(), 0));
+                    0
+                }
+            };
+            (label, occ)
+        })
+        .collect()
+}
+
+fn row_label(cells: &[Cell]) -> String {
+    cells.first().map(|c| c.fmt()).unwrap_or_default()
+}
+
+/// Signed percent change of `cand` vs `base`, relative to |base|.
+fn pct_change(base: f64, cand: f64) -> f64 {
+    if base == cand {
+        0.0
+    } else if base == 0.0 {
+        // From exactly zero any move is a full-scale change.
+        100.0 * cand.signum()
+    } else {
+        100.0 * (cand - base) / base.abs()
+    }
+}
+
+fn classify(unit: Unit, pct: f64) -> Verdict {
+    let worse = match unit.polarity() {
+        Polarity::HigherIsBetter => pct < 0.0,
+        Polarity::LowerIsBetter => pct > 0.0,
+        Polarity::Neutral => true,
+    };
+    if worse {
+        Verdict::Regressed
+    } else {
+        Verdict::Improved
+    }
+}
+
+/// Diff two parsed reports of one experiment (already matched by title).
+fn diff_reports(
+    experiment: &str,
+    base: &Report,
+    cand: &Report,
+    tolerance_pct: f64,
+    out: &mut DiffOutcome,
+) {
+    let loc = |row: &str, col: &str| format!("{} / {} / {}", base.title(), row, col);
+    // Columns pair by header name (occurrence-tagged).
+    let base_cols = keyed(base.columns().iter().cloned());
+    let cand_cols = keyed(cand.columns().iter().cloned());
+    let col_idx: Vec<Option<usize>> = base_cols
+        .iter()
+        .map(|k| cand_cols.iter().position(|c| c == k))
+        .collect();
+    for (bi, k) in base_cols.iter().enumerate() {
+        if col_idx[bi].is_none() {
+            out.structural
+                .push(format!("{experiment}: column '{}' of '{}' missing", k.0, base.title()));
+        }
+    }
+    for k in &cand_cols {
+        if !base_cols.contains(k) {
+            out.additions.push(format!("{experiment}: new column '{}' in '{}'", k.0, cand.title()));
+        }
+    }
+    // Rows pair by label (occurrence-tagged).
+    let base_rows = keyed(base.rows().iter().map(|r| row_label(r)));
+    let cand_rows = keyed(cand.rows().iter().map(|r| row_label(r)));
+    for (bi, key) in base_rows.iter().enumerate() {
+        let Some(ci) = cand_rows.iter().position(|c| c == key) else {
+            out.structural
+                .push(format!("{experiment}: row '{}' of '{}' missing", key.0, base.title()));
+            continue;
+        };
+        let brow = &base.rows()[bi];
+        let crow = &cand.rows()[ci];
+        for (bcol, mapped) in col_idx.iter().enumerate() {
+            let Some(ccol) = *mapped else { continue };
+            let (Some(bcell), Some(ccell)) = (brow.get(bcol), crow.get(ccol)) else {
+                if brow.get(bcol).is_some() {
+                    out.structural.push(format!(
+                        "{experiment}: cell at {} missing",
+                        loc(&key.0, &base_cols[bcol].0)
+                    ));
+                }
+                continue;
+            };
+            match (bcell, ccell) {
+                (Cell::Text(b), Cell::Text(c)) => {
+                    if b != c {
+                        out.structural.push(format!(
+                            "{experiment}: text at {} changed '{b}' -> '{c}'",
+                            loc(&key.0, &base_cols[bcol].0)
+                        ));
+                    }
+                }
+                (Cell::Val(b), Cell::Val(c)) => {
+                    if b.unit != c.unit {
+                        out.structural.push(format!(
+                            "{experiment}: unit at {} changed {} -> {}",
+                            loc(&key.0, &base_cols[bcol].0),
+                            b.unit.name(),
+                            c.unit.name()
+                        ));
+                        continue;
+                    }
+                    out.cells_compared += 1;
+                    let pct = pct_change(b.x, c.x);
+                    if pct.abs() > tolerance_pct {
+                        out.deltas.push(CellDelta {
+                            experiment: experiment.to_string(),
+                            report: base.title().to_string(),
+                            row: key.0.clone(),
+                            column: base_cols[bcol].0.clone(),
+                            unit: b.unit,
+                            baseline: b.x,
+                            candidate: c.x,
+                            pct,
+                            verdict: classify(b.unit, pct),
+                        });
+                    }
+                }
+                _ => out.structural.push(format!(
+                    "{experiment}: cell at {} changed kind (text <-> value)",
+                    loc(&key.0, &base_cols[bcol].0)
+                )),
+            }
+        }
+    }
+    for key in &cand_rows {
+        if !base_rows.contains(key) {
+            out.additions.push(format!("{experiment}: new row '{}' in '{}'", key.0, cand.title()));
+        }
+    }
+}
+
+fn expectation_status(artifact: &Json) -> Result<Vec<(String, bool)>, String> {
+    let arr = match artifact.get("expectations") {
+        None => return Ok(Vec::new()),
+        Some(v) => v.as_arr().ok_or("artifact 'expectations' must be an array")?,
+    };
+    arr.iter()
+        .map(|e| {
+            let id = e
+                .req("id")
+                .map_err(|e| e.to_string())?
+                .as_str()
+                .ok_or("expectation 'id' must be a string")?
+                .to_string();
+            let pass = e
+                .req("pass")
+                .map_err(|e| e.to_string())?
+                .as_bool()
+                .ok_or("expectation 'pass' must be a bool")?;
+            Ok((id, pass))
+        })
+        .collect()
+}
+
+fn artifact_reports(artifact: &Json) -> Result<Vec<Report>, String> {
+    artifact
+        .req("reports")
+        .map_err(|e| e.to_string())?
+        .as_arr()
+        .ok_or("artifact 'reports' must be an array")?
+        .iter()
+        .map(|r| Report::from_json(r).map_err(|e| e.to_string()))
+        .collect()
+}
+
+/// The artifact's experiment id (for matching and messages).
+pub fn artifact_experiment(artifact: &Json) -> Result<String, String> {
+    Ok(artifact
+        .req("experiment")
+        .map_err(|e| e.to_string())?
+        .as_str()
+        .ok_or("artifact 'experiment' must be a string")?
+        .to_string())
+}
+
+/// Diff two parsed `BENCH_<id>.json` artifacts of the same experiment.
+pub fn diff_artifacts(base: &Json, cand: &Json, tolerance_pct: f64) -> Result<DiffOutcome, String> {
+    let experiment = artifact_experiment(base)?;
+    if artifact_experiment(cand)? != experiment {
+        return Err(format!(
+            "artifact mismatch: baseline is '{}', candidate is '{}'",
+            experiment,
+            artifact_experiment(cand)?
+        ));
+    }
+    let mut out = DiffOutcome::default();
+    let base_reports = artifact_reports(base)?;
+    let cand_reports = artifact_reports(cand)?;
+    let base_keys = keyed(base_reports.iter().map(|r| r.title().to_string()));
+    let cand_keys = keyed(cand_reports.iter().map(|r| r.title().to_string()));
+    for (bi, key) in base_keys.iter().enumerate() {
+        match cand_keys.iter().position(|c| c == key) {
+            Some(ci) => diff_reports(
+                &experiment,
+                &base_reports[bi],
+                &cand_reports[ci],
+                tolerance_pct,
+                &mut out,
+            ),
+            None => out
+                .structural
+                .push(format!("{experiment}: report '{}' missing from candidate", key.0)),
+        }
+    }
+    for key in &cand_keys {
+        if !base_keys.contains(key) {
+            out.additions.push(format!("{experiment}: new report '{}'", key.0));
+        }
+    }
+    // Paper-claim expectations: PASS -> FAIL is a regression even when
+    // every compared cell stayed inside tolerance.
+    let base_exp = expectation_status(base)?;
+    let cand_exp = expectation_status(cand)?;
+    for (id, pass) in &base_exp {
+        match cand_exp.iter().find(|(cid, _)| cid == id) {
+            Some((_, cand_pass)) => {
+                if *pass && !cand_pass {
+                    out.structural
+                        .push(format!("{experiment}: expectation '{id}' regressed PASS -> FAIL"));
+                }
+            }
+            None => out
+                .structural
+                .push(format!("{experiment}: expectation '{id}' missing from candidate")),
+        }
+    }
+    for (id, _) in &cand_exp {
+        if !base_exp.iter().any(|(bid, _)| bid == id) {
+            out.additions.push(format!("{experiment}: new expectation '{id}'"));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::{self, Experiment};
+
+    fn artifact(tweak: impl Fn(&mut Report)) -> Json {
+        let mut r = Report::new("Fig T: throughput");
+        r.header(&["batch", "tok/s", "p99 s", "note"]);
+        r.row(vec![
+            Cell::count(8),
+            Cell::val(100.0, Unit::TokPerSec),
+            Cell::val(0.5, Unit::Seconds),
+            Cell::text("a"),
+        ]);
+        r.row(vec![
+            Cell::count(64),
+            Cell::val(400.0, Unit::TokPerSec),
+            Cell::val(0.9, Unit::Seconds),
+            Cell::text("b"),
+        ]);
+        tweak(&mut r);
+        Json::obj(vec![
+            ("schema", Json::Str(harness::ARTIFACT_SCHEMA.into())),
+            ("experiment", Json::Str("figT".into())),
+            ("title", Json::Str("t".into())),
+            ("params", Json::obj(vec![])),
+            ("reports", Json::Arr(vec![r.to_json()])),
+            (
+                "expectations",
+                Json::Arr(vec![Json::obj(vec![
+                    ("id", Json::Str("figT.claim".into())),
+                    ("claim", Json::Str("c".into())),
+                    ("pass", Json::Bool(true)),
+                    ("actual", Json::Num(1.0)),
+                    ("detail", Json::Str("d".into())),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn identical_artifacts_diff_clean() {
+        let a = artifact(|_| {});
+        let out = diff_artifacts(&a, &a, 1.0).unwrap();
+        assert_eq!(out.cells_compared, 6);
+        assert!(out.deltas.is_empty());
+        assert!(!out.has_regressions());
+        assert_eq!(out.regressions(), 0);
+    }
+
+    #[test]
+    fn throughput_drop_is_a_regression_and_gain_is_not() {
+        let base = artifact(|_| {});
+        let cand = artifact(|r| {
+            *r = {
+                let mut n = Report::new("Fig T: throughput");
+                n.header(&["batch", "tok/s", "p99 s", "note"]);
+                n.row(vec![
+                    Cell::count(8),
+                    Cell::val(90.0, Unit::TokPerSec), // -10%: regression
+                    Cell::val(0.5, Unit::Seconds),
+                    Cell::text("a"),
+                ]);
+                n.row(vec![
+                    Cell::count(64),
+                    Cell::val(480.0, Unit::TokPerSec), // +20%: improvement
+                    Cell::val(0.45, Unit::Seconds),    // latency halved: improvement
+                    Cell::text("b"),
+                ]);
+                n
+            };
+        });
+        let out = diff_artifacts(&base, &cand, 2.0).unwrap();
+        assert_eq!(out.deltas.len(), 3);
+        assert_eq!(out.regressions(), 1);
+        assert_eq!(out.improvements(), 2);
+        let reg = out.deltas.iter().find(|d| d.verdict == Verdict::Regressed).unwrap();
+        assert_eq!(reg.row, "8");
+        assert_eq!(reg.column, "tok/s");
+        assert!((reg.pct + 10.0).abs() < 1e-9);
+        // Tolerance gates it: at 15% the drop passes.
+        let lax = diff_artifacts(&base, &cand, 15.0).unwrap();
+        assert_eq!(lax.regressions(), 0);
+    }
+
+    #[test]
+    fn latency_rise_and_count_drift_regress() {
+        let base = artifact(|_| {});
+        let cand = artifact(|r| {
+            let mut n = Report::new("Fig T: throughput");
+            n.header(&["batch", "tok/s", "p99 s", "note"]);
+            n.row(vec![
+                Cell::count(8),
+                Cell::val(100.0, Unit::TokPerSec),
+                Cell::val(1.0, Unit::Seconds), // +100%: regression
+                Cell::text("a"),
+            ]);
+            n.row(vec![
+                Cell::count(64),
+                Cell::val(400.0, Unit::TokPerSec),
+                Cell::val(0.9, Unit::Seconds),
+                Cell::text("b"),
+            ]);
+            *r = n;
+        });
+        let out = diff_artifacts(&base, &cand, 1.0).unwrap();
+        assert_eq!(out.regressions(), 1);
+        assert_eq!(out.deltas[0].verdict, Verdict::Regressed);
+        // Neutral-unit drift (a Count row label changing is structural,
+        // not a delta: the row fails to pair and is reported missing).
+        let drifted = artifact(|r| {
+            let mut n = Report::new("Fig T: throughput");
+            n.header(&["batch", "tok/s", "p99 s", "note"]);
+            n.row(vec![
+                Cell::count(9),
+                Cell::val(100.0, Unit::TokPerSec),
+                Cell::val(0.5, Unit::Seconds),
+                Cell::text("a"),
+            ]);
+            n.row(vec![
+                Cell::count(64),
+                Cell::val(400.0, Unit::TokPerSec),
+                Cell::val(0.9, Unit::Seconds),
+                Cell::text("b"),
+            ]);
+            *r = n;
+        });
+        let out2 = diff_artifacts(&base, &drifted, 1.0).unwrap();
+        assert!(out2.has_regressions());
+        assert!(out2.structural.iter().any(|s| s.contains("row '8'")));
+        assert!(out2.additions.iter().any(|s| s.contains("row '9'")));
+    }
+
+    #[test]
+    fn structural_losses_regress_and_additions_do_not() {
+        let base = artifact(|_| {});
+        // Candidate lost a column but gained a report.
+        let cand = artifact(|r| {
+            let mut n = Report::new("Fig T: throughput");
+            n.header(&["batch", "tok/s", "note"]);
+            n.row(vec![Cell::count(8), Cell::val(100.0, Unit::TokPerSec), Cell::text("a")]);
+            n.row(vec![Cell::count(64), Cell::val(400.0, Unit::TokPerSec), Cell::text("b")]);
+            *r = n;
+        });
+        let out = diff_artifacts(&base, &cand, 1.0).unwrap();
+        assert!(out.structural.iter().any(|s| s.contains("column 'p99 s'")));
+        assert!(out.has_regressions());
+        // Reverse direction: the extra column is an addition, not a
+        // regression.
+        let rev = diff_artifacts(&cand, &base, 1.0).unwrap();
+        assert!(rev.additions.iter().any(|s| s.contains("new column 'p99 s'")));
+        assert_eq!(rev.regressions(), 0);
+    }
+
+    #[test]
+    fn expectation_flip_regresses() {
+        let base = artifact(|_| {});
+        let mut cand = artifact(|_| {});
+        if let Json::Obj(m) = &mut cand {
+            m.insert(
+                "expectations".into(),
+                Json::Arr(vec![Json::obj(vec![
+                    ("id", Json::Str("figT.claim".into())),
+                    ("claim", Json::Str("c".into())),
+                    ("pass", Json::Bool(false)),
+                    ("actual", Json::Num(0.0)),
+                    ("detail", Json::Str("d".into())),
+                ])]),
+            );
+        }
+        let out = diff_artifacts(&base, &cand, 1.0).unwrap();
+        assert!(out.has_regressions());
+        assert!(out.structural.iter().any(|s| s.contains("PASS -> FAIL")));
+        // FAIL -> PASS is fine.
+        let out2 = diff_artifacts(&cand, &base, 1.0).unwrap();
+        assert_eq!(out2.regressions(), 0);
+    }
+
+    #[test]
+    fn mismatched_experiments_rejected() {
+        let base = artifact(|_| {});
+        let mut cand = artifact(|_| {});
+        if let Json::Obj(m) = &mut cand {
+            m.insert("experiment".into(), Json::Str("other".into()));
+        }
+        assert!(diff_artifacts(&base, &cand, 1.0).is_err());
+    }
+
+    #[test]
+    fn delta_report_renders_summary() {
+        let base = artifact(|_| {});
+        let cand = artifact(|r| {
+            let mut n = Report::new("Fig T: throughput");
+            n.header(&["batch", "tok/s", "p99 s", "note"]);
+            n.row(vec![
+                Cell::count(8),
+                Cell::val(50.0, Unit::TokPerSec),
+                Cell::val(0.5, Unit::Seconds),
+                Cell::text("a"),
+            ]);
+            n.row(vec![
+                Cell::count(64),
+                Cell::val(400.0, Unit::TokPerSec),
+                Cell::val(0.9, Unit::Seconds),
+                Cell::text("b"),
+            ]);
+            *r = n;
+        });
+        let out = diff_artifacts(&base, &cand, 1.0).unwrap();
+        let rep = out.to_report(1.0);
+        let text = rep.render();
+        assert!(text.contains("REGRESSED"));
+        assert!(text.contains("tok/s"));
+        assert!(rep.notes().iter().any(|n| n.contains("1 regressions")));
+    }
+
+    #[test]
+    fn real_artifact_diffs_clean_against_itself() {
+        // End-to-end over a real experiment artifact (the CI gate's
+        // unchanged-tree case must exit 0).
+        let e = harness::find("table1").unwrap();
+        let params = e.params();
+        let reports = e.run(&params);
+        let results = harness::evaluate(e.as_ref(), &reports);
+        let j = harness::artifact_json(e.as_ref(), &params, &reports, &results);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let out = diff_artifacts(&parsed, &parsed, 0.0).unwrap();
+        assert!(out.cells_compared > 0);
+        assert!(!out.has_regressions());
+    }
+}

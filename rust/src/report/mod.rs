@@ -17,14 +17,21 @@
 //!   and by the integration tests (replacing substring asserts over
 //!   rendered tables).
 //!
+//! * [`diff`] — the cross-PR trend diff over two artifact directories
+//!   (`repro bench-diff`): cell-by-cell typed deltas classified through
+//!   each unit's [`Polarity`], structural-loss detection, and
+//!   expectation PASS->FAIL tracking — the CI regression gate.
+//!
 //! `repro run all --json --out bench/` writes one `BENCH_<id>.json`
 //! artifact per experiment (schema `cuda-myth/experiment-v1`), which is
 //! the machine-readable perf trajectory CI uploads per commit.
 
+pub mod diff;
 pub mod expect;
 pub mod model;
 pub mod value;
 
+pub use diff::{CellDelta, DiffOutcome, Verdict};
 pub use expect::{Agg, Check, Expectation, ExpectationResult, Selector};
 pub use model::{Cell, Report, Series};
-pub use value::{Unit, Value};
+pub use value::{Polarity, Unit, Value};

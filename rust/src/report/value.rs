@@ -64,7 +64,41 @@ pub const ALL_UNITS: [Unit; 19] = [
     Unit::Watts,
 ];
 
+/// Which direction of change is an improvement for a metric in this
+/// unit — the default the bench-diff regression gate classifies with.
+/// Heuristic by necessity (a `Percent` cell is usually utilization or
+/// SLO attainment, where more is better); `Neutral` units treat *any*
+/// beyond-tolerance change as a regression, because for dimensionless
+/// ratios, counts and sizes a silent drift is exactly what the gate
+/// exists to catch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Polarity {
+    HigherIsBetter,
+    LowerIsBetter,
+    Neutral,
+}
+
 impl Unit {
+    /// Default improvement direction for `bench-diff` (see [`Polarity`]).
+    pub fn polarity(&self) -> Polarity {
+        match self {
+            Unit::Tflops
+            | Unit::Gflops
+            | Unit::FlopPerByte
+            | Unit::GibPerSec
+            | Unit::GbPerSec
+            | Unit::TbPerSec
+            | Unit::TokPerSec
+            | Unit::ReqPerSec
+            | Unit::Percent => Polarity::HigherIsBetter,
+            Unit::Millis | Unit::Seconds | Unit::JoulePerTok | Unit::Watts => {
+                Polarity::LowerIsBetter
+            }
+            Unit::Gigabytes | Unit::Megabytes | Unit::Bytes | Unit::Ratio | Unit::Pp
+            | Unit::Count => Polarity::Neutral,
+        }
+    }
+
     /// Stable JSON tag (also usable as an axis label).
     pub fn name(&self) -> &'static str {
         match self {
@@ -170,6 +204,24 @@ mod tests {
         assert_eq!(Value::new(-2.25, Unit::Pp).fmt(), "-2.2");
         assert_eq!(Value::new(64.0, Unit::Count).fmt(), "64");
         assert_eq!(Value::new(33554432.0, Unit::Bytes).fmt(), "32.0MiB");
+    }
+
+    #[test]
+    fn polarity_covers_every_unit() {
+        assert_eq!(Unit::TokPerSec.polarity(), Polarity::HigherIsBetter);
+        assert_eq!(Unit::Seconds.polarity(), Polarity::LowerIsBetter);
+        assert_eq!(Unit::Count.polarity(), Polarity::Neutral);
+        // Every unit maps without panicking (match is exhaustive, but pin
+        // the heuristic split so a new unit makes this list explicit).
+        let (mut hi, mut lo, mut neutral) = (0, 0, 0);
+        for u in ALL_UNITS {
+            match u.polarity() {
+                Polarity::HigherIsBetter => hi += 1,
+                Polarity::LowerIsBetter => lo += 1,
+                Polarity::Neutral => neutral += 1,
+            }
+        }
+        assert_eq!((hi, lo, neutral), (9, 4, 6));
     }
 
     #[test]

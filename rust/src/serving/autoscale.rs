@@ -1,0 +1,267 @@
+//! Goodput-driven autoscaling for `ClusterSim` fleets: a control loop
+//! that adds replicas when the recent window misses the SLO target and
+//! drains the most expensive replica when the fleet has slack — the
+//! deployment-cost half of the paper's iso-SLO sizing question, run
+//! online instead of by offline sweep.
+//!
+//! The controller is deliberately split into a *pure sizing rule*
+//! ([`Autoscaler::desired_replicas`], monotone in offered load by
+//! construction — property-tested) and a *windowed feedback step*
+//! ([`Autoscaler::control`]) that observes SLO attainment over the last
+//! control interval and applies at most one action per tick. One action
+//! per tick keeps the loop stable: capacity changes need a window of
+//! effect before the next observation is meaningful.
+
+use crate::config::DeviceKind;
+use crate::serving::cluster::ClusterSim;
+
+/// Fraction of a replica's SLO-compliant capacity the sizing rule plans
+/// to use — headroom absorbs Poisson burstiness.
+pub const TARGET_UTILIZATION: f64 = 0.8;
+
+/// Controller targets and bounds.
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscaleConfig {
+    /// SLO the fleet is scaled against.
+    pub slo_ttft_s: f64,
+    pub slo_tpot_s: f64,
+    /// Scale up when windowed attainment drops below this.
+    pub low_watermark: f64,
+    /// Consider draining only when windowed attainment is at/above this.
+    pub high_watermark: f64,
+    /// Control interval in (virtual) seconds.
+    pub interval_s: f64,
+    /// Device new replicas are provisioned on.
+    pub scale_up_device: DeviceKind,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// In-flight requests *per active replica* above which a window with
+    /// zero completions counts as pressure. Continuous batching keeps
+    /// tens of requests in flight per replica in healthy operation, so a
+    /// bare `queued > active` test would read every warm-up as underwater
+    /// and scale straight to `max_replicas`; this threshold separates
+    /// "still filling the batch" from "drowning".
+    pub pressure_queue_depth: usize,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            slo_ttft_s: 1.0,
+            slo_tpot_s: 0.1,
+            low_watermark: 0.95,
+            high_watermark: 0.999,
+            interval_s: 0.25,
+            scale_up_device: DeviceKind::Gaudi2,
+            min_replicas: 1,
+            max_replicas: 8,
+            pressure_queue_depth: 64,
+        }
+    }
+}
+
+/// What one control tick decided to do — the replica to drain is not yet
+/// resolved ([`Autoscaler::control`] picks the most expensive active one
+/// and records the resolved [`Action`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Provision (or un-drain) one replica of this device.
+    ScaleUp(DeviceKind),
+    /// Drain the most expensive active replica.
+    DrainMostExpensive,
+    Hold,
+}
+
+/// One applied capacity action (drain target resolved).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Provisioned (or un-drained) one replica of this device.
+    ScaleUp(DeviceKind),
+    /// Drained this replica (finishes in-flight, accepts nothing new).
+    Drain(usize),
+    Hold,
+}
+
+/// The feedback controller; drive it with `ClusterSim::run_autoscaled`.
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    /// (tick time, applied action) log, for reports and tests.
+    actions: Vec<(f64, Action)>,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscaleConfig) -> Autoscaler {
+        assert!(cfg.interval_s > 0.0, "control interval must be positive");
+        assert!(cfg.min_replicas >= 1 && cfg.max_replicas >= cfg.min_replicas);
+        assert!(cfg.low_watermark <= cfg.high_watermark);
+        Autoscaler { cfg, actions: Vec::new() }
+    }
+
+    pub fn interval_s(&self) -> f64 {
+        self.cfg.interval_s
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Applied (tick, action) history, in tick order (`Hold`s included).
+    pub fn actions(&self) -> &[(f64, Action)] {
+        &self.actions
+    }
+
+    /// Net scale-ups applied so far.
+    pub fn scale_ups(&self) -> usize {
+        self.actions.iter().filter(|(_, a)| matches!(a, Action::ScaleUp(_))).count()
+    }
+
+    pub fn drains(&self) -> usize {
+        self.actions.iter().filter(|(_, a)| matches!(a, Action::Drain(_))).count()
+    }
+
+    /// Pure open-loop sizing rule: replicas needed to keep `offered_rps`
+    /// under SLO given one replica's compliant capacity, planned at
+    /// [`TARGET_UTILIZATION`] and clamped to the configured bounds.
+    /// Monotone non-decreasing in `offered_rps` by construction (a
+    /// clamped ceil of a non-decreasing function) — the property the
+    /// proptest suite pins down.
+    pub fn desired_replicas(&self, offered_rps: f64, per_replica_goodput_rps: f64) -> usize {
+        assert!(per_replica_goodput_rps > 0.0, "per-replica capacity must be positive");
+        let offered = offered_rps.max(0.0);
+        let raw = (offered / (per_replica_goodput_rps * TARGET_UTILIZATION)).ceil() as usize;
+        raw.clamp(self.cfg.min_replicas, self.cfg.max_replicas)
+    }
+
+    /// Pure feedback rule for one tick: `attainment` is the windowed SLO
+    /// attainment (`None` when the window saw no completions), `queued`
+    /// the router's in-flight count, `active` the non-drained replica
+    /// count.
+    pub fn decide(&self, attainment: Option<f64>, queued: usize, active: usize) -> Decision {
+        let pressured = match attainment {
+            Some(a) => a < self.cfg.low_watermark,
+            // A window with zero completions is pressure only when the
+            // per-replica backlog exceeds what continuous batching keeps
+            // in flight when healthy (see `pressure_queue_depth`).
+            None => queued > active * self.cfg.pressure_queue_depth,
+        };
+        if pressured {
+            if active < self.cfg.max_replicas {
+                return Decision::ScaleUp(self.cfg.scale_up_device);
+            }
+            return Decision::Hold;
+        }
+        let slack = attainment.is_some_and(|a| a >= self.cfg.high_watermark);
+        if slack && active > self.cfg.min_replicas && queued < active {
+            return Decision::DrainMostExpensive;
+        }
+        Decision::Hold
+    }
+
+    /// One control tick at virtual time `now`: observe the last interval,
+    /// decide, and apply at most one capacity action to `sim`.
+    pub fn control(&mut self, sim: &mut ClusterSim, now: f64) {
+        let attainment = sim.window_attainment(
+            now - self.cfg.interval_s,
+            self.cfg.slo_ttft_s,
+            self.cfg.slo_tpot_s,
+        );
+        let active = sim.router().num_active();
+        let action = match self.decide(attainment, sim.router().queued(), active) {
+            Decision::ScaleUp(device) => {
+                // Prefer waking a drained replica of the right device over
+                // provisioning a cold one.
+                let drained = (0..sim.num_replicas())
+                    .find(|&i| sim.router().is_drained(i) && sim.device_of(i) == device);
+                match drained {
+                    Some(i) => sim.undrain_replica(i),
+                    None => {
+                        sim.add_replica(device, now);
+                    }
+                }
+                Action::ScaleUp(device)
+            }
+            Decision::DrainMostExpensive => {
+                // Ties resolve deterministically to the highest index
+                // (`max_by` semantics), trimming fleet cost where it
+                // hurts least.
+                let victim = (0..sim.num_replicas())
+                    .filter(|&i| !sim.router().is_drained(i))
+                    .max_by(|&a, &b| {
+                        sim.router().cost_of(a).total_cmp(&sim.router().cost_of(b))
+                    });
+                match victim {
+                    Some(i) => {
+                        sim.drain_replica(i);
+                        Action::Drain(i)
+                    }
+                    None => Action::Hold,
+                }
+            }
+            Decision::Hold => Action::Hold,
+        };
+        self.actions.push((now, action));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> Autoscaler {
+        Autoscaler::new(AutoscaleConfig::default())
+    }
+
+    #[test]
+    fn desired_replicas_is_monotone_and_clamped() {
+        let c = ctl();
+        let cap = 10.0; // one replica's compliant req/s
+        let mut last = 0;
+        for load in 0..200 {
+            let want = c.desired_replicas(load as f64, cap);
+            assert!(want >= last, "monotone violated at load {load}");
+            assert!((1..=8).contains(&want));
+            last = want;
+        }
+        // Exact sizing at the utilization target: 16 rps / (10 * 0.8) = 2.
+        assert_eq!(c.desired_replicas(16.0, 10.0), 2);
+        assert_eq!(c.desired_replicas(0.0, 10.0), 1);
+        assert_eq!(c.desired_replicas(1e9, 10.0), 8);
+    }
+
+    #[test]
+    fn decide_scales_up_under_pressure() {
+        let c = ctl();
+        assert_eq!(
+            c.decide(Some(0.5), 10, 2),
+            Decision::ScaleUp(DeviceKind::Gaudi2)
+        );
+        // A starved window is pressure only past the per-replica backlog
+        // threshold — warm-up (batches still filling) must NOT scale.
+        assert_eq!(c.decide(None, 10, 2), Decision::Hold);
+        assert_eq!(
+            c.decide(None, 2 * 64 + 1, 2),
+            Decision::ScaleUp(DeviceKind::Gaudi2)
+        );
+        // At the cap: hold, never exceed max_replicas.
+        assert_eq!(c.decide(Some(0.5), 10, 8), Decision::Hold);
+    }
+
+    #[test]
+    fn decide_drains_on_slack_and_holds_otherwise() {
+        let c = ctl();
+        assert_eq!(c.decide(Some(1.0), 0, 3), Decision::DrainMostExpensive);
+        // At min replicas: hold.
+        assert_eq!(c.decide(Some(1.0), 0, 1), Decision::Hold);
+        // Healthy but not perfect: hold.
+        assert_eq!(c.decide(Some(0.97), 1, 3), Decision::Hold);
+        // Perfect attainment but a deep queue: hold (slack is not real).
+        assert_eq!(c.decide(Some(1.0), 50, 3), Decision::Hold);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_capacity_rejected() {
+        ctl().desired_replicas(10.0, 0.0);
+    }
+}

@@ -5,7 +5,12 @@
 //! at — vLLM-style fleets serve heavy traffic by running many independent
 //! engine replicas behind a router — and it turns the per-device question
 //! of Fig 17 into the production question: *how many Gaudi-2 vs A100
-//! replicas does a given SLO need?* (`repro run cluster`).
+//! replicas does a given SLO need?* (`repro run cluster`). Fleets may be
+//! **heterogeneous**: each replica carries its own device config
+//! (`ServingConfig::fleet`, mixed Gaudi-2 + A100 behind one router), the
+//! router weighs per-replica decode cost, and `repro run cluster-sweep`
+//! walks offered load across fleet mixes to trace the goodput-under-SLO
+//! frontier.
 //!
 //! Event loop (next-event dispatch): at every iteration the simulator
 //! either delivers the earliest pending arrival to the router (when it is
@@ -14,7 +19,9 @@
 //! therefore never rewound, arrivals are routed in order at their arrival
 //! times, and with one replica the step sequence is *identical* to a
 //! single `Engine` run (asserted bit-for-bit in
-//! `rust/tests/integration_cluster.rs`).
+//! `rust/tests/integration_cluster.rs`). `run_autoscaled` interleaves the
+//! same loop with periodic control ticks for `serving::autoscale`, which
+//! adds or drains replicas against an SLO target.
 //!
 //! Backpressure: when the router's global queue cap rejects an arrival
 //! (`QueueFull`), the request is requeued with its due time bumped just
@@ -25,9 +32,10 @@
 
 use std::collections::VecDeque;
 
-use crate::config::ServingConfig;
+use crate::config::{DeviceKind, ServingConfig};
 use crate::models::llama::LlamaConfig;
-use crate::serving::engine::{Engine, SimBackend};
+use crate::serving::autoscale::Autoscaler;
+use crate::serving::engine::{ClockSource, Engine, SimBackend};
 use crate::serving::metrics::{MetricsCollector, MetricsSummary};
 use crate::serving::request::{Request, RequestId};
 use crate::serving::router::{QueueFull, Router};
@@ -36,7 +44,13 @@ use crate::util::fasthash::FastMap;
 /// A multi-replica serving deployment under simulated time.
 pub struct ClusterSim {
     replicas: Vec<Engine<SimBackend>>,
+    /// Device of each replica (parallel to `replicas`).
+    devices: Vec<DeviceKind>,
     router: Router,
+    /// The cluster-level config replicas are instantiated from (per-replica
+    /// scheduler/KV knobs; `device` is overridden per replica).
+    cfg: ServingConfig,
+    model: LlamaConfig,
     /// Pending cluster-level arrivals: (due time, request), sorted by due.
     /// `due` equals the request's arrival unless backpressure requeued it.
     queue: VecDeque<(f64, Request)>,
@@ -48,22 +62,49 @@ pub struct ClusterSim {
 }
 
 impl ClusterSim {
-    /// Build `cfg.replicas` identical engine replicas serving `model`,
-    /// fronted by a router with `cfg.route_policy` / `cfg.max_queued`.
+    /// Build the fleet `cfg` describes — `cfg.replica_devices()` engine
+    /// replicas (homogeneous `device` x `replicas`, or the explicit mixed
+    /// `fleet`) serving `model`, fronted by a router with
+    /// `cfg.route_policy` / `cfg.max_queued` and per-replica decode-cost
+    /// weights from the device cost model.
     pub fn new(cfg: &ServingConfig, model: LlamaConfig) -> ClusterSim {
         cfg.validate().expect("valid config");
-        let router = Router::new(cfg.route_policy, cfg.replicas, cfg.max_queued);
-        let replicas = (0..cfg.replicas)
-            .map(|_| Engine::new(cfg.clone(), SimBackend::new(model, cfg)))
+        let devices = cfg.replica_devices();
+        let costs: Vec<f64> = devices
+            .iter()
+            .map(|d| SimBackend::decode_cost_weight(&model, *d, cfg.tensor_parallel))
+            .collect();
+        let router = Router::with_costs(cfg.route_policy, costs, cfg.max_queued);
+        let replicas = devices
+            .iter()
+            .map(|d| Self::build_replica(cfg, model, *d))
             .collect();
         ClusterSim {
             replicas,
+            devices,
             router,
+            cfg: cfg.clone(),
+            model,
             queue: VecDeque::new(),
             assignment: FastMap::default(),
             requeues: 0,
             completed: 0,
         }
+    }
+
+    /// One engine replica pinned to `device`. The per-replica config is
+    /// the cluster config with the device substituted and the fleet list
+    /// cleared (a replica is always a 1-device engine) — for homogeneous
+    /// configs this is exactly the cluster config, which is what keeps the
+    /// 1-replica path bitwise-equal to a bare `Engine`.
+    fn build_replica(
+        cfg: &ServingConfig,
+        model: LlamaConfig,
+        device: DeviceKind,
+    ) -> Engine<SimBackend> {
+        let replica_cfg = ServingConfig { device, fleet: Vec::new(), ..cfg.clone() };
+        let backend = SimBackend::new(model, &replica_cfg);
+        Engine::new(replica_cfg, backend)
     }
 
     pub fn num_replicas(&self) -> usize {
@@ -72,6 +113,16 @@ impl ClusterSim {
 
     pub fn replica(&self, i: usize) -> &Engine<SimBackend> {
         &self.replicas[i]
+    }
+
+    /// Device of replica `i`.
+    pub fn device_of(&self, i: usize) -> DeviceKind {
+        self.devices[i]
+    }
+
+    /// Per-replica devices, in replica order.
+    pub fn devices(&self) -> &[DeviceKind] {
+        &self.devices
     }
 
     pub fn router(&self) -> &Router {
@@ -96,6 +147,31 @@ impl ClusterSim {
         for r in reqs {
             self.submit(r);
         }
+    }
+
+    /// Scale up: add a fresh replica on `device` whose clock starts at
+    /// `now` (the control tick that decided it). Returns its index.
+    pub fn add_replica(&mut self, device: DeviceKind, now: f64) -> usize {
+        let mut engine = Self::build_replica(&self.cfg, self.model, device);
+        engine.clock_mut().wait_until(now);
+        self.replicas.push(engine);
+        self.devices.push(device);
+        self.router.add_replica(SimBackend::decode_cost_weight(
+            &self.model,
+            device,
+            self.cfg.tensor_parallel,
+        ))
+    }
+
+    /// Scale down: stop routing to replica `i`; its in-flight work drains
+    /// naturally and its history stays in the fleet metrics.
+    pub fn drain_replica(&mut self, i: usize) {
+        self.router.drain(i);
+    }
+
+    /// Return a drained replica to service.
+    pub fn undrain_replica(&mut self, i: usize) {
+        self.router.undrain(i);
     }
 
     fn enqueue(&mut self, due: f64, req: Request) {
@@ -150,31 +226,96 @@ impl ClusterSim {
         }
     }
 
-    /// Run until every submitted request has completed; returns the
-    /// fleet-level summary (merged per-replica metrics over the fleet
-    /// makespan).
-    pub fn run_to_completion(&mut self) -> MetricsSummary {
+    /// Advance the merged event loop until no event remains at or before
+    /// `limit` (events are atomic: a step that *starts* at or before the
+    /// limit runs to its end, so control ticks land on step boundaries).
+    /// Returns `true` while any work — queued arrival or replica work —
+    /// remains beyond the limit.
+    fn pump(&mut self, limit: f64) -> bool {
         loop {
             let next_due = self.queue.front().map(|(t, _)| *t);
             let busy = self.earliest_busy();
             match (next_due, busy) {
-                (Some(t), Some((_, tc))) if t <= tc => self.deliver(),
-                (_, Some((i, _))) => self.step_replica(i),
-                (Some(_), None) => self.deliver(),
-                (None, None) => break,
+                (Some(t), Some((_, tc))) if t <= tc => {
+                    if t > limit {
+                        return true;
+                    }
+                    self.deliver();
+                }
+                (_, Some((i, tc))) => {
+                    if tc > limit {
+                        return true;
+                    }
+                    self.step_replica(i);
+                }
+                (Some(t), None) => {
+                    if t > limit {
+                        return true;
+                    }
+                    self.deliver();
+                }
+                (None, None) => return false,
             }
         }
+    }
+
+    /// Seal per-replica makespans and merge the fleet summary.
+    fn finalize(&mut self) -> MetricsSummary {
         for e in &mut self.replicas {
             e.metrics.makespan = e.clock();
         }
         self.fleet_metrics().summary()
     }
 
+    /// Run until every submitted request has completed; returns the
+    /// fleet-level summary (merged per-replica metrics over the fleet
+    /// makespan).
+    pub fn run_to_completion(&mut self) -> MetricsSummary {
+        let more = self.pump(f64::INFINITY);
+        debug_assert!(!more, "pump(inf) drains everything");
+        self.finalize()
+    }
+
+    /// Run to completion with `ctl` in the loop: every `ctl` interval of
+    /// virtual time the controller observes the recent window and may add
+    /// or drain replicas (`serving::autoscale`).
+    pub fn run_autoscaled(&mut self, ctl: &mut Autoscaler) -> MetricsSummary {
+        let mut tick = ctl.interval_s();
+        while self.pump(tick) {
+            ctl.control(self, tick);
+            tick += ctl.interval_s();
+        }
+        self.finalize()
+    }
+
+    /// SLO attainment over requests that finished at or after `since`,
+    /// across every replica *without* cloning metric history — the
+    /// autoscaler reads this every control tick, so it must stay O(window)
+    /// rather than O(run length). `None` when the window saw no
+    /// completions.
+    pub fn window_attainment(&self, since: f64, ttft_slo: f64, tpot_slo: f64) -> Option<f64> {
+        let (mut ok, mut total) = (0usize, 0usize);
+        for e in &self.replicas {
+            // Per-replica completion order is monotone in finish time
+            // (records happen at harvest under an advancing clock), so
+            // the window is a suffix.
+            for m in e.metrics.per_request().iter().rev().take_while(|m| m.finish >= since) {
+                total += 1;
+                if m.meets_slo(ttft_slo, tpot_slo) {
+                    ok += 1;
+                }
+            }
+        }
+        (total > 0).then(|| ok as f64 / total as f64)
+    }
+
     /// Merged per-replica metrics; makespan is the slowest replica's span.
     pub fn fleet_metrics(&self) -> MetricsCollector {
         let mut fleet = MetricsCollector::default();
         for e in &self.replicas {
-            fleet.merge(&e.metrics);
+            let mut m = e.metrics.clone();
+            m.makespan = e.clock();
+            fleet.merge(&m);
         }
         fleet
     }
@@ -197,6 +338,7 @@ impl ClusterSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serving::autoscale::AutoscaleConfig;
     use crate::serving::router::RoutePolicy;
     use crate::workload::DynamicSonnet;
 
@@ -271,5 +413,85 @@ mod tests {
             assert_eq!(c.assignment_of(id), c2.assignment_of(id), "id {id}");
             assert!(c.assignment_of(id).is_some());
         }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_serves_on_both_devices() {
+        let cfg = ServingConfig {
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            route_policy: RoutePolicy::PrefixAffinity,
+            ..Default::default()
+        }
+        .with_fleet(vec![DeviceKind::Gaudi2, DeviceKind::A100]);
+        let mut c = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        assert_eq!(c.devices(), &[DeviceKind::Gaudi2, DeviceKind::A100]);
+        c.submit_all(DynamicSonnet::default().generate(40, 30.0, 5));
+        let s = c.run_to_completion();
+        assert_eq!(s.requests, 40);
+        // Both devices did real work (the router is cost-aware, not
+        // winner-takes-all).
+        assert!(!c.replica(0).metrics.is_empty(), "Gaudi-2 replica starved");
+        assert!(!c.replica(1).metrics.is_empty(), "A100 replica starved");
+        // Backends really run on different devices.
+        assert_eq!(c.replica(0).backend().device, DeviceKind::Gaudi2);
+        assert_eq!(c.replica(1).backend().device, DeviceKind::A100);
+    }
+
+    #[test]
+    fn drained_replica_gets_no_new_work_but_finishes_in_flight() {
+        let mut c = cluster(2, RoutePolicy::RoundRobin, 10_000);
+        c.submit_all(DynamicSonnet::default().generate(16, f64::INFINITY, 8));
+        // Deliver the burst, then drain replica 1 mid-run.
+        let more = c.pump(0.0);
+        assert!(more);
+        let before = c.router().load_of(1);
+        assert!(before > 0, "replica 1 got part of the burst");
+        c.drain_replica(1);
+        c.submit_all(DynamicSonnet::default().generate(16, f64::INFINITY, 9).into_iter().map(
+            |mut r| {
+                r.id += 100; // distinct ids for the second wave
+                r
+            },
+        ));
+        let s = c.run_to_completion();
+        assert_eq!(s.requests, 32);
+        // Second wave all landed on replica 0.
+        for id in 100..116u64 {
+            assert_eq!(c.assignment_of(id), Some(0), "id {id}");
+        }
+        assert_eq!(c.router().load_of(1), 0, "in-flight work drained");
+    }
+
+    #[test]
+    fn window_attainment_matches_whole_run_attainment() {
+        let mut c = cluster(2, RoutePolicy::RoundRobin, 10_000);
+        c.submit_all(DynamicSonnet::default().generate(20, 40.0, 4));
+        c.run_to_completion();
+        // The whole-history window agrees with the collector's aggregate.
+        let fleet = c.fleet_metrics();
+        assert_eq!(c.window_attainment(0.0, 1.0, 0.1), Some(fleet.slo_attainment(1.0, 0.1)));
+        // Unbounded SLOs: everything complies.
+        assert_eq!(c.window_attainment(0.0, f64::INFINITY, f64::INFINITY), Some(1.0));
+        // A window past the makespan saw no completions.
+        assert_eq!(c.window_attainment(fleet.makespan + 1.0, 1.0, 0.1), None);
+    }
+
+    #[test]
+    fn autoscaled_run_grows_the_fleet_under_load() {
+        let mut c = cluster(1, RoutePolicy::LeastLoaded, 10_000);
+        c.submit_all(crate::workload::OpenLoopTrace::new(40.0, 3.0).generate(17));
+        let mut ctl = Autoscaler::new(AutoscaleConfig {
+            scale_up_device: DeviceKind::Gaudi2,
+            max_replicas: 6,
+            ..Default::default()
+        });
+        let s = c.run_autoscaled(&mut ctl);
+        assert!(s.requests > 60, "trace should be substantial: {}", s.requests);
+        assert_eq!(c.completed(), s.requests);
+        // 40 req/s swamps one replica; the controller must have scaled up.
+        assert!(c.num_replicas() > 1, "expected scale-up, got {} replicas", c.num_replicas());
+        assert!(!ctl.actions().is_empty());
+        assert_eq!(c.router().queued(), 0);
     }
 }

@@ -20,6 +20,10 @@ use crate::serving::trace::{Trace, TraceEvent, TraceStepKind};
 pub struct PrefillItem {
     pub id: RequestId,
     pub prompt_len: usize,
+    /// Shared-prefix group of the request (None = no reusable prefix).
+    /// `SimBackend` costs a warm-prefix prefill cheaper, mirroring the
+    /// routing bias of `RoutePolicy::PrefixAffinity`.
+    pub prefix_id: Option<u64>,
 }
 
 /// A batch of decode work handed to the backend.
@@ -147,6 +151,13 @@ pub struct SimBackend {
     pub device: DeviceKind,
     pub tp: usize,
     pub block_size: usize,
+    /// Prefix groups whose shared prefix this replica has already
+    /// prefilled — its warm prefix cache (vLLM APC-style; no capacity
+    /// modeling yet, see ROADMAP). A warm group's next prefill is costed
+    /// `1 - PREFIX_HIT_DISCOUNT` cheaper, which is exactly the bias
+    /// `RoutePolicy::PrefixAffinity` routes on — the saving the router
+    /// chases is a saving this backend actually delivers.
+    seen_prefixes: crate::util::fasthash::FastMap<u64, ()>,
 }
 
 impl SimBackend {
@@ -156,7 +167,32 @@ impl SimBackend {
             device: cfg.device,
             tp: cfg.tensor_parallel,
             block_size: cfg.block_size,
+            seen_prefixes: crate::util::fasthash::FastMap::default(),
         }
+    }
+
+    /// Effective prompt tokens of one prefill item after prefix-cache
+    /// reuse, updating the warm set.
+    fn effective_prefill_len(&mut self, item: &PrefillItem) -> f64 {
+        match item.prefix_id {
+            Some(p) => {
+                if self.seen_prefixes.insert(p, ()).is_some() {
+                    item.prompt_len as f64 * (1.0 - crate::serving::router::PREFIX_HIT_DISCOUNT)
+                } else {
+                    item.prompt_len as f64
+                }
+            }
+            None => item.prompt_len as f64,
+        }
+    }
+
+    /// Relative decode-cost weight of a replica on `device`: the modeled
+    /// time of one decode step at a reference shape (batch 8, 1K-token KV).
+    /// `ClusterSim` feeds these into `Router::with_costs` so cost-aware
+    /// policies (`RoutePolicy::PrefixAffinity`) can trade a warm prefix
+    /// cache against per-device decode speed in heterogeneous fleets.
+    pub fn decode_cost_weight(model: &LlamaConfig, device: DeviceKind, tp: usize) -> f64 {
+        llama::decode_step_cost(model, device, 8, 1024, tp).time
     }
 
     /// Attention geometry shared by every per-step costing call.
@@ -215,9 +251,12 @@ impl Backend for SimBackend {
             return 0.0;
         }
         // Cost model treats the chunk as one batched prefill at the mean
-        // length (token count preserved).
-        let tokens: usize = batch.iter().map(|i| i.prompt_len).sum();
-        let mean_len = (tokens / batch.len()).max(1);
+        // *effective* length: warm shared prefixes (see `seen_prefixes`)
+        // skip their cached portion, untagged requests pay full price.
+        // Truncating division keeps the untagged path identical to the
+        // old integer-mean computation (whole-token sums floor the same).
+        let tokens: f64 = batch.iter().map(|i| self.effective_prefill_len(i)).sum();
+        let mean_len = ((tokens / batch.len() as f64) as usize).max(1);
         llama::prefill_cost(&self.model, self.device, batch.len(), mean_len, self.tp).time
     }
 
@@ -379,6 +418,7 @@ impl<B: Backend, C: ClockSource> EngineCore<B, C> {
                     .map(|id| PrefillItem {
                         id: *id,
                         prompt_len: self.sched.seq(*id).req.prompt_len,
+                        prefix_id: self.sched.seq(*id).req.prefix_id,
                     })
                     .collect();
                 let tokens: usize = items.iter().map(|i| i.prompt_len).sum();
@@ -608,6 +648,28 @@ mod tests {
             skewed > uniform,
             "skew must cost extra: skewed {skewed} uniform {uniform}"
         );
+    }
+
+    #[test]
+    fn warm_prefix_prefills_cheaper() {
+        // The saving PrefixAffinity routes toward must actually exist in
+        // the backend: second prefill of a prefix group is discounted,
+        // untagged requests always pay full price.
+        let cfg = small_cfg(true);
+        let mut be = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
+        let item = |id: u64, prefix: Option<u64>| PrefillItem {
+            id,
+            prompt_len: 1024,
+            prefix_id: prefix,
+        };
+        let cold = be.prefill(&[item(0, Some(7))]);
+        let warm = be.prefill(&[item(1, Some(7))]);
+        let untagged = be.prefill(&[item(2, None)]);
+        assert!(warm < cold, "warm {warm} vs cold {cold}");
+        assert_eq!(untagged, cold, "untagged requests pay full prefill price");
+        // A different group is cold again.
+        let other_group = be.prefill(&[item(3, Some(8))]);
+        assert_eq!(other_group, cold);
     }
 
     #[test]

@@ -15,6 +15,10 @@ pub struct RequestMetrics {
     pub ttft: f64,
     pub tpot: f64,
     pub e2e: f64,
+    /// Engine-clock completion time — lets controllers (the autoscaler)
+    /// evaluate SLO attainment over a recent window instead of the whole
+    /// run's history.
+    pub finish: f64,
     pub output_tokens: usize,
 }
 
@@ -31,6 +35,7 @@ impl RequestMetrics {
             ttft,
             tpot,
             e2e: finish - s.req.arrival,
+            finish,
             output_tokens: s.generated,
         }
     }
@@ -169,7 +174,7 @@ mod tests {
     }
 
     fn m(id: RequestId, ttft: f64) -> RequestMetrics {
-        RequestMetrics { id, ttft, tpot: 0.01, e2e: 1.0, output_tokens: 100 }
+        RequestMetrics { id, ttft, tpot: 0.01, e2e: 1.0, finish: id as f64, output_tokens: 100 }
     }
 
     #[test]

@@ -6,15 +6,22 @@
 //!     └── EngineCore<B, ClockSource>     ONE step loop: scheduler +
 //!         │                              paged-KV bookkeeping + trace +
 //!         │                              metrics emission
-//!         └── ClusterSim                 N replicas, merged virtual-time
-//!             └── Router                 admission + dispatch policies,
-//!                                        global queue cap (backpressure)
+//!         └── ClusterSim                 N replicas (homogeneous or a
+//!             │                          mixed Gaudi-2/A100 fleet),
+//!             │                          merged virtual-time event loop
+//!             ├── Router                 admission + dispatch policies
+//!             │                          (incl. cost-aware PrefixAffinity),
+//!             │                          global queue cap, drain support
+//!             └── Autoscaler             goodput-driven scale-up/drain
+//!                                        against an SLO target
 //! ```
 //!
 //! All block bookkeeping is identical in the simulated and real paths;
 //! the cluster layer turns the per-device reproduction into a
-//! deployment-scale simulator (`repro run cluster`).
+//! deployment-scale simulator (`repro run cluster`, `repro run
+//! cluster-sweep`).
 
+pub mod autoscale;
 pub mod block_table;
 pub mod cluster;
 pub mod engine;

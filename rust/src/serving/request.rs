@@ -14,12 +14,23 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Arrival time (seconds, engine clock).
     pub arrival: f64,
+    /// Shared-prefix group (system prompt / session id). Requests with the
+    /// same group benefit from landing on a replica whose prefix cache is
+    /// already warm — `RoutePolicy::PrefixAffinity` keys on this. `None`
+    /// means no reusable prefix.
+    pub prefix_id: Option<u64>,
 }
 
 impl Request {
     pub fn new(id: RequestId, prompt_len: usize, max_new_tokens: usize, arrival: f64) -> Self {
         assert!(prompt_len > 0 && max_new_tokens > 0);
-        Request { id, prompt_len, max_new_tokens, arrival }
+        Request { id, prompt_len, max_new_tokens, arrival, prefix_id: None }
+    }
+
+    /// Tag this request as sharing a cached prefix group (builder-style).
+    pub fn with_prefix(mut self, prefix_id: u64) -> Self {
+        self.prefix_id = Some(prefix_id);
+        self
     }
 }
 
@@ -92,5 +103,11 @@ mod tests {
     #[should_panic]
     fn zero_prompt_rejected() {
         Request::new(1, 0, 10, 0.0);
+    }
+
+    #[test]
+    fn prefix_tagging_is_opt_in() {
+        assert_eq!(Request::new(1, 10, 10, 0.0).prefix_id, None);
+        assert_eq!(Request::new(1, 10, 10, 0.0).with_prefix(7).prefix_id, Some(7));
     }
 }

@@ -1,11 +1,28 @@
 //! Request router: admission control and dispatch across engine replicas
 //! (the front door of the serving deployment, vllm-project/router-style).
 //!
-//! Policies: round-robin, least-loaded (by queued prompt tokens), and
-//! session-affinity hashing. The router also enforces a global queue cap,
-//! returning backpressure errors instead of unbounded queueing.
+//! Policies: round-robin, least-loaded (by queued prompt tokens),
+//! session-affinity hashing, and cost-aware prefix affinity
+//! (`PrefixAffinity`): route on prefix-cache hit probability *and*
+//! per-replica decode cost, which is what a heterogeneous Gaudi-2/A100
+//! fleet needs — the two devices' relative throughput shifts with batch
+//! and sequence shape, so a warm prefix on a slower replica can still
+//! beat a cold fast one. The router also enforces a global queue cap
+//! (backpressure instead of unbounded queueing) and supports draining:
+//! a drained replica finishes its in-flight work but receives no new
+//! requests, which is how the autoscaler (`serving::autoscale`) removes
+//! capacity without dropping requests.
 
 use crate::serving::request::Request;
+use crate::util::fasthash::FastMap;
+
+/// Fractional prefill saved when a request lands on the replica whose
+/// prefix cache is warm for its prefix group (vLLM APC-style reuse).
+/// Shared between the router's routing score and `SimBackend`'s prefill
+/// costing, so the router's bias and the simulated saving cannot drift
+/// apart: a warm hit really does prefill cheaper on the replica the
+/// router steered it to.
+pub const PREFIX_HIT_DISCOUNT: f64 = 0.4;
 
 /// Dispatch policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -14,17 +31,26 @@ pub enum RoutePolicy {
     LeastLoaded,
     /// Hash request id (session affinity for prefix caching).
     Affinity,
+    /// Cost-aware prefix affinity: minimize expected cost =
+    /// per-replica decode cost x outstanding load, discounted when the
+    /// request's prefix group was last served by that replica.
+    PrefixAffinity,
 }
 
 impl RoutePolicy {
-    pub const ALL: [RoutePolicy; 3] =
-        [RoutePolicy::RoundRobin, RoutePolicy::LeastLoaded, RoutePolicy::Affinity];
+    pub const ALL: [RoutePolicy; 4] = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastLoaded,
+        RoutePolicy::Affinity,
+        RoutePolicy::PrefixAffinity,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
             RoutePolicy::RoundRobin => "round_robin",
             RoutePolicy::LeastLoaded => "least_loaded",
             RoutePolicy::Affinity => "affinity",
+            RoutePolicy::PrefixAffinity => "prefix_affinity",
         }
     }
 
@@ -34,6 +60,7 @@ impl RoutePolicy {
             "round_robin" | "rr" => Some(RoutePolicy::RoundRobin),
             "least_loaded" | "ll" => Some(RoutePolicy::LeastLoaded),
             "affinity" => Some(RoutePolicy::Affinity),
+            "prefix_affinity" | "pa" => Some(RoutePolicy::PrefixAffinity),
             _ => None,
         }
     }
@@ -45,11 +72,18 @@ impl RoutePolicy {
 #[derive(Debug)]
 pub struct Router {
     policy: RoutePolicy,
-    replicas: usize,
     rr_next: usize,
     /// Outstanding load per replica (prompt+output tokens, decremented by
     /// `complete`).
     load: Vec<u64>,
+    /// Relative per-token decode cost of each replica (any consistent
+    /// scale; `ClusterSim` derives it from the device cost model). Uniform
+    /// 1.0 for homogeneous fleets.
+    cost: Vec<f64>,
+    /// Drained replicas receive no new requests (autoscaler scale-down).
+    drained: Vec<bool>,
+    /// Prefix group -> replica that last served it (warm prefix cache).
+    prefix_home: FastMap<u64, usize>,
     queued: usize,
     max_queued: usize,
 }
@@ -60,8 +94,32 @@ pub struct QueueFull;
 
 impl Router {
     pub fn new(policy: RoutePolicy, replicas: usize, max_queued: usize) -> Router {
-        assert!(replicas > 0);
-        Router { policy, replicas, rr_next: 0, load: vec![0; replicas], queued: 0, max_queued }
+        Router::with_costs(policy, vec![1.0; replicas], max_queued)
+    }
+
+    /// Heterogeneous-fleet constructor: one decode-cost weight per replica.
+    pub fn with_costs(policy: RoutePolicy, costs: Vec<f64>, max_queued: usize) -> Router {
+        assert!(!costs.is_empty(), "router needs at least one replica");
+        assert!(costs.iter().all(|c| c.is_finite() && *c > 0.0), "costs must be positive");
+        let n = costs.len();
+        Router {
+            policy,
+            rr_next: 0,
+            load: vec![0; n],
+            cost: costs,
+            drained: vec![false; n],
+            prefix_home: FastMap::default(),
+            queued: 0,
+            max_queued,
+        }
+    }
+
+    pub fn num_replicas(&self) -> usize {
+        self.load.len()
+    }
+
+    pub fn num_active(&self) -> usize {
+        self.drained.iter().filter(|d| !**d).count()
     }
 
     pub fn queued(&self) -> usize {
@@ -72,6 +130,44 @@ impl Router {
         self.load[replica]
     }
 
+    pub fn cost_of(&self, replica: usize) -> f64 {
+        self.cost[replica]
+    }
+
+    pub fn is_drained(&self, replica: usize) -> bool {
+        self.drained[replica]
+    }
+
+    /// Register a new replica (autoscaler scale-up); returns its index.
+    pub fn add_replica(&mut self, cost: f64) -> usize {
+        assert!(cost.is_finite() && cost > 0.0, "cost must be positive");
+        self.load.push(0);
+        self.cost.push(cost);
+        self.drained.push(false);
+        self.load.len() - 1
+    }
+
+    /// Stop routing new requests to `replica`; its in-flight work drains
+    /// naturally. The last active replica cannot be drained — the fleet
+    /// must always be able to accept work.
+    pub fn drain(&mut self, replica: usize) {
+        assert!(
+            self.drained[replica] || self.num_active() > 1,
+            "cannot drain the last active replica"
+        );
+        self.drained[replica] = true;
+    }
+
+    /// Return a drained replica to service (autoscaler scale-up reuse).
+    pub fn undrain(&mut self, replica: usize) {
+        self.drained[replica] = false;
+    }
+
+    /// Active (non-drained) replica indices, ascending.
+    fn active(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.load.len()).filter(|&i| !self.drained[i])
+    }
+
     /// Route a request; returns the replica index.
     pub fn route(&mut self, req: &Request) -> Result<usize, QueueFull> {
         if self.queued >= self.max_queued {
@@ -79,25 +175,57 @@ impl Router {
         }
         let idx = match self.policy {
             RoutePolicy::RoundRobin => {
-                let i = self.rr_next;
-                self.rr_next = (self.rr_next + 1) % self.replicas;
+                // First active replica at or after the cursor (wrapping).
+                let n = self.load.len();
+                let i = (0..n)
+                    .map(|k| (self.rr_next + k) % n)
+                    .find(|&i| !self.drained[i])
+                    .expect("at least one active replica");
+                self.rr_next = (i + 1) % n;
                 i
             }
             RoutePolicy::LeastLoaded => self
-                .load
-                .iter()
-                .enumerate()
-                .min_by_key(|(_, l)| **l)
-                .map(|(i, _)| i)
-                .unwrap(),
+                .active()
+                .min_by_key(|&i| self.load[i])
+                .expect("at least one active replica"),
             RoutePolicy::Affinity => {
-                // Fibonacci hash of the request id.
-                (req.id.wrapping_mul(0x9E3779B97F4A7C15) >> 32) as usize % self.replicas
+                // Fibonacci hash of the request id over the active set
+                // (nth-active selection, no per-request allocation).
+                let h = (req.id.wrapping_mul(0x9E3779B97F4A7C15) >> 32) as usize;
+                self.active()
+                    .nth(h % self.num_active())
+                    .expect("at least one active replica")
             }
+            RoutePolicy::PrefixAffinity => self.prefix_affinity_pick(req),
         };
+        debug_assert!(!self.drained[idx], "routed to a drained replica");
         self.load[idx] += (req.prompt_len + req.max_new_tokens) as u64;
         self.queued += 1;
+        if self.policy == RoutePolicy::PrefixAffinity {
+            if let Some(p) = req.prefix_id {
+                self.prefix_home.insert(p, idx);
+            }
+        }
         Ok(idx)
+    }
+
+    /// Expected-cost minimizer: `cost[r] x (outstanding + this request)`,
+    /// discounted by `PREFIX_HIT_DISCOUNT` on the replica whose prefix
+    /// cache is warm for the request's prefix group. Ties break to the
+    /// lowest index, so routing is deterministic.
+    fn prefix_affinity_pick(&self, req: &Request) -> usize {
+        let work = (req.prompt_len + req.max_new_tokens) as u64;
+        let home = req.prefix_id.and_then(|p| self.prefix_home.get(&p)).copied();
+        let mut best: Option<(usize, f64)> = None;
+        for i in self.active() {
+            let hit = home == Some(i);
+            let factor = if hit { 1.0 - PREFIX_HIT_DISCOUNT } else { 1.0 };
+            let score = self.cost[i] * (self.load[i] + work) as f64 * factor;
+            if best.is_none_or(|(_, s)| score < s) {
+                best = Some((i, score));
+            }
+        }
+        best.expect("at least one active replica").0
     }
 
     /// Mark a request complete on its replica.
@@ -121,6 +249,16 @@ mod tests {
         let mut r = Router::new(RoutePolicy::RoundRobin, 3, 100);
         let idx: Vec<usize> = (0..6).map(|i| r.route(&req(i, 10)).unwrap()).collect();
         assert_eq!(idx, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_drained() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 3, 100);
+        r.drain(1);
+        let idx: Vec<usize> = (0..4).map(|i| r.route(&req(i, 10)).unwrap()).collect();
+        assert_eq!(idx, vec![0, 2, 0, 2]);
+        r.undrain(1);
+        assert_eq!(r.route(&req(9, 10)).unwrap(), 1);
     }
 
     #[test]
@@ -159,6 +297,7 @@ mod tests {
             assert_eq!(RoutePolicy::parse(p.name()), Some(p));
         }
         assert_eq!(RoutePolicy::parse("rr"), Some(RoutePolicy::RoundRobin));
+        assert_eq!(RoutePolicy::parse("pa"), Some(RoutePolicy::PrefixAffinity));
         assert_eq!(RoutePolicy::parse("nope"), None);
     }
 
@@ -171,5 +310,82 @@ mod tests {
         r.complete(i, &q);
         assert_eq!(r.load_of(i), 0);
         assert_eq!(r.queued(), 0);
+    }
+
+    #[test]
+    fn prefix_affinity_prefers_cheap_idle_replica() {
+        // Replica 0 is 2x the cost of replica 1: with equal load, traffic
+        // without a warm prefix goes to the cheap one.
+        let mut r = Router::with_costs(RoutePolicy::PrefixAffinity, vec![2.0, 1.0], 100);
+        assert_eq!(r.route(&req(0, 10)).unwrap(), 1);
+    }
+
+    #[test]
+    fn prefix_affinity_sticks_to_warm_replica() {
+        let mut r = Router::new(RoutePolicy::PrefixAffinity, 2, 100);
+        let a = r.route(&req(0, 100).with_prefix(7)).unwrap();
+        // Balance the load with an unrelated request on the other replica.
+        let other = r.route(&req(1, 100)).unwrap();
+        assert_ne!(a, other);
+        // With equal load, the same prefix group follows the warm cache...
+        let b = r.route(&req(2, 100).with_prefix(7)).unwrap();
+        assert_eq!(a, b);
+        // ...and a different prefix group balances to the lighter replica.
+        let c = r.route(&req(3, 100).with_prefix(8)).unwrap();
+        assert_eq!(c, other);
+    }
+
+    #[test]
+    fn prefix_affinity_cost_beats_weak_warmth() {
+        // The 40% prefix discount cannot make up a 10x decode-cost gap:
+        // once the cheap replica's queue clears, prefix traffic whose
+        // cache is warm on the expensive replica still routes away.
+        let mut r = Router::with_costs(RoutePolicy::PrefixAffinity, vec![1.0, 10.0], 100);
+        // Bury the cheap replica so the prefix group lands (and warms) on
+        // the expensive one.
+        let big: Vec<Request> = (0..4).map(|i| req(i, 1000)).collect();
+        let placed: Vec<usize> = big.iter().map(|q| r.route(q).unwrap()).collect();
+        assert!(placed.iter().all(|&i| i == 0), "bulk load fills the cheap replica");
+        assert_eq!(r.route(&req(10, 10).with_prefix(3)).unwrap(), 1, "warm on expensive");
+        // Clear the cheap replica's queue.
+        for (idx, q) in placed.iter().zip(&big) {
+            r.complete(*idx, q);
+        }
+        // Warmth (x0.6) on a 10x-cost replica loses to the idle cheap one.
+        assert_eq!(r.route(&req(11, 10).with_prefix(3)).unwrap(), 0);
+    }
+
+    #[test]
+    fn drain_never_receives_new_work() {
+        for policy in RoutePolicy::ALL {
+            let mut r = Router::new(policy, 3, 1000);
+            r.drain(2);
+            for i in 0..30 {
+                let idx = r.route(&req(i, 10).with_prefix(i % 4)).unwrap();
+                assert_ne!(idx, 2, "{policy:?} routed to a drained replica");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "last active replica")]
+    fn cannot_drain_last_active() {
+        let mut r = Router::new(RoutePolicy::RoundRobin, 2, 10);
+        r.drain(0);
+        r.drain(1);
+    }
+
+    #[test]
+    fn add_replica_grows_the_fleet() {
+        let mut r = Router::with_costs(RoutePolicy::LeastLoaded, vec![1.0], 100);
+        assert_eq!(r.num_replicas(), 1);
+        let idx = r.add_replica(2.0);
+        assert_eq!(idx, 1);
+        assert_eq!(r.num_replicas(), 2);
+        assert_eq!(r.num_active(), 2);
+        assert_eq!(r.cost_of(1), 2.0);
+        // New replica is routable immediately.
+        r.route(&req(0, 1000)).unwrap();
+        assert_eq!(r.route(&req(1, 10)).unwrap(), 1);
     }
 }

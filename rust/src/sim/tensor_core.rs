@@ -76,7 +76,7 @@ pub fn run_gemm(spec: &DeviceSpec, m: usize, k: usize, n: usize, dtype: Dtype) -
             memory_bound: mem_time > compute_time,
             wave_efficiency: wave_eff,
         };
-        if best.as_ref().map_or(true, |b| cand.time < b.time) {
+        if best.as_ref().is_none_or(|b| cand.time < b.time) {
             best = Some(cand);
         }
     }

@@ -20,15 +20,38 @@ pub fn fixed_batch(n: usize, input_len: usize, output_len: usize) -> Vec<Request
 pub struct DynamicSonnet {
     pub max_input: usize,
     pub max_output: usize,
+    /// Number of shared-prefix groups (system prompts / sessions) to tag
+    /// requests with, for `RoutePolicy::PrefixAffinity`. 0 (the default)
+    /// leaves requests untagged. The tag is derived from the request id,
+    /// NOT from the RNG, so enabling prefixes never perturbs the length
+    /// or arrival streams of an existing seed.
+    pub prefix_groups: usize,
 }
 
 impl Default for DynamicSonnet {
     fn default() -> Self {
-        DynamicSonnet { max_input: 2048, max_output: 512 }
+        DynamicSonnet { max_input: 2048, max_output: 512, prefix_groups: 0 }
     }
 }
 
 impl DynamicSonnet {
+    /// Tag generated requests with `groups` shared-prefix groups
+    /// (builder-style; 0 disables tagging).
+    pub fn with_prefix_groups(mut self, groups: usize) -> Self {
+        self.prefix_groups = groups;
+        self
+    }
+
+    /// Request-id -> prefix-group tag (id-derived, RNG-free; see
+    /// `prefix_groups`).
+    fn tag(&self, req: Request) -> Request {
+        if self.prefix_groups == 0 {
+            return req;
+        }
+        let group = req.id % self.prefix_groups as u64;
+        req.with_prefix(group)
+    }
+
     /// Generate `n` requests arriving by a Poisson process of `rate`
     /// requests/sec (rate = infinity ⇒ all at t=0).
     pub fn generate(&self, n: usize, rate: f64, seed: u64) -> Vec<Request> {
@@ -47,7 +70,7 @@ impl DynamicSonnet {
                 // Output: lognormal-ish around 128 tokens.
                 let out = (rng.normal(4.8, 0.6).exp()).round() as usize;
                 let output = out.clamp(8, self.max_output);
-                Request::new(i, input, output, t)
+                self.tag(Request::new(i, input, output, t))
             })
             .collect()
     }
@@ -74,6 +97,13 @@ impl OpenLoopTrace {
         OpenLoopTrace { workload: DynamicSonnet::default(), rate, duration }
     }
 
+    /// Tag generated requests with `groups` shared-prefix groups
+    /// (builder-style; RNG-free, see `DynamicSonnet::prefix_groups`).
+    pub fn with_prefix_groups(mut self, groups: usize) -> Self {
+        self.workload.prefix_groups = groups;
+        self
+    }
+
     /// Generate the trace (request count is Poisson-distributed around
     /// `rate * duration`; ids are sequential from 0).
     pub fn generate(&self, seed: u64) -> Vec<Request> {
@@ -92,7 +122,7 @@ impl OpenLoopTrace {
                 .clamp(16, self.workload.max_input);
             let output =
                 ((rng.normal(4.8, 0.6).exp()).round() as usize).clamp(8, self.workload.max_output);
-            out.push(Request::new(id, input, output, t));
+            out.push(self.workload.tag(Request::new(id, input, output, t)));
             id += 1;
         }
     }
@@ -220,6 +250,25 @@ mod tests {
         let again = tr.generate(11);
         assert_eq!(reqs.len(), again.len());
         assert!(reqs.iter().zip(&again).all(|(a, b)| a.prompt_len == b.prompt_len));
+    }
+
+    #[test]
+    fn prefix_tagging_is_rng_free() {
+        let plain = DynamicSonnet::default().generate(30, 12.0, 5);
+        let tagged = DynamicSonnet::default().with_prefix_groups(4).generate(30, 12.0, 5);
+        // Same lengths and arrivals — the tag never consumes RNG draws.
+        for (a, b) in plain.iter().zip(&tagged) {
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.prefix_id, None);
+            assert_eq!(b.prefix_id, Some(b.id % 4));
+        }
+        let open = OpenLoopTrace::new(20.0, 3.0).with_prefix_groups(3).generate(11);
+        let open_plain = OpenLoopTrace::new(20.0, 3.0).generate(11);
+        assert_eq!(open.len(), open_plain.len());
+        assert!(open.iter().all(|r| r.prefix_id == Some(r.id % 3)));
+        assert!(open.iter().zip(&open_plain).all(|(a, b)| a.arrival == b.arrival));
     }
 
     #[test]

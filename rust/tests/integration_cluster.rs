@@ -5,8 +5,9 @@
 
 use std::collections::HashMap;
 
-use cuda_myth::config::ServingConfig;
+use cuda_myth::config::{DeviceKind, ServingConfig};
 use cuda_myth::models::llama::LlamaConfig;
+use cuda_myth::serving::autoscale::{AutoscaleConfig, Autoscaler};
 use cuda_myth::serving::cluster::ClusterSim;
 use cuda_myth::serving::engine::{Engine, SimBackend};
 use cuda_myth::serving::request::{Request, RequestId};
@@ -106,6 +107,118 @@ fn fleet_throughput_is_the_sum_of_replica_throughputs() {
         let e = sim.replica(i);
         assert_eq!(e.sched.kv.num_free(), e.sched.kv.num_blocks());
     }
+}
+
+#[test]
+fn all_gaudi_mixed_fleet_is_bitwise_equal_to_homogeneous_path() {
+    // `fleet: [gaudi2; 3]` must not merely approximate the homogeneous
+    // `replicas: 3, device: gaudi2` deployment — it must BE it: same
+    // router costs, same per-replica configs, same step sequences, so
+    // every per-request metric is the same f64.
+    for policy in [RoutePolicy::RoundRobin, RoutePolicy::PrefixAffinity] {
+        let homog_cfg = base_cfg(3, policy);
+        let mixed_cfg = base_cfg(3, policy).with_fleet(vec![DeviceKind::Gaudi2; 3]);
+        let trace = || DynamicSonnet::default().with_prefix_groups(4).generate(40, 30.0, 42);
+
+        let run = |cfg: &ServingConfig| {
+            let mut sim = ClusterSim::new(cfg, LlamaConfig::llama31_8b());
+            sim.submit_all(trace());
+            sim.run_to_completion();
+            sim
+        };
+        let homog = run(&homog_cfg);
+        let mixed = run(&mixed_cfg);
+
+        let by_id = |sim: &ClusterSim| -> HashMap<RequestId, (f64, f64, f64)> {
+            sim.fleet_metrics()
+                .per_request()
+                .iter()
+                .map(|m| (m.id, (m.ttft, m.tpot, m.e2e)))
+                .collect()
+        };
+        let h = by_id(&homog);
+        let m = by_id(&mixed);
+        assert_eq!(h.len(), m.len(), "{policy:?}");
+        for (id, hv) in &h {
+            assert_eq!(hv, m.get(id).expect("request served by both"), "{policy:?} id {id}");
+        }
+        assert!(
+            homog.fleet_metrics().makespan == mixed.fleet_metrics().makespan,
+            "{policy:?}: makespan must match exactly"
+        );
+        for i in 0..3 {
+            assert_eq!(
+                homog.replica(i).steps_executed(),
+                mixed.replica(i).steps_executed(),
+                "{policy:?} replica {i}"
+            );
+        }
+        for id in 0..40u64 {
+            assert_eq!(
+                homog.assignment_of(id),
+                mixed.assignment_of(id),
+                "{policy:?}: same routing decision for request {id}"
+            );
+        }
+    }
+}
+
+#[test]
+fn heterogeneous_fleet_conserves_requests_under_prefix_affinity() {
+    let cfg = base_cfg(4, RoutePolicy::PrefixAffinity)
+        .with_fleet(vec![
+            DeviceKind::Gaudi2,
+            DeviceKind::Gaudi2,
+            DeviceKind::A100,
+            DeviceKind::A100,
+        ]);
+    let reqs = OpenLoopTrace::new(25.0, 3.0).with_prefix_groups(6).generate(31);
+    let n = reqs.len();
+    assert!(n > 40, "trace too small: {n}");
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(reqs);
+    let s = sim.run_to_completion();
+    assert_eq!(s.requests, n);
+    let mut ids: Vec<RequestId> = sim.fleet_metrics().per_request().iter().map(|m| m.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "finished set is exactly the trace");
+    assert_eq!(sim.router().queued(), 0);
+    // Every replica returned its KV blocks; both device types served work.
+    let mut served = [0usize; 2];
+    for i in 0..sim.num_replicas() {
+        let e = sim.replica(i);
+        assert_eq!(e.sched.kv.num_free(), e.sched.kv.num_blocks());
+        let kind = if sim.device_of(i) == DeviceKind::Gaudi2 { 0 } else { 1 };
+        served[kind] += e.metrics.len();
+    }
+    assert!(served[0] > 0 && served[1] > 0, "both device types must serve: {served:?}");
+}
+
+#[test]
+fn autoscaled_fleet_conserves_requests_and_scales_up() {
+    let mut sim = ClusterSim::new(
+        &base_cfg(1, RoutePolicy::LeastLoaded),
+        LlamaConfig::llama31_8b(),
+    );
+    let reqs = OpenLoopTrace::new(40.0, 3.0).generate(19);
+    let n = reqs.len();
+    sim.submit_all(reqs);
+    let mut ctl = Autoscaler::new(AutoscaleConfig {
+        scale_up_device: DeviceKind::A100,
+        max_replicas: 6,
+        ..Default::default()
+    });
+    let s = sim.run_autoscaled(&mut ctl);
+    assert_eq!(s.requests, n);
+    assert_eq!(sim.completed(), n);
+    assert_eq!(sim.router().queued(), 0);
+    assert!(sim.num_replicas() > 1, "40 req/s must force a scale-up");
+    assert!(sim.router().num_active() <= 6, "active fleet never exceeds max_replicas");
+    // Every provisioned replica traces back to a logged ScaleUp (some
+    // scale-ups may have reused a drained replica instead of adding one).
+    assert!(ctl.scale_ups() >= sim.num_replicas() - 1);
+    // Scaled-up replicas are A100s.
+    assert_eq!(sim.device_of(sim.num_replicas() - 1), DeviceKind::A100);
 }
 
 #[test]

@@ -201,6 +201,90 @@ fn router_load_accounting_balances_under_random_churn() {
 }
 
 #[test]
+fn prefix_affinity_never_routes_to_a_drained_replica() {
+    // Random interleavings of route / complete / drain / undrain: the
+    // cost-aware prefix-affinity policy (and, by the same invariant,
+    // every other policy) must never place a request on a drained
+    // replica, no matter which prefix was warm where when the drain hit.
+    struct Ops;
+    impl Gen for Ops {
+        type Value = Vec<(u8, u64)>; // (op kind, payload)
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (0..rng.range(1, 150)).map(|_| (rng.below(6) as u8, rng.next_u64())).collect()
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            if v.is_empty() {
+                vec![]
+            } else {
+                vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+            }
+        }
+    }
+    forall(43, 200, &Ops, |ops| {
+        let replicas = 4usize;
+        // Heterogeneous costs so the cost term is exercised too.
+        let costs = vec![1.0, 2.5, 1.0, 7.0];
+        let mut r = Router::with_costs(RoutePolicy::PrefixAffinity, costs, 1 << 20);
+        let mut outstanding: Vec<(usize, Request)> = Vec::new();
+        let mut next_id = 0u64;
+        for &(op, payload) in ops {
+            match op {
+                // Route a request tagged with one of 5 prefix groups.
+                0..=2 => {
+                    let req = Request::new(next_id, 1 + (payload % 700) as usize, 8, 0.0)
+                        .with_prefix(payload % 5);
+                    next_id += 1;
+                    let idx = r.route(&req).unwrap();
+                    if r.is_drained(idx) {
+                        return false; // the property under test
+                    }
+                    outstanding.push((idx, req));
+                }
+                // Complete a random outstanding request.
+                3 => {
+                    if !outstanding.is_empty() {
+                        let (idx, req) = outstanding.remove(payload as usize % outstanding.len());
+                        r.complete(idx, &req);
+                    }
+                }
+                // Drain a random replica (respecting the last-active rule).
+                4 => {
+                    let victim = payload as usize % replicas;
+                    if r.is_drained(victim) || r.num_active() > 1 {
+                        r.drain(victim);
+                    }
+                }
+                // Undrain a random replica.
+                _ => r.undrain(payload as usize % replicas),
+            }
+        }
+        r.num_active() >= 1
+    });
+}
+
+#[test]
+fn autoscaler_desired_replicas_is_monotone_in_offered_load() {
+    use cuda_myth::serving::autoscale::{AutoscaleConfig, Autoscaler};
+    forall(
+        47,
+        300,
+        &PairOf(PairOf(UsizeIn(1, 500), UsizeIn(1, 500)), UsizeIn(1, 400)),
+        |&((a, b), cap_tenths)| {
+            let ctl = Autoscaler::new(AutoscaleConfig {
+                max_replicas: 32,
+                ..Default::default()
+            });
+            let capacity = cap_tenths as f64 / 10.0;
+            let (lo, hi) = (a.min(b) as f64, a.max(b) as f64);
+            let want_lo = ctl.desired_replicas(lo, capacity);
+            let want_hi = ctl.desired_replicas(hi, capacity);
+            // Monotone in offered load, and always inside the bounds.
+            want_lo <= want_hi && (1..=32).contains(&want_lo) && (1..=32).contains(&want_hi)
+        },
+    );
+}
+
+#[test]
 fn router_affinity_is_stable_per_request_id() {
     forall(37, 300, &PairOf(UsizeIn(0, 1_000_000), UsizeIn(2, 9)), |&(id, replicas)| {
         let mut r = Router::new(RoutePolicy::Affinity, replicas, 100);
