@@ -7,7 +7,7 @@ use cuda_myth::config::ServingConfig;
 use cuda_myth::models::llama::LlamaConfig;
 use cuda_myth::serving::block_table::{BlockList, BlockTable};
 use cuda_myth::serving::engine::{Engine, SimBackend};
-use cuda_myth::serving::kv_cache::KvBlockManager;
+use cuda_myth::serving::kv_cache::{EvictionPolicy, KvBlockManager};
 use cuda_myth::serving::request::Request;
 use cuda_myth::serving::scheduler::{Scheduler, Step};
 use cuda_myth::util::benchkit::{black_box, Bencher};
@@ -25,6 +25,21 @@ fn main() {
             m.free(i);
         }
         black_box(m.num_free())
+    });
+
+    b.bench("prefix cache acquire/release churn (32 groups, LRU evict)", || {
+        let mut m = KvBlockManager::new(4096, 128, 0.01)
+            .with_prefix_cache(64, EvictionPolicy::Lru);
+        for round in 0..4u64 {
+            for g in 0..32u64 {
+                let _ = m.acquire_prefix(g, 256 + (g as usize % 5) * 128, 1.0, 8);
+                if round % 2 == 0 {
+                    m.release_prefix(g);
+                }
+            }
+        }
+        while m.evict_one_idle_prefix() {}
+        black_box(m.prefix_stats().evictions)
     });
 
     let mut mgr = KvBlockManager::new(4096, 128, 0.0);

@@ -1,0 +1,170 @@
+#!/usr/bin/env python3
+"""Render latency/goodput curves from ``BENCH_*.json`` experiment artifacts.
+
+The Rust harness (``repro run all --json --out DIR``) writes one typed
+artifact per experiment (schema ``cuda-myth/experiment-v1``): every report
+cell is either a text label or ``{"v": <raw f64>, "unit": "tok/s"}``.
+This script consumes those raw numbers directly — no CSV scraping, no
+re-parsing of formatted strings — and emits one PNG per plottable report
+(>= 2 rows and >= 1 numeric column), e.g. the ``cluster_sweep``
+latency-vs-load frontier curves and the ``cache_sweep`` hit-rate/goodput
+vs capacity curves.
+
+Usage:
+    python python/plot_bench.py <artifact-dir> [--out <plot-dir>]
+
+Exit codes: 0 on success, 2 when the directory holds no artifacts (so a
+CI smoke step fails loudly if the producer broke).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+SCHEMA = "cuda-myth/experiment-v1"
+
+# Units drawn as curves (y-axes); anything else (counts, labels) is
+# context, not a metric worth a line.
+CURVE_UNITS = {
+    "s", "ms", "tok/s", "req/s", "frac", "J/tok", "J", "TFLOPS", "GFLOPS",
+    "GiB/s", "GB/s", "TB/s", "ratio", "W",
+}
+
+
+def slugify(text: str, max_len: int = 60) -> str:
+    slug = re.sub(r"[^a-zA-Z0-9]+", "-", text).strip("-").lower()
+    return slug[:max_len] or "report"
+
+
+def numeric_columns(report: dict) -> list[tuple[int, str, str]]:
+    """(index, column name, unit) for columns whose cells are values."""
+    header = report.get("columns", [])
+    rows = report.get("rows", [])
+    out = []
+    for idx, name in enumerate(header):
+        units = {
+            cell.get("unit")
+            for row in rows
+            if idx < len(row) and isinstance((cell := row[idx]), dict)
+        }
+        if len(units) == 1:
+            out.append((idx, name, units.pop()))
+    return out
+
+
+def column_values(report: dict, idx: int) -> list[float]:
+    # Mirror numeric_columns' short-row tolerance: the schema does not
+    # force every row to be as wide as the header.
+    return [
+        float(cell["v"])
+        if idx < len(row) and isinstance(cell := row[idx], dict)
+        else float("nan")
+        for row in report.get("rows", [])
+    ]
+
+
+def plot_report(experiment: str, report: dict, out_dir: Path) -> Path | None:
+    cols = numeric_columns(report)
+    curves = [(i, name, unit) for i, name, unit in cols if unit in CURVE_UNITS]
+    if len(report.get("rows", [])) < 2 or not curves:
+        return None
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    # X axis: the first numeric column (offered load, capacity, ...) when
+    # one exists, otherwise the row index labeled by the first cell.
+    if cols:
+        x_idx, x_name, x_unit = cols[0]
+        xs = column_values(report, x_idx)
+        x_label = f"{x_name} [{x_unit}]"
+        curves = [c for c in curves if c[0] != x_idx] or curves
+    else:  # pragma: no cover - curves nonempty implies cols nonempty
+        xs = list(range(len(report.get("rows", []))))
+        x_label = "row"
+
+    fig, ax = plt.subplots(figsize=(7, 4.5))
+    twin = None
+    # Group curves by unit; first unit on the left axis, one twin right
+    # axis for the second unit, further units skipped (still listed in
+    # the legend note).
+    units_in_order: list[str] = []
+    for _, _, unit in curves:
+        if unit not in units_in_order:
+            units_in_order.append(unit)
+    for i, name, unit in curves:
+        ys = column_values(report, i)
+        if unit == units_in_order[0]:
+            ax.plot(xs, ys, marker="o", label=f"{name} [{unit}]")
+        elif len(units_in_order) > 1 and unit == units_in_order[1]:
+            if twin is None:
+                twin = ax.twinx()
+                twin.set_ylabel(units_in_order[1])
+            twin.plot(xs, ys, marker="s", linestyle="--", label=f"{name} [{unit}]")
+    ax.set_xlabel(x_label)
+    ax.set_ylabel(units_in_order[0])
+    ax.set_title(f"{experiment}: {report.get('title', '')}"[:100])
+    handles, labels = ax.get_legend_handles_labels()
+    if twin is not None:
+        h2, l2 = twin.get_legend_handles_labels()
+        handles += h2
+        labels += l2
+    if handles:
+        ax.legend(handles, labels, fontsize=7)
+    ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+
+    out = out_dir / f"{experiment}__{slugify(report.get('title', 'report'))}.png"
+    fig.savefig(out, dpi=110)
+    plt.close(fig)
+    return out
+
+
+def plot_artifact(path: Path, out_dir: Path) -> list[Path]:
+    artifact = json.loads(path.read_text())
+    schema = artifact.get("schema")
+    if schema != SCHEMA:
+        print(f"  skipping {path.name}: unknown schema {schema!r}", file=sys.stderr)
+        return []
+    experiment = artifact.get("experiment", path.stem)
+    written = []
+    for report in artifact.get("reports", []):
+        out = plot_report(experiment, report, out_dir)
+        if out is not None:
+            written.append(out)
+    return written
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifact_dir", help="directory holding BENCH_*.json artifacts")
+    ap.add_argument("--out", default=None, help="plot output directory (default: <artifact-dir>/plots)")
+    args = ap.parse_args(argv)
+
+    artifact_dir = Path(args.artifact_dir)
+    artifacts = sorted(artifact_dir.glob("BENCH_*.json"))
+    if not artifacts:
+        print(f"no BENCH_*.json artifacts in '{artifact_dir}'", file=sys.stderr)
+        return 2
+
+    out_dir = Path(args.out) if args.out else artifact_dir / "plots"
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    total = 0
+    for path in artifacts:
+        written = plot_artifact(path, out_dir)
+        total += len(written)
+        for w in written:
+            print(f"wrote {w}")
+    print(f"{total} plot(s) from {len(artifacts)} artifact(s) -> {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,102 @@
+"""Tests for python/plot_bench.py against a synthetic cuda-myth/experiment-v1
+artifact — the same schema `repro run all --json --out DIR` writes, so the
+CI smoke step (`python python/plot_bench.py bench-artifacts`) is covered
+without needing the Rust binary."""
+
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+pytest.importorskip("matplotlib")
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+import plot_bench  # noqa: E402
+
+
+def val(x, unit):
+    return {"v": x, "unit": unit}
+
+
+def synthetic_artifact():
+    return {
+        "schema": "cuda-myth/experiment-v1",
+        "experiment": "cache_sweep",
+        "title": "synthetic",
+        "params": {"seed": 23},
+        "reports": [
+            {
+                "title": "Prefix-cache capacity sweep [warm: 8 groups]",
+                "columns": ["capacity", "blocks", "hit rate", "tok/s", "p99 TTFT s"],
+                "rows": [
+                    ["off", val(0, "count"), val(0.0, "frac"), val(900.0, "tok/s"), val(0.9, "s")],
+                    ["64 blk", val(64, "count"), val(0.55, "frac"), val(980.0, "tok/s"), val(0.7, "s")],
+                    ["unbounded", val(8192, "count"), val(0.9, "frac"), val(1050.0, "tok/s"), val(0.5, "s")],
+                ],
+                "notes": ["synthetic"],
+            },
+            {
+                # Text-only report: nothing to plot, must be skipped.
+                "title": "Cache-sweep derived claims",
+                "columns": ["claim", "value"],
+                "rows": [["parity", val(0.0, "s")]],
+                "notes": [],
+            },
+        ],
+        "expectations": [],
+    }
+
+
+def test_numeric_columns_and_values():
+    report = synthetic_artifact()["reports"][0]
+    cols = plot_bench.numeric_columns(report)
+    names = [name for _, name, _ in cols]
+    assert names == ["blocks", "hit rate", "tok/s", "p99 TTFT s"]
+    units = {name: unit for _, name, unit in cols}
+    assert units["hit rate"] == "frac"
+    idx = next(i for i, name, _ in cols if name == "tok/s")
+    assert plot_bench.column_values(report, idx) == [900.0, 980.0, 1050.0]
+
+
+def test_plots_rendered_from_artifact_dir(tmp_path):
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_cache_sweep.json").write_text(json.dumps(synthetic_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    pngs = sorted(out_dir.glob("*.png"))
+    assert len(pngs) == 1, pngs
+    assert pngs[0].name.startswith("cache_sweep__prefix-cache-capacity-sweep")
+    assert pngs[0].stat().st_size > 1000
+
+
+def test_ragged_rows_do_not_crash(tmp_path):
+    # The artifact schema does not force every row to be header-width;
+    # short rows must become NaN points, not IndexErrors.
+    art = synthetic_artifact()
+    art["reports"][0]["rows"].append(["truncated"])
+    import math
+
+    vals = plot_bench.column_values(art["reports"][0], 3)
+    assert math.isnan(vals[-1]) and vals[0] == 900.0
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_cache_sweep.json").write_text(json.dumps(art))
+    assert plot_bench.main([str(art_dir), "--out", str(tmp_path / "plots")]) == 0
+
+
+def test_empty_dir_fails_loudly(tmp_path):
+    assert plot_bench.main([str(tmp_path)]) == 2
+
+
+def test_unknown_schema_is_skipped(tmp_path):
+    (tmp_path / "BENCH_x.json").write_text(json.dumps({"schema": "other", "reports": []}))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(tmp_path), "--out", str(out_dir)]) == 0
+    assert not list(out_dir.glob("*.png"))
+
+
+def test_slugify():
+    assert plot_bench.slugify("Fig 17(d): SLO knee / sweep") == "fig-17-d-slo-knee-sweep"
+    assert plot_bench.slugify("***") == "report"

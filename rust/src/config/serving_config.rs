@@ -4,6 +4,7 @@
 //! cluster deployment above it (`replicas`, `route_policy`, `max_queued`).
 
 use crate::config::DeviceKind;
+use crate::serving::kv_cache::EvictionPolicy;
 use crate::serving::router::RoutePolicy;
 use crate::util::json::Json;
 
@@ -29,6 +30,14 @@ pub struct ServingConfig {
     pub use_block_list: bool,
     /// Fraction of blocks kept free before admitting new prefills.
     pub watermark: f64,
+    /// Budget (in blocks, out of `num_blocks`) the shared-prefix cache
+    /// may hold resident per replica. 0 disables prefix caching; a value
+    /// >= `num_blocks` is effectively unbounded (only physical pressure
+    /// then limits residency, which reproduces the legacy ever-warm-set
+    /// behavior under ample memory).
+    pub prefix_cache_blocks: usize,
+    /// Which idle shared prefix to evict first under cache pressure.
+    pub eviction: EvictionPolicy,
     /// Data-parallel engine replicas behind the router
     /// (`serving::cluster::ClusterSim`).
     pub replicas: usize,
@@ -55,6 +64,8 @@ impl Default for ServingConfig {
             max_seq_len: 4096,
             use_block_list: true,
             watermark: 0.01,
+            prefix_cache_blocks: 4096,
+            eviction: EvictionPolicy::Lru,
             replicas: 1,
             route_policy: RoutePolicy::RoundRobin,
             max_queued: 4096,
@@ -95,6 +106,15 @@ impl ServingConfig {
             watermark: match j.get("watermark") {
                 None => d.watermark,
                 Some(v) => v.as_f64().ok_or_else(|| anyhow::anyhow!("bad 'watermark'"))?,
+            },
+            prefix_cache_blocks: get_usize("prefix_cache_blocks", d.prefix_cache_blocks)?,
+            eviction: match j.get("eviction") {
+                None => d.eviction,
+                Some(v) => {
+                    let name = v.as_str().ok_or_else(|| anyhow::anyhow!("bad 'eviction'"))?;
+                    EvictionPolicy::parse(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown eviction '{name}'"))?
+                }
             },
             replicas: get_usize("replicas", d.replicas)?,
             route_policy: match j.get("route_policy") {
@@ -143,6 +163,8 @@ impl ServingConfig {
             ("max_seq_len", Json::Num(self.max_seq_len as f64)),
             ("use_block_list", Json::Bool(self.use_block_list)),
             ("watermark", Json::Num(self.watermark)),
+            ("prefix_cache_blocks", Json::Num(self.prefix_cache_blocks as f64)),
+            ("eviction", Json::Str(self.eviction.name().into())),
             ("replicas", Json::Num(self.replicas as f64)),
             ("route_policy", Json::Str(self.route_policy.name().into())),
             ("max_queued", Json::Num(self.max_queued as f64)),
@@ -181,6 +203,8 @@ impl ServingConfig {
         if self.num_blocks == 0 {
             anyhow::bail!("num_blocks must be > 0");
         }
+        // `prefix_cache_blocks` needs no bound: 0 disables prefix caching
+        // and any value >= num_blocks is effectively unbounded.
         if self.max_decode_batch == 0 {
             anyhow::bail!("max_decode_batch must be > 0");
         }
@@ -239,6 +263,30 @@ mod tests {
         assert_eq!(c.block_size, ServingConfig::default().block_size);
         assert_eq!(c.replicas, 1);
         assert_eq!(c.route_policy, RoutePolicy::RoundRobin);
+    }
+
+    #[test]
+    fn prefix_cache_fields_parse_and_roundtrip() {
+        let c = ServingConfig::from_json(
+            r#"{"prefix_cache_blocks": 256, "eviction": "cost_aware"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.prefix_cache_blocks, 256);
+        assert_eq!(c.eviction, EvictionPolicy::CostAware);
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        // Defaults: budget equals the default pool (effectively unbounded),
+        // LRU eviction.
+        let d = ServingConfig::default();
+        assert_eq!(d.prefix_cache_blocks, d.num_blocks);
+        assert_eq!(d.eviction, EvictionPolicy::Lru);
+        // 0 disables; bad names are errors.
+        assert_eq!(
+            ServingConfig::from_json(r#"{"prefix_cache_blocks": 0}"#).unwrap().prefix_cache_blocks,
+            0
+        );
+        assert!(ServingConfig::from_json(r#"{"eviction": "fifo"}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"prefix_cache_blocks": true}"#).is_err());
     }
 
     #[test]

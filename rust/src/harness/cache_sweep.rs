@@ -1,0 +1,438 @@
+//! Cache-sweep experiment: prefix-cache capacity x prefix-group skew —
+//! the memory-capacity question the paper's §4.2 KV-cache study raises,
+//! asked of the *shared-prefix* cache: how much HBM block budget does
+//! prefix reuse need before the routing discount it promises is actually
+//! delivered? Capacity walks from 0 (caching off) to the whole pool
+//! (effectively unbounded) across three request-skew regimes (few hot
+//! prefix groups -> many cold ones), reporting hit rate, evictions,
+//! goodput and energy per token as typed reports.
+//!
+//! Two structural claims are checked: hit rate is monotone non-decreasing
+//! in capacity, and the unbounded configuration reproduces the
+//! pre-refactor ever-warm-set behavior *bitwise* (exact-zero typed
+//! delta) — pinned by replaying the deleted `seen_prefixes` logic in a
+//! harness-local [`LegacyWarmBackend`] oracle. `repro run cache-sweep
+//! --json --out bench/` writes the grid as `BENCH_cache_sweep.json` for
+//! the CI bench-diff gate.
+
+use crate::config::ServingConfig;
+use crate::harness::{Experiment, Params};
+use crate::models::llama::{self, LlamaConfig};
+use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
+use crate::serving::cluster::ClusterSim;
+use crate::serving::engine::{Backend, DecodeWork, Engine, PrefillItem, SimBackend};
+use crate::serving::router::{RoutePolicy, PREFIX_HIT_DISCOUNT};
+use crate::serving::trace::TraceStepKind;
+use crate::util::fasthash::FastMap;
+use crate::workload::DynamicSonnet;
+
+/// KV pool per replica (ample: capacity effects must come from the
+/// prefix budget, not from sequence-block starvation).
+const NUM_BLOCKS: usize = 8192;
+
+/// Prefix-cache budgets swept, in blocks. The last equals the whole pool
+/// — effectively unbounded, the legacy-parity point.
+const CAPACITIES: [usize; 5] = [0, 16, 64, 256, NUM_BLOCKS];
+
+/// (label, prefix groups) per skew regime: fewer groups = hotter reuse.
+const SKEWS: [(&str, usize); 3] =
+    [("hot: 2 groups", 2), ("warm: 8 groups", 8), ("cold: 64 groups", 64)];
+
+struct Knobs {
+    requests: usize,
+    rate_rps: f64,
+    seed: u64,
+    slo_ttft_s: f64,
+    slo_tpot_s: f64,
+}
+
+impl Knobs {
+    fn from(params: &Params) -> Knobs {
+        Knobs {
+            requests: params.get_or("requests", 96.0) as usize,
+            rate_rps: params.get_or("rate_rps", 40.0),
+            seed: params.get_or("seed", 23.0) as u64,
+            slo_ttft_s: params.get_or("slo_ttft_s", 1.0),
+            slo_tpot_s: params.get_or("slo_tpot_s", 0.1),
+        }
+    }
+}
+
+fn sweep_config(capacity: usize) -> ServingConfig {
+    ServingConfig {
+        num_blocks: NUM_BLOCKS,
+        max_decode_batch: 32,
+        prefix_cache_blocks: capacity,
+        route_policy: RoutePolicy::PrefixAffinity,
+        ..Default::default()
+    }
+}
+
+/// One (skew, capacity) grid point.
+struct SweepPoint {
+    capacity: usize,
+    hit_rate: f64,
+    evictions: u64,
+    uncached: u64,
+    submitted: usize,
+    completed: usize,
+    tps: f64,
+    p99_ttft: f64,
+    joule_per_tok: f64,
+    goodput_rps: f64,
+}
+
+fn run_point(k: &Knobs, groups: usize, capacity: usize) -> SweepPoint {
+    let cfg = sweep_config(capacity);
+    let trace =
+        DynamicSonnet::default().with_prefix_groups(groups).generate(k.requests, k.rate_rps, k.seed);
+    let submitted = trace.len();
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(trace);
+    let s = sim.run_to_completion();
+    let stats = sim.fleet_prefix_stats();
+    let fleet = sim.fleet_metrics();
+    SweepPoint {
+        capacity,
+        hit_rate: stats.hit_rate(),
+        evictions: stats.evictions,
+        uncached: stats.uncached,
+        submitted,
+        completed: sim.completed(),
+        tps: s.throughput_tps,
+        p99_ttft: s.p99_ttft,
+        joule_per_tok: s.joule_per_tok,
+        goodput_rps: fleet.goodput_under_slo(k.slo_ttft_s, k.slo_tpot_s),
+    }
+}
+
+/// The pre-refactor warmth oracle: `SimBackend`'s prefill costing with
+/// the deleted `seen_prefixes` ever-warm set re-created locally (first
+/// prefill of a group pays full price and warms it forever; later
+/// prefills are discounted unconditionally). Decode and power delegate
+/// to the real backend. Driving an `Engine` with this backend and
+/// prefix caching *disabled* replays the legacy step sequence exactly —
+/// the executable specification the unbounded-capacity configuration is
+/// diffed against, here and in `rust/tests/proptests.rs` (one oracle,
+/// two gates — keep it single-sourced so they can never drift apart).
+pub struct LegacyWarmBackend {
+    inner: SimBackend,
+    seen: FastMap<u64, ()>,
+}
+
+impl LegacyWarmBackend {
+    pub fn new(model: LlamaConfig, cfg: &ServingConfig) -> LegacyWarmBackend {
+        LegacyWarmBackend { inner: SimBackend::new(model, cfg), seen: FastMap::default() }
+    }
+}
+
+impl Backend for LegacyWarmBackend {
+    fn prefill(&mut self, batch: &[PrefillItem]) -> f64 {
+        if batch.is_empty() {
+            return 0.0;
+        }
+        // Verbatim legacy arithmetic: discounted sum, truncating mean.
+        let tokens: f64 = batch
+            .iter()
+            .map(|i| match i.prefix_id {
+                Some(p) => {
+                    if self.seen.insert(p, ()).is_some() {
+                        i.prompt_len as f64 * (1.0 - PREFIX_HIT_DISCOUNT)
+                    } else {
+                        i.prompt_len as f64
+                    }
+                }
+                None => i.prompt_len as f64,
+            })
+            .sum();
+        let mean_len = ((tokens / batch.len() as f64) as usize).max(1);
+        llama::prefill_cost(&self.inner.model, self.inner.device, batch.len(), mean_len, self.inner.tp)
+            .time
+    }
+
+    fn decode(&mut self, work: &DecodeWork) -> f64 {
+        self.inner.decode(work)
+    }
+
+    fn step_power_w(&self, kind: TraceStepKind) -> f64 {
+        self.inner.step_power_w(kind)
+    }
+}
+
+/// Max per-request metric delta between the unbounded-capacity unified
+/// cache and the legacy warm-set oracle on the same tagged trace —
+/// exact-zero by construction: with the whole pool as budget (nothing
+/// ever evicted) and ample memory, "resident at admission" degenerates
+/// to "seen before", so every step duration is the same f64.
+fn unbounded_vs_legacy_delta(k: &Knobs, groups: usize) -> f64 {
+    let trace = || {
+        DynamicSonnet::default().with_prefix_groups(groups).generate(k.requests, k.rate_rps, k.seed)
+    };
+    let model = LlamaConfig::llama31_8b();
+
+    let unbounded_cfg = sweep_config(NUM_BLOCKS);
+    let mut unified = Engine::new(unbounded_cfg.clone(), SimBackend::new(model, &unbounded_cfg));
+    for r in trace() {
+        unified.submit(r);
+    }
+    unified.run_to_completion();
+
+    // The oracle runs with prefix caching disabled so the block manager
+    // never touches shared blocks — warmth lives in the backend, exactly
+    // as it did before the refactor.
+    let legacy_cfg = sweep_config(0);
+    let mut legacy = Engine::new(legacy_cfg.clone(), LegacyWarmBackend::new(model, &legacy_cfg));
+    for r in trace() {
+        legacy.submit(r);
+    }
+    legacy.run_to_completion();
+
+    unified.metrics.max_request_delta(&legacy.metrics)
+}
+
+pub struct CacheSweep;
+
+impl Experiment for CacheSweep {
+    fn id(&self) -> &'static str {
+        "cache_sweep"
+    }
+
+    fn title(&self) -> &'static str {
+        "Cache sweep: prefix-cache capacity x prefix-group skew (hit rate, evictions, goodput)"
+    }
+
+    fn params(&self) -> Params {
+        Params::new()
+            .with("requests", 96.0)
+            .with("rate_rps", 40.0)
+            .with("seed", 23.0)
+            .with("slo_ttft_s", 1.0)
+            .with("slo_tpot_s", 0.1)
+    }
+
+    fn run(&self, params: &Params) -> Vec<Report> {
+        let k = Knobs::from(params);
+        let mut reports = Vec::new();
+        let mut curves: Vec<(&str, Vec<SweepPoint>)> = Vec::new();
+
+        for (label, groups) in SKEWS {
+            let points: Vec<SweepPoint> =
+                CAPACITIES.iter().map(|&cap| run_point(&k, groups, cap)).collect();
+            let mut r = Report::new(format!(
+                "Prefix-cache capacity sweep [{label}]: {NUM_BLOCKS}-block pool, \
+                 prefix-affinity router"
+            ));
+            r.header(&[
+                "capacity",
+                "blocks",
+                "hit rate",
+                "evictions",
+                "uncached",
+                "served",
+                "tok/s",
+                "p99 TTFT s",
+                "goodput req/s",
+                "J/tok",
+            ]);
+            for p in &points {
+                let cap_label = if p.capacity == 0 {
+                    "off".to_string()
+                } else if p.capacity >= NUM_BLOCKS {
+                    "unbounded".to_string()
+                } else {
+                    format!("{} blk", p.capacity)
+                };
+                r.row(vec![
+                    Cell::text(cap_label),
+                    Cell::count(p.capacity),
+                    Cell::val(p.hit_rate, Unit::Percent),
+                    Cell::count(p.evictions as usize),
+                    Cell::count(p.uncached as usize),
+                    Cell::count(p.completed),
+                    Cell::val(p.tps, Unit::TokPerSec),
+                    Cell::val(p.p99_ttft, Unit::Seconds),
+                    Cell::val(p.goodput_rps, Unit::ReqPerSec),
+                    Cell::val(p.joule_per_tok, Unit::JoulePerTok),
+                ]);
+            }
+            r.note(format!(
+                "Dynamic-Sonnet, {} requests at {} req/s (seed {}), {} shared-prefix groups; \
+                 SLO: TTFT <= {}s, TPOT <= {}s",
+                k.requests, k.rate_rps, k.seed, groups, k.slo_ttft_s, k.slo_tpot_s
+            ));
+            reports.push(r);
+            curves.push((label, points));
+        }
+
+        // Derived claims over the grid.
+        let mut monotonicity_violations = 0usize;
+        let mut conservation = 0usize;
+        let mut unbounded_evictions = 0u64;
+        let mut unbounded_uncached = 0u64;
+        for (_, points) in &curves {
+            for pair in points.windows(2) {
+                // CAPACITIES is ascending; hit rate must not drop.
+                if pair[1].hit_rate < pair[0].hit_rate - 1e-12 {
+                    monotonicity_violations += 1;
+                }
+            }
+            for p in points {
+                conservation += p.submitted.abs_diff(p.completed);
+                if p.capacity >= NUM_BLOCKS {
+                    unbounded_evictions += p.evictions;
+                    unbounded_uncached += p.uncached;
+                }
+            }
+        }
+        let parity = unbounded_vs_legacy_delta(&k, SKEWS[1].1);
+        let grid_points: usize = curves.iter().map(|(_, ps)| ps.len()).sum();
+
+        let mut claims = Report::new("Cache-sweep derived claims");
+        claims.header(&["claim", "value"]);
+        claims.row(vec![
+            Cell::text("hit-rate monotonicity violations over the grid"),
+            Cell::count(monotonicity_violations),
+        ]);
+        claims.row(vec![
+            Cell::text("unbounded capacity vs legacy warm-set: max delta"),
+            Cell::val(parity, Unit::Seconds),
+        ]);
+        claims.row(vec![
+            Cell::text("evictions + uncached at unbounded capacity"),
+            Cell::count((unbounded_evictions + unbounded_uncached) as usize),
+        ]);
+        claims.row(vec![
+            Cell::text("request conservation violations over the grid"),
+            Cell::count(conservation),
+        ]);
+        claims.row(vec![Cell::text("grid points swept"), Cell::count(grid_points)]);
+        claims.note(
+            "capacity is swept ascending, so hit rate must be monotone non-decreasing; \
+             the unbounded point must replay the pre-refactor ever-warm set bit-for-bit",
+        );
+        reports.push(claims);
+
+        reports
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "cache_sweep.hit_rate_monotone",
+                "prefix hit rate is monotone non-decreasing in cache capacity",
+                Selector::cell(
+                    "Cache-sweep derived claims",
+                    "hit-rate monotonicity violations over the grid",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "cache_sweep.legacy_parity",
+                "unbounded capacity reproduces the legacy warm-set behavior bitwise",
+                Selector::cell(
+                    "Cache-sweep derived claims",
+                    "unbounded capacity vs legacy warm-set: max delta",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "cache_sweep.unbounded_never_evicts",
+                "an unbounded cache neither evicts nor refuses residency",
+                Selector::cell(
+                    "Cache-sweep derived claims",
+                    "evictions + uncached at unbounded capacity",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "cache_sweep.conservation",
+                "every submitted request completes exactly once at every grid point",
+                Selector::cell(
+                    "Cache-sweep derived claims",
+                    "request conservation violations over the grid",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "cache_sweep.full_grid",
+                "the sweep covers every (skew, capacity) grid point",
+                Selector::cell("Cache-sweep derived claims", "grid points swept", "value"),
+                Check::Ge((SKEWS.len() * CAPACITIES.len()) as f64),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    CacheSweep.run(&CacheSweep.params())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_params() -> Params {
+        CacheSweep.params().with("requests", 32.0).with("rate_rps", 60.0)
+    }
+
+    #[test]
+    fn one_report_per_skew_plus_claims() {
+        let reports = CacheSweep.run(&small_params());
+        assert_eq!(reports.len(), SKEWS.len() + 1);
+        for (i, (label, _)) in SKEWS.iter().enumerate() {
+            assert!(reports[i].title().contains(label), "report {i} mislabeled");
+            assert_eq!(reports[i].num_rows(), CAPACITIES.len());
+        }
+    }
+
+    #[test]
+    fn capacity_zero_never_hits_and_unbounded_hits_most() {
+        let k = Knobs::from(&small_params());
+        let off = run_point(&k, 8, 0);
+        assert_eq!(off.hit_rate, 0.0);
+        assert_eq!(off.evictions, 0);
+        assert!(off.uncached > 0, "every acquisition is refused at capacity 0");
+        let unbounded = run_point(&k, 8, NUM_BLOCKS);
+        assert!(unbounded.hit_rate > off.hit_rate);
+        assert_eq!(unbounded.evictions, 0);
+        assert_eq!(unbounded.uncached, 0);
+        // Hits buy throughput (cheaper prefills) on the same trace.
+        assert!(unbounded.tps >= off.tps, "{} vs {}", unbounded.tps, off.tps);
+        assert_eq!(unbounded.submitted, unbounded.completed);
+    }
+
+    #[test]
+    fn tight_capacity_evicts_under_cold_skew() {
+        let k = Knobs::from(&small_params());
+        // 64 groups cannot fit in 16 blocks: eviction churn must show up.
+        let tight = run_point(&k, 64, 16);
+        assert!(
+            tight.evictions > 0 || tight.uncached > 0,
+            "16 blocks over 64 groups must pressure the cache"
+        );
+    }
+
+    #[test]
+    fn legacy_parity_is_exact() {
+        let k = Knobs::from(&small_params());
+        for (_, groups) in SKEWS {
+            assert_eq!(unbounded_vs_legacy_delta(&k, groups), 0.0, "{groups} groups");
+        }
+    }
+
+    #[test]
+    fn expectations_pass_on_default_grid() {
+        // The full default grid is the artifact CI gates on; every
+        // expectation must hold there.
+        let reports = run();
+        for e in CacheSweep.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
+    }
+}

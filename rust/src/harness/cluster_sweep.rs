@@ -136,20 +136,7 @@ fn mixed_vs_homogeneous_delta(k: &Knobs) -> f64 {
     homog_cfg.fleet = Vec::new();
     homog_cfg.device = DeviceKind::Gaudi2;
     let homog = run(&homog_cfg);
-    let mut delta = mixed.len().abs_diff(homog.len()) as f64;
-    delta = delta.max((mixed.makespan - homog.makespan).abs());
-    for m in mixed.per_request() {
-        match homog.per_request().iter().find(|h| h.id == m.id) {
-            Some(h) => {
-                delta = delta
-                    .max((m.ttft - h.ttft).abs())
-                    .max((m.tpot - h.tpot).abs())
-                    .max((m.e2e - h.e2e).abs());
-            }
-            None => delta += 1.0,
-        }
-    }
-    delta
+    mixed.max_request_delta(&homog)
 }
 
 pub struct ClusterSweep;

@@ -6,6 +6,7 @@
 //! as typed [`Expectation`]s checked by `repro run --check`.
 
 pub mod ablations;
+pub mod cache_sweep;
 pub mod cluster;
 pub mod cluster_sweep;
 pub mod fig10;
@@ -102,6 +103,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(fig17::Fig17),
         Box::new(cluster::Cluster),
         Box::new(cluster_sweep::ClusterSweep),
+        Box::new(cache_sweep::CacheSweep),
         Box::new(ablations::AblMme),
         Box::new(ablations::AblWatermark),
         Box::new(ablations::ExtMultiRecsys),
@@ -164,11 +166,11 @@ mod tests {
         let ids: Vec<&str> = registry().iter().map(|e| e.id()).collect();
         for required in [
             "table1", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-            "fig13", "fig15", "fig17", "cluster", "cluster_sweep",
+            "fig13", "fig15", "fig17", "cluster", "cluster_sweep", "cache_sweep",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
-        assert_eq!(ids.len(), 19, "registry must keep all 19 entries");
+        assert_eq!(ids.len(), 20, "registry must keep all 20 entries");
     }
 
     #[test]
@@ -181,6 +183,7 @@ mod tests {
     fn find_accepts_hyphenated_ids() {
         assert_eq!(find("cluster-sweep").unwrap().id(), "cluster_sweep");
         assert_eq!(find("cluster_sweep").unwrap().id(), "cluster_sweep");
+        assert_eq!(find("cache-sweep").unwrap().id(), "cache_sweep");
         assert!(find("cluster-").is_none());
     }
 

@@ -23,20 +23,28 @@
 //!   ```text
 //!   Backend (SimBackend | PjrtBackend)    step costs: simulated / wall
 //!       └── EngineCore<B, ClockSource>    one shared step loop (scheduler,
-//!           │                             paged KV, trace, metrics)
+//!           │                             paged KV with ref-counted
+//!           │                             shared-prefix blocks under a
+//!           │                             finite budget + LRU/cost-aware
+//!           │                             eviction, trace, metrics+energy)
 //!           └── ClusterSim                N replicas (homogeneous or a
 //!               │                         mixed Gaudi-2/A100 fleet),
 //!               │                         merged virtual time
 //!               ├── Router                dispatch (incl. cost-aware
-//!               │                         prefix affinity) + backpressure
+//!               │                         prefix affinity over real block
+//!               │                         residency) + backpressure
 //!               │                         + drain
 //!               └── Autoscaler            goodput-driven scale-up/drain
+//!                                         + J-per-good-token cost report
 //!   ```
 //!
-//!   `ServingConfig { replicas, route_policy, max_queued, fleet, .. }`
-//!   sizes the fleet; `repro run cluster` produces the iso-SLO Gaudi-2 vs
-//!   A100 replica-count comparison and `repro run cluster-sweep` the
-//!   goodput-under-SLO frontier across fleet mixes.
+//!   `ServingConfig { replicas, route_policy, max_queued, fleet,
+//!   prefix_cache_blocks, eviction, .. }` sizes the fleet; `repro run
+//!   cluster` produces the iso-SLO Gaudi-2 vs A100 replica-count
+//!   comparison, `repro run cluster-sweep` the goodput-under-SLO frontier
+//!   across fleet mixes, and `repro run cache-sweep` the prefix-cache
+//!   capacity x skew grid (hit rate monotone in capacity; unbounded
+//!   capacity bitwise-replays the legacy ever-warm set).
 //! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, lowered at
 //!   build time by `python/compile/aot.py`) and executes them on the PJRT
 //!   CPU client. Python is never on the request path.

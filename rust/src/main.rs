@@ -428,6 +428,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
     sim.submit_all(workload.generate(n, rate, 7));
     let s = sim.run_to_completion();
+    let cache = sim.fleet_prefix_stats();
     if as_json {
         // Pure-JSON stdout (pipe-friendly, like `repro run --json`).
         let mut j = s.to_json();
@@ -435,6 +436,11 @@ fn cmd_serve(args: &[String]) -> i32 {
             m.insert("replicas".into(), Json::Num(replicas as f64));
             m.insert("route_policy".into(), Json::Str(policy.name().into()));
             m.insert("requeues".into(), Json::Num(sim.requeues as f64));
+            m.insert("prefix_cache_hit_rate".into(), Json::Num(cache.hit_rate()));
+            m.insert(
+                "prefix_cache_evictions".into(),
+                Json::Num(cache.evictions as f64),
+            );
         }
         println!("{}", j.dump());
         return 0;
@@ -442,6 +448,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     println!(
         "served {} requests over {} replica(s) [{fleet_desc}] ({}): {:.1} tok/s, \
          mean TTFT {:.1} ms, p99 TTFT {:.1} ms, mean TPOT {:.2} ms, \
+         {:.0} J ({:.3} J/tok), prefix cache {:.0}% hit ({} evictions), \
          {} backpressure requeues",
         s.requests,
         replicas,
@@ -450,6 +457,10 @@ fn cmd_serve(args: &[String]) -> i32 {
         s.mean_ttft * 1e3,
         s.p99_ttft * 1e3,
         s.mean_tpot * 1e3,
+        s.energy_j,
+        s.joule_per_tok,
+        cache.hit_rate() * 100.0,
+        cache.evictions,
         sim.requeues,
     );
     0

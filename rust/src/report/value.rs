@@ -30,6 +30,7 @@ pub enum Unit {
     Seconds,
     TokPerSec,
     ReqPerSec,
+    Joules,
     JoulePerTok,
     /// Dimensionless ratio, rendered as "1.47x".
     Ratio,
@@ -42,7 +43,7 @@ pub enum Unit {
 }
 
 /// Every unit, for JSON tag parsing.
-pub const ALL_UNITS: [Unit; 19] = [
+pub const ALL_UNITS: [Unit; 20] = [
     Unit::Tflops,
     Unit::Gflops,
     Unit::FlopPerByte,
@@ -56,6 +57,7 @@ pub const ALL_UNITS: [Unit; 19] = [
     Unit::Seconds,
     Unit::TokPerSec,
     Unit::ReqPerSec,
+    Unit::Joules,
     Unit::JoulePerTok,
     Unit::Ratio,
     Unit::Percent,
@@ -91,7 +93,7 @@ impl Unit {
             | Unit::TokPerSec
             | Unit::ReqPerSec
             | Unit::Percent => Polarity::HigherIsBetter,
-            Unit::Millis | Unit::Seconds | Unit::JoulePerTok | Unit::Watts => {
+            Unit::Millis | Unit::Seconds | Unit::Joules | Unit::JoulePerTok | Unit::Watts => {
                 Polarity::LowerIsBetter
             }
             Unit::Gigabytes | Unit::Megabytes | Unit::Bytes | Unit::Ratio | Unit::Pp
@@ -115,6 +117,7 @@ impl Unit {
             Unit::Seconds => "s",
             Unit::TokPerSec => "tok/s",
             Unit::ReqPerSec => "req/s",
+            Unit::Joules => "J",
             Unit::JoulePerTok => "J/tok",
             Unit::Ratio => "ratio",
             Unit::Percent => "frac",
@@ -221,7 +224,7 @@ mod tests {
                 Polarity::Neutral => neutral += 1,
             }
         }
-        assert_eq!((hi, lo, neutral), (9, 4, 6));
+        assert_eq!((hi, lo, neutral), (9, 5, 6));
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! effect before the next observation is meaningful.
 
 use crate::config::DeviceKind;
+use crate::report::{Cell, Report, Unit};
 use crate::serving::cluster::ClusterSim;
 
 /// Fraction of a replica's SLO-compliant capacity the sizing rule plans
@@ -204,6 +205,56 @@ impl Autoscaler {
     }
 }
 
+/// Typed per-replica cost report for a (possibly autoscaled) fleet:
+/// busy-time energy from the device power model, J per output token, and
+/// J per *good* token under `cfg`'s SLO — the deployment-cost ledger the
+/// ROADMAP's "autoscaler cost reports" item asks for. Rendered by
+/// `repro run cluster`-style harness callers; the same numbers reach
+/// `repro serve --json` through `MetricsSummary`.
+pub fn cost_report(sim: &ClusterSim, cfg: &AutoscaleConfig) -> Report {
+    let mut r = Report::new(format!(
+        "Fleet energy cost (SLO: TTFT <= {}s, TPOT <= {}s)",
+        cfg.slo_ttft_s, cfg.slo_tpot_s
+    ));
+    r.header(&["replica", "energy", "output tok", "J/tok", "J/good tok", "drained"]);
+    let fmt_good = |c: &crate::serving::metrics::MetricsCollector| match c
+        .energy_per_good_token(cfg.slo_ttft_s, cfg.slo_tpot_s)
+    {
+        Some(j) => Cell::val(j, Unit::JoulePerTok),
+        None => Cell::text("n/a"),
+    };
+    for i in 0..sim.num_replicas() {
+        let m = &sim.replica(i).metrics;
+        let tokens = m.output_tokens();
+        r.row(vec![
+            Cell::text(format!("{} [{}]", i, sim.device_of(i).name())),
+            Cell::val(m.energy_j, Unit::Joules),
+            Cell::count(tokens),
+            Cell::val(
+                if tokens == 0 { 0.0 } else { m.energy_j / tokens as f64 },
+                Unit::JoulePerTok,
+            ),
+            fmt_good(m),
+            Cell::text(if sim.router().is_drained(i) { "yes" } else { "no" }),
+        ]);
+    }
+    let fleet = sim.fleet_metrics();
+    let tokens = fleet.output_tokens();
+    r.row(vec![
+        Cell::text("fleet"),
+        Cell::val(fleet.energy_j, Unit::Joules),
+        Cell::count(tokens),
+        Cell::val(
+            if tokens == 0 { 0.0 } else { fleet.energy_j / tokens as f64 },
+            Unit::JoulePerTok,
+        ),
+        fmt_good(&fleet),
+        Cell::text("-"),
+    ]);
+    r.note("energy = device power model x busy step time, summed per replica");
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -263,5 +314,27 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_capacity_rejected() {
         ctl().desired_replicas(10.0, 0.0);
+    }
+
+    #[test]
+    fn cost_report_covers_every_replica_plus_fleet() {
+        use crate::config::ServingConfig;
+        use crate::models::llama::LlamaConfig;
+        let cfg = ServingConfig { replicas: 2, ..Default::default() };
+        let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        sim.submit_all(crate::workload::DynamicSonnet::default().generate(
+            12,
+            f64::INFINITY,
+            5,
+        ));
+        sim.run_to_completion();
+        let r = cost_report(&sim, &AutoscaleConfig::default());
+        assert_eq!(r.num_rows(), 3, "one row per replica + the fleet total");
+        let energy = r.series("energy").unwrap();
+        assert!(energy.values.iter().all(|&j| j > 0.0), "busy replicas drew energy");
+        // Fleet energy is the sum of the replicas'.
+        assert!((energy.values[2] - (energy.values[0] + energy.values[1])).abs() < 1e-9);
+        let jpt = r.series("J/tok").unwrap();
+        assert!(jpt.values.iter().all(|&x| x.is_finite() && x > 0.0));
     }
 }

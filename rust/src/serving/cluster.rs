@@ -189,10 +189,31 @@ impl ClusterSim {
             .map(|(i, e)| (i, e.clock()))
     }
 
+    /// Is prefix group `prefix_id` resident in replica `i`'s paged KV
+    /// cache right now? The real-residency answer `PrefixAffinity`
+    /// scoring consumes (blocks that survived eviction, not a last-writer
+    /// guess).
+    pub fn prefix_resident(&self, replica: usize, prefix_id: u64) -> bool {
+        self.replicas[replica].sched.kv.prefix_resident(prefix_id)
+    }
+
+    /// Fleet-wide prefix-cache counters (per-replica stats summed).
+    pub fn fleet_prefix_stats(&self) -> crate::serving::kv_cache::PrefixCacheStats {
+        let mut total = crate::serving::kv_cache::PrefixCacheStats::default();
+        for e in &self.replicas {
+            total.merge(&e.sched.kv.prefix_stats());
+        }
+        total
+    }
+
     /// Route the front-of-queue request; requeue on backpressure.
     fn deliver(&mut self) {
         let (due, req) = self.queue.pop_front().expect("deliver called with a queued request");
-        match self.router.route(&req) {
+        let replicas = &self.replicas;
+        match self
+            .router
+            .route_resident(&req, |i, p| replicas[i].sched.kv.prefix_resident(p))
+        {
             Ok(idx) => {
                 self.assignment.insert(req.id, idx);
                 self.replicas[idx].submit(req);
@@ -461,6 +482,34 @@ mod tests {
             assert_eq!(c.assignment_of(id), Some(0), "id {id}");
         }
         assert_eq!(c.router().load_of(1), 0, "in-flight work drained");
+    }
+
+    #[test]
+    fn prefix_affinity_routes_on_real_residency() {
+        let cfg = ServingConfig {
+            replicas: 2,
+            route_policy: RoutePolicy::PrefixAffinity,
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            ..Default::default()
+        };
+        let mut c = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        c.submit_all(DynamicSonnet::default().with_prefix_groups(4).generate(40, 25.0, 21));
+        let s = c.run_to_completion();
+        assert_eq!(s.requests, 40);
+        let stats = c.fleet_prefix_stats();
+        assert!(stats.hits > 0, "steered traffic must hit resident prefixes: {stats:?}");
+        assert_eq!(stats.uncached, 0, "default budget never refuses residency");
+        // Whatever is resident at the end is queryable per replica, and
+        // the blocks it holds are accounted (free + resident == total).
+        for i in 0..c.num_replicas() {
+            let kv = &c.replica(i).sched.kv;
+            let resident: usize =
+                (0..4u64).filter(|&p| c.prefix_resident(i, p)).count();
+            assert_eq!(resident, kv.num_resident_prefixes());
+            assert_eq!(kv.num_free() + kv.prefix_resident_blocks(), kv.num_blocks());
+            assert!(kv.check_conservation());
+        }
     }
 
     #[test]

@@ -21,9 +21,13 @@ pub struct PrefillItem {
     pub id: RequestId,
     pub prompt_len: usize,
     /// Shared-prefix group of the request (None = no reusable prefix).
-    /// `SimBackend` costs a warm-prefix prefill cheaper, mirroring the
-    /// routing bias of `RoutePolicy::PrefixAffinity`.
     pub prefix_id: Option<u64>,
+    /// Whether the scheduler found the group's shared blocks *resident*
+    /// in the paged KV cache when it admitted this sequence. `SimBackend`
+    /// costs a resident-prefix prefill cheaper — the same discount
+    /// `RoutePolicy::PrefixAffinity` routes on, now backed by real block
+    /// residency instead of an ever-warm set.
+    pub prefix_hit: bool,
 }
 
 /// A batch of decode work handed to the backend.
@@ -63,6 +67,19 @@ pub trait Backend {
     /// here rather than silently corrupting generation state.
     fn preempt(&mut self, id: RequestId) {
         self.release(id);
+    }
+    /// Recompute-cost weight for `EvictionPolicy::CostAware` prefix
+    /// eviction (any consistent positive scale; the engine threads it
+    /// into the scheduler's block manager at construction).
+    fn prefix_recompute_weight(&self) -> f64 {
+        1.0
+    }
+    /// Device power draw (watts) while executing a step of `kind` — the
+    /// activity-based model of `sim::power` for simulated backends, 0 for
+    /// backends that do not model energy. The engine accumulates
+    /// `duration x draw` into `MetricsCollector::energy_j`.
+    fn step_power_w(&self, _kind: TraceStepKind) -> f64 {
+        0.0
     }
 }
 
@@ -146,18 +163,15 @@ impl ClockSource for WallClock {
 }
 
 /// Simulated-device backend: Llama cost model + PagedAttention operator.
+/// Holds no prefix-warmth state of its own: whether a prefill enjoys the
+/// shared-prefix discount is decided by *block residency* in the
+/// scheduler's `KvBlockManager` and arrives here as
+/// `PrefillItem::prefix_hit`.
 pub struct SimBackend {
     pub model: LlamaConfig,
     pub device: DeviceKind,
     pub tp: usize,
     pub block_size: usize,
-    /// Prefix groups whose shared prefix this replica has already
-    /// prefilled — its warm prefix cache (vLLM APC-style; no capacity
-    /// modeling yet, see ROADMAP). A warm group's next prefill is costed
-    /// `1 - PREFIX_HIT_DISCOUNT` cheaper, which is exactly the bias
-    /// `RoutePolicy::PrefixAffinity` routes on — the saving the router
-    /// chases is a saving this backend actually delivers.
-    seen_prefixes: crate::util::fasthash::FastMap<u64, ()>,
 }
 
 impl SimBackend {
@@ -167,22 +181,19 @@ impl SimBackend {
             device: cfg.device,
             tp: cfg.tensor_parallel,
             block_size: cfg.block_size,
-            seen_prefixes: crate::util::fasthash::FastMap::default(),
         }
     }
 
-    /// Effective prompt tokens of one prefill item after prefix-cache
-    /// reuse, updating the warm set.
-    fn effective_prefill_len(&mut self, item: &PrefillItem) -> f64 {
-        match item.prefix_id {
-            Some(p) => {
-                if self.seen_prefixes.insert(p, ()).is_some() {
-                    item.prompt_len as f64 * (1.0 - crate::serving::router::PREFIX_HIT_DISCOUNT)
-                } else {
-                    item.prompt_len as f64
-                }
-            }
-            None => item.prompt_len as f64,
+    /// Effective prompt tokens of one prefill item: a resident shared
+    /// prefix skips its cached portion (`PREFIX_HIT_DISCOUNT`), exactly
+    /// the bias `RoutePolicy::PrefixAffinity` routes on — the saving the
+    /// router chases is delivered only while the blocks actually survive
+    /// in the cache.
+    fn effective_prefill_len(&self, item: &PrefillItem) -> f64 {
+        if item.prefix_hit {
+            item.prompt_len as f64 * (1.0 - crate::serving::router::PREFIX_HIT_DISCOUNT)
+        } else {
+            item.prompt_len as f64
         }
     }
 
@@ -251,10 +262,11 @@ impl Backend for SimBackend {
             return 0.0;
         }
         // Cost model treats the chunk as one batched prefill at the mean
-        // *effective* length: warm shared prefixes (see `seen_prefixes`)
-        // skip their cached portion, untagged requests pay full price.
-        // Truncating division keeps the untagged path identical to the
-        // old integer-mean computation (whole-token sums floor the same).
+        // *effective* length: resident shared prefixes (`prefix_hit`)
+        // skip their cached portion, cold and untagged requests pay full
+        // price. Truncating division keeps the untagged path identical to
+        // the old integer-mean computation (whole-token sums floor the
+        // same).
         let tokens: f64 = batch.iter().map(|i| self.effective_prefill_len(i)).sum();
         let mean_len = ((tokens / batch.len() as f64) as usize).max(1);
         llama::prefill_cost(&self.model, self.device, batch.len(), mean_len, self.tp).time
@@ -287,6 +299,37 @@ impl Backend for SimBackend {
         let this_attn = self.bucketed_attention_time(this_impl, work);
         base.time - default_attn + this_attn
     }
+
+    fn prefix_recompute_weight(&self) -> f64 {
+        SimBackend::decode_cost_weight(&self.model, self.device, self.tp)
+    }
+
+    /// Activity-based step power (`sim::power`): prefill is matrix-bound
+    /// (large batched GEMMs light most of the MME), decode is
+    /// HBM-bandwidth-bound with the array mostly power-gated — the Fig 13
+    /// asymmetry, reused here for the serving energy ledger.
+    fn step_power_w(&self, kind: TraceStepKind) -> f64 {
+        use crate::sim::power::{self, Activity};
+        let comm = if self.tp > 1 { 0.3 } else { 0.0 };
+        let activity = match kind {
+            TraceStepKind::Prefill => Activity {
+                matrix_util: 0.75,
+                matrix_active_fraction: 0.9,
+                vector_util: 0.3,
+                hbm_util: 0.55,
+                comm_util: comm,
+            },
+            TraceStepKind::Decode => Activity {
+                matrix_util: 0.25,
+                matrix_active_fraction: 0.4,
+                vector_util: 0.2,
+                hbm_util: 0.9,
+                comm_util: comm,
+            },
+            TraceStepKind::Idle => Activity::default(),
+        };
+        power::power(self.device, activity)
+    }
 }
 
 /// The engine core: owns the scheduler, a backend and a clock source.
@@ -316,8 +359,11 @@ impl<B: Backend> EngineCore<B, VirtualClock> {
 
 impl<B: Backend, C: ClockSource> EngineCore<B, C> {
     pub fn with_clock(cfg: ServingConfig, backend: B, clock: C) -> EngineCore<B, C> {
+        let mut sched = Scheduler::new(cfg);
+        // Cost-aware prefix eviction ranks by the device's recompute cost.
+        sched.set_prefix_weight(backend.prefix_recompute_weight());
         EngineCore {
-            sched: Scheduler::new(cfg),
+            sched,
             backend,
             clock,
             metrics: MetricsCollector::default(),
@@ -415,10 +461,14 @@ impl<B: Backend, C: ClockSource> EngineCore<B, C> {
             Step::Prefill(ids) => {
                 let items: Vec<PrefillItem> = ids
                     .iter()
-                    .map(|id| PrefillItem {
-                        id: *id,
-                        prompt_len: self.sched.seq(*id).req.prompt_len,
-                        prefix_id: self.sched.seq(*id).req.prefix_id,
+                    .map(|id| {
+                        let s = self.sched.seq(*id);
+                        PrefillItem {
+                            id: *id,
+                            prompt_len: s.req.prompt_len,
+                            prefix_id: s.req.prefix_id,
+                            prefix_hit: s.prefix_hit,
+                        }
                     })
                     .collect();
                 let tokens: usize = items.iter().map(|i| i.prompt_len).sum();
@@ -426,6 +476,7 @@ impl<B: Backend, C: ClockSource> EngineCore<B, C> {
                 let dt = self.backend.prefill(&items);
                 self.clock.advance(dt);
                 self.steps_executed += 1;
+                self.metrics.energy_j += dt * self.backend.step_power_w(TraceStepKind::Prefill);
                 let now = self.clock.now();
                 self.trace.record(TraceEvent {
                     t_start: t0,
@@ -460,6 +511,7 @@ impl<B: Backend, C: ClockSource> EngineCore<B, C> {
                 let dt = self.backend.decode(&work);
                 self.clock.advance(dt);
                 self.steps_executed += 1;
+                self.metrics.energy_j += dt * self.backend.step_power_w(TraceStepKind::Decode);
                 self.sched.complete_decode(&ids, self.clock.now());
                 self.trace.record(TraceEvent {
                     t_start: t0,
@@ -651,25 +703,48 @@ mod tests {
     }
 
     #[test]
-    fn warm_prefix_prefills_cheaper() {
+    fn resident_prefix_prefills_cheaper() {
         // The saving PrefixAffinity routes toward must actually exist in
-        // the backend: second prefill of a prefix group is discounted,
-        // untagged requests always pay full price.
+        // the backend: a residency hit is discounted, a miss (or an
+        // untagged request) pays full price. The backend keeps no warmth
+        // state — the hit flag comes from the scheduler's block manager.
         let cfg = small_cfg(true);
         let mut be = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
-        let item = |id: u64, prefix: Option<u64>| PrefillItem {
+        let item = |id: u64, prefix: Option<u64>, hit: bool| PrefillItem {
             id,
             prompt_len: 1024,
             prefix_id: prefix,
+            prefix_hit: hit,
         };
-        let cold = be.prefill(&[item(0, Some(7))]);
-        let warm = be.prefill(&[item(1, Some(7))]);
-        let untagged = be.prefill(&[item(2, None)]);
+        let cold = be.prefill(&[item(0, Some(7), false)]);
+        let warm = be.prefill(&[item(1, Some(7), true)]);
+        let untagged = be.prefill(&[item(2, None, false)]);
         assert!(warm < cold, "warm {warm} vs cold {cold}");
         assert_eq!(untagged, cold, "untagged requests pay full prefill price");
-        // A different group is cold again.
-        let other_group = be.prefill(&[item(3, Some(8))]);
-        assert_eq!(other_group, cold);
+    }
+
+    #[test]
+    fn engine_prefix_warmth_is_block_residency() {
+        // End-to-end through the scheduler: the second request of a group
+        // hits only because the first left resident blocks behind; with
+        // the cache budget at 0 every prefill is cold.
+        let run = |prefix_blocks: usize| {
+            let cfg = ServingConfig { prefix_cache_blocks: prefix_blocks, ..small_cfg(true) };
+            let backend = SimBackend::new(LlamaConfig::llama31_8b(), &cfg);
+            let mut e = Engine::new(cfg, backend);
+            // Staggered so the two prefills are separate steps.
+            e.submit(Request::new(0, 1024, 4, 0.0).with_prefix(7));
+            e.submit(Request::new(1, 1024, 4, 1000.0).with_prefix(7));
+            let s = e.run_to_completion();
+            assert_eq!(s.requests, 2);
+            (e.sched.kv.prefix_stats(), e.clock())
+        };
+        let (cached, t_cached) = run(2048);
+        assert_eq!((cached.hits, cached.misses), (1, 1));
+        let (off, t_off) = run(0);
+        assert_eq!((off.hits, off.uncached), (0, 2));
+        // The hit shows up as wall-clock savings on the same workload.
+        assert!(t_cached < t_off, "cached {t_cached} vs cold {t_off}");
     }
 
     #[test]

@@ -4,24 +4,127 @@
 //! the single source of truth the BlockTable / BlockList layouts are
 //! compiled from, and its invariants (no double allocation, conservation,
 //! watermark) are property-tested in `rust/tests/proptests.rs`.
+//!
+//! Shared-prefix caching (vLLM APC-style) lives *inside* this substrate:
+//! a prefix group's cached blocks are ordinary physical blocks from the
+//! same pool, held in a ref-counted registry under a finite block budget
+//! (`ServingConfig::prefix_cache_blocks`). A sequence whose prefix is
+//! resident maps the front of its block list onto the shared blocks
+//! (copy-on-read sharing) and allocates exclusively only for the suffix.
+//! Idle prefixes are evicted under an [`EvictionPolicy`] when the budget
+//! or the physical pool runs dry; prefixes pinned by in-flight sequences
+//! are never evicted. Warmth therefore *is* block residency — there is
+//! no separate ever-warm set anywhere in the stack.
 
 use crate::serving::request::RequestId;
-use crate::util::fasthash::FastMap;
 use crate::util::ceil_div;
+use crate::util::fasthash::FastMap;
 
 /// Physical block index.
 pub type BlockId = u32;
 
-/// Paged KV-cache block manager.
+/// Which idle prefix to evict first when the cache needs room.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Least-recently-used prefix group first.
+    Lru,
+    /// Cheapest-to-recompute first: smallest `recompute weight x tokens`
+    /// score (the weight comes from the device cost model, see
+    /// `SimBackend::decode_cost_weight`), LRU as the tie-break.
+    CostAware,
+}
+
+impl EvictionPolicy {
+    pub const ALL: [EvictionPolicy; 2] = [EvictionPolicy::Lru, EvictionPolicy::CostAware];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvictionPolicy::Lru => "lru",
+            EvictionPolicy::CostAware => "cost_aware",
+        }
+    }
+
+    /// Parse a config-file name (see `ServingConfig::from_json`).
+    pub fn parse(s: &str) -> Option<EvictionPolicy> {
+        match s {
+            "lru" => Some(EvictionPolicy::Lru),
+            "cost_aware" | "cost-aware" => Some(EvictionPolicy::CostAware),
+            _ => None,
+        }
+    }
+}
+
+/// One resident shared-prefix entry.
 #[derive(Debug, Clone)]
-pub struct KvBlockManager {
-    block_size: usize,
-    num_blocks: usize,
-    free: Vec<BlockId>,
-    /// Per-sequence ordered block lists (logical → physical).
-    table: FastMap<RequestId, Vec<BlockId>>,
-    /// Free-block watermark kept in reserve for running sequences.
-    watermark_blocks: usize,
+struct SharedPrefix {
+    blocks: Vec<BlockId>,
+    /// Prefix length in tokens (what a hit saves re-prefilling).
+    tokens: usize,
+    /// Outstanding acquisition pins (scheduler-side admission leases).
+    refcount: usize,
+    /// Sequence tables currently mapping these blocks at their front.
+    /// Tracked independently of `refcount` so eviction can never free a
+    /// block a sequence still references, even under pathological
+    /// pin/release interleavings (property-tested).
+    mapped: usize,
+    /// Logical-clock timestamp of the last acquire (LRU order).
+    last_use: u64,
+    /// Recompute-cost weight recorded at first acquisition (device cost
+    /// model scale; any consistent positive scale ranks correctly).
+    weight: f64,
+}
+
+impl SharedPrefix {
+    /// Evictable: no admission pin and no sequence mapping the blocks.
+    fn idle(&self) -> bool {
+        self.refcount == 0 && self.mapped == 0
+    }
+}
+
+/// Counters of the shared-prefix cache over a manager's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefixCacheStats {
+    /// Acquisitions that found the prefix resident.
+    pub hits: u64,
+    /// Acquisitions that warmed a previously non-resident prefix.
+    pub misses: u64,
+    /// Acquisitions that could not cache at all (no budget / no room).
+    pub uncached: u64,
+    /// Idle prefixes evicted to make room.
+    pub evictions: u64,
+}
+
+impl PrefixCacheStats {
+    /// Hit fraction over all acquisitions (0 when there were none).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses + self.uncached;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Fold another replica's counters into this one.
+    pub fn merge(&mut self, other: &PrefixCacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.uncached += other.uncached;
+        self.evictions += other.evictions;
+    }
+}
+
+/// Outcome of acquiring a shared prefix for one admitted sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefixAcquire {
+    /// The prefix was resident; the sequence shares its blocks (pinned).
+    Hit,
+    /// The prefix was not resident; blocks were allocated so this prefill
+    /// warms it for later sequences (pinned, full prefill price now).
+    Warmed,
+    /// The cache could not hold the prefix (budget zero, or no evictable
+    /// room); the sequence proceeds fully exclusive, nothing pinned.
+    Uncached,
 }
 
 /// Why an allocation was refused.
@@ -33,7 +136,37 @@ pub enum AllocError {
     BelowWatermark,
 }
 
+/// Paged KV-cache block manager.
+#[derive(Debug, Clone)]
+pub struct KvBlockManager {
+    block_size: usize,
+    num_blocks: usize,
+    free: Vec<BlockId>,
+    /// Per-sequence ordered block lists (logical → physical). A prefix-hit
+    /// sequence's list *starts with shared blocks*; `free()` returns only
+    /// the exclusive tail to the free list.
+    table: FastMap<RequestId, Vec<BlockId>>,
+    /// Free-block watermark kept in reserve for running sequences.
+    watermark_blocks: usize,
+    /// Cap on blocks the shared-prefix registry may hold resident.
+    /// 0 disables prefix caching; >= `num_blocks` is effectively
+    /// unbounded (only physical pressure can then limit residency).
+    prefix_capacity: usize,
+    eviction: EvictionPolicy,
+    /// Resident prefix groups.
+    shared: FastMap<u64, SharedPrefix>,
+    /// Physical block -> owning prefix group, for `free()` filtering.
+    shared_owner: FastMap<BlockId, u64>,
+    /// Blocks currently held by the shared registry (Σ entry sizes).
+    shared_blocks_resident: usize,
+    /// Logical clock for LRU ordering.
+    tick: u64,
+    stats: PrefixCacheStats,
+}
+
 impl KvBlockManager {
+    /// A manager with prefix caching disabled (capacity 0) — the substrate
+    /// most unit tests and the real-numerics engine use.
     pub fn new(num_blocks: usize, block_size: usize, watermark: f64) -> Self {
         assert!(num_blocks > 0 && block_size > 0);
         assert!((0.0..0.5).contains(&watermark));
@@ -43,7 +176,22 @@ impl KvBlockManager {
             free: (0..num_blocks as BlockId).rev().collect(),
             table: FastMap::default(),
             watermark_blocks: (watermark * num_blocks as f64).ceil() as usize,
+            prefix_capacity: 0,
+            eviction: EvictionPolicy::Lru,
+            shared: FastMap::default(),
+            shared_owner: FastMap::default(),
+            shared_blocks_resident: 0,
+            tick: 0,
+            stats: PrefixCacheStats::default(),
         }
+    }
+
+    /// Enable shared-prefix caching under a `capacity`-block budget with
+    /// the given eviction policy (builder-style).
+    pub fn with_prefix_cache(mut self, capacity: usize, eviction: EvictionPolicy) -> Self {
+        self.prefix_capacity = capacity;
+        self.eviction = eviction;
+        self
     }
 
     pub fn block_size(&self) -> usize {
@@ -62,45 +210,215 @@ impl KvBlockManager {
         self.num_blocks - self.free.len()
     }
 
+    /// Shared-prefix budget in blocks (0 = caching disabled).
+    pub fn prefix_capacity(&self) -> usize {
+        self.prefix_capacity
+    }
+
+    /// Free blocks held in reserve for running sequences (the scheduler
+    /// folds this into prefix-acquisition reserves).
+    pub fn watermark_blocks(&self) -> usize {
+        self.watermark_blocks
+    }
+
+    pub fn eviction_policy(&self) -> EvictionPolicy {
+        self.eviction
+    }
+
+    /// Blocks currently resident in the shared-prefix registry.
+    pub fn prefix_resident_blocks(&self) -> usize {
+        self.shared_blocks_resident
+    }
+
+    /// Number of resident prefix groups.
+    pub fn num_resident_prefixes(&self) -> usize {
+        self.shared.len()
+    }
+
+    /// Is `prefix_id`'s shared prefix resident right now? This is the
+    /// query `RoutePolicy::PrefixAffinity` scores on — warmth that
+    /// survived eviction, not a last-writer guess.
+    pub fn prefix_resident(&self, prefix_id: u64) -> bool {
+        self.shared.contains_key(&prefix_id)
+    }
+
+    /// Lifetime hit/miss/eviction counters of the prefix cache.
+    pub fn prefix_stats(&self) -> PrefixCacheStats {
+        self.stats
+    }
+
     /// Blocks needed to hold `tokens`.
     pub fn blocks_for(&self, tokens: usize) -> usize {
         ceil_div(tokens, self.block_size)
     }
 
     /// Can a *new* sequence of `tokens` be admitted without dipping below
-    /// the watermark?
+    /// the watermark? (Conservative: ignores any prefix sharing the
+    /// sequence might enjoy.)
     pub fn can_admit(&self, tokens: usize) -> bool {
         self.blocks_for(tokens) + self.watermark_blocks <= self.free.len()
+    }
+
+    /// Acquire the shared prefix `prefix_id` (length `prefix_tokens`,
+    /// recompute weight `weight`) for one sequence about to prefill,
+    /// pinning it against eviction. `reserve` blocks are left untouched in
+    /// the free list so the caller's subsequent sequence allocation cannot
+    /// fail (the scheduler passes the sequence's own block need plus the
+    /// watermark). Idle prefixes are evicted per policy to make room in
+    /// the budget and the pool; when room still cannot be found the
+    /// acquisition degrades to [`PrefixAcquire::Uncached`].
+    pub fn acquire_prefix(
+        &mut self,
+        prefix_id: u64,
+        prefix_tokens: usize,
+        weight: f64,
+        reserve: usize,
+    ) -> PrefixAcquire {
+        self.tick += 1;
+        if let Some(p) = self.shared.get_mut(&prefix_id) {
+            p.refcount += 1;
+            p.last_use = self.tick;
+            self.stats.hits += 1;
+            return PrefixAcquire::Hit;
+        }
+        let need = self.blocks_for(prefix_tokens.max(1));
+        if self.prefix_capacity == 0 || need > self.prefix_capacity {
+            self.stats.uncached += 1;
+            return PrefixAcquire::Uncached;
+        }
+        // Evict idle prefixes until both the budget and the physical pool
+        // have room (never touching `reserve` free blocks).
+        while self.shared_blocks_resident + need > self.prefix_capacity
+            || self.free.len() < need + reserve
+        {
+            if !self.evict_one_idle_prefix() {
+                self.stats.uncached += 1;
+                return PrefixAcquire::Uncached;
+            }
+        }
+        let blocks: Vec<BlockId> =
+            (0..need).map(|_| self.free.pop().expect("room checked")).collect();
+        for &b in &blocks {
+            self.shared_owner.insert(b, prefix_id);
+        }
+        self.shared_blocks_resident += need;
+        self.shared.insert(
+            prefix_id,
+            SharedPrefix {
+                blocks,
+                tokens: prefix_tokens.max(1),
+                refcount: 1,
+                mapped: 0,
+                last_use: self.tick,
+                weight: weight.max(f64::MIN_POSITIVE),
+            },
+        );
+        self.stats.misses += 1;
+        PrefixAcquire::Warmed
+    }
+
+    /// Release one sequence's pin on `prefix_id`. The blocks stay
+    /// resident (warm) until evicted.
+    pub fn release_prefix(&mut self, prefix_id: u64) {
+        if let Some(p) = self.shared.get_mut(&prefix_id) {
+            assert!(p.refcount > 0, "unbalanced release of prefix {prefix_id}");
+            p.refcount -= 1;
+        }
+    }
+
+    /// Evict one idle (unpinned) prefix per the policy; returns whether
+    /// anything was evicted. The scheduler calls this under decode memory
+    /// pressure before resorting to preemption.
+    pub fn evict_one_idle_prefix(&mut self) -> bool {
+        let victim = self
+            .shared
+            .iter()
+            .filter(|(_, p)| p.idle())
+            .min_by(|(_, a), (_, b)| match self.eviction {
+                EvictionPolicy::Lru => a.last_use.cmp(&b.last_use),
+                EvictionPolicy::CostAware => (a.weight * a.tokens as f64)
+                    .total_cmp(&(b.weight * b.tokens as f64))
+                    .then(a.last_use.cmp(&b.last_use)),
+            })
+            .map(|(id, _)| *id);
+        match victim {
+            Some(id) => {
+                let p = self.shared.remove(&id).expect("victim exists");
+                for b in &p.blocks {
+                    self.shared_owner.remove(b);
+                }
+                self.shared_blocks_resident -= p.blocks.len();
+                self.free.extend(p.blocks);
+                self.stats.evictions += 1;
+                true
+            }
+            None => false,
+        }
     }
 
     /// Allocate blocks so sequence `id` can hold `tokens` total. Grows the
     /// existing allocation; never shrinks. New sequences respect the
     /// watermark; growth of existing sequences may consume the reserve.
     pub fn allocate(&mut self, id: RequestId, tokens: usize) -> Result<(), AllocError> {
+        self.allocate_prefixed(id, tokens, None)
+    }
+
+    /// Like [`allocate`](Self::allocate), but a *new* sequence holding a
+    /// pin on resident prefix `prefix_id` maps the front of its block
+    /// list onto the shared blocks and allocates exclusively only for the
+    /// remainder (copy-on-read sharing). Growth of an existing sequence
+    /// ignores `prefix_id` (the share is already mapped).
+    pub fn allocate_prefixed(
+        &mut self,
+        id: RequestId,
+        tokens: usize,
+        prefix_id: Option<u64>,
+    ) -> Result<(), AllocError> {
         let needed_total = self.blocks_for(tokens);
         let have = self.table.get(&id).map_or(0, |v| v.len());
         if needed_total <= have {
             return Ok(());
         }
-        let grow = needed_total - have;
         let is_new = have == 0;
+        let shared_front: Vec<BlockId> = match (is_new, prefix_id) {
+            (true, Some(p)) => self.shared.get(&p).map_or(Vec::new(), |sp| {
+                sp.blocks[..sp.blocks.len().min(needed_total)].to_vec()
+            }),
+            _ => Vec::new(),
+        };
+        let grow = needed_total - have - shared_front.len();
         if grow > self.free.len() {
             return Err(AllocError::OutOfBlocks);
         }
         if is_new && grow + self.watermark_blocks > self.free.len() {
             return Err(AllocError::BelowWatermark);
         }
+        if !shared_front.is_empty() {
+            // The mapping itself blocks eviction (independent of pins).
+            let p = prefix_id.expect("shared front implies a prefix id");
+            self.shared.get_mut(&p).expect("resident checked").mapped += 1;
+        }
         let entry = self.table.entry(id).or_default();
+        entry.extend(shared_front);
         for _ in 0..grow {
             entry.push(self.free.pop().expect("checked length"));
         }
         Ok(())
     }
 
-    /// Free all blocks of sequence `id` (finish or preemption).
+    /// Free all blocks of sequence `id` (finish or preemption). Shared
+    /// prefix blocks mapped at the front of the list stay resident —
+    /// only the exclusive tail returns to the free list. (The scheduler
+    /// releases the prefix *pin* separately via `release_prefix`.)
     pub fn free(&mut self, id: RequestId) {
         if let Some(blocks) = self.table.remove(&id) {
-            self.free.extend(blocks);
+            // A sequence maps at most one group's front; unmap it.
+            if let Some(&g) = blocks.iter().find_map(|b| self.shared_owner.get(b)) {
+                let p = self.shared.get_mut(&g).expect("owned block implies residency");
+                debug_assert!(p.mapped > 0, "unmap without a mapping");
+                p.mapped = p.mapped.saturating_sub(1);
+            }
+            self.free.extend(blocks.into_iter().filter(|b| !self.shared_owner.contains_key(b)));
         }
     }
 
@@ -114,18 +432,40 @@ impl KvBlockManager {
         self.table.keys().copied()
     }
 
-    /// Invariant check used by tests: every block is either free or owned
-    /// by exactly one sequence.
+    /// Invariant check used by tests: every physical block is exactly one
+    /// of free, exclusively owned by one sequence, or resident in the
+    /// shared-prefix registry (where it may be mapped by any number of
+    /// sequence tables); and the resident total respects the budget.
     pub fn check_conservation(&self) -> bool {
         let mut seen = vec![false; self.num_blocks];
         for &b in &self.free {
-            if seen[b as usize] {
+            if seen[b as usize] || self.shared_owner.contains_key(&b) {
                 return false;
             }
             seen[b as usize] = true;
         }
+        let mut shared_count = 0usize;
+        for p in self.shared.values() {
+            for &b in &p.blocks {
+                if seen[b as usize] {
+                    return false;
+                }
+                seen[b as usize] = true;
+                shared_count += 1;
+            }
+        }
+        if shared_count != self.shared_blocks_resident
+            || (self.prefix_capacity > 0 && shared_count > self.prefix_capacity)
+        {
+            return false;
+        }
         for blocks in self.table.values() {
             for &b in blocks {
+                if self.shared_owner.contains_key(&b) {
+                    // Shared block mapped by a sequence: already counted
+                    // once via the registry; sharing is the point.
+                    continue;
+                }
                 if seen[b as usize] {
                     return false;
                 }
@@ -198,5 +538,93 @@ mod tests {
         assert_eq!(m.blocks_for(1), 1);
         assert_eq!(m.blocks_for(128), 1);
         assert_eq!(m.blocks_for(129), 2);
+    }
+
+    #[test]
+    fn prefix_acquire_hit_miss_and_sharing() {
+        let mut m = KvBlockManager::new(16, 128, 0.0).with_prefix_cache(8, EvictionPolicy::Lru);
+        // First acquisition warms: 2 shared blocks leave the free list.
+        assert_eq!(m.acquire_prefix(7, 200, 1.0, 0), PrefixAcquire::Warmed);
+        assert_eq!(m.prefix_resident_blocks(), 2);
+        assert_eq!(m.num_free(), 14);
+        assert!(m.prefix_resident(7));
+        // A sequence with the pin maps the shared front, allocating only
+        // the suffix exclusively: 5 blocks total, 3 exclusive.
+        m.allocate_prefixed(1, 600, Some(7)).unwrap();
+        assert_eq!(m.blocks_of(1).unwrap().len(), 5);
+        assert_eq!(m.num_free(), 11);
+        assert!(m.check_conservation());
+        // Second sequence hits and shares the same front.
+        assert_eq!(m.acquire_prefix(7, 200, 1.0, 0), PrefixAcquire::Hit);
+        m.allocate_prefixed(2, 600, Some(7)).unwrap();
+        assert_eq!(m.blocks_of(2).unwrap()[..2], m.blocks_of(1).unwrap()[..2]);
+        assert!(m.check_conservation());
+        // Freeing a sequence returns only its exclusive tail.
+        m.free(1);
+        m.release_prefix(7);
+        assert_eq!(m.num_free(), 11); // 3 exclusive back, 3 still out for seq 2...
+        assert!(m.prefix_resident(7));
+        m.free(2);
+        m.release_prefix(7);
+        assert_eq!(m.num_free(), 14); // everything but the warm prefix
+        assert!(m.check_conservation());
+        let s = m.prefix_stats();
+        assert_eq!((s.hits, s.misses, s.uncached), (1, 1, 0));
+    }
+
+    #[test]
+    fn pinned_prefix_never_evicted_and_idle_evicts_lru() {
+        // Budget of 2 blocks: one 1-block prefix at a time once pinned.
+        let mut m = KvBlockManager::new(16, 128, 0.0).with_prefix_cache(2, EvictionPolicy::Lru);
+        assert_eq!(m.acquire_prefix(1, 100, 1.0, 0), PrefixAcquire::Warmed);
+        assert_eq!(m.acquire_prefix(2, 100, 1.0, 0), PrefixAcquire::Warmed);
+        // Both pinned; a third group finds no evictable room.
+        assert_eq!(m.acquire_prefix(3, 100, 1.0, 0), PrefixAcquire::Uncached);
+        assert!(m.prefix_resident(1) && m.prefix_resident(2));
+        // Unpin group 1 (the older): group 3 now evicts it, not group 2.
+        m.release_prefix(1);
+        assert_eq!(m.acquire_prefix(3, 100, 1.0, 0), PrefixAcquire::Warmed);
+        assert!(!m.prefix_resident(1));
+        assert!(m.prefix_resident(2) && m.prefix_resident(3));
+        assert_eq!(m.prefix_stats().evictions, 1);
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn cost_aware_evicts_cheapest_recompute_first() {
+        let mut m =
+            KvBlockManager::new(32, 128, 0.0).with_prefix_cache(4, EvictionPolicy::CostAware);
+        // Group 10: big (2 blocks, expensive to recompute); group 11:
+        // small (1 block, cheap). Same weight scale.
+        assert_eq!(m.acquire_prefix(10, 256, 2.0, 0), PrefixAcquire::Warmed);
+        assert_eq!(m.acquire_prefix(11, 100, 2.0, 0), PrefixAcquire::Warmed);
+        m.release_prefix(10);
+        m.release_prefix(11);
+        // A 2-block newcomer must evict: cost-aware picks the cheap small
+        // group even though the big one is older (LRU would pick 10).
+        assert_eq!(m.acquire_prefix(12, 256, 2.0, 0), PrefixAcquire::Warmed);
+        assert!(m.prefix_resident(10), "expensive prefix must survive");
+        assert!(!m.prefix_resident(11), "cheap prefix is the victim");
+        assert!(m.check_conservation());
+    }
+
+    #[test]
+    fn acquire_respects_reserve_and_zero_capacity() {
+        let mut m = KvBlockManager::new(4, 128, 0.0).with_prefix_cache(4, EvictionPolicy::Lru);
+        // Reserving all free blocks leaves no room to warm.
+        assert_eq!(m.acquire_prefix(5, 100, 1.0, 4), PrefixAcquire::Uncached);
+        assert_eq!(m.num_free(), 4);
+        // Capacity 0 never caches.
+        let mut off = KvBlockManager::new(4, 128, 0.0);
+        assert_eq!(off.acquire_prefix(5, 100, 1.0, 0), PrefixAcquire::Uncached);
+        assert_eq!(off.prefix_stats().uncached, 1);
+    }
+
+    #[test]
+    fn free_of_missing_prefix_release_is_harmless() {
+        let mut m = KvBlockManager::new(8, 128, 0.0);
+        m.release_prefix(99); // not resident: no-op
+        m.free(42); // never allocated: no-op
+        assert!(m.check_conservation());
     }
 }

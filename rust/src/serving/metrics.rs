@@ -52,6 +52,10 @@ pub struct MetricsCollector {
     per_request: Vec<RequestMetrics>,
     /// Engine-clock span of the run (set by the engine at the end).
     pub makespan: f64,
+    /// Joules drawn while executing steps (device power model x busy
+    /// time, accumulated by the engine; 0 for backends without an energy
+    /// model). The deployment-cost numerator of J-per-good-token.
+    pub energy_j: f64,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -68,6 +72,10 @@ pub struct MetricsSummary {
     pub throughput_tps: f64,
     /// Requests per second over the makespan.
     pub throughput_rps: f64,
+    /// Busy-time energy over the run (joules).
+    pub energy_j: f64,
+    /// Joules per generated output token (0 when no energy was modeled).
+    pub joule_per_tok: f64,
 }
 
 impl MetricsSummary {
@@ -85,6 +93,8 @@ impl MetricsSummary {
             ("mean_e2e_s", Json::Num(self.mean_e2e)),
             ("throughput_tok_per_s", Json::Num(self.throughput_tps)),
             ("throughput_req_per_s", Json::Num(self.throughput_rps)),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("joule_per_tok", Json::Num(self.joule_per_tok)),
         ])
     }
 }
@@ -118,6 +128,7 @@ impl MetricsCollector {
     pub fn merge(&mut self, other: &MetricsCollector) {
         self.per_request.extend_from_slice(&other.per_request);
         self.makespan = self.makespan.max(other.makespan);
+        self.energy_j += other.energy_j;
     }
 
     /// Goodput under a (TTFT, TPOT) SLO: completed-and-compliant requests
@@ -126,6 +137,45 @@ impl MetricsCollector {
     pub fn goodput_under_slo(&self, ttft_slo: f64, tpot_slo: f64) -> f64 {
         let ok = self.per_request.iter().filter(|m| m.meets_slo(ttft_slo, tpot_slo)).count();
         ok as f64 / self.makespan.max(1e-12)
+    }
+
+    /// Max per-request metric delta against another run on the same
+    /// trace: the largest |TTFT/TPOT/E2E| difference over id-matched
+    /// requests, the |makespan| difference, and +1 for every request
+    /// count mismatch or unmatched id. Exactly 0.0 iff the two runs are
+    /// bitwise-identical — the comparator behind every bitwise-parity
+    /// claim (1-replica cluster ≡ engine, mixed ≡ homogeneous fleet,
+    /// unbounded prefix cache ≡ legacy warm set).
+    pub fn max_request_delta(&self, other: &MetricsCollector) -> f64 {
+        let mut delta = self.per_request.len().abs_diff(other.per_request.len()) as f64;
+        delta = delta.max((self.makespan - other.makespan).abs());
+        for m in &self.per_request {
+            match other.per_request.iter().find(|h| h.id == m.id) {
+                Some(h) => {
+                    delta = delta
+                        .max((m.ttft - h.ttft).abs())
+                        .max((m.tpot - h.tpot).abs())
+                        .max((m.e2e - h.e2e).abs());
+                }
+                None => delta += 1.0,
+            }
+        }
+        delta
+    }
+
+    /// Joules per *good* output token — energy divided by the output
+    /// tokens of SLO-compliant requests: the autoscaler's cost-per-
+    /// goodput metric. `None` when no request met the SLO (cost would be
+    /// infinite) or no energy was modeled.
+    pub fn energy_per_good_token(&self, ttft_slo: f64, tpot_slo: f64) -> Option<f64> {
+        let good_tokens: usize = self
+            .per_request
+            .iter()
+            .filter(|m| m.meets_slo(ttft_slo, tpot_slo))
+            .map(|m| m.output_tokens)
+            .sum();
+        (good_tokens > 0 && self.energy_j > 0.0)
+            .then(|| self.energy_j / good_tokens as f64)
     }
 
     /// Fraction of completed requests meeting the SLO.
@@ -155,6 +205,8 @@ impl MetricsCollector {
             mean_e2e: mean(&e2es),
             throughput_tps: tokens as f64 / span,
             throughput_rps: self.per_request.len() as f64 / span,
+            energy_j: self.energy_j,
+            joule_per_tok: if tokens == 0 { 0.0 } else { self.energy_j / tokens as f64 },
         }
     }
 }
@@ -235,6 +287,31 @@ mod tests {
         assert_eq!(j.get("mean_ttft_s").unwrap().as_f64(), Some(0.25));
         assert_eq!(j.get("throughput_tok_per_s").unwrap().as_f64(), Some(50.0));
         assert_eq!(j.get("throughput_req_per_s").unwrap().as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn energy_merges_and_summarizes() {
+        let mut a = MetricsCollector::default();
+        a.record(m(0, 0.1)); // 100 output tokens
+        a.makespan = 2.0;
+        a.energy_j = 500.0;
+        let mut b = MetricsCollector::default();
+        b.record(m(1, 0.5));
+        b.energy_j = 300.0;
+        a.merge(&b);
+        assert_eq!(a.energy_j, 800.0);
+        let s = a.summary();
+        assert_eq!(s.energy_j, 800.0);
+        assert!((s.joule_per_tok - 4.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("energy_j").unwrap().as_f64(), Some(800.0));
+        assert_eq!(j.get("joule_per_tok").unwrap().as_f64(), Some(s.joule_per_tok));
+        // J per *good* token under a TTFT SLO only request 0 meets.
+        assert_eq!(a.energy_per_good_token(0.2, 1.0), Some(8.0));
+        // Nobody compliant -> no finite cost.
+        assert_eq!(a.energy_per_good_token(0.01, 1.0), None);
+        // No energy modeled -> None.
+        assert_eq!(MetricsCollector::default().energy_per_good_token(1.0, 1.0), None);
     }
 
     #[test]

@@ -4,13 +4,16 @@
 //! ```text
 //! Backend (SimBackend | PjrtBackend)     step costs: simulated or wall
 //!     └── EngineCore<B, ClockSource>     ONE step loop: scheduler +
-//!         │                              paged-KV bookkeeping + trace +
-//!         │                              metrics emission
+//!         │                              paged-KV bookkeeping (incl.
+//!         │                              budgeted shared-prefix blocks
+//!         │                              with eviction) + trace +
+//!         │                              metrics/energy emission
 //!         └── ClusterSim                 N replicas (homogeneous or a
 //!             │                          mixed Gaudi-2/A100 fleet),
 //!             │                          merged virtual-time event loop
 //!             ├── Router                 admission + dispatch policies
-//!             │                          (incl. cost-aware PrefixAffinity),
+//!             │                          (incl. cost-aware PrefixAffinity
+//!             │                          over real block residency),
 //!             │                          global queue cap, drain support
 //!             └── Autoscaler             goodput-driven scale-up/drain
 //!                                        against an SLO target
@@ -19,7 +22,7 @@
 //! All block bookkeeping is identical in the simulated and real paths;
 //! the cluster layer turns the per-device reproduction into a
 //! deployment-scale simulator (`repro run cluster`, `repro run
-//! cluster-sweep`).
+//! cluster-sweep`, `repro run cache-sweep`).
 
 pub mod autoscale;
 pub mod block_table;

@@ -32,6 +32,20 @@ impl Request {
         self.prefix_id = Some(prefix_id);
         self
     }
+
+    /// Tokens of this request's prompt covered by its shared prefix: the
+    /// `PREFIX_HIT_DISCOUNT` fraction a warm hit saves re-prefilling,
+    /// which is therefore also the portion the paged KV substrate keeps
+    /// resident as ref-counted shared blocks. 0 for untagged requests.
+    pub fn prefix_len(&self) -> usize {
+        match self.prefix_id {
+            Some(_) => ((self.prompt_len as f64
+                * crate::serving::router::PREFIX_HIT_DISCOUNT)
+                as usize)
+                .max(1),
+            None => 0,
+        }
+    }
 }
 
 /// Lifecycle phase of a sequence inside the engine.
@@ -62,6 +76,13 @@ pub struct Sequence {
     pub finish_time: Option<f64>,
     /// Times the sequence was preempted (diagnostics / fairness tests).
     pub preemptions: usize,
+    /// Whether the *next* prefill of this sequence found its shared
+    /// prefix resident (set by the scheduler at admission from actual
+    /// block residency; the backend costs the prefill from it).
+    pub prefix_hit: bool,
+    /// Whether this sequence holds a refcount pin on its prefix group's
+    /// shared blocks (released at retirement or preemption).
+    pub prefix_pinned: bool,
 }
 
 impl Sequence {
@@ -74,6 +95,8 @@ impl Sequence {
             first_token_time: None,
             finish_time: None,
             preemptions: 0,
+            prefix_hit: false,
+            prefix_pinned: false,
         }
     }
 
@@ -109,5 +132,17 @@ mod tests {
     fn prefix_tagging_is_opt_in() {
         assert_eq!(Request::new(1, 10, 10, 0.0).prefix_id, None);
         assert_eq!(Request::new(1, 10, 10, 0.0).with_prefix(7).prefix_id, Some(7));
+    }
+
+    #[test]
+    fn prefix_len_is_the_discounted_share() {
+        assert_eq!(Request::new(1, 1000, 10, 0.0).prefix_len(), 0);
+        let tagged = Request::new(1, 1000, 10, 0.0).with_prefix(3);
+        assert_eq!(
+            tagged.prefix_len(),
+            (1000.0 * crate::serving::router::PREFIX_HIT_DISCOUNT) as usize
+        );
+        // Tiny prompts still pin at least one token of prefix.
+        assert_eq!(Request::new(1, 1, 10, 0.0).with_prefix(3).prefix_len(), 1);
     }
 }

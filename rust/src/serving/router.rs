@@ -3,25 +3,29 @@
 //!
 //! Policies: round-robin, least-loaded (by queued prompt tokens),
 //! session-affinity hashing, and cost-aware prefix affinity
-//! (`PrefixAffinity`): route on prefix-cache hit probability *and*
-//! per-replica decode cost, which is what a heterogeneous Gaudi-2/A100
-//! fleet needs — the two devices' relative throughput shifts with batch
-//! and sequence shape, so a warm prefix on a slower replica can still
-//! beat a cold fast one. The router also enforces a global queue cap
+//! (`PrefixAffinity`): route on prefix-cache *residency* and per-replica
+//! decode cost, which is what a heterogeneous Gaudi-2/A100 fleet needs —
+//! the two devices' relative throughput shifts with batch and sequence
+//! shape, so a warm prefix on a slower replica can still beat a cold
+//! fast one. Residency is supplied by the caller as an oracle
+//! (`route_resident`): `ClusterSim` answers it from each replica's paged
+//! KV-cache block manager, so the router scores blocks that actually
+//! survived eviction rather than guessing from the last writer.
+//! The router also enforces a global queue cap
 //! (backpressure instead of unbounded queueing) and supports draining:
 //! a drained replica finishes its in-flight work but receives no new
 //! requests, which is how the autoscaler (`serving::autoscale`) removes
 //! capacity without dropping requests.
 
 use crate::serving::request::Request;
-use crate::util::fasthash::FastMap;
 
 /// Fractional prefill saved when a request lands on the replica whose
-/// prefix cache is warm for its prefix group (vLLM APC-style reuse).
-/// Shared between the router's routing score and `SimBackend`'s prefill
-/// costing, so the router's bias and the simulated saving cannot drift
-/// apart: a warm hit really does prefill cheaper on the replica the
-/// router steered it to.
+/// prefix cache holds its group's shared blocks resident (vLLM
+/// APC-style reuse). Shared between the router's routing score, the
+/// substrate's resident prefix sizing (`Request::prefix_len`) and
+/// `SimBackend`'s prefill costing, so the router's bias and the
+/// simulated saving cannot drift apart: a residency hit really does
+/// prefill cheaper on the replica the router steered it to.
 pub const PREFIX_HIT_DISCOUNT: f64 = 0.4;
 
 /// Dispatch policy.
@@ -32,8 +36,8 @@ pub enum RoutePolicy {
     /// Hash request id (session affinity for prefix caching).
     Affinity,
     /// Cost-aware prefix affinity: minimize expected cost =
-    /// per-replica decode cost x outstanding load, discounted when the
-    /// request's prefix group was last served by that replica.
+    /// per-replica decode cost x outstanding load, discounted on the
+    /// replica whose KV cache holds the request's prefix group resident.
     PrefixAffinity,
 }
 
@@ -82,8 +86,6 @@ pub struct Router {
     cost: Vec<f64>,
     /// Drained replicas receive no new requests (autoscaler scale-down).
     drained: Vec<bool>,
-    /// Prefix group -> replica that last served it (warm prefix cache).
-    prefix_home: FastMap<u64, usize>,
     queued: usize,
     max_queued: usize,
 }
@@ -108,7 +110,6 @@ impl Router {
             load: vec![0; n],
             cost: costs,
             drained: vec![false; n],
-            prefix_home: FastMap::default(),
             queued: 0,
             max_queued,
         }
@@ -168,8 +169,23 @@ impl Router {
         (0..self.load.len()).filter(|&i| !self.drained[i])
     }
 
-    /// Route a request; returns the replica index.
+    /// Route a request with no residency information (`PrefixAffinity`
+    /// then scores every replica as cold). Deployments that track real
+    /// prefix residency use [`route_resident`](Self::route_resident).
     pub fn route(&mut self, req: &Request) -> Result<usize, QueueFull> {
+        self.route_resident(req, |_, _| false)
+    }
+
+    /// Route a request; returns the replica index. `resident(replica,
+    /// prefix_id)` answers whether that replica's KV cache currently
+    /// holds the prefix group's shared blocks — `ClusterSim` wires it to
+    /// `KvBlockManager::prefix_resident`, so `PrefixAffinity` chases only
+    /// savings that survived eviction.
+    pub fn route_resident(
+        &mut self,
+        req: &Request,
+        resident: impl Fn(usize, u64) -> bool,
+    ) -> Result<usize, QueueFull> {
         if self.queued >= self.max_queued {
             return Err(QueueFull);
         }
@@ -196,29 +212,23 @@ impl Router {
                     .nth(h % self.num_active())
                     .expect("at least one active replica")
             }
-            RoutePolicy::PrefixAffinity => self.prefix_affinity_pick(req),
+            RoutePolicy::PrefixAffinity => self.prefix_affinity_pick(req, &resident),
         };
         debug_assert!(!self.drained[idx], "routed to a drained replica");
         self.load[idx] += (req.prompt_len + req.max_new_tokens) as u64;
         self.queued += 1;
-        if self.policy == RoutePolicy::PrefixAffinity {
-            if let Some(p) = req.prefix_id {
-                self.prefix_home.insert(p, idx);
-            }
-        }
         Ok(idx)
     }
 
     /// Expected-cost minimizer: `cost[r] x (outstanding + this request)`,
-    /// discounted by `PREFIX_HIT_DISCOUNT` on the replica whose prefix
-    /// cache is warm for the request's prefix group. Ties break to the
+    /// discounted by `PREFIX_HIT_DISCOUNT` on replicas whose KV cache
+    /// holds the request's prefix group resident. Ties break to the
     /// lowest index, so routing is deterministic.
-    fn prefix_affinity_pick(&self, req: &Request) -> usize {
+    fn prefix_affinity_pick(&self, req: &Request, resident: &impl Fn(usize, u64) -> bool) -> usize {
         let work = (req.prompt_len + req.max_new_tokens) as u64;
-        let home = req.prefix_id.and_then(|p| self.prefix_home.get(&p)).copied();
         let mut best: Option<(usize, f64)> = None;
         for i in self.active() {
-            let hit = home == Some(i);
+            let hit = req.prefix_id.is_some_and(|p| resident(i, p));
             let factor = if hit { 1.0 - PREFIX_HIT_DISCOUNT } else { 1.0 };
             let score = self.cost[i] * (self.load[i] + work) as f64 * factor;
             if best.is_none_or(|(_, s)| score < s) {
@@ -321,38 +331,45 @@ mod tests {
     }
 
     #[test]
-    fn prefix_affinity_sticks_to_warm_replica() {
+    fn prefix_affinity_follows_residency() {
         let mut r = Router::new(RoutePolicy::PrefixAffinity, 2, 100);
-        let a = r.route(&req(0, 100).with_prefix(7)).unwrap();
-        // Balance the load with an unrelated request on the other replica.
-        let other = r.route(&req(1, 100)).unwrap();
-        assert_ne!(a, other);
-        // With equal load, the same prefix group follows the warm cache...
-        let b = r.route(&req(2, 100).with_prefix(7)).unwrap();
-        assert_eq!(a, b);
-        // ...and a different prefix group balances to the lighter replica.
-        let c = r.route(&req(3, 100).with_prefix(8)).unwrap();
-        assert_eq!(c, other);
+        // Group 7's blocks are resident on replica 1 only.
+        let resident = |i: usize, p: u64| i == 1 && p == 7;
+        // Balance the load first so residency is the deciding factor.
+        assert_eq!(r.route(&req(0, 100)).unwrap(), 0, "ties break to the lowest index");
+        assert_eq!(r.route(&req(1, 100)).unwrap(), 1, "then to the lighter replica");
+        // With equal load, the group follows its resident blocks...
+        assert_eq!(r.route_resident(&req(2, 100).with_prefix(7), resident).unwrap(), 1);
+        // ...a group resident nowhere balances to the lighter replica...
+        assert_eq!(r.route_resident(&req(3, 100).with_prefix(8), resident).unwrap(), 0);
+        // ...and with no oracle, PrefixAffinity is pure cost x load — the
+        // router keeps no last-writer warmth bookkeeping of its own.
+        assert_eq!(r.route(&req(4, 100).with_prefix(7)).unwrap(), 0);
     }
 
     #[test]
     fn prefix_affinity_cost_beats_weak_warmth() {
         // The 40% prefix discount cannot make up a 10x decode-cost gap:
-        // once the cheap replica's queue clears, prefix traffic whose
-        // cache is warm on the expensive replica still routes away.
+        // even with the group resident on the expensive replica, traffic
+        // routes to an idle cheap one.
         let mut r = Router::with_costs(RoutePolicy::PrefixAffinity, vec![1.0, 10.0], 100);
-        // Bury the cheap replica so the prefix group lands (and warms) on
-        // the expensive one.
+        let resident = |i: usize, p: u64| i == 1 && p == 3;
+        // Bury the cheap replica: residency on the expensive one wins.
         let big: Vec<Request> = (0..4).map(|i| req(i, 1000)).collect();
-        let placed: Vec<usize> = big.iter().map(|q| r.route(q).unwrap()).collect();
+        let placed: Vec<usize> =
+            big.iter().map(|q| r.route_resident(q, resident).unwrap()).collect();
         assert!(placed.iter().all(|&i| i == 0), "bulk load fills the cheap replica");
-        assert_eq!(r.route(&req(10, 10).with_prefix(3)).unwrap(), 1, "warm on expensive");
+        assert_eq!(
+            r.route_resident(&req(10, 10).with_prefix(3), resident).unwrap(),
+            1,
+            "resident on expensive"
+        );
         // Clear the cheap replica's queue.
         for (idx, q) in placed.iter().zip(&big) {
             r.complete(*idx, q);
         }
-        // Warmth (x0.6) on a 10x-cost replica loses to the idle cheap one.
-        assert_eq!(r.route(&req(11, 10).with_prefix(3)).unwrap(), 0);
+        // Residency (x0.6) on a 10x-cost replica loses to the idle cheap one.
+        assert_eq!(r.route_resident(&req(11, 10).with_prefix(3), resident).unwrap(), 0);
     }
 
     #[test]

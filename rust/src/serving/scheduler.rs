@@ -1,14 +1,18 @@
 //! Continuous-batching scheduler (Orca/vLLM-style): interleaves prefills
 //! and decodes, bounded by `max_prefill_tokens`, `max_decode_batch`
-//! (the Fig 17(d) sweep knob) and KV-block availability; preempts the
-//! youngest running sequence when decode cannot grow its KV.
+//! (the Fig 17(d) sweep knob) and KV-block availability. Shared-prefix
+//! residency is charged here against the same block pool and watermark
+//! as per-sequence KV: admission acquires (and pins) the request's
+//! prefix group, retirement and preemption release the pin, and decode
+//! memory pressure first evicts an idle prefix before falling back to
+//! preempting the youngest running sequence.
 
 use std::collections::VecDeque;
 
-use crate::util::fasthash::FastMap;
 use crate::config::ServingConfig;
-use crate::serving::kv_cache::{AllocError, KvBlockManager};
+use crate::serving::kv_cache::{KvBlockManager, PrefixAcquire};
 use crate::serving::request::{Phase, Request, RequestId, Sequence};
+use crate::util::fasthash::FastMap;
 
 /// What the engine should execute next.
 #[derive(Debug, Clone, PartialEq)]
@@ -34,12 +38,16 @@ pub struct Scheduler {
     /// Sequences preempted since the last drain (so the engine can release
     /// backend-side state, e.g. a PJRT batch slot).
     preempted: Vec<RequestId>,
+    /// Recompute-cost weight for `EvictionPolicy::CostAware`, supplied by
+    /// the backend's device cost model (1.0 until the engine sets it).
+    prefix_weight: f64,
 }
 
 impl Scheduler {
     pub fn new(cfg: ServingConfig) -> Scheduler {
         cfg.validate().expect("valid config");
-        let kv = KvBlockManager::new(cfg.num_blocks, cfg.block_size, cfg.watermark);
+        let kv = KvBlockManager::new(cfg.num_blocks, cfg.block_size, cfg.watermark)
+            .with_prefix_cache(cfg.prefix_cache_blocks, cfg.eviction);
         Scheduler {
             cfg,
             kv,
@@ -48,7 +56,15 @@ impl Scheduler {
             seqs: FastMap::default(),
             finished: Vec::new(),
             preempted: Vec::new(),
+            prefix_weight: 1.0,
         }
+    }
+
+    /// Set the recompute-cost weight cost-aware eviction ranks prefixes
+    /// by (the engine threads it in from `Backend::prefix_recompute_weight`).
+    pub fn set_prefix_weight(&mut self, weight: f64) {
+        assert!(weight.is_finite() && weight > 0.0, "weight must be positive");
+        self.prefix_weight = weight;
     }
 
     pub fn config(&self) -> &ServingConfig {
@@ -119,8 +135,29 @@ impl Scheduler {
             if !self.kv.can_admit(s.req.prompt_len) {
                 break;
             }
-            self.kv.allocate(id, s.req.prompt_len).expect("can_admit checked");
-            token_budget -= s.req.prompt_len;
+            let (prompt_len, prefix_id, prefix_len) =
+                (s.req.prompt_len, s.req.prefix_id, s.req.prefix_len());
+            // Acquire the shared prefix from *actual residency*: a hit
+            // discounts this prefill, a miss warms the blocks for later
+            // sequences, and either way the pin blocks eviction while the
+            // sequence runs. The reserve keeps the sequence's own blocks
+            // (plus the watermark) untouched so the allocation below
+            // cannot fail.
+            let (mut hit, mut pinned) = (false, false);
+            if let Some(p) = prefix_id {
+                let reserve = self.kv.blocks_for(prompt_len) + self.kv.watermark_blocks();
+                match self.kv.acquire_prefix(p, prefix_len, self.prefix_weight, reserve) {
+                    PrefixAcquire::Hit => (hit, pinned) = (true, true),
+                    PrefixAcquire::Warmed => pinned = true,
+                    PrefixAcquire::Uncached => {}
+                }
+            }
+            let share = if pinned { prefix_id } else { None };
+            self.kv.allocate_prefixed(id, prompt_len, share).expect("can_admit checked");
+            let s = self.seqs.get_mut(&id).unwrap();
+            s.prefix_hit = hit;
+            s.prefix_pinned = pinned;
+            token_budget -= prompt_len;
             self.waiting.pop_front();
             prefill.push(id);
         }
@@ -146,16 +183,23 @@ impl Scheduler {
             let kv_len = self.seqs[&id].kv_len;
             match self.kv.allocate(id, kv_len + 1) {
                 Ok(()) => scheduled.push(id),
-                Err(AllocError::OutOfBlocks | AllocError::BelowWatermark) => {
+                Err(_) => {
+                    // Evict-or-preempt: reclaiming an idle shared prefix
+                    // is strictly cheaper than recomputing a live
+                    // sequence, so try that first.
+                    if self.kv.evict_one_idle_prefix()
+                        && self.kv.allocate(id, kv_len + 1).is_ok()
+                    {
+                        scheduled.push(id);
+                        continue;
+                    }
                     // Preempt the *youngest* running sequence to make room.
                     if let Some(victim) = self.running.last().copied() {
                         if victim != id || self.running.len() > 1 {
                             self.preempt(victim);
                             // Retry this sequence if it wasn't the victim.
-                            if victim != id {
-                                if self.kv.allocate(id, kv_len + 1).is_ok() {
-                                    scheduled.push(id);
-                                }
+                            if victim != id && self.kv.allocate(id, kv_len + 1).is_ok() {
+                                scheduled.push(id);
                             }
                         }
                     }
@@ -196,8 +240,21 @@ impl Scheduler {
             ids.iter().copied().filter(|id| self.seqs[id].phase == Phase::Finished).collect();
         for id in done {
             self.running.retain(|&r| r != id);
+            self.release_prefix_pin(id);
             self.kv.free(id);
             self.finished.push(id);
+        }
+    }
+
+    /// Drop the sequence's pin on its shared prefix (if it holds one);
+    /// the blocks stay resident — warm for the next request of the group
+    /// — until eviction reclaims them.
+    fn release_prefix_pin(&mut self, id: RequestId) {
+        let s = self.seqs.get_mut(&id).unwrap();
+        if s.prefix_pinned {
+            s.prefix_pinned = false;
+            let p = s.req.prefix_id.expect("pinned implies tagged");
+            self.kv.release_prefix(p);
         }
     }
 
@@ -205,10 +262,12 @@ impl Scheduler {
     /// *front* of the waiting queue (recompute-style preemption).
     fn preempt(&mut self, id: RequestId) {
         self.running.retain(|&r| r != id);
+        self.release_prefix_pin(id);
         self.kv.free(id);
         let s = self.seqs.get_mut(&id).unwrap();
         s.phase = Phase::Preempted;
         s.kv_len = 0;
+        s.prefix_hit = false;
         // Preserve generated count semantics: recompute regenerates the
         // same tokens, so keep `generated` but require full re-prefill of
         // prompt + generated so far.
@@ -335,6 +394,77 @@ mod tests {
     fn oversized_request_rejected() {
         let mut s = Scheduler::new(cfg(4, 16));
         s.submit(Request::new(1, 4000, 200, 0.0));
+    }
+
+    #[test]
+    fn prefix_hit_from_residency_and_release_on_finish() {
+        let mut s = Scheduler::new(cfg(8, 64));
+        s.submit(Request::new(1, 512, 1, 0.0).with_prefix(9));
+        assert_eq!(s.schedule(), Step::Prefill(vec![1]));
+        // First of the group: warmed, not a hit; pinned while running.
+        assert!(!s.seq(1).prefix_hit && s.seq(1).prefix_pinned);
+        assert!(s.kv.prefix_resident(9));
+        let prefix_blocks = s.kv.prefix_resident_blocks();
+        assert!(prefix_blocks > 0);
+        // The sequence shares the resident front: exclusive usage is its
+        // full prompt minus the shared blocks.
+        let seq_blocks = s.kv.blocks_of(1).unwrap().len();
+        assert_eq!(seq_blocks, s.kv.blocks_for(512));
+        // The shared front is part of the sequence's table, so the pool
+        // paid exactly the sequence's block count (no double charge).
+        assert_eq!(s.kv.num_free(), 64 - seq_blocks);
+        let _ = s.schedule();
+        s.complete_decode(&[1], 0.1);
+        assert_eq!(s.take_finished(), vec![1]);
+        // Finished: exclusive blocks returned, prefix stays warm.
+        assert!(s.kv.prefix_resident(9));
+        assert_eq!(s.kv.num_free() + s.kv.prefix_resident_blocks(), 64);
+        // Second of the group: a residency hit.
+        s.submit(Request::new(2, 512, 1, 0.0).with_prefix(9));
+        assert_eq!(s.schedule(), Step::Prefill(vec![2]));
+        assert!(s.seq(2).prefix_hit && s.seq(2).prefix_pinned);
+        let st = s.kv.prefix_stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert!(s.kv.check_conservation());
+    }
+
+    #[test]
+    fn idle_prefix_evicted_before_preempting_a_sequence() {
+        // 8 blocks of 128. A finished prefix group leaves 2 idle resident
+        // blocks; a growing sequence must reclaim those instead of
+        // preempting its peer.
+        let mut s = Scheduler::new(ServingConfig {
+            prefix_cache_blocks: 8,
+            watermark: 0.0,
+            ..cfg(4, 8)
+        });
+        s.submit(Request::new(1, 640, 2, 0.0).with_prefix(3)); // prefix 256 tok = 2 blocks
+        let _ = s.schedule(); // prefill (5 blocks: 2 shared + 3 exclusive)
+        let _ = s.schedule(); // decode
+        s.complete_decode(&[1], 0.1);
+        let _ = s.schedule();
+        s.complete_decode(&[1], 0.2);
+        assert_eq!(s.take_finished(), vec![1]);
+        assert!(s.kv.prefix_resident(3), "prefix idles warm after finish");
+        // An untagged pair now fills the pool (3 blocks each, 2 resident,
+        // 0 free); the very first decode growth must evict the idle
+        // prefix rather than preempt a peer.
+        s.submit(Request::new(2, 384, 200, 1.0));
+        s.submit(Request::new(3, 384, 200, 1.0));
+        let _ = s.schedule(); // prefill both
+        assert_eq!(s.num_running(), 2);
+        assert_eq!(s.kv.num_free(), 0);
+        match s.schedule() {
+            Step::Decode(ids) => {
+                assert_eq!(ids.len(), 2, "both sequences keep decoding");
+                s.complete_decode(&ids, 2.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(!s.kv.prefix_resident(3), "idle prefix evicted under decode pressure");
+        assert_eq!(s.seq(2).preemptions + s.seq(3).preemptions, 0, "no preemption needed");
+        assert_eq!(s.kv.prefix_stats().evictions, 1);
+        assert!(s.kv.check_conservation());
     }
 
     #[test]

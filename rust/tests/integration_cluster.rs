@@ -183,15 +183,22 @@ fn heterogeneous_fleet_conserves_requests_under_prefix_affinity() {
     ids.sort_unstable();
     assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "finished set is exactly the trace");
     assert_eq!(sim.router().queued(), 0);
-    // Every replica returned its KV blocks; both device types served work.
+    // Every replica returned its per-sequence KV blocks — only shared
+    // prefix blocks stay resident (warm) — and both device types served.
     let mut served = [0usize; 2];
     for i in 0..sim.num_replicas() {
         let e = sim.replica(i);
-        assert_eq!(e.sched.kv.num_free(), e.sched.kv.num_blocks());
+        assert_eq!(
+            e.sched.kv.num_free() + e.sched.kv.prefix_resident_blocks(),
+            e.sched.kv.num_blocks()
+        );
+        assert!(e.sched.kv.check_conservation());
         let kind = if sim.device_of(i) == DeviceKind::Gaudi2 { 0 } else { 1 };
         served[kind] += e.metrics.len();
     }
     assert!(served[0] > 0 && served[1] > 0, "both device types must serve: {served:?}");
+    // Residency-steered routing delivered real cache hits.
+    assert!(sim.fleet_prefix_stats().hits > 0, "{:?}", sim.fleet_prefix_stats());
 }
 
 #[test]

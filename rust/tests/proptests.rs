@@ -3,11 +3,15 @@
 //! accounting, MME geometry selection, and layout equivalence.
 
 use cuda_myth::config::{DeviceKind, ServingConfig};
+use cuda_myth::harness::cache_sweep::LegacyWarmBackend;
+use cuda_myth::models::llama::LlamaConfig;
 use cuda_myth::serving::block_table::{BlockList, BlockTable};
-use cuda_myth::serving::kv_cache::KvBlockManager;
+use cuda_myth::serving::engine::{Engine, SimBackend};
+use cuda_myth::serving::kv_cache::{EvictionPolicy, KvBlockManager, PrefixAcquire};
 use cuda_myth::serving::request::Request;
 use cuda_myth::serving::router::{RoutePolicy, Router};
 use cuda_myth::serving::scheduler::{Scheduler, Step};
+use cuda_myth::workload::DynamicSonnet;
 use cuda_myth::sim::collective::{self, Collective, ALL_COLLECTIVES};
 use cuda_myth::sim::mme;
 use cuda_myth::sim::Dtype;
@@ -53,6 +57,207 @@ fn kv_manager_conserves_blocks_under_random_churn() {
         }
         m.num_free() == m.num_blocks()
     });
+}
+
+#[test]
+fn shared_prefix_conservation_under_random_churn() {
+    // Random interleavings of prefix acquire/release, prefixed sequence
+    // alloc, free and forced eviction: every physical block stays exactly
+    // one of {free, exclusively owned, shared-resident}, the resident
+    // total respects the budget, and releasing everything returns the
+    // pool (free + exclusive + shared == total throughout).
+    struct Ops;
+    impl Gen for Ops {
+        type Value = Vec<(u8, u64, usize)>; // (op, id/group, tokens)
+        fn generate(&self, rng: &mut Rng) -> Self::Value {
+            (0..rng.range(1, 80))
+                .map(|_| (rng.below(5) as u8, rng.below(6), rng.range(1, 1500) as usize))
+                .collect()
+        }
+        fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+            if v.is_empty() {
+                vec![]
+            } else {
+                vec![v[..v.len() / 2].to_vec(), v[..v.len() - 1].to_vec()]
+            }
+        }
+    }
+    forall(53, 200, &Ops, |ops| {
+        for policy in EvictionPolicy::ALL {
+            let mut m = KvBlockManager::new(48, 128, 0.0).with_prefix_cache(12, policy);
+            // Outstanding pins per group (releases must balance acquires).
+            let mut pins: Vec<u64> = Vec::new();
+            let mut next_seq = 1000u64;
+            for &(op, group, tokens) in ops {
+                match op {
+                    // Acquire a prefix pin (weight varies by group).
+                    0 => {
+                        let got = m.acquire_prefix(group, tokens.min(800), 1.0 + group as f64, 2);
+                        if got != PrefixAcquire::Uncached {
+                            pins.push(group);
+                        }
+                    }
+                    // Release the oldest outstanding pin.
+                    1 => {
+                        if !pins.is_empty() {
+                            m.release_prefix(pins.remove(0));
+                        }
+                    }
+                    // A sequence sharing the group's front (if resident).
+                    2 => {
+                        let _ = m.allocate_prefixed(next_seq, tokens, Some(group));
+                        next_seq += 1;
+                    }
+                    // Free a random-ish sequence.
+                    3 => {
+                        let holders: Vec<u64> = m.holders().collect();
+                        if !holders.is_empty() {
+                            m.free(holders[tokens % holders.len()]);
+                        }
+                    }
+                    // Forced eviction attempt.
+                    _ => {
+                        m.evict_one_idle_prefix();
+                    }
+                }
+                if !m.check_conservation() {
+                    return false;
+                }
+                if m.prefix_resident_blocks() > 12 {
+                    return false; // budget overrun
+                }
+            }
+            // Drain everything: all blocks return except still-resident
+            // shared prefixes, which eviction can fully reclaim once the
+            // remaining pins are released.
+            let holders: Vec<u64> = m.holders().collect();
+            for id in holders {
+                m.free(id);
+            }
+            for g in pins {
+                m.release_prefix(g);
+            }
+            while m.evict_one_idle_prefix() {}
+            if m.num_free() != m.num_blocks() || !m.check_conservation() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn pinned_prefixes_are_never_evicted() {
+    // Whatever churn the cache sees, a group holding at least one pin
+    // stays resident; only idle groups are eviction victims.
+    forall(59, 200, &VecOf(PairOf(UsizeIn(0, 8), UsizeIn(64, 900)), 40), |ops| {
+        for policy in EvictionPolicy::ALL {
+            let mut m = KvBlockManager::new(64, 128, 0.0).with_prefix_cache(10, policy);
+            // Group 0 is pinned once and never released.
+            if m.acquire_prefix(0, 500, 1.0, 0) == PrefixAcquire::Uncached {
+                return false; // empty cache must accept the first prefix
+            }
+            for &(group, tokens) in ops {
+                // Other groups churn through acquire+release (idle).
+                let g = 1 + group as u64;
+                if m.acquire_prefix(g, tokens, 0.5 + group as f64, 0)
+                    != PrefixAcquire::Uncached
+                {
+                    m.release_prefix(g);
+                }
+                if !m.prefix_resident(0) {
+                    return false; // the pinned group vanished
+                }
+                if !m.check_conservation() {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn lru_evicts_in_last_use_order() {
+    // Acquire-and-release groups in a random order, then starve the
+    // cache: victims must leave in exactly the order of their last use.
+    forall(61, 300, &VecOf(UsizeIn(0, 5), 24), |touches| {
+        let mut m = KvBlockManager::new(64, 128, 0.0).with_prefix_cache(64, EvictionPolicy::Lru);
+        // Every group is 1 block (128 tokens), so sizes never confound order.
+        let mut order: Vec<u64> = Vec::new(); // last-use order, oldest first
+        for &g in touches {
+            let g = g as u64;
+            if m.acquire_prefix(g, 100, 1.0, 0) == PrefixAcquire::Uncached {
+                return false;
+            }
+            m.release_prefix(g);
+            order.retain(|&x| x != g);
+            order.push(g);
+        }
+        // Evict until dry: victims follow the model's LRU order.
+        let mut evicted: Vec<u64> = Vec::new();
+        while m.evict_one_idle_prefix() {
+            let gone: Vec<u64> =
+                order.iter().copied().filter(|&g| !m.prefix_resident(g)).collect();
+            // Exactly one more group disappeared, and it is the oldest
+            // still-expected one.
+            if gone.len() != evicted.len() + 1 {
+                return false;
+            }
+            let newly = gone.iter().copied().find(|g| !evicted.contains(g)).unwrap();
+            let expect = order.iter().copied().find(|g| !evicted.contains(g)).unwrap();
+            if newly != expect {
+                return false;
+            }
+            evicted.push(newly);
+        }
+        evicted.len() == order.len()
+    });
+}
+
+#[test]
+fn unbounded_cache_is_bitwise_equal_to_legacy_warm_set() {
+    // Property over random workload shapes: at unbounded capacity (and
+    // ample memory) "resident at admission" degenerates to "seen
+    // before", so every per-request metric is the same f64 the deleted
+    // `seen_prefixes` implementation produced.
+    forall(
+        67,
+        12,
+        &PairOf(PairOf(UsizeIn(6, 20), UsizeIn(1, 5)), UsizeIn(1, 1000)),
+        |&((n, groups), seed)| {
+            let trace = || {
+                DynamicSonnet::default()
+                    .with_prefix_groups(groups)
+                    .generate(n, 30.0, seed as u64)
+            };
+            let unified_cfg = ServingConfig {
+                num_blocks: 4096,
+                max_decode_batch: 16,
+                prefix_cache_blocks: 4096,
+                ..Default::default()
+            };
+            let mut unified = Engine::new(
+                unified_cfg.clone(),
+                SimBackend::new(LlamaConfig::llama31_8b(), &unified_cfg),
+            );
+            let legacy_cfg = ServingConfig { prefix_cache_blocks: 0, ..unified_cfg.clone() };
+            let mut legacy = Engine::new(
+                legacy_cfg.clone(),
+                LegacyWarmBackend::new(LlamaConfig::llama31_8b(), &legacy_cfg),
+            );
+            for r in trace() {
+                unified.submit(r);
+            }
+            for r in trace() {
+                legacy.submit(r);
+            }
+            unified.run_to_completion();
+            legacy.run_to_completion();
+            // Bitwise: the shared comparator behind every parity claim.
+            unified.metrics.max_request_delta(&legacy.metrics) == 0.0
+        },
+    );
 }
 
 #[test]
