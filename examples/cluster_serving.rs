@@ -11,11 +11,16 @@
 use cuda_myth::config::{DeviceKind, ServingConfig};
 use cuda_myth::models::llama::LlamaConfig;
 use cuda_myth::serving::cluster::ClusterSim;
+use cuda_myth::serving::qos::ClassSet;
 use cuda_myth::serving::router::RoutePolicy;
 use cuda_myth::workload::OpenLoopTrace;
 
 const SLO_TTFT_S: f64 = 1.0;
 const SLO_TPOT_S: f64 = 0.1;
+
+fn slo_classes() -> ClassSet {
+    ClassSet::scalar(SLO_TTFT_S, SLO_TPOT_S)
+}
 
 fn main() {
     let trace = OpenLoopTrace::new(24.0, 4.0);
@@ -44,7 +49,7 @@ fn main() {
                 let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
                 sim.submit_all(requests.clone());
                 let s = sim.run_to_completion();
-                let goodput = sim.fleet_metrics().goodput_under_slo(SLO_TTFT_S, SLO_TPOT_S);
+                let goodput = sim.fleet_metrics().goodput(&slo_classes());
                 println!(
                     "{:8} {:13} {:9} {:10.1} {:12.1} {:12.2} {:14.2} {:9}",
                     device.name(),
@@ -82,7 +87,7 @@ fn main() {
         let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
         sim.submit_all(tagged.clone());
         let s = sim.run_to_completion();
-        let goodput = sim.fleet_metrics().goodput_under_slo(SLO_TTFT_S, SLO_TPOT_S);
+        let goodput = sim.fleet_metrics().goodput(&slo_classes());
         println!(
             "{:24} {:10.1} {:12.1} {:14.2} {:9}",
             label,

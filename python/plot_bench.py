@@ -10,6 +10,12 @@ re-parsing of formatted strings — and emits one PNG per plottable report
 latency-vs-load frontier curves and the ``cache_sweep`` hit-rate/goodput
 vs capacity curves.
 
+Artifacts whose reports carry per-traffic-class attainment columns
+(column names ending in " att" with unit "frac", e.g. the ``qos_sweep``
+class-mix grid) additionally get one combined per-class attainment
+figure overlaying every class's curve across all sweep reports (one
+linestyle per report/mix, one color per class).
+
 Usage:
     python python/plot_bench.py <artifact-dir> [--out <plot-dir>]
 
@@ -126,6 +132,66 @@ def plot_report(experiment: str, report: dict, out_dir: Path) -> Path | None:
     return out
 
 
+def class_attainment_columns(report: dict) -> list[tuple[int, str]]:
+    """(index, class name) for per-class attainment columns: names ending
+    in " att" with the fraction unit — the shape the qos_sweep per-mix
+    reports emit ("interactive att", "batch att", ...)."""
+    return [
+        (idx, name[: -len(" att")])
+        for idx, name, unit in numeric_columns(report)
+        if unit == "frac"
+        and name.endswith(" att")
+        and not name.startswith("blind ")
+        and name != "weighted att"
+    ]
+
+
+def plot_class_attainment(experiment: str, artifact: dict, out_dir: Path) -> Path | None:
+    """One combined figure overlaying every class's attainment curve from
+    every report that carries >= 2 per-class attainment columns (one
+    linestyle per report, one color per class)."""
+    sweeps = [
+        (report, cols)
+        for report in artifact.get("reports", [])
+        if len((cols := class_attainment_columns(report))) >= 2
+        and len(report.get("rows", [])) >= 2
+    ]
+    if not sweeps:
+        return None
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(7.5, 4.5))
+    linestyles = ["-", "--", ":", "-."]
+    color_by_class: dict[str, str] = {}
+    cycle = plt.rcParams["axes.prop_cycle"].by_key().get("color", ["C0", "C1", "C2"])
+    x_label = "row"
+    for si, (report, cols) in enumerate(sweeps):
+        numeric = numeric_columns(report)
+        x_idx, x_name, x_unit = numeric[0]
+        xs = column_values(report, x_idx)
+        x_label = f"{x_name} [{x_unit}]"
+        ls = linestyles[si % len(linestyles)]
+        for idx, cls in cols:
+            color = color_by_class.setdefault(cls, cycle[len(color_by_class) % len(cycle)])
+            label = cls if si == 0 else None  # one legend entry per class
+            ax.plot(xs, column_values(report, idx), ls, marker="o", ms=3, color=color, label=label)
+    ax.set_xlabel(x_label)
+    ax.set_ylabel("SLO attainment [frac]")
+    ax.set_ylim(-0.02, 1.05)
+    ax.set_title(f"{experiment}: per-class attainment ({len(sweeps)} sweeps overlaid)"[:100])
+    ax.legend(fontsize=8, title="traffic class")
+    ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+    out = out_dir / f"{experiment}__per-class-attainment.png"
+    fig.savefig(out, dpi=110)
+    plt.close(fig)
+    return out
+
+
 def plot_artifact(path: Path, out_dir: Path) -> list[Path]:
     artifact = json.loads(path.read_text())
     schema = artifact.get("schema")
@@ -138,6 +204,9 @@ def plot_artifact(path: Path, out_dir: Path) -> list[Path]:
         out = plot_report(experiment, report, out_dir)
         if out is not None:
             written.append(out)
+    combined = plot_class_attainment(experiment, artifact, out_dir)
+    if combined is not None:
+        written.append(combined)
     return written
 
 

@@ -97,6 +97,79 @@ def test_unknown_schema_is_skipped(tmp_path):
     assert not list(out_dir.glob("*.png"))
 
 
+def qos_artifact():
+    def sweep(title, base):
+        return {
+            "title": title,
+            "columns": [
+                "offered", "offered req/s", "interactive att", "batch att",
+                "background att", "weighted att", "blind interactive att",
+            ],
+            "rows": [
+                [
+                    f"{rps} rps", val(rps, "req/s"),
+                    val(min(1.0, base + 0.2 - i * 0.2), "frac"),
+                    val(min(1.0, base + 0.3 - i * 0.1), "frac"),
+                    val(1.0, "frac"),
+                    val(min(1.0, base + 0.1 - i * 0.15), "frac"),
+                    val(min(1.0, base - i * 0.3), "frac"),
+                ]
+                for i, rps in enumerate([8, 16, 24])
+            ],
+            "notes": [],
+        }
+
+    return {
+        "schema": "cuda-myth/experiment-v1",
+        "experiment": "qos_sweep",
+        "title": "synthetic qos",
+        "params": {"seed": 31},
+        "reports": [
+            sweep("QoS load sweep [interactive-heavy 70/20/10]", 0.8),
+            sweep("QoS load sweep [balanced 40/30/30]", 0.7),
+            {
+                "title": "QoS-sweep derived claims",
+                "columns": ["claim", "value"],
+                "rows": [["parity", val(0.0, "s")]],
+                "notes": [],
+            },
+        ],
+        "expectations": [],
+    }
+
+
+def test_class_attainment_columns_detected():
+    report = qos_artifact()["reports"][0]
+    cols = plot_bench.class_attainment_columns(report)
+    names = [name for _, name in cols]
+    # The "blind" control column is excluded; the x column is not " att".
+    assert names == ["interactive", "batch", "background"]
+
+
+def test_qos_artifact_gets_combined_class_figure(tmp_path):
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_qos_sweep.json").write_text(json.dumps(qos_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    combined = out_dir / "qos_sweep__per-class-attainment.png"
+    assert combined.exists(), sorted(out_dir.glob("*.png"))
+    assert combined.stat().st_size > 1000
+    # The per-report generic curves are still rendered alongside.
+    assert len(list(out_dir.glob("qos_sweep__qos-load-sweep*.png"))) == 2
+
+
+def test_no_combined_figure_without_class_columns(tmp_path):
+    # The cache_sweep synthetic artifact has no " att" columns: the
+    # combined per-class figure must not appear.
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_cache_sweep.json").write_text(json.dumps(synthetic_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    assert not (out_dir / "cache_sweep__per-class-attainment.png").exists()
+
+
 def test_slugify():
     assert plot_bench.slugify("Fig 17(d): SLO knee / sweep") == "fig-17-d-slo-knee-sweep"
     assert plot_bench.slugify("***") == "report"

@@ -5,6 +5,7 @@
 
 use crate::config::DeviceKind;
 use crate::serving::kv_cache::EvictionPolicy;
+use crate::serving::qos::ClassSet;
 use crate::serving::router::RoutePolicy;
 use crate::util::json::Json;
 
@@ -50,6 +51,13 @@ pub struct ServingConfig {
     /// A100 behind one router). Empty means homogeneous: `replicas` copies
     /// of `device`. When non-empty its length must equal `replicas`.
     pub fleet: Vec<DeviceKind>,
+    /// Traffic classes served by this deployment (`serving::qos`): each
+    /// request carries a `class_id` indexing this set, fixing its SLO,
+    /// scheduling priority and goodput weight. JSON: `"classes":
+    /// [{"name": ..., "priority": ..., "ttft_slo": ..., "tpot_slo": ...,
+    /// "weight": ...}, ...]`. The default is the single `default` class,
+    /// which reproduces the pre-QoS scalar-SLO behavior bitwise.
+    pub classes: ClassSet,
 }
 
 impl Default for ServingConfig {
@@ -70,6 +78,7 @@ impl Default for ServingConfig {
             route_policy: RoutePolicy::RoundRobin,
             max_queued: 4096,
             fleet: Vec::new(),
+            classes: ClassSet::default(),
         }
     }
 }
@@ -141,6 +150,10 @@ impl ServingConfig {
                     })
                     .collect::<anyhow::Result<Vec<DeviceKind>>>()?,
             },
+            classes: match j.get("classes") {
+                None => ClassSet::default(),
+                Some(v) => ClassSet::from_json(v)?,
+            },
         };
         // A fleet listed without an explicit replica count sizes the fleet.
         let cfg = if !cfg.fleet.is_empty() && j.get("replicas").is_none() {
@@ -174,6 +187,7 @@ impl ServingConfig {
                     self.fleet.iter().map(|d| Json::Str(d.json_tag().into())).collect(),
                 ),
             ),
+            ("classes", self.classes.to_json()),
         ])
         .dump()
     }
@@ -227,7 +241,14 @@ impl ServingConfig {
                 self.replicas
             );
         }
+        self.classes.validate()?;
         Ok(())
+    }
+
+    /// Replace the deployment's traffic classes (builder-style).
+    pub fn with_classes(mut self, classes: ClassSet) -> ServingConfig {
+        self.classes = classes;
+        self
     }
 }
 
@@ -325,6 +346,48 @@ mod tests {
         assert!(ServingConfig::from_json(r#"{"fleet": ["warp9"]}"#).is_err());
         assert!(ServingConfig::from_json(r#"{"fleet": [3]}"#).is_err());
         assert!(ServingConfig::from_json(r#"{"fleet": "gaudi2"}"#).is_err());
+    }
+
+    #[test]
+    fn classes_parse_roundtrip_and_default() {
+        // Default: the single legacy-equivalent class.
+        let d = ServingConfig::default();
+        assert_eq!(d.classes, ClassSet::default());
+        assert_eq!(d.classes.class(0).name, "default");
+        // Explicit classes parse with per-field defaults.
+        let c = ServingConfig::from_json(
+            r#"{"classes": [
+                {"name": "interactive", "priority": 2, "ttft_slo": 0.5, "tpot_slo": 0.05, "weight": 4.0},
+                {"name": "batch", "priority": 1, "ttft_slo": 2.0},
+                {"name": "background"}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.classes.len(), 3);
+        assert_eq!(c.classes.class(0).priority, 2);
+        assert_eq!(c.classes.class(1).tpot_slo, 0.1, "unspecified fields default");
+        assert_eq!(c.classes.class(2).priority, 0);
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        // Builder keeps validation happy.
+        let b = ServingConfig::default().with_classes(ClassSet::three_tier());
+        b.validate().unwrap();
+        assert_eq!(b.classes.len(), 3);
+    }
+
+    #[test]
+    fn bad_classes_rejected() {
+        assert!(ServingConfig::from_json(r#"{"classes": []}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"classes": "chat"}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"classes": [{"priority": 1}]}"#).is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"classes": [{"name": "a"}, {"name": "a"}]}"#
+        )
+        .is_err());
+        assert!(ServingConfig::from_json(
+            r#"{"classes": [{"name": "a", "ttft_slo": 0.0}]}"#
+        )
+        .is_err());
     }
 
     #[test]

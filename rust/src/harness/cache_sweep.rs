@@ -21,8 +21,10 @@ use crate::models::llama::{self, LlamaConfig};
 use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
 use crate::serving::cluster::ClusterSim;
 use crate::serving::engine::{Backend, DecodeWork, Engine, PrefillItem, SimBackend};
-use crate::serving::router::{RoutePolicy, PREFIX_HIT_DISCOUNT};
+use crate::serving::qos::ClassSet;
+use crate::serving::router::RoutePolicy;
 use crate::serving::trace::TraceStepKind;
+use crate::serving::PREFIX_HIT_DISCOUNT;
 use crate::util::fasthash::FastMap;
 use crate::workload::DynamicSonnet;
 
@@ -102,7 +104,7 @@ fn run_point(k: &Knobs, groups: usize, capacity: usize) -> SweepPoint {
         tps: s.throughput_tps,
         p99_ttft: s.p99_ttft,
         joule_per_tok: s.joule_per_tok,
-        goodput_rps: fleet.goodput_under_slo(k.slo_ttft_s, k.slo_tpot_s),
+        goodput_rps: fleet.goodput(&ClassSet::scalar(k.slo_ttft_s, k.slo_tpot_s)),
     }
 }
 

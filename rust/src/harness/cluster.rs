@@ -15,6 +15,7 @@ use crate::models::llama::LlamaConfig;
 use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
 use crate::serving::cluster::ClusterSim;
 use crate::serving::engine::{Engine, SimBackend};
+use crate::serving::qos::ClassSet;
 use crate::serving::router::RoutePolicy;
 use crate::workload::{DynamicSonnet, OpenLoopTrace};
 
@@ -52,6 +53,11 @@ impl Knobs {
             slo_tpot_s: params.get_or("slo_tpot_s", 0.1),
         }
     }
+
+    /// The scalar SLO params as a single traffic class (`serving::qos`).
+    fn classes(&self) -> ClassSet {
+        ClassSet::scalar(self.slo_ttft_s, self.slo_tpot_s)
+    }
 }
 
 fn run_fleet(k: &Knobs, device: DeviceKind, policy: RoutePolicy, replicas: usize) -> FleetPoint {
@@ -74,8 +80,8 @@ fn run_fleet(k: &Knobs, device: DeviceKind, policy: RoutePolicy, replicas: usize
         tps: s.throughput_tps,
         p99_ttft: s.p99_ttft,
         p99_tpot: s.p99_tpot,
-        goodput_rps: fleet.goodput_under_slo(k.slo_ttft_s, k.slo_tpot_s),
-        attainment: fleet.slo_attainment(k.slo_ttft_s, k.slo_tpot_s),
+        goodput_rps: fleet.goodput(&k.classes()),
+        attainment: fleet.attainment(&k.classes()),
         requeues: sim.requeues,
     }
 }

@@ -13,6 +13,7 @@ use crate::harness::{Experiment, Params};
 use crate::models::llama::LlamaConfig;
 use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
 use crate::serving::cluster::ClusterSim;
+use crate::serving::qos::ClassSet;
 use crate::serving::router::RoutePolicy;
 use crate::workload::OpenLoopTrace;
 
@@ -54,10 +55,13 @@ impl Knobs {
         }
     }
 
+    /// The scalar SLO params as a single traffic class (`serving::qos`).
+    fn classes(&self) -> ClassSet {
+        ClassSet::scalar(self.slo_ttft_s, self.slo_tpot_s)
+    }
+
     fn loads(&self) -> Vec<f64> {
-        (0..self.load_points.max(1))
-            .map(|i| self.load_min_rps + i as f64 * self.load_step_rps)
-            .collect()
+        crate::harness::load_grid(self.load_min_rps, self.load_step_rps, self.load_points)
     }
 }
 
@@ -107,8 +111,8 @@ fn run_point(k: &Knobs, gaudi: usize, rate: f64) -> SweepPoint {
         tps: s.throughput_tps,
         p99_ttft: s.p99_ttft,
         p99_tpot: s.p99_tpot,
-        goodput_rps: fleet.goodput_under_slo(k.slo_ttft_s, k.slo_tpot_s),
-        attainment: fleet.slo_attainment(k.slo_ttft_s, k.slo_tpot_s),
+        goodput_rps: fleet.goodput(&k.classes()),
+        attainment: fleet.attainment(&k.classes()),
         requeues: sim.requeues,
     }
 }

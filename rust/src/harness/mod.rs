@@ -20,6 +20,7 @@ pub mod fig5;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod qos_sweep;
 pub mod table1;
 
 use crate::report::{Expectation, ExpectationResult, Report};
@@ -68,6 +69,14 @@ impl Params {
     }
 }
 
+/// Evenly spaced offered-load grid shared by the sweep experiments:
+/// `min_rps + i x step_rps` for `points` points (at least one) — one
+/// definition so cluster-sweep and qos-sweep can never disagree on what
+/// a load grid means.
+pub fn load_grid(min_rps: f64, step_rps: f64, points: usize) -> Vec<f64> {
+    (0..points.max(1)).map(|i| min_rps + i as f64 * step_rps).collect()
+}
+
 /// A runnable experiment (one paper table/figure, ablation or extension).
 pub trait Experiment {
     /// Stable CLI id (`repro run <id>`, artifact file name).
@@ -104,6 +113,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(cluster::Cluster),
         Box::new(cluster_sweep::ClusterSweep),
         Box::new(cache_sweep::CacheSweep),
+        Box::new(qos_sweep::QosSweep),
         Box::new(ablations::AblMme),
         Box::new(ablations::AblWatermark),
         Box::new(ablations::ExtMultiRecsys),
@@ -166,11 +176,11 @@ mod tests {
         let ids: Vec<&str> = registry().iter().map(|e| e.id()).collect();
         for required in [
             "table1", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-            "fig13", "fig15", "fig17", "cluster", "cluster_sweep", "cache_sweep",
+            "fig13", "fig15", "fig17", "cluster", "cluster_sweep", "cache_sweep", "qos_sweep",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
-        assert_eq!(ids.len(), 20, "registry must keep all 20 entries");
+        assert_eq!(ids.len(), 21, "registry must keep all 21 entries");
     }
 
     #[test]
@@ -184,6 +194,7 @@ mod tests {
         assert_eq!(find("cluster-sweep").unwrap().id(), "cluster_sweep");
         assert_eq!(find("cluster_sweep").unwrap().id(), "cluster_sweep");
         assert_eq!(find("cache-sweep").unwrap().id(), "cache_sweep");
+        assert_eq!(find("qos-sweep").unwrap().id(), "qos_sweep");
         assert!(find("cluster-").is_none());
     }
 

@@ -32,19 +32,32 @@
 //!               │                         merged virtual time
 //!               ├── Router                dispatch (incl. cost-aware
 //!               │                         prefix affinity over real block
-//!               │                         residency) + backpressure
-//!               │                         + drain
-//!               └── Autoscaler            goodput-driven scale-up/drain
+//!               │                         residency, per-class QoS
+//!               │                         penalty) + backpressure + drain
+//!               └── Autoscaler            weighted-per-class-attainment
+//!                                         scale-up/drain
 //!                                         + J-per-good-token cost report
 //!   ```
 //!
+//!   Cross-cutting the stack, `serving::qos` defines first-class traffic
+//!   classes (`TrafficClass` / `ClassSet`): each request carries a
+//!   `ClassId` fixing its SLO, scheduling priority and goodput weight;
+//!   the scheduler admits/preempts by class priority, the router
+//!   penalizes degraded per-class attainment, metrics judge each request
+//!   against its own class's SLO, and the autoscaler controls on
+//!   weighted per-class attainment. A single default class replays the
+//!   legacy scalar-SLO path bitwise.
+//!
 //!   `ServingConfig { replicas, route_policy, max_queued, fleet,
-//!   prefix_cache_blocks, eviction, .. }` sizes the fleet; `repro run
-//!   cluster` produces the iso-SLO Gaudi-2 vs A100 replica-count
-//!   comparison, `repro run cluster-sweep` the goodput-under-SLO frontier
-//!   across fleet mixes, and `repro run cache-sweep` the prefix-cache
-//!   capacity x skew grid (hit rate monotone in capacity; unbounded
-//!   capacity bitwise-replays the legacy ever-warm set).
+//!   prefix_cache_blocks, eviction, classes, .. }` sizes the fleet;
+//!   `repro run cluster` produces the iso-SLO Gaudi-2 vs A100
+//!   replica-count comparison, `repro run cluster-sweep` the
+//!   goodput-under-SLO frontier across fleet mixes, `repro run
+//!   cache-sweep` the prefix-cache capacity x skew grid (hit rate
+//!   monotone in capacity; unbounded capacity bitwise-replays the legacy
+//!   ever-warm set), and `repro run qos-sweep` the class-mix x load grid
+//!   (priorities help interactive attainment; single-default-class
+//!   EqExact-0 parity with the scalar-SLO path).
 //! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, lowered at
 //!   build time by `python/compile/aot.py`) and executes them on the PJRT
 //!   CPU client. Python is never on the request path.

@@ -21,7 +21,10 @@
 //!                                  # run the vLLM-style serving cluster
 //!                                  # (1..N replicas, homogeneous or a
 //!                                  # mixed Gaudi-2/A100 fleet, simulated
-//!                                  # backend) on a Dynamic-Sonnet load
+//!                                  # backend) on a Dynamic-Sonnet load;
+//!                                  # configs with `"classes": [...]`
+//!                                  # serve a mixed-class trace and
+//!                                  # report per-class attainment
 //! repro real-serve [--artifacts d] [--requests N]
 //!                                  # serve the REAL tiny-Llama artifacts
 //!                                  # through PJRT (needs `make artifacts`)
@@ -425,6 +428,14 @@ fn cmd_serve(args: &[String]) -> i32 {
     } else {
         DynamicSonnet::default()
     };
+    // Multi-class configs (`"classes": [...]`): spread the trace across
+    // the declared classes in equal shares. Class tagging is RNG-free
+    // too, so single-class runs are byte-identical to the legacy trace.
+    let workload = if cfg.classes.len() > 1 {
+        workload.with_class_mix((0..cfg.classes.len()).map(|c| (c, 1)).collect())
+    } else {
+        workload
+    };
     let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
     sim.submit_all(workload.generate(n, rate, 7));
     let s = sim.run_to_completion();
@@ -463,6 +474,22 @@ fn cmd_serve(args: &[String]) -> i32 {
         cache.evictions,
         sim.requeues,
     );
+    // Per-traffic-class breakdown (one line per declared class beyond
+    // the trivial single-class case).
+    if s.classes.len() > 1 {
+        for c in &s.classes {
+            println!(
+                "  class {:14} {:4} reqs, attainment {:5.1}%, goodput {:.2} req/s, \
+                 mean TTFT {:.1} ms, p99 TTFT {:.1} ms",
+                c.name,
+                c.requests,
+                c.attainment * 100.0,
+                c.goodput_rps,
+                c.mean_ttft * 1e3,
+                c.p99_ttft * 1e3,
+            );
+        }
+    }
     0
 }
 

@@ -1,13 +1,20 @@
 //! Goodput-driven autoscaling for `ClusterSim` fleets: a control loop
-//! that adds replicas when the recent window misses the SLO target and
-//! drains the most expensive replica when the fleet has slack — the
-//! deployment-cost half of the paper's iso-SLO sizing question, run
-//! online instead of by offline sweep.
+//! that adds replicas when the recent window misses the attainment
+//! target and drains the most expensive replica when the fleet has
+//! slack — the deployment-cost half of the paper's iso-SLO sizing
+//! question, run online instead of by offline sweep.
+//!
+//! The control signal is **weighted per-class attainment**
+//! (`serving::qos`): each traffic class's windowed attainment against
+//! its own SLO, folded by class weight — so an interactive class
+//! missing its tight SLO forces a scale-up even while bulk background
+//! traffic is comfortably compliant. A single default class reduces the
+//! signal to the legacy global-window attainment exactly.
 //!
 //! The controller is deliberately split into a *pure sizing rule*
 //! ([`Autoscaler::desired_replicas`], monotone in offered load by
 //! construction — property-tested) and a *windowed feedback step*
-//! ([`Autoscaler::control`]) that observes SLO attainment over the last
+//! ([`Autoscaler::control`]) that observes attainment over the last
 //! control interval and applies at most one action per tick. One action
 //! per tick keeps the loop stable: capacity changes need a window of
 //! effect before the next observation is meaningful.
@@ -15,17 +22,23 @@
 use crate::config::DeviceKind;
 use crate::report::{Cell, Report, Unit};
 use crate::serving::cluster::ClusterSim;
+use crate::serving::qos::ClassSet;
 
 /// Fraction of a replica's SLO-compliant capacity the sizing rule plans
 /// to use — headroom absorbs Poisson burstiness.
 pub const TARGET_UTILIZATION: f64 = 0.8;
 
 /// Controller targets and bounds.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct AutoscaleConfig {
-    /// SLO the fleet is scaled against.
-    pub slo_ttft_s: f64,
-    pub slo_tpot_s: f64,
+    /// Traffic classes the fleet is scaled against: the control signal
+    /// is attainment per class (each against its own SLO) folded by
+    /// class weight. Left at the default single class, the controller
+    /// inherits the *deployment's* declared classes at control time
+    /// (single-class deployments therefore get exactly the legacy
+    /// scalar-SLO controller); set explicitly to measure against a
+    /// different set.
+    pub classes: ClassSet,
     /// Scale up when windowed attainment drops below this.
     pub low_watermark: f64,
     /// Consider draining only when windowed attainment is at/above this.
@@ -48,8 +61,7 @@ pub struct AutoscaleConfig {
 impl Default for AutoscaleConfig {
     fn default() -> Self {
         AutoscaleConfig {
-            slo_ttft_s: 1.0,
-            slo_tpot_s: 0.1,
+            classes: ClassSet::default(),
             low_watermark: 0.95,
             high_watermark: 0.999,
             interval_s: 0.25,
@@ -159,14 +171,27 @@ impl Autoscaler {
         Decision::Hold
     }
 
-    /// One control tick at virtual time `now`: observe the last interval,
-    /// decide, and apply at most one capacity action to `sim`.
+    /// The measurement set a controller on `sim` scales against: the
+    /// explicitly configured classes, except that a default
+    /// (single-legacy-class) config inherits the *deployment's* declared
+    /// classes — so `Autoscaler::new(AutoscaleConfig::default())` on a
+    /// three-tier fleet really does control on weighted per-class
+    /// attainment instead of silently degrading to the global scalar
+    /// view. Configure `classes` explicitly to override.
+    fn measurement_classes<'a>(&'a self, sim: &'a ClusterSim) -> &'a ClassSet {
+        if self.cfg.classes == ClassSet::default() {
+            sim.classes()
+        } else {
+            &self.cfg.classes
+        }
+    }
+
+    /// One control tick at virtual time `now`: observe the last interval
+    /// (weighted per-class attainment), decide, and apply at most one
+    /// capacity action to `sim`.
     pub fn control(&mut self, sim: &mut ClusterSim, now: f64) {
-        let attainment = sim.window_attainment(
-            now - self.cfg.interval_s,
-            self.cfg.slo_ttft_s,
-            self.cfg.slo_tpot_s,
-        );
+        let attainment =
+            sim.window_attainment(now - self.cfg.interval_s, self.measurement_classes(sim));
         let active = sim.router().num_active();
         let action = match self.decide(attainment, sim.router().queued(), active) {
             Decision::ScaleUp(device) => {
@@ -207,18 +232,24 @@ impl Autoscaler {
 
 /// Typed per-replica cost report for a (possibly autoscaled) fleet:
 /// busy-time energy from the device power model, J per output token, and
-/// J per *good* token under `cfg`'s SLO — the deployment-cost ledger the
-/// ROADMAP's "autoscaler cost reports" item asks for. Rendered by
-/// `repro run cluster`-style harness callers; the same numbers reach
-/// `repro serve --json` through `MetricsSummary`.
+/// J per *good* token under `cfg`'s traffic classes (each request judged
+/// against its own class SLO) — the deployment-cost ledger the ROADMAP's
+/// "autoscaler cost reports" item asks for. Rendered by `repro run
+/// cluster`-style harness callers; the same numbers reach `repro serve
+/// --json` through `MetricsSummary`.
 pub fn cost_report(sim: &ClusterSim, cfg: &AutoscaleConfig) -> Report {
+    // Same defaulting as the control loop: a default config reports
+    // under the deployment's own declared classes.
+    let classes =
+        if cfg.classes == ClassSet::default() { sim.classes() } else { &cfg.classes };
+    let class_names: Vec<&str> = classes.iter().map(|c| c.name.as_str()).collect();
     let mut r = Report::new(format!(
-        "Fleet energy cost (SLO: TTFT <= {}s, TPOT <= {}s)",
-        cfg.slo_ttft_s, cfg.slo_tpot_s
+        "Fleet energy cost (classes: {})",
+        class_names.join(", ")
     ));
     r.header(&["replica", "energy", "output tok", "J/tok", "J/good tok", "drained"]);
     let fmt_good = |c: &crate::serving::metrics::MetricsCollector| match c
-        .energy_per_good_token(cfg.slo_ttft_s, cfg.slo_tpot_s)
+        .energy_per_good_token(classes)
     {
         Some(j) => Cell::val(j, Unit::JoulePerTok),
         None => Cell::text("n/a"),

@@ -36,7 +36,8 @@ use crate::config::{DeviceKind, ServingConfig};
 use crate::models::llama::LlamaConfig;
 use crate::serving::autoscale::Autoscaler;
 use crate::serving::engine::{ClockSource, Engine, SimBackend};
-use crate::serving::metrics::{MetricsCollector, MetricsSummary};
+use crate::serving::metrics::{MetricsCollector, MetricsSummary, RequestMetrics};
+use crate::serving::qos::ClassSet;
 use crate::serving::request::{Request, RequestId};
 use crate::serving::router::{QueueFull, Router};
 use crate::util::fasthash::FastMap;
@@ -74,7 +75,8 @@ impl ClusterSim {
             .iter()
             .map(|d| SimBackend::decode_cost_weight(&model, *d, cfg.tensor_parallel))
             .collect();
-        let router = Router::with_costs(cfg.route_policy, costs, cfg.max_queued);
+        let router = Router::with_costs(cfg.route_policy, costs, cfg.max_queued)
+            .with_classes(cfg.classes.clone());
         let replicas = devices
             .iter()
             .map(|d| Self::build_replica(cfg, model, *d))
@@ -127,6 +129,11 @@ impl ClusterSim {
 
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    /// The deployment's declared traffic classes.
+    pub fn classes(&self) -> &ClassSet {
+        &self.cfg.classes
     }
 
     pub fn completed(&self) -> usize {
@@ -237,11 +244,17 @@ impl ClusterSim {
     }
 
     /// Advance replica `i` by one discrete-event iteration and settle the
-    /// router's books for anything that finished.
+    /// router's books for anything that finished — including the QoS
+    /// feedback loop: each completion's per-class SLO outcome updates the
+    /// router's per-replica attainment estimate, which is what lets the
+    /// scored policies steer high-priority traffic off degraded replicas.
     fn step_replica(&mut self, i: usize) {
         let done = self.replicas[i].advance();
         for id in done {
-            let req = self.replicas[i].sched.seq(id).req.clone();
+            let seq = self.replicas[i].sched.seq(id);
+            let met = self.cfg.classes.met_by(&RequestMetrics::from_sequence(seq));
+            let req = seq.req.clone();
+            self.router.record_outcome(i, req.class_id, met);
             self.router.complete(i, &req);
             self.completed += 1;
         }
@@ -280,12 +293,13 @@ impl ClusterSim {
         }
     }
 
-    /// Seal per-replica makespans and merge the fleet summary.
+    /// Seal per-replica makespans and merge the fleet summary (with the
+    /// per-traffic-class breakdown).
     fn finalize(&mut self) -> MetricsSummary {
         for e in &mut self.replicas {
             e.metrics.makespan = e.clock();
         }
-        self.fleet_metrics().summary()
+        self.fleet_metrics().summary_for(&self.cfg.classes)
     }
 
     /// Run until every submitted request has completed; returns the
@@ -309,25 +323,39 @@ impl ClusterSim {
         self.finalize()
     }
 
-    /// SLO attainment over requests that finished at or after `since`,
-    /// across every replica *without* cloning metric history — the
-    /// autoscaler reads this every control tick, so it must stay O(window)
-    /// rather than O(run length). `None` when the window saw no
-    /// completions.
-    pub fn window_attainment(&self, since: f64, ttft_slo: f64, tpot_slo: f64) -> Option<f64> {
-        let (mut ok, mut total) = (0usize, 0usize);
+    /// Weighted per-class SLO attainment over requests that finished at
+    /// or after `since`, across every replica *without* cloning metric
+    /// history — the autoscaler reads this every control tick, so it must
+    /// stay O(window) rather than O(run length). Per-class attainment is
+    /// folded by class weight over classes that completed in the window
+    /// (a weight-1 single class reduces to the plain ok/total fraction
+    /// exactly). `None` when the window saw no completions.
+    pub fn window_attainment(&self, since: f64, classes: &ClassSet) -> Option<f64> {
+        let mut ok = vec![0usize; classes.len()];
+        let mut total = vec![0usize; classes.len()];
         for e in &self.replicas {
             // Per-replica completion order is monotone in finish time
             // (records happen at harvest under an advancing clock), so
             // the window is a suffix.
             for m in e.metrics.per_request().iter().rev().take_while(|m| m.finish >= since) {
-                total += 1;
-                if m.meets_slo(ttft_slo, tpot_slo) {
-                    ok += 1;
+                // Bucket under the *measurement* set's judging id, so a
+                // smaller set (e.g. the autoscaler's independent config)
+                // measures a mixed-class run instead of panicking.
+                let cid = classes.judging_id(m.class_id);
+                total[cid] += 1;
+                if classes.met_by(m) {
+                    ok[cid] += 1;
                 }
             }
         }
-        (total > 0).then(|| ok as f64 / total as f64)
+        let (mut num, mut den) = (0.0, 0.0);
+        for c in 0..classes.len() {
+            if total[c] > 0 {
+                num += classes.class(c).weight * (ok[c] as f64 / total[c] as f64);
+                den += classes.class(c).weight;
+            }
+        }
+        (den > 0.0).then(|| num / den)
     }
 
     /// Merged per-replica metrics; makespan is the slowest replica's span.
@@ -514,16 +542,84 @@ mod tests {
 
     #[test]
     fn window_attainment_matches_whole_run_attainment() {
+        use crate::serving::qos::ClassSet;
         let mut c = cluster(2, RoutePolicy::RoundRobin, 10_000);
         c.submit_all(DynamicSonnet::default().generate(20, 40.0, 4));
         c.run_to_completion();
-        // The whole-history window agrees with the collector's aggregate.
+        // The whole-history window agrees with the collector's aggregate
+        // (single weight-1 class: weighted == plain attainment exactly).
         let fleet = c.fleet_metrics();
-        assert_eq!(c.window_attainment(0.0, 1.0, 0.1), Some(fleet.slo_attainment(1.0, 0.1)));
-        // Unbounded SLOs: everything complies.
-        assert_eq!(c.window_attainment(0.0, f64::INFINITY, f64::INFINITY), Some(1.0));
+        let classes = ClassSet::scalar(1.0, 0.1);
+        assert_eq!(c.window_attainment(0.0, &classes), Some(fleet.attainment(&classes)));
+        // Effectively unbounded SLOs: everything complies.
+        assert_eq!(c.window_attainment(0.0, &ClassSet::scalar(1e12, 1e12)), Some(1.0));
         // A window past the makespan saw no completions.
-        assert_eq!(c.window_attainment(fleet.makespan + 1.0, 1.0, 0.1), None);
+        assert_eq!(c.window_attainment(fleet.makespan + 1.0, &classes), None);
+    }
+
+    #[test]
+    fn mixed_class_fleet_serves_and_reports_per_class() {
+        use crate::serving::qos::ClassSet;
+        let cfg = ServingConfig {
+            replicas: 2,
+            route_policy: RoutePolicy::LeastLoaded,
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            classes: ClassSet::three_tier(),
+            ..Default::default()
+        };
+        let mut c = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        c.submit_all(
+            DynamicSonnet::default()
+                .with_class_mix(vec![(0, 2), (1, 1), (2, 1)])
+                .generate(40, 30.0, 11),
+        );
+        let s = c.run_to_completion();
+        assert_eq!(s.requests, 40);
+        // The summary carries one slice per declared class, all served.
+        assert_eq!(s.classes.len(), 3);
+        assert_eq!(s.classes.iter().map(|cs| cs.requests).sum::<usize>(), 40);
+        // The id-derived mix: 2/4 interactive, 1/4 batch, 1/4 background.
+        assert_eq!(s.classes[0].requests, 20);
+        assert_eq!(s.classes[1].requests, 10);
+        assert_eq!(s.classes[2].requests, 10);
+        // Weighted window attainment is defined over the whole run.
+        assert!(c.window_attainment(0.0, c.classes()).is_some());
+        // The router saw per-class feedback for every completion.
+        let att_sum: f64 = (0..2)
+            .flat_map(|r| (0..3).map(move |cl| (r, cl)))
+            .map(|(r, cl)| c.router().class_attainment(r, cl))
+            .sum();
+        assert!(att_sum > 0.0);
+    }
+
+    #[test]
+    fn default_autoscaler_measures_a_mixed_class_fleet_without_panicking() {
+        use crate::serving::qos::ClassSet;
+        // The autoscaler's ClassSet is an independent measurement set; a
+        // default (single-class) controller on a three-tier deployment
+        // must judge foreign class ids under its global scalar SLO, not
+        // panic or index out of bounds.
+        let cfg = ServingConfig {
+            replicas: 1,
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            classes: ClassSet::three_tier(),
+            ..Default::default()
+        };
+        let mut c = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        c.submit_all(
+            DynamicSonnet::default()
+                .with_class_mix(vec![(0, 1), (1, 1), (2, 1)])
+                .generate(18, 30.0, 3),
+        );
+        let mut ctl = Autoscaler::new(AutoscaleConfig::default());
+        let s = c.run_autoscaled(&mut ctl);
+        assert_eq!(s.requests, 18);
+        // And the 1-class window measurement buckets everything under
+        // its single class (the legacy global-SLO view).
+        let scalar = ClassSet::scalar(1e12, 1e12);
+        assert_eq!(c.window_attainment(0.0, &scalar), Some(1.0));
     }
 
     #[test]

@@ -191,7 +191,7 @@ impl SimBackend {
     /// in the cache.
     fn effective_prefill_len(&self, item: &PrefillItem) -> f64 {
         if item.prefix_hit {
-            item.prompt_len as f64 * (1.0 - crate::serving::router::PREFIX_HIT_DISCOUNT)
+            item.prompt_len as f64 * (1.0 - crate::serving::PREFIX_HIT_DISCOUNT)
         } else {
             item.prompt_len as f64
         }

@@ -3,7 +3,15 @@
 //! Fig 17(d,e). `MetricsCollector` instances merge, so
 //! `serving::cluster::ClusterSim` folds per-replica collectors into
 //! fleet-level percentiles and goodput-under-SLO.
+//!
+//! SLO compliance is per traffic class (`serving::qos`): every request
+//! carries a `ClassId`, and goodput / attainment / J-per-good-token
+//! filter each request against *its own class's* SLO through one shared
+//! [`MetricsCollector::compliant`] helper (previously three separately
+//! maintained scalar filters). Per-class breakdowns ([`ClassSummary`])
+//! flow into [`MetricsSummary`] and `repro serve --json`.
 
+use crate::serving::qos::{ClassId, ClassSet};
 use crate::serving::request::{RequestId, Sequence};
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
@@ -20,6 +28,9 @@ pub struct RequestMetrics {
     /// run's history.
     pub finish: f64,
     pub output_tokens: usize,
+    /// Traffic class the request was served under — fixes which SLO its
+    /// compliance is judged against.
+    pub class_id: ClassId,
 }
 
 impl RequestMetrics {
@@ -37,12 +48,8 @@ impl RequestMetrics {
             e2e: finish - s.req.arrival,
             finish,
             output_tokens: s.generated,
+            class_id: s.req.class_id,
         }
-    }
-
-    /// Does this request meet a (TTFT, TPOT) service-level objective?
-    pub fn meets_slo(&self, ttft_slo: f64, tpot_slo: f64) -> bool {
-        self.ttft <= ttft_slo && self.tpot <= tpot_slo
     }
 }
 
@@ -58,7 +65,50 @@ pub struct MetricsCollector {
     pub energy_j: f64,
 }
 
-#[derive(Debug, Clone, Copy)]
+/// Per-traffic-class slice of a run's metrics — the QoS breakdown of
+/// `repro serve --json` and the qos-sweep experiment.
+#[derive(Debug, Clone)]
+pub struct ClassSummary {
+    pub class_id: ClassId,
+    pub name: String,
+    pub requests: usize,
+    /// Fraction of this class's completions meeting the class SLO.
+    pub attainment: f64,
+    /// SLO-compliant completions of this class per second of makespan.
+    pub goodput_rps: f64,
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    pub mean_tpot: f64,
+    /// Joules per *good* token of this class, with run energy attributed
+    /// to classes by output-token share (the simulator meters energy per
+    /// step, not per sequence). `None` when nothing complied or no
+    /// energy was modeled.
+    pub joule_per_good_tok: Option<f64>,
+}
+
+impl ClassSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("class", Json::Num(self.class_id as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("attainment", Json::Num(self.attainment)),
+            ("goodput_req_per_s", Json::Num(self.goodput_rps)),
+            ("mean_ttft_s", Json::Num(self.mean_ttft)),
+            ("p99_ttft_s", Json::Num(self.p99_ttft)),
+            ("mean_tpot_s", Json::Num(self.mean_tpot)),
+            (
+                "joule_per_good_tok",
+                match self.joule_per_good_tok {
+                    Some(j) => Json::Num(j),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+#[derive(Debug, Clone)]
 pub struct MetricsSummary {
     pub requests: usize,
     pub mean_ttft: f64,
@@ -76,11 +126,15 @@ pub struct MetricsSummary {
     pub energy_j: f64,
     /// Joules per generated output token (0 when no energy was modeled).
     pub joule_per_tok: f64,
+    /// Per-traffic-class breakdown (empty when the summary was built
+    /// without a `ClassSet` — `summary()` vs `summary_for()`).
+    pub classes: Vec<ClassSummary>,
 }
 
 impl MetricsSummary {
     /// Machine-readable summary (times in seconds, throughputs per
-    /// second) — the `repro serve --json` payload.
+    /// second) — the `repro serve --json` payload. Includes one entry
+    /// per traffic class when the summary carries a breakdown.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("requests", Json::Num(self.requests as f64)),
@@ -95,6 +149,7 @@ impl MetricsSummary {
             ("throughput_req_per_s", Json::Num(self.throughput_rps)),
             ("energy_j", Json::Num(self.energy_j)),
             ("joule_per_tok", Json::Num(self.joule_per_tok)),
+            ("classes", Json::Arr(self.classes.iter().map(|c| c.to_json()).collect())),
         ])
     }
 }
@@ -131,12 +186,50 @@ impl MetricsCollector {
         self.energy_j += other.energy_j;
     }
 
-    /// Goodput under a (TTFT, TPOT) SLO: completed-and-compliant requests
-    /// per second over the makespan — the deployment-sizing metric of the
-    /// cluster experiment.
-    pub fn goodput_under_slo(&self, ttft_slo: f64, tpot_slo: f64) -> f64 {
-        let ok = self.per_request.iter().filter(|m| m.meets_slo(ttft_slo, tpot_slo)).count();
-        ok as f64 / self.makespan.max(1e-12)
+    /// Requests compliant with *their own class's* SLO — the single
+    /// filter behind goodput, attainment and J-per-good-token (formerly
+    /// three hand-rolled scalar filters that had to be kept in sync).
+    fn compliant<'a>(
+        &'a self,
+        classes: &'a ClassSet,
+    ) -> impl Iterator<Item = &'a RequestMetrics> + 'a {
+        self.per_request.iter().filter(move |m| classes.met_by(m))
+    }
+
+    /// Goodput under the deployment's traffic classes: completed-and-
+    /// compliant requests (each against its own class SLO) per second of
+    /// makespan — the deployment-sizing metric of the cluster experiments.
+    pub fn goodput(&self, classes: &ClassSet) -> f64 {
+        self.compliant(classes).count() as f64 / self.makespan.max(1e-12)
+    }
+
+    /// Fraction of completed requests meeting their class SLO.
+    pub fn attainment(&self, classes: &ClassSet) -> f64 {
+        if self.per_request.is_empty() {
+            return 0.0;
+        }
+        self.compliant(classes).count() as f64 / self.per_request.len() as f64
+    }
+
+    /// Goodput-weighted attainment: per-class attainment folded by class
+    /// weight over classes that completed at least one request — the
+    /// autoscaler's control signal. With a single weight-1 class this is
+    /// exactly [`attainment`](Self::attainment). 0.0 on an empty run.
+    pub fn weighted_attainment(&self, classes: &ClassSet) -> f64 {
+        let per = self.class_breakdown(classes);
+        let (mut num, mut den) = (0.0, 0.0);
+        for c in &per {
+            if c.requests > 0 {
+                let w = classes.class(c.class_id).weight;
+                num += w * c.attainment;
+                den += w;
+            }
+        }
+        if den > 0.0 {
+            num / den
+        } else {
+            0.0
+        }
     }
 
     /// Max per-request metric delta against another run on the same
@@ -145,7 +238,8 @@ impl MetricsCollector {
     /// count mismatch or unmatched id. Exactly 0.0 iff the two runs are
     /// bitwise-identical — the comparator behind every bitwise-parity
     /// claim (1-replica cluster ≡ engine, mixed ≡ homogeneous fleet,
-    /// unbounded prefix cache ≡ legacy warm set).
+    /// unbounded prefix cache ≡ legacy warm set, single default class ≡
+    /// scalar-SLO path).
     pub fn max_request_delta(&self, other: &MetricsCollector) -> f64 {
         let mut delta = self.per_request.len().abs_diff(other.per_request.len()) as f64;
         delta = delta.max((self.makespan - other.makespan).abs());
@@ -164,27 +258,67 @@ impl MetricsCollector {
     }
 
     /// Joules per *good* output token — energy divided by the output
-    /// tokens of SLO-compliant requests: the autoscaler's cost-per-
-    /// goodput metric. `None` when no request met the SLO (cost would be
-    /// infinite) or no energy was modeled.
-    pub fn energy_per_good_token(&self, ttft_slo: f64, tpot_slo: f64) -> Option<f64> {
-        let good_tokens: usize = self
-            .per_request
-            .iter()
-            .filter(|m| m.meets_slo(ttft_slo, tpot_slo))
-            .map(|m| m.output_tokens)
-            .sum();
-        (good_tokens > 0 && self.energy_j > 0.0)
-            .then(|| self.energy_j / good_tokens as f64)
+    /// tokens of requests compliant with their class SLO: the
+    /// autoscaler's cost-per-goodput metric. `None` when no request met
+    /// its SLO (cost would be infinite) or no energy was modeled.
+    pub fn energy_per_good_token(&self, classes: &ClassSet) -> Option<f64> {
+        let good_tokens: usize = self.compliant(classes).map(|m| m.output_tokens).sum();
+        (good_tokens > 0 && self.energy_j > 0.0).then(|| self.energy_j / good_tokens as f64)
     }
 
-    /// Fraction of completed requests meeting the SLO.
-    pub fn slo_attainment(&self, ttft_slo: f64, tpot_slo: f64) -> f64 {
-        if self.per_request.is_empty() {
-            return 0.0;
-        }
-        let ok = self.per_request.iter().filter(|m| m.meets_slo(ttft_slo, tpot_slo)).count();
-        ok as f64 / self.per_request.len() as f64
+    /// Per-class slices of the run: one [`ClassSummary`] per declared
+    /// class (classes with no completions report zeros). Run energy is
+    /// attributed to classes by output-token share.
+    pub fn class_breakdown(&self, classes: &ClassSet) -> Vec<ClassSummary> {
+        let total_tokens = self.output_tokens();
+        let span = self.makespan.max(1e-12);
+        (0..classes.len())
+            .map(|cid| {
+                let class = classes.class(cid);
+                // Bucket by the measurement set's judging id: ids this
+                // set doesn't declare fold into class 0 (the legacy
+                // global-SLO slice) instead of vanishing or panicking.
+                let of_class: Vec<&RequestMetrics> = self
+                    .per_request
+                    .iter()
+                    .filter(|m| classes.judging_id(m.class_id) == cid)
+                    .collect();
+                let ttfts: Vec<f64> = of_class.iter().map(|m| m.ttft).collect();
+                let tpots: Vec<f64> = of_class
+                    .iter()
+                    .filter(|m| m.output_tokens > 1)
+                    .map(|m| m.tpot)
+                    .collect();
+                let ok = of_class.iter().filter(|m| class.met_by(m)).count();
+                let good_tokens: usize = of_class
+                    .iter()
+                    .filter(|m| class.met_by(m))
+                    .map(|m| m.output_tokens)
+                    .sum();
+                let class_tokens: usize = of_class.iter().map(|m| m.output_tokens).sum();
+                let class_energy = if total_tokens == 0 {
+                    0.0
+                } else {
+                    self.energy_j * class_tokens as f64 / total_tokens as f64
+                };
+                ClassSummary {
+                    class_id: cid,
+                    name: class.name.clone(),
+                    requests: of_class.len(),
+                    attainment: if of_class.is_empty() {
+                        0.0
+                    } else {
+                        ok as f64 / of_class.len() as f64
+                    },
+                    goodput_rps: ok as f64 / span,
+                    mean_ttft: mean(&ttfts),
+                    p99_ttft: percentile(&ttfts, 99.0),
+                    mean_tpot: mean(&tpots),
+                    joule_per_good_tok: (good_tokens > 0 && class_energy > 0.0)
+                        .then(|| class_energy / good_tokens as f64),
+                }
+            })
+            .collect()
     }
 
     pub fn summary(&self) -> MetricsSummary {
@@ -207,13 +341,23 @@ impl MetricsCollector {
             throughput_rps: self.per_request.len() as f64 / span,
             energy_j: self.energy_j,
             joule_per_tok: if tokens == 0 { 0.0 } else { self.energy_j / tokens as f64 },
+            classes: Vec::new(),
         }
+    }
+
+    /// [`summary`](Self::summary) plus the per-class breakdown under the
+    /// deployment's declared classes.
+    pub fn summary_for(&self, classes: &ClassSet) -> MetricsSummary {
+        let mut s = self.summary();
+        s.classes = self.class_breakdown(classes);
+        s
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serving::qos::TrafficClass;
     use crate::serving::request::{Phase, Request};
 
     fn finished_seq(arrival: f64, first: f64, finish: f64, gen: usize) -> Sequence {
@@ -226,7 +370,15 @@ mod tests {
     }
 
     fn m(id: RequestId, ttft: f64) -> RequestMetrics {
-        RequestMetrics { id, ttft, tpot: 0.01, e2e: 1.0, finish: id as f64, output_tokens: 100 }
+        RequestMetrics {
+            id,
+            ttft,
+            tpot: 0.01,
+            e2e: 1.0,
+            finish: id as f64,
+            output_tokens: 100,
+            class_id: 0,
+        }
     }
 
     #[test]
@@ -236,6 +388,14 @@ mod tests {
         assert!((rm.ttft - 0.5).abs() < 1e-12);
         assert!((rm.tpot - 0.1).abs() < 1e-12);
         assert!((rm.e2e - 1.5).abs() < 1e-12);
+        assert_eq!(rm.class_id, 0, "untagged requests land in the default class");
+    }
+
+    #[test]
+    fn class_id_flows_from_request_to_metrics() {
+        let mut s = finished_seq(0.0, 0.2, 0.4, 3);
+        s.req = s.req.clone().with_class(2);
+        assert_eq!(RequestMetrics::from_sequence(&s).class_id, 2);
     }
 
     #[test]
@@ -259,6 +419,7 @@ mod tests {
         assert!(s.p99_ttft >= s.mean_ttft);
         assert!(s.p50_ttft <= s.p99_ttft);
         assert_eq!(c.output_tokens(), 1000);
+        assert!(s.classes.is_empty(), "plain summary carries no class breakdown");
     }
 
     #[test]
@@ -287,6 +448,7 @@ mod tests {
         assert_eq!(j.get("mean_ttft_s").unwrap().as_f64(), Some(0.25));
         assert_eq!(j.get("throughput_tok_per_s").unwrap().as_f64(), Some(50.0));
         assert_eq!(j.get("throughput_req_per_s").unwrap().as_f64(), Some(0.5));
+        assert!(j.get("classes").unwrap().as_arr().unwrap().is_empty());
     }
 
     #[test]
@@ -307,11 +469,14 @@ mod tests {
         assert_eq!(j.get("energy_j").unwrap().as_f64(), Some(800.0));
         assert_eq!(j.get("joule_per_tok").unwrap().as_f64(), Some(s.joule_per_tok));
         // J per *good* token under a TTFT SLO only request 0 meets.
-        assert_eq!(a.energy_per_good_token(0.2, 1.0), Some(8.0));
+        assert_eq!(a.energy_per_good_token(&ClassSet::scalar(0.2, 1.0)), Some(8.0));
         // Nobody compliant -> no finite cost.
-        assert_eq!(a.energy_per_good_token(0.01, 1.0), None);
+        assert_eq!(a.energy_per_good_token(&ClassSet::scalar(0.01, 1.0)), None);
         // No energy modeled -> None.
-        assert_eq!(MetricsCollector::default().energy_per_good_token(1.0, 1.0), None);
+        assert_eq!(
+            MetricsCollector::default().energy_per_good_token(&ClassSet::default()),
+            None
+        );
     }
 
     #[test]
@@ -320,9 +485,93 @@ mod tests {
         c.record(m(0, 0.1)); // compliant (ttft <= 0.2)
         c.record(m(1, 0.5)); // violates TTFT SLO
         c.makespan = 2.0;
-        assert!((c.goodput_under_slo(0.2, 0.05) - 0.5).abs() < 1e-12);
-        assert!((c.slo_attainment(0.2, 0.05) - 0.5).abs() < 1e-12);
+        let classes = ClassSet::scalar(0.2, 0.05);
+        assert!((c.goodput(&classes) - 0.5).abs() < 1e-12);
+        assert!((c.attainment(&classes) - 0.5).abs() < 1e-12);
         // Tightening the TPOT SLO below 0.01 kills both.
-        assert_eq!(c.goodput_under_slo(0.2, 0.001), 0.0);
+        assert_eq!(c.goodput(&ClassSet::scalar(0.2, 0.001)), 0.0);
+    }
+
+    #[test]
+    fn per_class_compliance_uses_each_requests_own_slo() {
+        // Two classes with very different TTFT SLOs; one request each at
+        // the same measured TTFT: tight class fails, loose class passes.
+        let classes = ClassSet::new(vec![
+            TrafficClass::new("tight", 1, 0.2, 0.05, 2.0),
+            TrafficClass::new("loose", 0, 2.0, 0.05, 1.0),
+        ])
+        .unwrap();
+        let mut c = MetricsCollector::default();
+        c.record(RequestMetrics { class_id: 0, ..m(0, 0.5) });
+        c.record(RequestMetrics { class_id: 1, ..m(1, 0.5) });
+        c.makespan = 1.0;
+        assert!((c.attainment(&classes) - 0.5).abs() < 1e-12);
+        assert!((c.goodput(&classes) - 1.0).abs() < 1e-12);
+        let per = c.class_breakdown(&classes);
+        assert_eq!(per.len(), 2);
+        assert_eq!((per[0].requests, per[1].requests), (1, 1));
+        assert_eq!(per[0].attainment, 0.0);
+        assert_eq!(per[1].attainment, 1.0);
+        assert_eq!(per[1].goodput_rps, 1.0);
+        assert_eq!(per[0].name, "tight");
+        // Weighted attainment: (2*0 + 1*1) / 3.
+        assert!((c.weighted_attainment(&classes) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_attainment_degenerates_to_plain_for_single_class() {
+        let mut c = MetricsCollector::default();
+        c.record(m(0, 0.1));
+        c.record(m(1, 5.0));
+        c.record(m(2, 0.2));
+        c.makespan = 1.0;
+        let classes = ClassSet::default();
+        // Exact: a single weight-1.0 class multiplies and divides by 1.0.
+        assert_eq!(c.weighted_attainment(&classes), c.attainment(&classes));
+    }
+
+    #[test]
+    fn class_breakdown_attributes_energy_by_token_share() {
+        let classes = ClassSet::new(vec![
+            TrafficClass::new("a", 0, 1.0, 0.1, 1.0),
+            TrafficClass::new("b", 0, 1.0, 0.1, 1.0),
+        ])
+        .unwrap();
+        let mut c = MetricsCollector::default();
+        // Class 0: 300 tokens, class 1: 100 tokens, all compliant.
+        c.record(RequestMetrics { class_id: 0, output_tokens: 300, ..m(0, 0.1) });
+        c.record(RequestMetrics { class_id: 1, output_tokens: 100, ..m(1, 0.1) });
+        c.makespan = 1.0;
+        c.energy_j = 400.0;
+        let per = c.class_breakdown(&classes);
+        // 400 J x (300/400) / 300 good = 1 J/tok; 400 x (100/400) / 100 = 1.
+        assert_eq!(per[0].joule_per_good_tok, Some(1.0));
+        assert_eq!(per[1].joule_per_good_tok, Some(1.0));
+        // Class summaries reach JSON (None -> null).
+        let j = Json::parse(&per[0].to_json().dump()).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(j.get("joule_per_good_tok").unwrap().as_f64(), Some(1.0));
+        let empty = MetricsCollector::default();
+        let none = &empty.class_breakdown(&classes)[0];
+        assert_eq!(none.joule_per_good_tok, None);
+        assert_eq!(
+            none.to_json().get("joule_per_good_tok"),
+            Some(&Json::Null)
+        );
+    }
+
+    #[test]
+    fn summary_for_carries_the_breakdown_into_json() {
+        let mut c = MetricsCollector::default();
+        c.record(m(0, 0.25));
+        c.makespan = 2.0;
+        let s = c.summary_for(&ClassSet::default());
+        assert_eq!(s.classes.len(), 1);
+        let j = Json::parse(&s.to_json().dump()).unwrap();
+        let arr = j.get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("default"));
+        assert_eq!(arr[0].get("requests").unwrap().as_usize(), Some(1));
+        assert_eq!(arr[0].get("attainment").unwrap().as_f64(), Some(1.0));
     }
 }

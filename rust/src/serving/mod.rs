@@ -13,16 +13,25 @@
 //!             │                          merged virtual-time event loop
 //!             ├── Router                 admission + dispatch policies
 //!             │                          (incl. cost-aware PrefixAffinity
-//!             │                          over real block residency),
+//!             │                          over real block residency and
+//!             │                          per-class QoS penalties),
 //!             │                          global queue cap, drain support
-//!             └── Autoscaler             goodput-driven scale-up/drain
-//!                                        against an SLO target
+//!             └── Autoscaler             weighted per-class-attainment-
+//!                                        driven scale-up/drain
 //! ```
+//!
+//! Cross-cutting the stack, [`qos`] defines the traffic classes
+//! ([`qos::TrafficClass`] / [`qos::ClassSet`]) every layer speaks:
+//! requests carry a [`qos::ClassId`], the scheduler admits and preempts
+//! by class priority, the router penalizes degraded per-class attainment,
+//! metrics filter compliance per class, and the autoscaler controls on
+//! weighted per-class attainment. A single default class reproduces the
+//! legacy anonymous-SLO behavior bitwise (`repro run qos-sweep`).
 //!
 //! All block bookkeeping is identical in the simulated and real paths;
 //! the cluster layer turns the per-device reproduction into a
 //! deployment-scale simulator (`repro run cluster`, `repro run
-//! cluster-sweep`, `repro run cache-sweep`).
+//! cluster-sweep`, `repro run cache-sweep`, `repro run qos-sweep`).
 
 pub mod autoscale;
 pub mod block_table;
@@ -30,8 +39,20 @@ pub mod cluster;
 pub mod engine;
 pub mod kv_cache;
 pub mod metrics;
+pub mod qos;
 pub mod real_engine;
 pub mod request;
 pub mod router;
 pub mod scheduler;
 pub mod trace;
+
+/// Fractional prefill saved when a request lands on the replica whose
+/// prefix cache holds its group's shared blocks resident (vLLM
+/// APC-style reuse). Shared between the router's routing score, the
+/// substrate's resident prefix sizing (`request::Request::prefix_len`)
+/// and `engine::SimBackend`'s prefill costing, so the router's bias and
+/// the simulated saving cannot drift apart: a residency hit really does
+/// prefill cheaper on the replica the router steered it to. Lives here
+/// (not in `router`) because `request` and `engine` consume it too —
+/// lower layers must not depend on the dispatch layer.
+pub const PREFIX_HIT_DISCOUNT: f64 = 0.4;

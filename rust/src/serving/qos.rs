@@ -1,0 +1,414 @@
+//! First-class traffic classes (router/scheduler QoS): the SLO a request
+//! is served under is no longer an anonymous `(ttft_slo, tpot_slo)`
+//! scalar pair re-plumbed ad hoc by every metrics/autoscaler/harness
+//! call site — it is a [`TrafficClass`] a request carries by
+//! [`ClassId`], declared once in `ServingConfig::classes` and threaded
+//! end-to-end:
+//!
+//! * `workload::with_class_mix` tags deterministic mixed-class traces,
+//! * the `Scheduler` admits higher-priority classes first and preempts
+//!   the lowest-priority running sequence first,
+//! * the `Router` penalizes placing high-priority traffic on replicas
+//!   whose recent per-class attainment is degraded,
+//! * `MetricsCollector` filters compliance per request against *its own
+//!   class's* SLO (one shared helper — no more triplicated filters),
+//! * the `Autoscaler` scales against weighted per-class attainment.
+//!
+//! The class machinery is inert at uniform priority: priority-0 classes
+//! never reorder admission, never change preemption victims and never
+//! move a routing score, so a single default class
+//! ([`TrafficClass::default_class`], priority 0, weight 1) behaves
+//! exactly like the pre-refactor anonymous-SLO configuration
+//! (`repro run qos-sweep` carries the EqExact-0 parity claim — tagged
+//! uniform-priority runs bitwise-equal untagged ones, and the class
+//! metrics bitwise-equal the deleted scalar formulas;
+//! `rust/tests/proptests.rs` carries the property over random
+//! workloads).
+
+use crate::serving::metrics::RequestMetrics;
+use crate::util::json::Json;
+
+/// Index of a request's traffic class inside `ServingConfig::classes`
+/// (and everywhere a [`ClassSet`] flows). Class 0 is always the default.
+pub type ClassId = usize;
+
+/// One traffic class: a named latency contract plus its scheduling
+/// priority and goodput weight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficClass {
+    /// Stable name (JSON tag, report row label).
+    pub name: String,
+    /// Scheduling priority: higher classes are admitted first under
+    /// watermark pressure and preempted last. Priority 0 is the legacy
+    /// class-blind behavior (FIFO admission, youngest-first preemption,
+    /// no routing penalty) — by construction, so a uniform-priority-0
+    /// class set replays the pre-refactor path bitwise.
+    pub priority: u8,
+    /// TTFT service-level objective in seconds.
+    pub ttft_slo: f64,
+    /// TPOT service-level objective in seconds.
+    pub tpot_slo: f64,
+    /// Weight of this class in fleet-level weighted attainment (the
+    /// autoscaler's control signal) — interactive traffic typically
+    /// outweighs background batches.
+    pub weight: f64,
+}
+
+impl TrafficClass {
+    pub fn new(
+        name: impl Into<String>,
+        priority: u8,
+        ttft_slo: f64,
+        tpot_slo: f64,
+        weight: f64,
+    ) -> TrafficClass {
+        let c = TrafficClass { name: name.into(), priority, ttft_slo, tpot_slo, weight };
+        c.validate().expect("valid traffic class");
+        c
+    }
+
+    /// The class every untagged request belongs to: priority 0, weight 1,
+    /// and the SLO the pre-refactor scalar call sites defaulted to
+    /// (TTFT <= 1 s, TPOT <= 0.1 s). A config whose `classes` is exactly
+    /// `[default_class()]` reproduces the legacy behavior bitwise.
+    pub fn default_class() -> TrafficClass {
+        TrafficClass::new("default", 0, 1.0, 0.1, 1.0)
+    }
+
+    /// Back-compat shim: an anonymous priority-0 class carrying a bare
+    /// scalar SLO pair — the ONLY place raw `(ttft_slo, tpot_slo)`
+    /// scalars should enter the class system from.
+    pub fn scalar(ttft_slo: f64, tpot_slo: f64) -> TrafficClass {
+        TrafficClass::new("slo", 0, ttft_slo, tpot_slo, 1.0)
+    }
+
+    /// Preset: interactive chat — tight TTFT/TPOT, top priority, heavy
+    /// goodput weight.
+    pub fn interactive() -> TrafficClass {
+        TrafficClass::new("interactive", 2, 0.5, 0.05, 4.0)
+    }
+
+    /// Preset: batch summarization — relaxed latency, mid priority.
+    pub fn batch() -> TrafficClass {
+        TrafficClass::new("batch", 1, 2.0, 0.2, 1.0)
+    }
+
+    /// Preset: background eval — latency-tolerant, lowest priority,
+    /// small goodput weight.
+    pub fn background() -> TrafficClass {
+        TrafficClass::new("background", 0, 8.0, 0.5, 0.25)
+    }
+
+    /// Does a completed request meet this class's SLO? The single
+    /// compliance predicate behind goodput / attainment / J-per-good-
+    /// token (previously triplicated as scalar filters in `metrics.rs`).
+    pub fn met_by(&self, m: &RequestMetrics) -> bool {
+        m.ttft <= self.ttft_slo && m.tpot <= self.tpot_slo
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.name.is_empty() {
+            anyhow::bail!("traffic class name must be non-empty");
+        }
+        if !(self.ttft_slo > 0.0 && self.ttft_slo.is_finite())
+            || !(self.tpot_slo > 0.0 && self.tpot_slo.is_finite())
+        {
+            anyhow::bail!("class '{}': SLOs must be positive and finite", self.name);
+        }
+        if !(self.weight > 0.0 && self.weight.is_finite()) {
+            anyhow::bail!("class '{}': weight must be positive and finite", self.name);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("priority", Json::Num(self.priority as f64)),
+            ("ttft_slo", Json::Num(self.ttft_slo)),
+            ("tpot_slo", Json::Num(self.tpot_slo)),
+            ("weight", Json::Num(self.weight)),
+        ])
+    }
+
+    /// Parse one class from a config-JSON object. `name` is required;
+    /// every other field defaults from [`TrafficClass::default_class`].
+    pub fn from_json(j: &Json) -> anyhow::Result<TrafficClass> {
+        let d = TrafficClass::default_class();
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("traffic class needs a string 'name'"))?
+            .to_string();
+        let num = |key: &str, dflt: f64| -> anyhow::Result<f64> {
+            match j.get(key) {
+                None => Ok(dflt),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("class '{name}': bad field '{key}'")),
+            }
+        };
+        let priority = num("priority", d.priority as f64)?;
+        if priority < 0.0 || priority.fract() != 0.0 || priority > u8::MAX as f64 {
+            anyhow::bail!("class '{name}': priority must be an integer in 0..=255");
+        }
+        // Pull every field through the closure before `name` moves into
+        // the struct (the closure borrows `name` for its error messages).
+        let ttft_slo = num("ttft_slo", d.ttft_slo)?;
+        let tpot_slo = num("tpot_slo", d.tpot_slo)?;
+        let weight = num("weight", d.weight)?;
+        let c = TrafficClass { name, priority: priority as u8, ttft_slo, tpot_slo, weight };
+        c.validate()?;
+        Ok(c)
+    }
+}
+
+/// The declared traffic classes of a deployment, indexed by [`ClassId`].
+/// Never empty: the single-element default reproduces the legacy
+/// scalar-SLO behavior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassSet {
+    classes: Vec<TrafficClass>,
+}
+
+impl Default for ClassSet {
+    fn default() -> Self {
+        ClassSet { classes: vec![TrafficClass::default_class()] }
+    }
+}
+
+impl ClassSet {
+    pub fn new(classes: Vec<TrafficClass>) -> anyhow::Result<ClassSet> {
+        let set = ClassSet { classes };
+        set.validate()?;
+        Ok(set)
+    }
+
+    /// One-class set (the legacy shape).
+    pub fn single(class: TrafficClass) -> ClassSet {
+        ClassSet { classes: vec![class] }
+    }
+
+    /// Back-compat shim for call sites that still think in a bare
+    /// `(ttft_slo, tpot_slo)` pair: a single anonymous priority-0 class.
+    pub fn scalar(ttft_slo: f64, tpot_slo: f64) -> ClassSet {
+        ClassSet::single(TrafficClass::scalar(ttft_slo, tpot_slo))
+    }
+
+    /// The interactive / batch / background preset fleet mix.
+    pub fn three_tier() -> ClassSet {
+        ClassSet {
+            classes: vec![
+                TrafficClass::interactive(),
+                TrafficClass::batch(),
+                TrafficClass::background(),
+            ],
+        }
+    }
+
+    /// The class-blind baseline: same names, SLOs and weights, every
+    /// priority flattened to 0 — FIFO admission, youngest-first
+    /// preemption, no routing penalty. The control arm of the qos-sweep
+    /// experiment's "priorities help interactive traffic" claim.
+    pub fn flatten_priorities(&self) -> ClassSet {
+        ClassSet {
+            classes: self
+                .classes
+                .iter()
+                .map(|c| TrafficClass { priority: 0, ..c.clone() })
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+
+    pub fn get(&self, id: ClassId) -> Option<&TrafficClass> {
+        self.classes.get(id)
+    }
+
+    /// The class of `id`; panics on an undeclared id (the scheduler
+    /// rejects such requests at submission).
+    pub fn class(&self, id: ClassId) -> &TrafficClass {
+        self.classes.get(id).unwrap_or_else(|| {
+            panic!("class id {id} not declared (only {} classes)", self.classes.len())
+        })
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TrafficClass> {
+        self.classes.iter()
+    }
+
+    /// Scheduling priority of `id`; 0 (the neutral legacy priority) for
+    /// ids outside the set, so components that may see untagged traffic
+    /// (the router) degrade safely instead of panicking.
+    pub fn priority_of(&self, id: ClassId) -> u8 {
+        self.classes.get(id).map_or(0, |c| c.priority)
+    }
+
+    /// The class id metrics of `id` are *judged and bucketed* under: the
+    /// declared id, or 0 for ids outside the set. Measurement sets are
+    /// allowed to be smaller than the serving set — judging a
+    /// mixed-class run with a single-class set reproduces the legacy
+    /// global-scalar-SLO measurement instead of panicking (the
+    /// autoscaler's `AutoscaleConfig::classes` is such an independent
+    /// measurement set).
+    pub fn judging_id(&self, id: ClassId) -> ClassId {
+        if id < self.classes.len() {
+            id
+        } else {
+            0
+        }
+    }
+
+    /// The class metrics of `id` are judged under (see
+    /// [`judging_id`](Self::judging_id)).
+    pub fn judging_class(&self, id: ClassId) -> &TrafficClass {
+        &self.classes[self.judging_id(id)]
+    }
+
+    /// Does a completed request meet its class's SLO (its own class, or
+    /// class 0 when this — measurement — set doesn't declare it)?
+    pub fn met_by(&self, m: &RequestMetrics) -> bool {
+        self.judging_class(m.class_id).met_by(m)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.classes.is_empty() {
+            anyhow::bail!("classes must not be empty (use the default class)");
+        }
+        for c in &self.classes {
+            c.validate()?;
+        }
+        for (i, c) in self.classes.iter().enumerate() {
+            if self.classes[..i].iter().any(|o| o.name == c.name) {
+                anyhow::bail!("duplicate traffic class name '{}'", c.name);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.classes.iter().map(|c| c.to_json()).collect())
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ClassSet> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'classes' must be an array of class objects"))?;
+        let classes = arr
+            .iter()
+            .map(TrafficClass::from_json)
+            .collect::<anyhow::Result<Vec<TrafficClass>>>()?;
+        ClassSet::new(classes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(class_id: ClassId, ttft: f64, tpot: f64) -> RequestMetrics {
+        RequestMetrics {
+            id: 1,
+            ttft,
+            tpot,
+            e2e: ttft + tpot,
+            finish: 1.0,
+            output_tokens: 10,
+            class_id,
+        }
+    }
+
+    #[test]
+    fn default_class_is_the_legacy_scalar_slo() {
+        let d = TrafficClass::default_class();
+        assert_eq!((d.priority, d.ttft_slo, d.tpot_slo, d.weight), (0, 1.0, 0.1, 1.0));
+        assert_eq!(ClassSet::default().len(), 1);
+        assert_eq!(ClassSet::default().class(0).name, "default");
+    }
+
+    #[test]
+    fn met_by_dispatches_on_the_request_class() {
+        let set = ClassSet::three_tier();
+        // 0.4s TTFT / 0.04s TPOT meets interactive (0.5/0.05)...
+        assert!(set.met_by(&m(0, 0.4, 0.04)));
+        // ...but 1.0s TTFT only meets batch and background.
+        assert!(!set.met_by(&m(0, 1.0, 0.04)));
+        assert!(set.met_by(&m(1, 1.0, 0.04)));
+        assert!(set.met_by(&m(2, 5.0, 0.4)));
+        assert!(!set.met_by(&m(2, 9.0, 0.4)));
+    }
+
+    #[test]
+    fn flatten_keeps_slos_and_weights_but_zeroes_priority() {
+        let flat = ClassSet::three_tier().flatten_priorities();
+        assert!(flat.iter().all(|c| c.priority == 0));
+        assert_eq!(flat.class(0).ttft_slo, TrafficClass::interactive().ttft_slo);
+        assert_eq!(flat.class(1).weight, TrafficClass::batch().weight);
+    }
+
+    #[test]
+    fn priority_of_is_total() {
+        let set = ClassSet::three_tier();
+        assert_eq!(set.priority_of(0), 2);
+        assert_eq!(set.priority_of(99), 0, "undeclared ids fall back to neutral priority");
+    }
+
+    #[test]
+    fn judging_is_total_over_foreign_class_ids() {
+        // A 1-class measurement set judges a mixed-class run's metrics
+        // against its single (legacy global) SLO instead of panicking —
+        // the autoscaler's independent ClassSet depends on this.
+        let scalar = ClassSet::scalar(1.0, 0.1);
+        assert_eq!(scalar.judging_id(2), 0);
+        assert!(scalar.met_by(&m(2, 0.5, 0.05)));
+        assert!(!scalar.met_by(&m(7, 2.0, 0.05)));
+        // In-range ids judge under their own class.
+        let three = ClassSet::three_tier();
+        assert_eq!(three.judging_id(2), 2);
+        assert_eq!(three.judging_class(1).name, "batch");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let set = ClassSet::three_tier();
+        let j = Json::parse(&set.to_json().dump()).unwrap();
+        assert_eq!(ClassSet::from_json(&j).unwrap(), set);
+    }
+
+    #[test]
+    fn from_json_defaults_and_rejects() {
+        let j = Json::parse(r#"[{"name": "only"}]"#).unwrap();
+        let set = ClassSet::from_json(&j).unwrap();
+        let d = TrafficClass::default_class();
+        assert_eq!(set.class(0).ttft_slo, d.ttft_slo);
+        assert_eq!(set.class(0).priority, d.priority);
+        for bad in [
+            r#"[{"priority": 1}]"#,                       // missing name
+            r#"[{"name": "a"}, {"name": "a"}]"#,          // duplicate
+            r#"[{"name": "a", "ttft_slo": -1.0}]"#,       // bad SLO
+            r#"[{"name": "a", "priority": 1.5}]"#,        // fractional priority
+            r#"[{"name": "a", "weight": 0.0}]"#,          // bad weight
+            r#"[]"#,                                       // empty
+            r#"{"name": "a"}"#,                            // not an array
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ClassSet::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn scalar_shim_carries_the_pair() {
+        let set = ClassSet::scalar(0.25, 0.02);
+        assert_eq!(set.len(), 1);
+        assert!(set.met_by(&m(0, 0.2, 0.01)));
+        assert!(!set.met_by(&m(0, 0.3, 0.01)));
+        assert_eq!(set.class(0).priority, 0, "shims never change scheduling");
+    }
+}

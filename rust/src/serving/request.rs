@@ -1,5 +1,7 @@
 //! Request and sequence state for the serving engine.
 
+use crate::serving::qos::ClassId;
+
 /// Unique request identifier.
 pub type RequestId = u64;
 
@@ -19,17 +21,30 @@ pub struct Request {
     /// already warm — `RoutePolicy::PrefixAffinity` keys on this. `None`
     /// means no reusable prefix.
     pub prefix_id: Option<u64>,
+    /// Traffic class (`serving::qos`): index into the deployment's
+    /// `ServingConfig::classes`, fixing the SLO this request is measured
+    /// against, its scheduling priority and its goodput weight. Class 0
+    /// — the default class — reproduces the legacy untagged behavior.
+    pub class_id: ClassId,
 }
 
 impl Request {
     pub fn new(id: RequestId, prompt_len: usize, max_new_tokens: usize, arrival: f64) -> Self {
         assert!(prompt_len > 0 && max_new_tokens > 0);
-        Request { id, prompt_len, max_new_tokens, arrival, prefix_id: None }
+        Request { id, prompt_len, max_new_tokens, arrival, prefix_id: None, class_id: 0 }
     }
 
     /// Tag this request as sharing a cached prefix group (builder-style).
     pub fn with_prefix(mut self, prefix_id: u64) -> Self {
         self.prefix_id = Some(prefix_id);
+        self
+    }
+
+    /// Tag this request with a traffic class (builder-style; see
+    /// `serving::qos::TrafficClass`). The scheduler rejects ids outside
+    /// the deployment's declared `ServingConfig::classes`.
+    pub fn with_class(mut self, class_id: ClassId) -> Self {
+        self.class_id = class_id;
         self
     }
 
@@ -39,10 +54,9 @@ impl Request {
     /// resident as ref-counted shared blocks. 0 for untagged requests.
     pub fn prefix_len(&self) -> usize {
         match self.prefix_id {
-            Some(_) => ((self.prompt_len as f64
-                * crate::serving::router::PREFIX_HIT_DISCOUNT)
-                as usize)
-                .max(1),
+            Some(_) => {
+                ((self.prompt_len as f64 * crate::serving::PREFIX_HIT_DISCOUNT) as usize).max(1)
+            }
             None => 0,
         }
     }
@@ -135,12 +149,21 @@ mod tests {
     }
 
     #[test]
+    fn class_tagging_defaults_to_the_default_class() {
+        assert_eq!(Request::new(1, 10, 10, 0.0).class_id, 0);
+        assert_eq!(Request::new(1, 10, 10, 0.0).with_class(2).class_id, 2);
+        // Builders compose.
+        let r = Request::new(1, 10, 10, 0.0).with_prefix(7).with_class(1);
+        assert_eq!((r.prefix_id, r.class_id), (Some(7), 1));
+    }
+
+    #[test]
     fn prefix_len_is_the_discounted_share() {
         assert_eq!(Request::new(1, 1000, 10, 0.0).prefix_len(), 0);
         let tagged = Request::new(1, 1000, 10, 0.0).with_prefix(3);
         assert_eq!(
             tagged.prefix_len(),
-            (1000.0 * crate::serving::router::PREFIX_HIT_DISCOUNT) as usize
+            (1000.0 * crate::serving::PREFIX_HIT_DISCOUNT) as usize
         );
         // Tiny prompts still pin at least one token of prefix.
         assert_eq!(Request::new(1, 1, 10, 0.0).with_prefix(3).prefix_len(), 1);

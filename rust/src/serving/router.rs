@@ -11,22 +11,41 @@
 //! (`route_resident`): `ClusterSim` answers it from each replica's paged
 //! KV-cache block manager, so the router scores blocks that actually
 //! survived eviction rather than guessing from the last writer.
+//!
+//! QoS scoring (`serving::qos`): the deployment feeds per-completion
+//! outcomes back ([`Router::record_outcome`]) into a windowed EWMA of
+//! per-replica **per-class** SLO attainment, and the scored policies
+//! (least-loaded, prefix-affinity) multiply in a penalty that steers
+//! *high-priority* traffic away from replicas whose recent attainment
+//! for that class is degraded. The penalty scales with class priority,
+//! so priority-0 classes — including the single default class — are
+//! never moved by it: routing for legacy configs is bit-identical.
+//!
 //! The router also enforces a global queue cap
 //! (backpressure instead of unbounded queueing) and supports draining:
 //! a drained replica finishes its in-flight work but receives no new
 //! requests, which is how the autoscaler (`serving::autoscale`) removes
 //! capacity without dropping requests.
 
+use crate::serving::qos::{ClassId, ClassSet};
 use crate::serving::request::Request;
+use crate::util::fasthash::FastMap;
 
-/// Fractional prefill saved when a request lands on the replica whose
-/// prefix cache holds its group's shared blocks resident (vLLM
-/// APC-style reuse). Shared between the router's routing score, the
-/// substrate's resident prefix sizing (`Request::prefix_len`) and
-/// `SimBackend`'s prefill costing, so the router's bias and the
-/// simulated saving cannot drift apart: a residency hit really does
-/// prefill cheaper on the replica the router steered it to.
-pub const PREFIX_HIT_DISCOUNT: f64 = 0.4;
+// Hoisted to `serving::PREFIX_HIT_DISCOUNT` so the request/engine layers
+// no longer depend on the dispatch layer; re-exported here for the
+// router-centric call sites that read it as part of the routing score.
+pub use crate::serving::PREFIX_HIT_DISCOUNT;
+
+/// Strength of the per-class QoS routing penalty: a replica whose recent
+/// attainment for the request's class is `a` scores
+/// `1 + QOS_ROUTE_PENALTY x priority x (1 - a)` times worse. Priority 0
+/// (the default class) makes the factor exactly 1.0 — legacy routing.
+pub const QOS_ROUTE_PENALTY: f64 = 2.0;
+
+/// EWMA smoothing of the per-(replica, class) attainment estimate: each
+/// completion moves the estimate by this fraction toward 1 (met) or 0
+/// (missed). ~20 completions of memory.
+pub const QOS_EWMA_ALPHA: f64 = 0.1;
 
 /// Dispatch policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -88,6 +107,12 @@ pub struct Router {
     drained: Vec<bool>,
     queued: usize,
     max_queued: usize,
+    /// Declared traffic classes (priorities drive the QoS penalty). The
+    /// default single class keeps every penalty factor at exactly 1.0.
+    classes: ClassSet,
+    /// EWMA per-class SLO attainment per replica (absent = 1.0, i.e.
+    /// healthy until evidence says otherwise), fed by `record_outcome`.
+    qos_att: Vec<FastMap<ClassId, f64>>,
 }
 
 /// Backpressure error.
@@ -112,7 +137,17 @@ impl Router {
             drained: vec![false; n],
             queued: 0,
             max_queued,
+            classes: ClassSet::default(),
+            qos_att: vec![FastMap::default(); n],
         }
+    }
+
+    /// Declare the deployment's traffic classes (builder-style) so the
+    /// QoS penalty knows each request class's priority. Without this the
+    /// router assumes the single default class (priority 0 — no penalty).
+    pub fn with_classes(mut self, classes: ClassSet) -> Router {
+        self.classes = classes;
+        self
     }
 
     pub fn num_replicas(&self) -> usize {
@@ -145,7 +180,35 @@ impl Router {
         self.load.push(0);
         self.cost.push(cost);
         self.drained.push(false);
+        self.qos_att.push(FastMap::default());
         self.load.len() - 1
+    }
+
+    /// Feed back one completion outcome: did the request of `class` on
+    /// `replica` meet its class SLO? Updates the windowed per-(replica,
+    /// class) attainment estimate the QoS penalty scores with.
+    pub fn record_outcome(&mut self, replica: usize, class: ClassId, met: bool) {
+        let a = self.qos_att[replica].entry(class).or_insert(1.0);
+        *a = (1.0 - QOS_EWMA_ALPHA) * *a + QOS_EWMA_ALPHA * if met { 1.0 } else { 0.0 };
+    }
+
+    /// Recent EWMA attainment of `class` on `replica` (1.0 until the
+    /// first recorded outcome).
+    pub fn class_attainment(&self, replica: usize, class: ClassId) -> f64 {
+        self.qos_att[replica].get(&class).copied().unwrap_or(1.0)
+    }
+
+    /// QoS score multiplier for placing `req` on `replica`: 1.0 for
+    /// healthy replicas and for priority-0 classes (hence exactly 1.0 —
+    /// legacy routing — for every single-default-class deployment),
+    /// growing with the request class's priority and how degraded the
+    /// replica's recent attainment for that class is.
+    fn qos_factor(&self, replica: usize, req: &Request) -> f64 {
+        let priority = self.classes.priority_of(req.class_id) as f64;
+        if priority == 0.0 {
+            return 1.0;
+        }
+        1.0 + QOS_ROUTE_PENALTY * priority * (1.0 - self.class_attainment(replica, req.class_id))
     }
 
     /// Stop routing new requests to `replica`; its in-flight work drains
@@ -200,10 +263,21 @@ impl Router {
                 self.rr_next = (i + 1) % n;
                 i
             }
-            RoutePolicy::LeastLoaded => self
-                .active()
-                .min_by_key(|&i| self.load[i])
-                .expect("at least one active replica"),
+            RoutePolicy::LeastLoaded => {
+                // Effective load: outstanding work scaled by the QoS
+                // penalty (the `+ work` term keeps the penalty effective
+                // on idle replicas). With the factor pinned at 1.0 —
+                // priority-0 classes, or no recorded degradation — the
+                // argmin is exactly the legacy least-loaded pick.
+                let work = (req.prompt_len + req.max_new_tokens) as u64;
+                self.active()
+                    .min_by(|&a, &b| {
+                        let sa = (self.load[a] + work) as f64 * self.qos_factor(a, req);
+                        let sb = (self.load[b] + work) as f64 * self.qos_factor(b, req);
+                        sa.total_cmp(&sb)
+                    })
+                    .expect("at least one active replica")
+            }
             RoutePolicy::Affinity => {
                 // Fibonacci hash of the request id over the active set
                 // (nth-active selection, no per-request allocation).
@@ -222,15 +296,18 @@ impl Router {
 
     /// Expected-cost minimizer: `cost[r] x (outstanding + this request)`,
     /// discounted by `PREFIX_HIT_DISCOUNT` on replicas whose KV cache
-    /// holds the request's prefix group resident. Ties break to the
-    /// lowest index, so routing is deterministic.
+    /// holds the request's prefix group resident and penalized by the
+    /// per-class QoS factor (degraded recent attainment for this class
+    /// repels its high-priority traffic). Ties break to the lowest
+    /// index, so routing is deterministic.
     fn prefix_affinity_pick(&self, req: &Request, resident: &impl Fn(usize, u64) -> bool) -> usize {
         let work = (req.prompt_len + req.max_new_tokens) as u64;
         let mut best: Option<(usize, f64)> = None;
         for i in self.active() {
             let hit = req.prefix_id.is_some_and(|p| resident(i, p));
             let factor = if hit { 1.0 - PREFIX_HIT_DISCOUNT } else { 1.0 };
-            let score = self.cost[i] * (self.load[i] + work) as f64 * factor;
+            let score =
+                self.cost[i] * (self.load[i] + work) as f64 * factor * self.qos_factor(i, req);
             if best.is_none_or(|(_, s)| score < s) {
                 best = Some((i, score));
             }
@@ -390,6 +467,84 @@ mod tests {
         let mut r = Router::new(RoutePolicy::RoundRobin, 2, 10);
         r.drain(0);
         r.drain(1);
+    }
+
+    #[test]
+    fn qos_penalty_steers_high_priority_off_degraded_replicas() {
+        use crate::serving::qos::ClassSet;
+        // Two equal replicas, three-tier classes (interactive = class 0,
+        // priority 2). Replica 0 repeatedly misses interactive SLOs.
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2, 1000)
+            .with_classes(ClassSet::three_tier());
+        for _ in 0..30 {
+            r.record_outcome(0, 0, false);
+        }
+        assert!(r.class_attainment(0, 0) < 0.1);
+        assert_eq!(r.class_attainment(1, 0), 1.0);
+        // Interactive traffic avoids the degraded replica even though
+        // ties would otherwise go to index 0...
+        assert_eq!(r.route(&req(0, 100).with_class(0)).unwrap(), 1);
+        // ...while background (priority 0) still balances normally: the
+        // penalty never moves priority-0 traffic.
+        assert_eq!(r.route(&req(1, 100).with_class(2)).unwrap(), 0);
+    }
+
+    #[test]
+    fn default_class_routing_is_unmoved_by_feedback() {
+        // Single default class (priority 0): even heavy recorded
+        // degradation leaves every routing decision exactly as legacy.
+        for policy in [RoutePolicy::LeastLoaded, RoutePolicy::PrefixAffinity] {
+            let mut a = Router::new(policy, 3, 1000);
+            let mut b = Router::new(policy, 3, 1000);
+            for _ in 0..50 {
+                b.record_outcome(1, 0, false);
+            }
+            for i in 0..30 {
+                let q = req(i, 64 + (i as usize * 37) % 500).with_prefix(i % 4);
+                assert_eq!(a.route(&q).unwrap(), b.route(&q).unwrap(), "{policy:?} id {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn qos_penalty_composes_with_prefix_affinity() {
+        use crate::serving::qos::ClassSet;
+        let mut r = Router::new(RoutePolicy::PrefixAffinity, 2, 1000)
+            .with_classes(ClassSet::three_tier());
+        let resident = |i: usize, p: u64| i == 0 && p == 7;
+        // Warm prefix on replica 0 wins while both replicas are healthy...
+        let warm = req(0, 100).with_prefix(7).with_class(0);
+        assert_eq!(r.route_resident(&warm, resident).unwrap(), 0);
+        r.complete(0, &warm);
+        // ...but a badly degraded interactive attainment on replica 0
+        // outweighs the 40% prefix discount (factor 1 + 2*2*0.9 = 4.6 >
+        // 1/0.6).
+        for _ in 0..60 {
+            r.record_outcome(0, 0, false);
+        }
+        let again = req(1, 100).with_prefix(7).with_class(0);
+        assert_eq!(r.route_resident(&again, resident).unwrap(), 1);
+    }
+
+    #[test]
+    fn recovery_restores_routing() {
+        use crate::serving::qos::ClassSet;
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2, 1000)
+            .with_classes(ClassSet::three_tier());
+        for _ in 0..30 {
+            r.record_outcome(0, 0, false);
+        }
+        // While degraded, even a loaded healthy replica beats replica 0.
+        let filler = req(9, 300).with_class(0);
+        assert_eq!(r.route(&filler).unwrap(), 1);
+        // A healthy streak pulls the EWMA back toward 1; the residual
+        // epsilon penalty is then dominated by real load differences, so
+        // interactive traffic returns to the recovered replica.
+        for _ in 0..80 {
+            r.record_outcome(0, 0, true);
+        }
+        assert!(r.class_attainment(0, 0) > 0.99);
+        assert_eq!(r.route(&req(0, 100).with_class(0)).unwrap(), 0);
     }
 
     #[test]

@@ -3,14 +3,28 @@
 //! (the Fig 17(d) sweep knob) and KV-block availability. Shared-prefix
 //! residency is charged here against the same block pool and watermark
 //! as per-sequence KV: admission acquires (and pins) the request's
-//! prefix group, retirement and preemption release the pin, and decode
-//! memory pressure first evicts an idle prefix before falling back to
-//! preempting the youngest running sequence.
+//! prefix group, retirement and preemption release the pin.
+//!
+//! Scheduling is traffic-class aware (`serving::qos`): admission takes
+//! the highest-priority waiting request first (FIFO within a class), and
+//! under decode memory pressure a *strictly lower-priority* running
+//! sequence is preempted before the prefix cache is touched (its idle
+//! prefixes may belong to higher classes); only then does the scheduler
+//! evict an idle prefix, and as a last resort preempt the lowest-
+//! priority (youngest within the class) running sequence. With a single
+//! class — uniform priority 0 — every tie-break degenerates to the
+//! legacy order (FIFO admission, evict-before-preempt, youngest victim),
+//! which is what keeps tagged uniform-priority runs bitwise-equal to
+//! untagged default-class runs (the qos-sweep parity claim). One
+//! deliberate behavior fix relative to the pre-refactor code: a
+//! sequence preempted earlier in the same decode step is skipped, not
+//! decoded (the legacy code let it run in two places at once).
 
 use std::collections::VecDeque;
 
 use crate::config::ServingConfig;
 use crate::serving::kv_cache::{KvBlockManager, PrefixAcquire};
+use crate::serving::qos::ClassSet;
 use crate::serving::request::{Phase, Request, RequestId, Sequence};
 use crate::util::fasthash::FastMap;
 
@@ -41,6 +55,15 @@ pub struct Scheduler {
     /// Recompute-cost weight for `EvictionPolicy::CostAware`, supplied by
     /// the backend's device cost model (1.0 until the engine sets it).
     prefix_weight: f64,
+    /// The deployment's traffic classes (from `ServingConfig::classes`):
+    /// admission and preemption order consult per-class priority.
+    classes: ClassSet,
+    /// True when every declared class has the same priority (always true
+    /// for single-class configs): priority can never reorder anything,
+    /// so admission/preemption/decode ordering take the legacy O(1)
+    /// fast paths — which also makes the single-class bitwise parity
+    /// with the pre-refactor scheduler structural, not incidental.
+    uniform_priority: bool,
 }
 
 impl Scheduler {
@@ -48,6 +71,9 @@ impl Scheduler {
         cfg.validate().expect("valid config");
         let kv = KvBlockManager::new(cfg.num_blocks, cfg.block_size, cfg.watermark)
             .with_prefix_cache(cfg.prefix_cache_blocks, cfg.eviction);
+        let classes = cfg.classes.clone();
+        let uniform_priority =
+            classes.iter().all(|c| c.priority == classes.class(0).priority);
         Scheduler {
             cfg,
             kv,
@@ -57,7 +83,14 @@ impl Scheduler {
             finished: Vec::new(),
             preempted: Vec::new(),
             prefix_weight: 1.0,
+            classes,
+            uniform_priority,
         }
+    }
+
+    /// Scheduling priority of a stored sequence's traffic class.
+    fn priority_of(&self, id: RequestId) -> u8 {
+        self.classes.priority_of(self.seqs[&id].req.class_id)
     }
 
     /// Set the recompute-cost weight cost-aware eviction ranks prefixes
@@ -76,6 +109,13 @@ impl Scheduler {
         assert!(
             req.prompt_len + req.max_new_tokens <= self.cfg.max_seq_len,
             "request exceeds max_seq_len"
+        );
+        assert!(
+            req.class_id < self.classes.len(),
+            "request {} tagged with undeclared class {} (config declares {})",
+            req.id,
+            req.class_id,
+            self.classes.len()
         );
         let id = req.id;
         let prev = self.seqs.insert(id, Sequence::new(req));
@@ -118,13 +158,57 @@ impl Scheduler {
         &self.running
     }
 
+    /// Position in `waiting` of the next request to consider: highest
+    /// class priority first, FIFO within a class. With uniform
+    /// priorities this is always position 0 — the legacy plain-FIFO
+    /// front, preserving bitwise parity for single-class configs.
+    fn best_waiting_pos(&self) -> Option<usize> {
+        if self.uniform_priority {
+            // Legacy plain FIFO: the front, O(1).
+            return if self.waiting.is_empty() { None } else { Some(0) };
+        }
+        let mut best: Option<(usize, u8)> = None;
+        for (pos, id) in self.waiting.iter().enumerate() {
+            let p = self.priority_of(*id);
+            match best {
+                // Strictly-greater keeps the earliest among equals (FIFO).
+                Some((_, bp)) if p <= bp => {}
+                _ => best = Some((pos, p)),
+            }
+        }
+        best.map(|(pos, _)| pos)
+    }
+
+    /// The preemption victim: the lowest-priority running sequence,
+    /// youngest (latest-admitted) within that class. With uniform
+    /// priorities this is the legacy youngest-running victim.
+    fn preempt_victim(&self) -> Option<RequestId> {
+        if self.uniform_priority {
+            // Legacy youngest-running victim, O(1).
+            return self.running.last().copied();
+        }
+        let mut best: Option<(usize, u8)> = None;
+        for (pos, id) in self.running.iter().enumerate() {
+            let p = self.priority_of(*id);
+            match best {
+                // `<=` keeps the latest among equals (the youngest).
+                Some((_, bp)) if p > bp => {}
+                _ => best = Some((pos, p)),
+            }
+        }
+        best.map(|(pos, _)| self.running[pos])
+    }
+
     /// Decide the next step. vLLM policy: admit prefills while the decode
-    /// batch has headroom and blocks allow; otherwise decode.
+    /// batch has headroom and blocks allow; otherwise decode. Admission
+    /// pulls the highest-priority waiting class first (under watermark
+    /// pressure the budget goes to interactive traffic before batch).
     pub fn schedule(&mut self) -> Step {
         // 1. Try to start prefills (prefill-prioritized continuous batching).
         let mut prefill: Vec<RequestId> = Vec::new();
         let mut token_budget = self.cfg.max_prefill_tokens;
-        while let Some(&id) = self.waiting.front() {
+        while let Some(pos) = self.best_waiting_pos() {
+            let id = self.waiting[pos];
             if self.running.len() + prefill.len() >= self.cfg.max_decode_batch {
                 break;
             }
@@ -158,7 +242,7 @@ impl Scheduler {
             s.prefix_hit = hit;
             s.prefix_pinned = pinned;
             token_budget -= prompt_len;
-            self.waiting.pop_front();
+            self.waiting.remove(pos);
             prefill.push(id);
         }
         if !prefill.is_empty() {
@@ -176,25 +260,59 @@ impl Scheduler {
         if self.running.is_empty() {
             return Step::Idle;
         }
-        let batch: Vec<RequestId> =
-            self.running.iter().copied().take(self.cfg.max_decode_batch).collect();
+        // Decode slots go to higher classes first; the sort is stable, so
+        // within a class the running order is preserved — and uniform-
+        // priority configs skip the sort entirely (the legacy snapshot).
+        let batch: Vec<RequestId> = if self.uniform_priority {
+            self.running.iter().copied().take(self.cfg.max_decode_batch).collect()
+        } else {
+            let mut order: Vec<RequestId> = self.running.clone();
+            order.sort_by_key(|id| std::cmp::Reverse(self.priority_of(*id)));
+            order.truncate(self.cfg.max_decode_batch);
+            order
+        };
         let mut scheduled = Vec::with_capacity(batch.len());
         for id in batch {
+            // A preemption earlier in this loop may have victimized a
+            // later batch entry (the lowest class sorts to the end):
+            // a preempted sequence is back in `waiting` with its KV
+            // freed and must NOT decode — allocating for it here would
+            // let it run in two places and complete twice.
+            if self.seqs[&id].phase != Phase::Running {
+                continue;
+            }
             let kv_len = self.seqs[&id].kv_len;
             match self.kv.allocate(id, kv_len + 1) {
                 Ok(()) => scheduled.push(id),
                 Err(_) => {
+                    // QoS ordering under memory pressure: a *strictly
+                    // lower-priority* running sequence is preempted before
+                    // the prefix cache is touched — its idle prefixes may
+                    // belong to higher classes and are worth more than the
+                    // low class's progress. With uniform priorities this
+                    // arm never fires, preserving the legacy order.
+                    if let Some(victim) = self.preempt_victim() {
+                        if self.priority_of(victim) < self.priority_of(id) {
+                            self.preempt(victim);
+                            debug_assert_ne!(victim, id, "strictly lower priority");
+                            if self.kv.allocate(id, kv_len + 1).is_ok() {
+                                scheduled.push(id);
+                            }
+                            continue;
+                        }
+                    }
                     // Evict-or-preempt: reclaiming an idle shared prefix
                     // is strictly cheaper than recomputing a live
-                    // sequence, so try that first.
+                    // sequence of the same (or higher) class.
                     if self.kv.evict_one_idle_prefix()
                         && self.kv.allocate(id, kv_len + 1).is_ok()
                     {
                         scheduled.push(id);
                         continue;
                     }
-                    // Preempt the *youngest* running sequence to make room.
-                    if let Some(victim) = self.running.last().copied() {
+                    // Last resort: preempt the lowest-priority running
+                    // sequence (the *youngest* within that class).
+                    if let Some(victim) = self.preempt_victim() {
                         if victim != id || self.running.len() > 1 {
                             self.preempt(victim);
                             // Retry this sequence if it wasn't the victim.
@@ -477,5 +595,162 @@ mod tests {
             Step::Prefill(ids) => assert_eq!(ids, vec![0, 1, 2, 3, 4]),
             other => panic!("{other:?}"),
         }
+    }
+
+    fn three_tier_cfg(max_decode_batch: usize, num_blocks: usize) -> ServingConfig {
+        ServingConfig {
+            classes: crate::serving::qos::ClassSet::three_tier(),
+            ..cfg(max_decode_batch, num_blocks)
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "undeclared class")]
+    fn undeclared_class_rejected() {
+        let mut s = Scheduler::new(cfg(4, 16));
+        s.submit(Request::new(1, 10, 5, 0.0).with_class(3));
+    }
+
+    #[test]
+    fn admission_pulls_higher_classes_first_fifo_within_class() {
+        // Submission order: background, batch, interactive, interactive.
+        // Admission order must be interactive (FIFO among the two), then
+        // batch, then background.
+        let mut s = Scheduler::new(three_tier_cfg(8, 256));
+        s.submit(Request::new(0, 64, 3, 0.0).with_class(2)); // background (prio 0)
+        s.submit(Request::new(1, 64, 3, 0.0).with_class(1)); // batch (prio 1)
+        s.submit(Request::new(2, 64, 3, 0.0).with_class(0)); // interactive (prio 2)
+        s.submit(Request::new(3, 64, 3, 0.0).with_class(0)); // interactive
+        match s.schedule() {
+            Step::Prefill(ids) => assert_eq!(ids, vec![2, 3, 1, 0]),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn watermark_pressure_admits_interactive_first() {
+        // Batch cap of 2: only the two interactive requests get in even
+        // though a background request arrived first.
+        let mut s = Scheduler::new(three_tier_cfg(2, 256));
+        s.submit(Request::new(0, 64, 10, 0.0).with_class(2));
+        s.submit(Request::new(1, 64, 10, 0.0).with_class(0));
+        s.submit(Request::new(2, 64, 10, 0.0).with_class(0));
+        match s.schedule() {
+            Step::Prefill(ids) => assert_eq!(ids, vec![1, 2]),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(s.num_waiting(), 1);
+    }
+
+    #[test]
+    fn preemption_victimizes_the_lowest_priority_class() {
+        // 8 blocks of 128 = 1024 tokens. An interactive and a background
+        // sequence both want to grow past capacity: the background one
+        // (submitted first, so the *older* — legacy youngest-first would
+        // have spared it) must be the victim.
+        let mut s = Scheduler::new(ServingConfig {
+            watermark: 0.0,
+            ..three_tier_cfg(4, 8)
+        });
+        s.submit(Request::new(1, 384, 400, 0.0).with_class(2)); // background
+        s.submit(Request::new(2, 384, 400, 0.0).with_class(0)); // interactive
+        let _ = s.schedule(); // prefill both (3 blocks each, 2 free)
+        assert_eq!(s.num_running(), 2);
+        for step in 0..400 {
+            match s.schedule() {
+                Step::Decode(ids) => s.complete_decode(&ids, step as f64),
+                _ => break,
+            }
+            if s.seq(1).phase == Phase::Preempted {
+                break;
+            }
+            assert_ne!(s.seq(2).phase, Phase::Preempted, "interactive must never be victimized");
+        }
+        assert_eq!(s.seq(1).phase, Phase::Preempted, "background is the victim");
+        assert_eq!(s.seq(2).preemptions, 0);
+        assert!(s.kv.check_conservation());
+    }
+
+    #[test]
+    fn lower_priority_preempted_before_idle_prefix_eviction() {
+        // A finished interactive request leaves an idle resident prefix.
+        // When an interactive sequence later hits memory pressure while a
+        // background sequence runs, the background sequence is preempted
+        // and the higher class's warm prefix survives.
+        let mut s = Scheduler::new(ServingConfig {
+            prefix_cache_blocks: 8,
+            watermark: 0.0,
+            ..three_tier_cfg(4, 8)
+        });
+        s.submit(Request::new(1, 640, 2, 0.0).with_class(0).with_prefix(3)); // 2 shared blocks
+        let _ = s.schedule(); // prefill
+        let _ = s.schedule(); // decode
+        s.complete_decode(&[1], 0.1);
+        let _ = s.schedule();
+        s.complete_decode(&[1], 0.2);
+        assert_eq!(s.take_finished(), vec![1]);
+        assert!(s.kv.prefix_resident(3), "prefix idles warm after finish");
+        // Background then interactive fill the rest of the pool.
+        s.submit(Request::new(2, 384, 200, 1.0).with_class(2));
+        s.submit(Request::new(3, 384, 200, 1.0).with_class(0));
+        let _ = s.schedule(); // prefill both (3 + 3 blocks; 2 resident, 0 free)
+        assert_eq!(s.num_running(), 2);
+        assert_eq!(s.kv.num_free(), 0);
+        // First decode growth: the interactive sequence's allocation must
+        // preempt the background peer, NOT evict the warm prefix.
+        let mut preempted_background = false;
+        for step in 0..10 {
+            match s.schedule() {
+                Step::Decode(ids) => s.complete_decode(&ids, 2.0 + step as f64),
+                Step::Prefill(_) => {}
+                Step::Idle => break,
+            }
+            if s.seq(2).phase == Phase::Preempted {
+                preempted_background = true;
+                break;
+            }
+        }
+        assert!(preempted_background, "background sequence must be the victim");
+        assert!(
+            s.kv.prefix_resident(3),
+            "the interactive class's idle prefix must survive the pressure"
+        );
+        assert_eq!(s.seq(3).preemptions, 0);
+        assert_eq!(s.kv.prefix_stats().evictions, 0);
+        // The victim was later in the (priority-sorted) decode snapshot:
+        // it must have been skipped, not decoded while back in `waiting`.
+        assert_eq!(s.seq(2).generated, 0, "a just-preempted sequence must not decode");
+        assert!(s.kv.check_conservation());
+    }
+
+    #[test]
+    fn uniform_priorities_keep_the_legacy_victim_and_eviction_order() {
+        // The single-class replay of `idle_prefix_evicted_before_preempting
+        // _a_sequence`: with every request in the default class, pressure
+        // still evicts the idle prefix first and preempts nobody.
+        let mut s = Scheduler::new(ServingConfig {
+            prefix_cache_blocks: 8,
+            watermark: 0.0,
+            ..cfg(4, 8)
+        });
+        s.submit(Request::new(1, 640, 2, 0.0).with_prefix(3));
+        let _ = s.schedule();
+        let _ = s.schedule();
+        s.complete_decode(&[1], 0.1);
+        let _ = s.schedule();
+        s.complete_decode(&[1], 0.2);
+        assert_eq!(s.take_finished(), vec![1]);
+        s.submit(Request::new(2, 384, 200, 1.0));
+        s.submit(Request::new(3, 384, 200, 1.0));
+        let _ = s.schedule();
+        match s.schedule() {
+            Step::Decode(ids) => {
+                assert_eq!(ids.len(), 2);
+                s.complete_decode(&ids, 2.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(!s.kv.prefix_resident(3), "uniform classes evict the idle prefix first");
+        assert_eq!(s.seq(2).preemptions + s.seq(3).preemptions, 0);
     }
 }

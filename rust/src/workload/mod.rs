@@ -2,6 +2,7 @@
 //! variable-length trace (Fig 17(d,e)), Poisson arrivals, and Zipf
 //! embedding-index streams for the RecSys benchmarks.
 
+use crate::serving::qos::ClassId;
 use crate::serving::request::Request;
 use crate::util::prng::{Rng, Zipf};
 
@@ -26,11 +27,19 @@ pub struct DynamicSonnet {
     /// NOT from the RNG, so enabling prefixes never perturbs the length
     /// or arrival streams of an existing seed.
     pub prefix_groups: usize,
+    /// Traffic-class mix as `(class_id, share)` pairs (`serving::qos`):
+    /// request ids are mapped deterministically onto classes in share
+    /// proportion — id `i` takes the class whose cumulative share bucket
+    /// contains `i mod total_shares`. Empty (the default) leaves every
+    /// request in class 0. Like prefix tagging, the mapping is id-derived
+    /// and RNG-free, so enabling a class mix never perturbs the length or
+    /// arrival streams of an existing seed.
+    pub class_mix: Vec<(ClassId, usize)>,
 }
 
 impl Default for DynamicSonnet {
     fn default() -> Self {
-        DynamicSonnet { max_input: 2048, max_output: 512, prefix_groups: 0 }
+        DynamicSonnet { max_input: 2048, max_output: 512, prefix_groups: 0, class_mix: Vec::new() }
     }
 }
 
@@ -42,9 +51,35 @@ impl DynamicSonnet {
         self
     }
 
-    /// Request-id -> prefix-group tag (id-derived, RNG-free; see
-    /// `prefix_groups`).
+    /// Tag generated requests with a deterministic traffic-class mix
+    /// (builder-style; see `class_mix`). Shares must be positive.
+    pub fn with_class_mix(mut self, mix: Vec<(ClassId, usize)>) -> Self {
+        assert!(mix.iter().all(|&(_, share)| share > 0), "class shares must be positive");
+        self.class_mix = mix;
+        self
+    }
+
+    /// Request-id -> class tag (id-derived, RNG-free; see `class_mix`).
+    fn class_of(&self, id: u64) -> ClassId {
+        if self.class_mix.is_empty() {
+            return 0;
+        }
+        let total: usize = self.class_mix.iter().map(|&(_, s)| s).sum();
+        let r = (id % total as u64) as usize;
+        let mut acc = 0;
+        for &(class, share) in &self.class_mix {
+            acc += share;
+            if r < acc {
+                return class;
+            }
+        }
+        unreachable!("r < total by construction")
+    }
+
+    /// Request-id -> prefix-group and class tags (id-derived, RNG-free;
+    /// see `prefix_groups` / `class_mix`).
     fn tag(&self, req: Request) -> Request {
+        let req = req.with_class(self.class_of(req.id));
         if self.prefix_groups == 0 {
             return req;
         }
@@ -101,6 +136,13 @@ impl OpenLoopTrace {
     /// (builder-style; RNG-free, see `DynamicSonnet::prefix_groups`).
     pub fn with_prefix_groups(mut self, groups: usize) -> Self {
         self.workload.prefix_groups = groups;
+        self
+    }
+
+    /// Tag generated requests with a deterministic traffic-class mix
+    /// (builder-style; RNG-free, see `DynamicSonnet::class_mix`).
+    pub fn with_class_mix(mut self, mix: Vec<(ClassId, usize)>) -> Self {
+        self.workload = self.workload.with_class_mix(mix);
         self
     }
 
@@ -269,6 +311,45 @@ mod tests {
         assert_eq!(open.len(), open_plain.len());
         assert!(open.iter().all(|r| r.prefix_id == Some(r.id % 3)));
         assert!(open.iter().zip(&open_plain).all(|(a, b)| a.arrival == b.arrival));
+    }
+
+    #[test]
+    fn class_tagging_is_rng_free_and_share_proportional() {
+        let plain = DynamicSonnet::default().generate(40, 12.0, 5);
+        let mix = vec![(0usize, 2usize), (1, 1), (2, 1)];
+        let tagged = DynamicSonnet::default().with_class_mix(mix.clone()).generate(40, 12.0, 5);
+        // Same lengths and arrivals — the tag never consumes RNG draws.
+        for (a, b) in plain.iter().zip(&tagged) {
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.class_id, 0);
+        }
+        // Shares land exactly: ids cycle 0,0,1,2 over total share 4.
+        let count = |c: usize| tagged.iter().filter(|r| r.class_id == c).count();
+        assert_eq!((count(0), count(1), count(2)), (20, 10, 10));
+        assert_eq!(tagged[0].class_id, 0);
+        assert_eq!(tagged[2].class_id, 1);
+        assert_eq!(tagged[3].class_id, 2);
+        // Class and prefix tagging compose.
+        let both = DynamicSonnet::default()
+            .with_class_mix(mix)
+            .with_prefix_groups(4)
+            .generate(12, 12.0, 5);
+        assert!(both.iter().all(|r| r.prefix_id == Some(r.id % 4)));
+        assert!(both.iter().any(|r| r.class_id > 0));
+        // Open-loop traces tag identically.
+        let open = OpenLoopTrace::new(20.0, 3.0).with_class_mix(vec![(1, 1)]).generate(11);
+        let open_plain = OpenLoopTrace::new(20.0, 3.0).generate(11);
+        assert_eq!(open.len(), open_plain.len());
+        assert!(open.iter().all(|r| r.class_id == 1));
+        assert!(open.iter().zip(&open_plain).all(|(a, b)| a.arrival == b.arrival));
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_class_share_rejected() {
+        let _ = DynamicSonnet::default().with_class_mix(vec![(0, 0)]);
     }
 
     #[test]

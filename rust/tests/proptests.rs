@@ -261,6 +261,122 @@ fn unbounded_cache_is_bitwise_equal_to_legacy_warm_set() {
 }
 
 #[test]
+fn single_class_configs_are_bitwise_equal_to_the_legacy_scalar_path() {
+    // Property over random workload shapes (serving::qos): tagging a
+    // trace across uniform-priority-0 classes — the degenerate class
+    // structure every pre-refactor run implicitly had — must replay the
+    // untagged single-default-class run per-request bitwise, through the
+    // full cluster path (scheduler admission/preemption order, router
+    // scoring, per-class metrics feedback).
+    use cuda_myth::serving::cluster::ClusterSim;
+    use cuda_myth::serving::qos::{ClassSet, TrafficClass};
+    forall(
+        71,
+        10,
+        &PairOf(PairOf(UsizeIn(8, 28), UsizeIn(1, 3)), UsizeIn(1, 1000)),
+        |&((n, replicas), seed)| {
+            let base = ServingConfig {
+                replicas,
+                route_policy: RoutePolicy::LeastLoaded,
+                num_blocks: 2048,
+                max_decode_batch: 12,
+                ..Default::default()
+            };
+            let uniform = ClassSet::new(vec![
+                TrafficClass::new("a", 0, 1.0, 0.1, 1.0),
+                TrafficClass::new("b", 0, 0.4, 0.05, 3.0),
+                TrafficClass::new("c", 0, 6.0, 0.4, 0.5),
+            ])
+            .unwrap();
+            let run = |cfg: &ServingConfig, mix: Vec<(usize, usize)>| {
+                let mut w = DynamicSonnet::default();
+                if !mix.is_empty() {
+                    w = w.with_class_mix(mix);
+                }
+                let mut sim = ClusterSim::new(cfg, LlamaConfig::llama31_8b());
+                sim.submit_all(w.generate(n, 25.0, seed as u64));
+                sim.run_to_completion();
+                sim.fleet_metrics()
+            };
+            let single = run(&base, vec![]);
+            let multi = run(
+                &ServingConfig { classes: uniform, ..base.clone() },
+                vec![(0, 2), (1, 1), (2, 1)],
+            );
+            single.max_request_delta(&multi) == 0.0
+        },
+    );
+}
+
+#[test]
+fn preemption_never_victimizes_a_strictly_higher_priority_sequence() {
+    // Property (serving::qos): whatever random mixed-class load hits a
+    // memory-starved scheduler, every preemption victim has priority <=
+    // every sequence still running at that moment — a higher class is
+    // never recomputed while a lower class keeps its KV.
+    use cuda_myth::serving::qos::ClassSet;
+    forall(
+        73,
+        60,
+        &VecOf(PairOf(PairOf(UsizeIn(64, 700), UsizeIn(4, 120)), UsizeIn(0, 2)), 14),
+        |reqs| {
+            let cfg = ServingConfig {
+                classes: ClassSet::three_tier(),
+                num_blocks: 12, // 12 x 128 tokens: heavy pressure
+                max_decode_batch: 6,
+                max_seq_len: 2048,
+                watermark: 0.0,
+                ..Default::default()
+            };
+            let mut s = Scheduler::new(cfg);
+            let classes = ClassSet::three_tier();
+            for (i, &((prompt, out), class)) in reqs.iter().enumerate() {
+                let prompt = prompt.min(1500);
+                let out = out.min(2048 - prompt).max(1);
+                s.submit(Request::new(i as u64, prompt, out, 0.0).with_class(class));
+            }
+            let prio = |s: &Scheduler, id: u64| classes.priority_of(s.seq(id).req.class_id);
+            let mut guard = 0;
+            let mut finished: Vec<u64> = Vec::new();
+            loop {
+                guard += 1;
+                if guard > 100_000 {
+                    return false; // livelock
+                }
+                match s.schedule() {
+                    Step::Decode(ids) => s.complete_decode(&ids, guard as f64),
+                    Step::Prefill(ids) => {
+                        if ids.is_empty() {
+                            return false;
+                        }
+                    }
+                    Step::Idle => break,
+                }
+                // Every victim of this step must be of the lowest
+                // priority present: no still-running sequence may sit
+                // strictly below any victim.
+                for v in s.take_preempted() {
+                    let vp = prio(&s, v);
+                    if s.running_ids().iter().any(|&r| prio(&s, r) < vp) {
+                        return false;
+                    }
+                }
+                finished.extend(s.take_finished());
+                if !s.kv.check_conservation() {
+                    return false;
+                }
+            }
+            // No request finishes twice, whatever preemption interleaving
+            // the pressure produced.
+            let n = finished.len();
+            finished.sort_unstable();
+            finished.dedup();
+            n == finished.len() && s.kv.check_conservation()
+        },
+    );
+}
+
+#[test]
 fn block_table_and_list_agree_on_effectual_blocks() {
     forall(13, 200, &VecOf(UsizeIn(1, 3000), 16), |lens| {
         let mut m = KvBlockManager::new(512, 128, 0.0);
