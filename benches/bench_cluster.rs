@@ -1,8 +1,12 @@
-//! Bench: the cluster simulator's own hot paths — the merged next-event
-//! loop across replicas must stay negligible against the simulated step
+//! Bench: the cluster simulator's own hot paths — the indexed
+//! discrete-event core must stay negligible against the simulated step
 //! times it dispatches, or fleet sweeps (`repro run cluster`) stop being
-//! interactive. Runs under the in-tree `util::benchkit` harness (the
-//! repo's criterion replacement; `cargo bench --bench bench_cluster`).
+//! interactive. The large-fleet cases (100 replicas x 10k/100k streamed
+//! arrivals) are where the heap dispatch separates from the old
+//! O(replicas)-per-event scan; `repro run sim-speed` tracks the same
+//! ratio as a gated artifact. Runs under the in-tree `util::benchkit`
+//! harness (the repo's criterion replacement; `cargo bench --bench
+//! bench_cluster`).
 
 use cuda_myth::config::{DeviceKind, ServingConfig};
 use cuda_myth::models::llama::LlamaConfig;
@@ -40,6 +44,25 @@ fn mixed_episode(n_requests: usize) -> usize {
     ]);
     let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
     sim.submit_all(DynamicSonnet::default().with_prefix_groups(8).generate(n_requests, 60.0, 17));
+    let s = sim.run_to_completion();
+    s.requests
+}
+
+/// Large-fleet episode: 100 replicas fed a lazy short-decode stream, the
+/// shape the indexed event core exists for (O(log) dispatch, O(open
+/// requests) memory).
+fn large_fleet_episode(replicas: usize, n_requests: usize) -> usize {
+    let cfg = ServingConfig {
+        replicas,
+        route_policy: RoutePolicy::LeastLoaded,
+        max_queued: 100_000,
+        max_decode_batch: 16,
+        num_blocks: 2048,
+        ..Default::default()
+    };
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    let w = DynamicSonnet { max_input: 64, max_output: 8, ..Default::default() };
+    sim.feed(w.stream(n_requests, n_requests as f64 / 600.0, 17));
     let s = sim.run_to_completion();
     s.requests
 }
@@ -97,4 +120,15 @@ fn main() {
     });
 
     b.finish("cluster");
+
+    // The scale cases run under quick settings: each iteration is a full
+    // streamed episode, so default min-time targets would take minutes.
+    let mut big = Bencher::quick();
+    big.bench("large-fleet episode (100 replicas, 10k streamed arrivals)", || {
+        black_box(large_fleet_episode(100, 10_000))
+    });
+    big.bench("large-fleet episode (100 replicas, 100k streamed arrivals)", || {
+        black_box(large_fleet_episode(100, 100_000))
+    });
+    big.finish("cluster-large");
 }

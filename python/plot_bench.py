@@ -16,11 +16,20 @@ class-mix grid) additionally get one combined per-class attainment
 figure overlaying every class's curve across all sweep reports (one
 linestyle per report/mix, one color per class).
 
-Usage:
-    python python/plot_bench.py <artifact-dir> [--out <plot-dir>]
+``BENCH_sim_speed.json`` (the simulator's self-benchmark) additionally
+gets an events/sec trend figure: one line per event loop (indexed core
+vs scan-loop oracle). Pass several artifact directories — one per
+commit, oldest first — and the trend spans them; a single directory
+yields single-point series (the CI smoke shape).
 
-Exit codes: 0 on success, 2 when the directory holds no artifacts (so a
-CI smoke step fails loudly if the producer broke).
+Usage:
+    python python/plot_bench.py <artifact-dir> [<older-dir> ...] [--out <plot-dir>]
+
+Per-report figures are rendered from the first directory; the sim-speed
+trend spans every directory given, in order.
+
+Exit codes: 0 on success, 2 when the first directory holds no artifacts
+(so a CI smoke step fails loudly if the producer broke).
 """
 
 from __future__ import annotations
@@ -36,8 +45,8 @@ SCHEMA = "cuda-myth/experiment-v1"
 # Units drawn as curves (y-axes); anything else (counts, labels) is
 # context, not a metric worth a line.
 CURVE_UNITS = {
-    "s", "ms", "tok/s", "req/s", "frac", "J/tok", "J", "TFLOPS", "GFLOPS",
-    "GiB/s", "GB/s", "TB/s", "ratio", "W",
+    "s", "ms", "tok/s", "req/s", "ev/s", "frac", "J/tok", "J", "TFLOPS",
+    "GFLOPS", "GiB/s", "GB/s", "TB/s", "ratio", "W",
 }
 
 
@@ -192,6 +201,68 @@ def plot_class_attainment(experiment: str, artifact: dict, out_dir: Path) -> Pat
     return out
 
 
+def plot_sim_speed_trend(artifact_dirs: list[Path], out_dir: Path) -> Path | None:
+    """Events/sec trend for the sim-speed self-benchmark: one line per
+    event loop (row label of the throughput report) across the given
+    artifact directories in order — a commit history when the caller
+    keeps one directory per commit, single-point series for one dir."""
+    series: dict[str, list[float]] = {}
+    labels: list[str] = []
+    for d in artifact_dirs:
+        path = d / "BENCH_sim_speed.json"
+        if not path.exists():
+            continue
+        artifact = json.loads(path.read_text())
+        if artifact.get("schema") != SCHEMA:
+            continue
+        report = next(
+            (r for r in artifact.get("reports", []) if "Sim-speed throughput" in r.get("title", "")),
+            None,
+        )
+        if report is None:
+            continue
+        ev_cols = [
+            idx
+            for idx, name, unit in numeric_columns(report)
+            if unit == "ev/s" and name == "events/sec"
+        ]
+        if not ev_cols:
+            continue
+        values = column_values(report, ev_cols[0])
+        labels.append(d.name)
+        for row, v in zip(report.get("rows", []), values):
+            loop = row[0] if row and isinstance(row[0], str) else "?"
+            # Pad a loop first seen now with NaNs for the earlier dirs.
+            series.setdefault(loop, [float("nan")] * (len(labels) - 1)).append(v)
+        for vals in series.values():
+            if len(vals) < len(labels):  # loop absent from this dir
+                vals.append(float("nan"))
+    if not series:
+        return None
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(7, 4.5))
+    xs = list(range(len(labels)))
+    for loop, vals in series.items():
+        ax.plot(xs, vals, marker="o", label=loop)
+    ax.set_xticks(xs)
+    ax.set_xticklabels(labels, rotation=30, ha="right", fontsize=7)
+    ax.set_xlabel("artifact directory (commit order)")
+    ax.set_ylabel("simulated events per wall-clock second [ev/s]")
+    ax.set_title("sim_speed: dispatch throughput trend")
+    ax.legend(fontsize=8, title="event loop")
+    ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+    out = out_dir / "sim_speed__events-per-sec-trend.png"
+    fig.savefig(out, dpi=110)
+    plt.close(fig)
+    return out
+
+
 def plot_artifact(path: Path, out_dir: Path) -> list[Path]:
     artifact = json.loads(path.read_text())
     schema = artifact.get("schema")
@@ -212,11 +283,17 @@ def plot_artifact(path: Path, out_dir: Path) -> list[Path]:
 
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("artifact_dir", help="directory holding BENCH_*.json artifacts")
+    ap.add_argument(
+        "artifact_dir",
+        nargs="+",
+        help="director(ies) holding BENCH_*.json artifacts; per-report plots "
+        "come from the first, the sim-speed trend spans all (commit order)",
+    )
     ap.add_argument("--out", default=None, help="plot output directory (default: <artifact-dir>/plots)")
     args = ap.parse_args(argv)
 
-    artifact_dir = Path(args.artifact_dir)
+    dirs = [Path(d) for d in args.artifact_dir]
+    artifact_dir = dirs[0]
     artifacts = sorted(artifact_dir.glob("BENCH_*.json"))
     if not artifacts:
         print(f"no BENCH_*.json artifacts in '{artifact_dir}'", file=sys.stderr)
@@ -231,6 +308,10 @@ def main(argv: list[str] | None = None) -> int:
         total += len(written)
         for w in written:
             print(f"wrote {w}")
+    trend = plot_sim_speed_trend(dirs, out_dir)
+    if trend is not None:
+        total += 1
+        print(f"wrote {trend}")
     print(f"{total} plot(s) from {len(artifacts)} artifact(s) -> {out_dir}")
     return 0
 

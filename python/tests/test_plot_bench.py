@@ -170,6 +170,78 @@ def test_no_combined_figure_without_class_columns(tmp_path):
     assert not (out_dir / "cache_sweep__per-class-attainment.png").exists()
 
 
+def sim_speed_artifact(indexed_ev_s=5.0e6, oracle_ev_s=4.0e5):
+    return {
+        "schema": "cuda-myth/experiment-v1",
+        "experiment": "sim_speed",
+        "title": "synthetic sim-speed",
+        "params": {"replicas": 100},
+        "reports": [
+            {
+                "title": "Sim-speed throughput: 100-replica fleet, short-decode Dynamic-Sonnet",
+                "columns": [
+                    "event loop", "arrivals", "events", "wall s", "events/sec",
+                    "wall s per sim-hour", "peak open",
+                ],
+                "rows": [
+                    [
+                        "indexed + streamed", val(1_000_000, "count"),
+                        val(12_000_000, "count"), val(2.4, "s"),
+                        val(indexed_ev_s, "ev/s"), val(0.1, "s"), val(40, "count"),
+                    ],
+                    [
+                        "scan oracle (eager)", val(100_000, "count"),
+                        val(1_200_000, "count"), val(3.0, "s"),
+                        val(oracle_ev_s, "ev/s"), val(1.25, "s"), val(100_000, "count"),
+                    ],
+                ],
+                "notes": [],
+            },
+        ],
+        "expectations": [],
+    }
+
+
+def test_sim_speed_trend_across_commit_dirs(tmp_path):
+    # One artifact directory per commit, oldest first: the trend figure
+    # carries one line per event loop across both points.
+    dirs = []
+    for i, ev in enumerate([4.0e6, 5.5e6]):
+        d = tmp_path / f"commit{i}"
+        d.mkdir()
+        (d / "BENCH_sim_speed.json").write_text(json.dumps(sim_speed_artifact(indexed_ev_s=ev)))
+        dirs.append(str(d))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([*dirs, "--out", str(out_dir)]) == 0
+    trend = out_dir / "sim_speed__events-per-sec-trend.png"
+    assert trend.exists(), sorted(out_dir.glob("*.png"))
+    assert trend.stat().st_size > 1000
+
+
+def test_sim_speed_single_dir_renders_trend_and_generic_curves(tmp_path):
+    # The CI smoke shape: one directory still yields the trend figure
+    # (single-point series), and "ev/s" is a curve unit so the generic
+    # per-report figure renders alongside it.
+    d = tmp_path / "bench"
+    d.mkdir()
+    (d / "BENCH_sim_speed.json").write_text(json.dumps(sim_speed_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(d), "--out", str(out_dir)]) == 0
+    assert (out_dir / "sim_speed__events-per-sec-trend.png").exists()
+    assert list(out_dir.glob("sim_speed__sim-speed-throughput*.png")), sorted(
+        out_dir.glob("*.png")
+    )
+
+
+def test_no_trend_without_sim_speed_artifact(tmp_path):
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_cache_sweep.json").write_text(json.dumps(synthetic_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    assert not (out_dir / "sim_speed__events-per-sec-trend.png").exists()
+
+
 def test_slugify():
     assert plot_bench.slugify("Fig 17(d): SLO knee / sweep") == "fig-17-d-slo-knee-sweep"
     assert plot_bench.slugify("***") == "report"

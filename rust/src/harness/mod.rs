@@ -21,6 +21,7 @@ pub mod fig7;
 pub mod fig8;
 pub mod fig9;
 pub mod qos_sweep;
+pub mod sim_speed;
 pub mod table1;
 
 use crate::report::{Expectation, ExpectationResult, Report};
@@ -119,6 +120,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(ablations::ExtMultiRecsys),
         Box::new(ablations::ExtTraining),
         Box::new(ablations::ExtGaudi3),
+        Box::new(sim_speed::SimSpeed),
     ]
 }
 
@@ -177,10 +179,11 @@ mod tests {
         for required in [
             "table1", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
             "fig13", "fig15", "fig17", "cluster", "cluster_sweep", "cache_sweep", "qos_sweep",
+            "sim_speed",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
-        assert_eq!(ids.len(), 21, "registry must keep all 21 entries");
+        assert_eq!(ids.len(), 22, "registry must keep all 22 entries");
     }
 
     #[test]
@@ -195,6 +198,7 @@ mod tests {
         assert_eq!(find("cluster_sweep").unwrap().id(), "cluster_sweep");
         assert_eq!(find("cache-sweep").unwrap().id(), "cache_sweep");
         assert_eq!(find("qos-sweep").unwrap().id(), "qos_sweep");
+        assert_eq!(find("sim-speed").unwrap().id(), "sim_speed");
         assert!(find("cluster-").is_none());
     }
 

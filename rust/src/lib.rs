@@ -29,7 +29,10 @@
 //!           │                             eviction, trace, metrics+energy)
 //!           └── ClusterSim                N replicas (homogeneous or a
 //!               │                         mixed Gaudi-2/A100 fleet),
-//!               │                         merged virtual time
+//!               │                         indexed discrete-event core
+//!               │                         (arrival + replica-wake heaps,
+//!               │                         streamed arrivals at O(open
+//!               │                         requests) memory)
 //!               ├── Router                dispatch (incl. cost-aware
 //!               │                         prefix affinity over real block
 //!               │                         residency, per-class QoS
@@ -55,9 +58,12 @@
 //!   goodput-under-SLO frontier across fleet mixes, `repro run
 //!   cache-sweep` the prefix-cache capacity x skew grid (hit rate
 //!   monotone in capacity; unbounded capacity bitwise-replays the legacy
-//!   ever-warm set), and `repro run qos-sweep` the class-mix x load grid
+//!   ever-warm set), `repro run qos-sweep` the class-mix x load grid
 //!   (priorities help interactive attainment; single-default-class
-//!   EqExact-0 parity with the scalar-SLO path).
+//!   EqExact-0 parity with the scalar-SLO path), and `repro run
+//!   sim-speed` the simulator's own dispatch throughput (indexed event
+//!   core vs the retained scan-loop oracle: bitwise parity, events/sec,
+//!   O(open requests) streaming memory).
 //! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, lowered at
 //!   build time by `python/compile/aot.py`) and executes them on the PJRT
 //!   CPU client. Python is never on the request path.
@@ -75,7 +81,10 @@
 //!   `util::table` is the ASCII/CSV renderer over this model.
 //! * [`workload`] — synthetic workload generators (fixed-length sweeps,
 //!   Dynamic-Sonnet-like variable-length traces, Zipf embedding indices,
-//!   token-level prompts for the real-numerics engine).
+//!   token-level prompts for the real-numerics engine), eager
+//!   (`generate` a `Vec<Request>`) or streaming (`ArrivalStream`: a lazy
+//!   time-ordered iterator with constant-rate, diurnal-day or MMPP
+//!   arrival processes, fed to `ClusterSim::feed`).
 
 pub mod config;
 pub mod harness;

@@ -30,6 +30,8 @@ pub enum Unit {
     Seconds,
     TokPerSec,
     ReqPerSec,
+    /// Simulated events per wall-clock second (simulator raw speed).
+    EventPerSec,
     Joules,
     JoulePerTok,
     /// Dimensionless ratio, rendered as "1.47x".
@@ -43,7 +45,7 @@ pub enum Unit {
 }
 
 /// Every unit, for JSON tag parsing.
-pub const ALL_UNITS: [Unit; 20] = [
+pub const ALL_UNITS: [Unit; 21] = [
     Unit::Tflops,
     Unit::Gflops,
     Unit::FlopPerByte,
@@ -57,6 +59,7 @@ pub const ALL_UNITS: [Unit; 20] = [
     Unit::Seconds,
     Unit::TokPerSec,
     Unit::ReqPerSec,
+    Unit::EventPerSec,
     Unit::Joules,
     Unit::JoulePerTok,
     Unit::Ratio,
@@ -92,6 +95,7 @@ impl Unit {
             | Unit::TbPerSec
             | Unit::TokPerSec
             | Unit::ReqPerSec
+            | Unit::EventPerSec
             | Unit::Percent => Polarity::HigherIsBetter,
             Unit::Millis | Unit::Seconds | Unit::Joules | Unit::JoulePerTok | Unit::Watts => {
                 Polarity::LowerIsBetter
@@ -117,6 +121,7 @@ impl Unit {
             Unit::Seconds => "s",
             Unit::TokPerSec => "tok/s",
             Unit::ReqPerSec => "req/s",
+            Unit::EventPerSec => "ev/s",
             Unit::Joules => "J",
             Unit::JoulePerTok => "J/tok",
             Unit::Ratio => "ratio",
@@ -224,7 +229,7 @@ mod tests {
                 Polarity::Neutral => neutral += 1,
             }
         }
-        assert_eq!((hi, lo, neutral), (9, 5, 6));
+        assert_eq!((hi, lo, neutral), (10, 5, 6));
     }
 
     #[test]

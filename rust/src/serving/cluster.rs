@@ -1,5 +1,5 @@
 //! Cluster-scale data-parallel serving simulator: N engine replicas behind
-//! the admission `Router`, advanced in one merged virtual-time event loop.
+//! the admission `Router`, advanced by an indexed discrete-event core.
 //!
 //! This is the deployment shape the paper's §6 serving evaluation points
 //! at — vLLM-style fleets serve heavy traffic by running many independent
@@ -12,25 +12,54 @@
 //! walks offered load across fleet mixes to trace the goodput-under-SLO
 //! frontier.
 //!
-//! Event loop (next-event dispatch): at every iteration the simulator
-//! either delivers the earliest pending arrival to the router (when it is
-//! due at or before the earliest busy replica's clock) or advances the
-//! replica with the smallest clock by one engine step. Replica clocks are
-//! therefore never rewound, arrivals are routed in order at their arrival
-//! times, and with one replica the step sequence is *identical* to a
-//! single `Engine` run (asserted bit-for-bit in
-//! `rust/tests/integration_cluster.rs`). `run_autoscaled` interleaves the
-//! same loop with periodic control ticks for `serving::autoscale`, which
-//! adds or drains replicas against an SLO target.
+//! Event core (indexed next-event dispatch): pending arrivals live in a
+//! min-heap keyed `(due, enqueue seq)` and working replicas in a min-heap
+//! of `(wake_time, replica)` entries — exactly one entry per replica with
+//! work, keyed by `Engine::next_tick()`. Every iteration pops whichever
+//! event is earliest, O(log n) per event instead of the former
+//! O(replicas) scan per step and O(queue) sorted insert per arrival
+//! (`repro run sim-speed` tracks the resulting events/sec).
+//!
+//! Same-time ordering policy (pinned — legacy runs stay bitwise-equal):
+//! 1. an arrival due at or before the earliest replica wake delivers
+//!    first (arrivals beat replica steps at equal timestamps);
+//! 2. equal-due arrivals deliver FIFO by enqueue order, matching the old
+//!    sorted queue's `<=` partition point;
+//! 3. equal-wake replicas step lowest-index-first, matching the old
+//!    scan's first-of-equal-minima `min_by`;
+//! 4. a replica whose only work is a future arrival wakes at its
+//!    *lagging clock* (see `Engine::next_tick`), so its no-op warm-up
+//!    steps run exactly where the scan loop ran them.
+//!
+//! Replica clocks are therefore never rewound, arrivals are routed in
+//! order at their arrival times, and with one replica the step sequence
+//! is *identical* to a single `Engine` run (asserted bit-for-bit in
+//! `rust/tests/integration_cluster.rs`). The pre-refactor scan loop is
+//! retained behind the hidden `ClusterSim::new_scan_oracle` constructor
+//! solely as the oracle for the bitwise-equivalence property tests
+//! (`rust/tests/proptests.rs`) and the `sim-speed` baseline.
+//!
+//! Streaming arrivals: `feed()` attaches a lazy
+//! `Iterator<Item = Request>` (`workload::ArrivalStream` — constant-rate,
+//! diurnal or MMPP) pulled one request at a time as virtual time reaches
+//! it, so a million-request day on a 100-replica fleet holds O(open
+//! requests) in memory rather than the whole trace; the arrival heap then
+//! carries only backpressure requeues. `run_autoscaled` interleaves the
+//! same event core with periodic control ticks for `serving::autoscale`
+//! (the pump limit *is* the control-tick event: it fires after every
+//! event at or before the tick, exactly as the legacy loop ordered it).
 //!
 //! Backpressure: when the router's global queue cap rejects an arrival
-//! (`QueueFull`), the request is requeued with its due time bumped just
-//! past the earliest busy replica's clock — it retries as soon as the
-//! fleet has made progress, preserving arrival order among retries. The
-//! request's *arrival* timestamp is untouched, so queueing delay from
-//! backpressure shows up in its TTFT, exactly as a client would see it.
+//! (`QueueFull`), the request is rescheduled as a wake event just past
+//! the earliest busy replica's clock (`floor.max(due) + 1e-6`, the exact
+//! legacy retry time — the epsilon is load-bearing, see `deliver`) — it
+//! retries as soon as the fleet has made progress, preserving arrival
+//! order among retries. The request's *arrival* timestamp is untouched,
+//! so queueing delay from backpressure shows up in its TTFT, exactly as
+//! a client would see it.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::config::{DeviceKind, ServingConfig};
 use crate::models::llama::LlamaConfig;
@@ -42,6 +71,91 @@ use crate::serving::request::{Request, RequestId};
 use crate::serving::router::{QueueFull, Router};
 use crate::util::fasthash::FastMap;
 
+/// Which event loop drives `pump`: the indexed heap core (default), or
+/// the retained pre-refactor scan loop (the parity/benchmark oracle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DispatchMode {
+    Indexed,
+    ScanOracle,
+}
+
+/// Pending arrival in the indexed core's event heap, ordered by due time
+/// then FIFO by enqueue sequence — the legacy sorted-queue pop order.
+struct ArrivalEvent {
+    due: f64,
+    seq: u64,
+    req: Request,
+}
+
+impl PartialEq for ArrivalEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other).is_eq()
+    }
+}
+impl Eq for ArrivalEvent {}
+impl PartialOrd for ArrivalEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ArrivalEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.due.total_cmp(&other.due).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Replica wake entry, ordered by wake time then lowest replica index —
+/// the legacy scan's first-of-equal-minima tie-break.
+#[derive(Debug, Clone, Copy)]
+struct ReplicaWake {
+    time: f64,
+    index: usize,
+}
+
+impl PartialEq for ReplicaWake {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other).is_eq()
+    }
+}
+impl Eq for ReplicaWake {}
+impl PartialOrd for ReplicaWake {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ReplicaWake {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.total_cmp(&other.time).then(self.index.cmp(&other.index))
+    }
+}
+
+/// One-element-lookahead adapter over a lazy arrival iterator (`feed`).
+struct StreamSource {
+    iter: Box<dyn Iterator<Item = Request>>,
+    /// The next not-yet-delivered request (the lookahead).
+    next: Option<Request>,
+}
+
+impl StreamSource {
+    fn new(mut iter: Box<dyn Iterator<Item = Request>>) -> StreamSource {
+        let next = iter.next();
+        StreamSource { iter, next }
+    }
+
+    fn peek_due(&self) -> Option<f64> {
+        self.next.as_ref().map(|r| r.arrival)
+    }
+
+    fn take(&mut self) -> Request {
+        let r = self.next.take().expect("take called on a drained stream");
+        self.next = self.iter.next();
+        if let Some(n) = &self.next {
+            debug_assert!(n.arrival >= r.arrival, "arrival streams must be time-ordered");
+        }
+        r
+    }
+}
+
 /// A multi-replica serving deployment under simulated time.
 pub struct ClusterSim {
     replicas: Vec<Engine<SimBackend>>,
@@ -52,14 +166,32 @@ pub struct ClusterSim {
     /// scheduler/KV knobs; `device` is overridden per replica).
     cfg: ServingConfig,
     model: LlamaConfig,
-    /// Pending cluster-level arrivals: (due time, request), sorted by due.
+    mode: DispatchMode,
+    /// Indexed mode: pending arrivals (initial + requeued), min-heap on
+    /// (due, enqueue seq). With a `stream` attached this holds only
+    /// backpressure requeues — the O(open requests) memory bound.
     /// `due` equals the request's arrival unless backpressure requeued it.
-    queue: VecDeque<(f64, Request)>,
+    arrivals: BinaryHeap<Reverse<ArrivalEvent>>,
+    /// FIFO tie-break for equal due times (monotone enqueue counter).
+    arrival_seq: u64,
+    /// Indexed mode: the replica wake index — exactly one entry per
+    /// replica with work, keyed by `Engine::next_tick()`.
+    wakes: BinaryHeap<Reverse<ReplicaWake>>,
+    /// Oracle mode: the legacy sorted arrival queue.
+    legacy_queue: VecDeque<(f64, Request)>,
+    /// Lazy arrival source (`feed`), pulled as virtual time reaches it.
+    stream: Option<StreamSource>,
     /// Which replica each routed request landed on.
     assignment: FastMap<RequestId, usize>,
     /// Backpressure events (requeues due to `QueueFull`).
     pub requeues: u64,
     completed: usize,
+    /// Requests routed to a replica and not yet completed.
+    in_flight: usize,
+    /// Discrete events processed (arrival deliveries + replica steps).
+    events: u64,
+    /// High-water mark of `open_requests()` over the run.
+    peak_open: usize,
 }
 
 impl ClusterSim {
@@ -87,11 +219,29 @@ impl ClusterSim {
             router,
             cfg: cfg.clone(),
             model,
-            queue: VecDeque::new(),
+            mode: DispatchMode::Indexed,
+            arrivals: BinaryHeap::new(),
+            arrival_seq: 0,
+            wakes: BinaryHeap::new(),
+            legacy_queue: VecDeque::new(),
+            stream: None,
             assignment: FastMap::default(),
             requeues: 0,
             completed: 0,
+            in_flight: 0,
+            events: 0,
+            peak_open: 0,
         }
+    }
+
+    /// The pre-refactor scan-loop oracle: the same `ClusterSim` driven by
+    /// the legacy dispatch (per-event replica scan + sorted arrival
+    /// queue). Hidden — it exists solely so the bitwise-equivalence
+    /// property tests and the `sim-speed` benchmark can pin the indexed
+    /// core against it. Eager submission only (`feed` is rejected).
+    #[doc(hidden)]
+    pub fn new_scan_oracle(cfg: &ServingConfig, model: LlamaConfig) -> ClusterSim {
+        ClusterSim { mode: DispatchMode::ScanOracle, ..ClusterSim::new(cfg, model) }
     }
 
     /// One engine replica pinned to `device`. The per-replica config is
@@ -148,12 +298,52 @@ impl ClusterSim {
     /// Queue a request for open-loop arrival at `req.arrival`.
     pub fn submit(&mut self, req: Request) {
         self.enqueue(req.arrival, req);
+        self.note_open();
     }
 
     pub fn submit_all(&mut self, reqs: impl IntoIterator<Item = Request>) {
         for r in reqs {
             self.submit(r);
         }
+    }
+
+    /// Attach a lazy arrival stream (e.g. `workload::ArrivalStream`):
+    /// requests are pulled one at a time as virtual time reaches them, so
+    /// memory stays O(open requests) instead of O(trace length). The
+    /// stream must be time-ordered; at equal timestamps a streamed
+    /// arrival delivers before a same-time requeue, matching the enqueue
+    /// order an eager `submit_all` of the same trace would have. Indexed
+    /// mode only — the scan oracle predates streaming and stays eager.
+    pub fn feed(&mut self, arrivals: impl Iterator<Item = Request> + 'static) {
+        assert_eq!(self.mode, DispatchMode::Indexed, "the scan oracle is eager-only");
+        assert!(self.stream.is_none(), "one arrival stream per run");
+        self.stream = Some(StreamSource::new(Box::new(arrivals)));
+        self.note_open();
+    }
+
+    /// Open requests right now: pending (queued + stream lookahead) plus
+    /// routed-but-unfinished. The streaming-memory claim is about this
+    /// number's peak — it bounds the simulator's working set.
+    pub fn open_requests(&self) -> usize {
+        let pending = self.arrivals.len()
+            + self.legacy_queue.len()
+            + self.stream.as_ref().map_or(0, |s| usize::from(s.next.is_some()));
+        pending + self.in_flight
+    }
+
+    /// High-water mark of [`open_requests`](Self::open_requests).
+    pub fn peak_open(&self) -> usize {
+        self.peak_open
+    }
+
+    /// Discrete events processed so far (arrival deliveries + replica
+    /// steps) — the numerator of the `sim-speed` events/sec metric.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    fn note_open(&mut self) {
+        self.peak_open = self.peak_open.max(self.open_requests());
     }
 
     /// Scale up: add a fresh replica on `device` whose clock starts at
@@ -181,12 +371,26 @@ impl ClusterSim {
         self.router.undrain(i);
     }
 
+    /// Schedule a (re-)arrival at `due`: a heap push in the indexed core,
+    /// the legacy sorted insert under the scan oracle. Both order by
+    /// (due, enqueue order), so the pop sequence is identical.
     fn enqueue(&mut self, due: f64, req: Request) {
-        let pos = self.queue.partition_point(|(t, _)| *t <= due);
-        self.queue.insert(pos, (due, req));
+        match self.mode {
+            DispatchMode::Indexed => {
+                let seq = self.arrival_seq;
+                self.arrival_seq += 1;
+                self.arrivals.push(Reverse(ArrivalEvent { due, seq, req }));
+            }
+            DispatchMode::ScanOracle => {
+                let pos = self.legacy_queue.partition_point(|(t, _)| *t <= due);
+                self.legacy_queue.insert(pos, (due, req));
+            }
+        }
     }
 
-    /// Earliest clock among replicas that still have work.
+    /// Earliest clock among replicas that still have work — the legacy
+    /// O(replicas) scan, retained for the oracle loop only (the indexed
+    /// core reads the same value off the top of the wake heap).
     fn earliest_busy(&self) -> Option<(usize, f64)> {
         self.replicas
             .iter()
@@ -194,6 +398,61 @@ impl ClusterSim {
             .filter(|(_, e)| e.has_any_work())
             .min_by(|a, b| a.1.clock().total_cmp(&b.1.clock()))
             .map(|(i, e)| (i, e.clock()))
+    }
+
+    /// Due time of the earliest pending arrival (queued or streamed).
+    fn next_arrival_due(&self) -> Option<f64> {
+        let queued = match self.mode {
+            DispatchMode::Indexed => self.arrivals.peek().map(|Reverse(a)| a.due),
+            DispatchMode::ScanOracle => self.legacy_queue.front().map(|(t, _)| *t),
+        };
+        let streamed = self.stream.as_ref().and_then(|s| s.peek_due());
+        match (queued, streamed) {
+            (Some(q), Some(s)) => Some(q.min(s)),
+            (q, s) => q.or(s),
+        }
+    }
+
+    /// Pop the earliest pending arrival. The stream wins ties against the
+    /// requeue heap: an eager run enqueues every initial arrival before
+    /// any requeue exists, so FIFO order puts the original first — the
+    /// lazy path must agree for streamed runs to replay eager runs.
+    fn pop_next_arrival(&mut self) -> (f64, Request) {
+        let queued = match self.mode {
+            DispatchMode::Indexed => self.arrivals.peek().map(|Reverse(a)| a.due),
+            DispatchMode::ScanOracle => self.legacy_queue.front().map(|(t, _)| *t),
+        };
+        let from_stream = match (queued, self.stream.as_ref().and_then(|s| s.peek_due())) {
+            (Some(q), Some(s)) => s <= q,
+            (None, Some(_)) => true,
+            _ => false,
+        };
+        if from_stream {
+            let req = self.stream.as_mut().expect("stream peeked above").take();
+            // The lookahead refilled: a new request entered the window.
+            self.note_open();
+            return (req.arrival, req);
+        }
+        match self.mode {
+            DispatchMode::Indexed => {
+                let Reverse(a) = self.arrivals.pop().expect("deliver called with a queued request");
+                (a.due, a.req)
+            }
+            DispatchMode::ScanOracle => {
+                self.legacy_queue.pop_front().expect("deliver called with a queued request")
+            }
+        }
+    }
+
+    /// Earliest busy replica's clock — the backpressure retry floor. In
+    /// the indexed core this is the top of the wake heap (every entry is
+    /// keyed at its replica's clock); the oracle scans, as the legacy
+    /// loop did. Same value either way.
+    fn requeue_floor(&self) -> Option<f64> {
+        match self.mode {
+            DispatchMode::Indexed => self.wakes.peek().map(|Reverse(w)| w.time),
+            DispatchMode::ScanOracle => self.earliest_busy().map(|(_, t)| t),
+        }
     }
 
     /// Is prefix group `prefix_id` resident in replica `i`'s paged KV
@@ -213,9 +472,10 @@ impl ClusterSim {
         total
     }
 
-    /// Route the front-of-queue request; requeue on backpressure.
+    /// Route the earliest pending arrival; requeue on backpressure.
     fn deliver(&mut self) {
-        let (due, req) = self.queue.pop_front().expect("deliver called with a queued request");
+        let (due, req) = self.pop_next_arrival();
+        self.events += 1;
         let replicas = &self.replicas;
         match self
             .router
@@ -223,12 +483,23 @@ impl ClusterSim {
         {
             Ok(idx) => {
                 self.assignment.insert(req.id, idx);
+                let was_idle = !self.replicas[idx].has_any_work();
                 self.replicas[idx].submit(req);
+                self.in_flight += 1;
+                self.note_open();
+                // Idle -> busy: the replica (re-)enters the wake index. A
+                // busy replica already holds its one entry, still keyed
+                // at its clock (which a submit never moves).
+                if self.mode == DispatchMode::Indexed && was_idle {
+                    if let Some(t) = self.replicas[idx].next_tick() {
+                        self.wakes.push(Reverse(ReplicaWake { time: t, index: idx }));
+                    }
+                }
             }
             Err(QueueFull) => {
                 self.requeues += 1;
-                let floor = match self.earliest_busy() {
-                    Some((_, t)) => t,
+                let floor = match self.requeue_floor() {
+                    Some(t) => t,
                     None => panic!(
                         "router backpressure with an idle fleet: queued={} but no \
                          replica has work (max_queued too small for in-flight load?)",
@@ -237,8 +508,12 @@ impl ClusterSim {
                 };
                 // Retry just after the fleet has made progress; the
                 // request's own arrival timestamp is preserved so the
-                // extra queueing delay lands in its TTFT.
+                // extra queueing delay lands in its TTFT. The epsilon is
+                // load-bearing: a retry at exactly the floor would beat
+                // the replica step that frees capacity (arrivals win
+                // same-time ties) and spin forever.
                 self.enqueue(floor.max(due) + 1e-6, req);
+                self.note_open();
             }
         }
     }
@@ -248,7 +523,8 @@ impl ClusterSim {
     /// feedback loop: each completion's per-class SLO outcome updates the
     /// router's per-replica attainment estimate, which is what lets the
     /// scored policies steer high-priority traffic off degraded replicas.
-    fn step_replica(&mut self, i: usize) {
+    fn advance_replica(&mut self, i: usize) {
+        self.events += 1;
         let done = self.replicas[i].advance();
         for id in done {
             let seq = self.replicas[i].sched.seq(id);
@@ -257,17 +533,72 @@ impl ClusterSim {
             self.router.record_outcome(i, req.class_id, met);
             self.router.complete(i, &req);
             self.completed += 1;
+            self.in_flight -= 1;
         }
     }
 
-    /// Advance the merged event loop until no event remains at or before
-    /// `limit` (events are atomic: a step that *starts* at or before the
-    /// limit runs to its end, so control ticks land on step boundaries).
-    /// Returns `true` while any work — queued arrival or replica work —
-    /// remains beyond the limit.
+    /// Indexed-mode replica step: retire the replica's wake entry (it is
+    /// the heap top — that is why it was chosen), advance the replica,
+    /// and re-key it at its new `next_tick` while it still has work.
+    fn step_replica(&mut self, i: usize) {
+        let Reverse(w) = self.wakes.pop().expect("step_replica with an empty wake index");
+        debug_assert_eq!(w.index, i, "stepped replica must own the top wake entry");
+        self.advance_replica(i);
+        if let Some(t) = self.replicas[i].next_tick() {
+            self.wakes.push(Reverse(ReplicaWake { time: t, index: i }));
+        }
+    }
+
+    /// Advance the event loop until no event remains at or before `limit`
+    /// (events are atomic: a step that *starts* at or before the limit
+    /// runs to its end, so control ticks land on step boundaries).
+    /// Returns `true` while any work — pending or streamed arrival, or
+    /// replica work — remains beyond the limit.
     fn pump(&mut self, limit: f64) -> bool {
+        match self.mode {
+            DispatchMode::Indexed => self.pump_indexed(limit),
+            DispatchMode::ScanOracle => self.pump_scan(limit),
+        }
+    }
+
+    /// The indexed core: O(log) heap peeks/pops per event. The match arms
+    /// mirror `pump_scan` exactly — same-time policy 1 (arrivals first)
+    /// is the `t <= w.time` guard, policies 2-3 live in the heap
+    /// orderings, policy 4 in `Engine::next_tick`.
+    fn pump_indexed(&mut self, limit: f64) -> bool {
         loop {
-            let next_due = self.queue.front().map(|(t, _)| *t);
+            let next_due = self.next_arrival_due();
+            let wake = self.wakes.peek().map(|&Reverse(w)| w);
+            match (next_due, wake) {
+                (Some(t), Some(w)) if t <= w.time => {
+                    if t > limit {
+                        return true;
+                    }
+                    self.deliver();
+                }
+                (_, Some(w)) => {
+                    if w.time > limit {
+                        return true;
+                    }
+                    self.step_replica(w.index);
+                }
+                (Some(t), None) => {
+                    if t > limit {
+                        return true;
+                    }
+                    self.deliver();
+                }
+                (None, None) => return false,
+            }
+        }
+    }
+
+    /// The retained pre-refactor loop (`new_scan_oracle`): scans every
+    /// replica per event, O(replicas) — the baseline the `sim-speed`
+    /// benchmark and the parity property tests measure against.
+    fn pump_scan(&mut self, limit: f64) -> bool {
+        loop {
+            let next_due = self.legacy_queue.front().map(|(t, _)| *t);
             let busy = self.earliest_busy();
             match (next_due, busy) {
                 (Some(t), Some((_, tc))) if t <= tc => {
@@ -280,7 +611,7 @@ impl ClusterSim {
                     if tc > limit {
                         return true;
                     }
-                    self.step_replica(i);
+                    self.advance_replica(i);
                 }
                 (Some(t), None) => {
                     if t > limit {
@@ -620,6 +951,119 @@ mod tests {
         // its single class (the legacy global-SLO view).
         let scalar = ClassSet::scalar(1e12, 1e12);
         assert_eq!(c.window_attainment(0.0, &scalar), Some(1.0));
+    }
+
+    #[test]
+    fn indexed_core_matches_scan_oracle_bitwise() {
+        use crate::serving::qos::ClassSet;
+        // Tight queue cap + class mix + prefix groups: exercise requeues,
+        // QoS feedback and prefix routing through both dispatch modes.
+        let cfg = ServingConfig {
+            replicas: 3,
+            route_policy: RoutePolicy::LeastLoaded,
+            max_queued: 8,
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            classes: ClassSet::three_tier(),
+            ..Default::default()
+        };
+        let trace = || {
+            DynamicSonnet::default()
+                .with_prefix_groups(4)
+                .with_class_mix(vec![(0, 2), (1, 1), (2, 1)])
+                .generate(40, 60.0, 13)
+        };
+        let mut a = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        a.submit_all(trace());
+        let sa = a.run_to_completion();
+        let mut b = ClusterSim::new_scan_oracle(&cfg, LlamaConfig::llama31_8b());
+        b.submit_all(trace());
+        let sb = b.run_to_completion();
+        assert_eq!(sa.requests, 40);
+        assert_eq!(sb.requests, 40);
+        assert_eq!(a.fleet_metrics().max_request_delta(&b.fleet_metrics()), 0.0);
+        assert_eq!(a.requeues, b.requeues);
+        assert_eq!(a.events(), b.events());
+        assert_eq!(
+            format!("{:?}", a.fleet_prefix_stats()),
+            format!("{:?}", b.fleet_prefix_stats())
+        );
+    }
+
+    #[test]
+    fn streamed_feed_replays_eager_submit() {
+        let cfg = ServingConfig {
+            replicas: 2,
+            route_policy: RoutePolicy::LeastLoaded,
+            max_queued: 10_000,
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            ..Default::default()
+        };
+        let w = DynamicSonnet::default().with_prefix_groups(4);
+        let (n, rate, seed) = (30usize, 5.0, 17u64);
+        let mut eager = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        eager.submit_all(w.generate(n, rate, seed));
+        let se = eager.run_to_completion();
+        let mut lazy = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        lazy.feed(w.clone().stream(n, rate, seed));
+        let sl = lazy.run_to_completion();
+        assert_eq!(se.requests, n);
+        assert_eq!(sl.requests, n);
+        assert_eq!(eager.fleet_metrics().max_request_delta(&lazy.fleet_metrics()), 0.0);
+        assert_eq!(eager.events(), lazy.events());
+        // Memory bound: the eager run materializes the whole trace up
+        // front (peak = n pending); the lazy run's working set is only
+        // the open requests at a rate the fleet keeps up with.
+        assert_eq!(eager.peak_open(), n);
+        assert!(lazy.peak_open() < n, "lazy peak {} vs trace {n}", lazy.peak_open());
+    }
+
+    #[test]
+    fn window_attainment_matches_brute_force_filter() {
+        use crate::serving::qos::ClassSet;
+        // Regression guard for the suffix-scan's monotonicity assumption
+        // (checked in debug builds at harvest): the reverse take_while
+        // must agree with an order-independent full filter at any window.
+        let cfg = ServingConfig {
+            replicas: 3,
+            route_policy: RoutePolicy::RoundRobin,
+            max_queued: 10_000,
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            classes: ClassSet::three_tier(),
+            ..Default::default()
+        };
+        let mut c = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        c.submit_all(
+            DynamicSonnet::default()
+                .with_class_mix(vec![(0, 1), (1, 1), (2, 1)])
+                .generate(36, 40.0, 23),
+        );
+        c.run_to_completion();
+        let classes = c.classes().clone();
+        let fleet = c.fleet_metrics();
+        let span = fleet.makespan;
+        for since in [0.0, span * 0.25, span * 0.5, span * 0.9, span + 1.0] {
+            let mut ok = vec![0usize; classes.len()];
+            let mut total = vec![0usize; classes.len()];
+            for m in fleet.per_request().iter().filter(|m| m.finish >= since) {
+                let cid = classes.judging_id(m.class_id);
+                total[cid] += 1;
+                if classes.met_by(m) {
+                    ok[cid] += 1;
+                }
+            }
+            let (mut num, mut den) = (0.0, 0.0);
+            for cid in 0..classes.len() {
+                if total[cid] > 0 {
+                    num += classes.class(cid).weight * (ok[cid] as f64 / total[cid] as f64);
+                    den += classes.class(cid).weight;
+                }
+            }
+            let expect = (den > 0.0).then(|| num / den);
+            assert_eq!(c.window_attainment(since, &classes), expect, "since {since}");
+        }
     }
 
     #[test]

@@ -405,15 +405,18 @@ impl<B: Backend, C: ClockSource> EngineCore<B, C> {
         self.sched.has_work() || !self.pending.is_empty()
     }
 
-    /// Time of this engine's next event: now if the scheduler has work,
-    /// otherwise the next pending arrival. `None` when fully drained.
-    /// (`ClusterSim` merges these across replicas for next-event dispatch.)
-    pub fn next_event_time(&self) -> Option<f64> {
-        if self.sched.has_work() {
-            Some(self.clock.now())
-        } else {
-            self.pending.front().map(|r| r.arrival)
-        }
+    /// Wake time of this replica's next event under cluster dispatch: its
+    /// own clock whenever *any* work remains, `None` when fully drained.
+    /// A replica whose only work is a future pending arrival still wakes
+    /// at its (possibly lagging) clock rather than at the arrival time:
+    /// the next `advance()` is then an idle-jump that moves the clock to
+    /// the arrival. Those no-op warm-up steps are part of the pinned
+    /// event order — cluster dispatch ranks replicas by clock, and the
+    /// lagging clock is what backpressure floors and pump limits compare
+    /// against. (`serving::cluster::ClusterSim` keys its replica wake
+    /// heap on this.)
+    pub fn next_tick(&self) -> Option<f64> {
+        self.has_any_work().then(|| self.clock.now())
     }
 
     /// Move arrived requests into the scheduler.
@@ -547,6 +550,20 @@ impl<B: Backend, C: ClockSource> EngineCore<B, C> {
         let done = self.sched.take_finished();
         for &id in &done {
             let m = RequestMetrics::from_sequence(self.sched.seq(id));
+            // `ClusterSim::window_attainment` suffix-scans this history in
+            // reverse and stops at the first record before the window,
+            // which is only correct if records are monotone in finish
+            // time. They are — harvest runs under a never-rewinding clock
+            // — but keep the law checked so an event-loop change that
+            // breaks it fails loudly instead of silently truncating
+            // windows.
+            debug_assert!(
+                self.metrics.per_request().last().is_none_or(|prev| prev.finish <= m.finish),
+                "per-replica completion records must be monotone in finish time \
+                 (prev {:?} > new {:?} for request {id})",
+                self.metrics.per_request().last().map(|p| p.finish),
+                m.finish,
+            );
             self.metrics.record(m);
             self.backend.release(id);
         }

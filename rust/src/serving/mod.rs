@@ -10,7 +10,10 @@
 //!         │                              metrics/energy emission
 //!         └── ClusterSim                 N replicas (homogeneous or a
 //!             │                          mixed Gaudi-2/A100 fleet),
-//!             │                          merged virtual-time event loop
+//!             │                          indexed discrete-event core:
+//!             │                          arrival heap + replica-wake heap
+//!             │                          (O(log) dispatch), lazy arrival
+//!             │                          streams at O(open requests) mem
 //!             ├── Router                 admission + dispatch policies
 //!             │                          (incl. cost-aware PrefixAffinity
 //!             │                          over real block residency and
@@ -28,10 +31,22 @@
 //! weighted per-class attainment. A single default class reproduces the
 //! legacy anonymous-SLO behavior bitwise (`repro run qos-sweep`).
 //!
+//! The cluster is advanced by an indexed discrete-event core
+//! ([`cluster`]): pending arrivals in a min-heap keyed `(due, enqueue
+//! seq)`, working replicas in a min-heap keyed by their own
+//! `Engine::next_tick()`, with a pinned same-time ordering policy that
+//! keeps legacy runs bitwise-equal to the pre-refactor scan loop (the
+//! retained oracle behind the `sim-speed` benchmark and the equivalence
+//! property tests). Workloads can attach lazily via
+//! `ClusterSim::feed(workload::ArrivalStream)` — constant-rate, diurnal
+//! or MMPP — so million-request days hold only the open requests in
+//! memory (`repro run sim-speed` tracks events/sec and the memory bound).
+//!
 //! All block bookkeeping is identical in the simulated and real paths;
 //! the cluster layer turns the per-device reproduction into a
 //! deployment-scale simulator (`repro run cluster`, `repro run
-//! cluster-sweep`, `repro run cache-sweep`, `repro run qos-sweep`).
+//! cluster-sweep`, `repro run cache-sweep`, `repro run qos-sweep`,
+//! `repro run sim-speed`).
 
 pub mod autoscale;
 pub mod block_table;

@@ -1,6 +1,14 @@
 //! Workload generators: fixed-length sweeps (§3.5), a Dynamic-Sonnet-like
 //! variable-length trace (Fig 17(d,e)), Poisson arrivals, and Zipf
 //! embedding-index streams for the RecSys benchmarks.
+//!
+//! The serving generators come in two forms sharing one draw sequence:
+//! eager `generate()` (a materialized `Vec<Request>`) and the lazy
+//! [`ArrivalStream`] iterator, which `ClusterSim::feed` pulls one request
+//! at a time so million-request traces run at O(open requests) memory. A
+//! `Constant`-rate stream replays the eager generator *exactly* (same RNG
+//! draw order per request); the [`RateProcess`] modulators layer diurnal
+//! or MMPP load shapes on top of the same length mixture.
 
 use crate::serving::qos::ClassId;
 use crate::serving::request::Request;
@@ -88,26 +96,195 @@ impl DynamicSonnet {
     }
 
     /// Generate `n` requests arriving by a Poisson process of `rate`
-    /// requests/sec (rate = infinity ⇒ all at t=0).
+    /// requests/sec (rate = infinity ⇒ all at t=0). Eager form of
+    /// [`stream`](Self::stream) — identical draws, materialized (the
+    /// stream's exact size hint makes `collect` preallocate).
     pub fn generate(&self, n: usize, rate: f64, seed: u64) -> Vec<Request> {
-        let mut rng = Rng::new(seed);
-        let mut t = 0.0;
-        let buckets = [512usize, 1024, 2048];
-        (0..n as u64)
-            .map(|i| {
-                if rate.is_finite() {
-                    t += rng.exp(rate);
+        self.clone().stream(n, rate, seed).collect()
+    }
+
+    /// Streaming form of [`generate`](Self::generate): one request at a
+    /// time, count-capped at `n`. `w.stream(n, rate, seed).collect()`
+    /// equals `w.generate(n, rate, seed)` exactly. Feed it to
+    /// `ClusterSim::feed` for O(open requests) memory, or reshape the
+    /// load with [`ArrivalStream::with_process`].
+    pub fn stream(self, n: usize, rate: f64, seed: u64) -> ArrivalStream {
+        ArrivalStream::new(self, rate, seed, Some(n), None)
+    }
+}
+
+/// How the instantaneous arrival rate evolves along an [`ArrivalStream`].
+/// `Constant` replays the eager generators' draw order exactly; the
+/// modulated processes trade that replay property for time-varying load.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateProcess {
+    /// Homogeneous Poisson at the stream's base rate.
+    Constant,
+    /// Diurnal day via Lewis-Shedler thinning:
+    /// `rate(t) = base * (1 - depth * cos(2*pi*t / period_s))` — trough
+    /// at t = 0 (night), peak at t = period_s/2 (midday). `depth` in
+    /// [0, 1).
+    Diurnal { period_s: f64, depth: f64 },
+    /// Two-state Markov-modulated Poisson process: the rate multiplier
+    /// alternates between `calm` and `burst`, with exponential dwell
+    /// times of mean `1 / switch_rate` seconds in each state.
+    Mmpp { calm: f64, burst: f64, switch_rate: f64 },
+}
+
+/// Lazy request iterator: the Dynamic-Sonnet length mixture under a
+/// (possibly modulated) arrival process, drawn one request at a time.
+/// Built by [`DynamicSonnet::stream`] (count-capped) or
+/// [`OpenLoopTrace::stream`] (time-capped); consumed by `collect` or by
+/// `ClusterSim::feed`.
+pub struct ArrivalStream {
+    workload: DynamicSonnet,
+    rng: Rng,
+    rate: f64,
+    process: RateProcess,
+    t: f64,
+    id: u64,
+    /// Count cap ([`DynamicSonnet::stream`]); `None` = unbounded count.
+    remaining: Option<usize>,
+    /// Time cap ([`OpenLoopTrace::stream`]); `None` = unbounded time.
+    duration: Option<f64>,
+    /// MMPP state: currently in the `burst` multiplier?
+    bursting: bool,
+    /// MMPP next state-switch time.
+    next_switch: f64,
+    done: bool,
+}
+
+impl ArrivalStream {
+    fn new(
+        workload: DynamicSonnet,
+        rate: f64,
+        seed: u64,
+        remaining: Option<usize>,
+        duration: Option<f64>,
+    ) -> ArrivalStream {
+        ArrivalStream {
+            workload,
+            rng: Rng::new(seed),
+            rate,
+            process: RateProcess::Constant,
+            t: 0.0,
+            id: 0,
+            remaining,
+            duration,
+            bursting: false,
+            next_switch: 0.0,
+            done: false,
+        }
+    }
+
+    /// Swap the arrival process (builder-style). Modulated processes need
+    /// a finite positive base rate.
+    pub fn with_process(mut self, process: RateProcess) -> ArrivalStream {
+        match process {
+            RateProcess::Constant => {}
+            RateProcess::Diurnal { period_s, depth } => {
+                assert!(self.rate.is_finite() && self.rate > 0.0, "modulation needs a finite rate");
+                assert!(period_s > 0.0 && (0.0..1.0).contains(&depth));
+            }
+            RateProcess::Mmpp { calm, burst, switch_rate } => {
+                assert!(self.rate.is_finite() && self.rate > 0.0, "modulation needs a finite rate");
+                assert!(calm > 0.0 && burst > 0.0 && switch_rate > 0.0);
+                self.next_switch = self.rng.exp(switch_rate);
+            }
+        }
+        self.process = process;
+        self
+    }
+
+    /// Advance `self.t` to the next arrival under the active process.
+    fn advance_arrival(&mut self) {
+        match self.process {
+            RateProcess::Constant => {
+                if self.rate.is_finite() {
+                    self.t += self.rng.exp(self.rate);
                 }
-                let bucket = *rng.choose(&buckets);
-                // Jitter within (50%, 100%] of the bucket.
-                let input = ((bucket as f64) * (0.5 + 0.5 * rng.f64())).round() as usize;
-                let input = input.clamp(16, self.max_input);
-                // Output: lognormal-ish around 128 tokens.
-                let out = (rng.normal(4.8, 0.6).exp()).round() as usize;
-                let output = out.clamp(8, self.max_output);
-                self.tag(Request::new(i, input, output, t))
-            })
-            .collect()
+            }
+            RateProcess::Diurnal { period_s, depth } => {
+                // Lewis-Shedler thinning against the envelope rate
+                // base * (1 + depth): candidates at the envelope rate are
+                // accepted with probability rate(t) / envelope.
+                let envelope = self.rate * (1.0 + depth);
+                loop {
+                    self.t += self.rng.exp(envelope);
+                    let rate_t = self.rate
+                        * (1.0 - depth * (2.0 * std::f64::consts::PI * self.t / period_s).cos());
+                    if self.rng.f64() < rate_t / envelope {
+                        break;
+                    }
+                    // Past the time cap no acceptance is needed: the
+                    // caller rejects this timestamp anyway.
+                    if self.duration.is_some_and(|d| self.t > d) {
+                        break;
+                    }
+                }
+            }
+            RateProcess::Mmpp { calm, burst, switch_rate } => {
+                // Exact piecewise-exponential sampling: draw within the
+                // current state's dwell; on crossing the switch point,
+                // flip state and redraw (memorylessness makes the
+                // restart exact).
+                loop {
+                    let mult = if self.bursting { burst } else { calm };
+                    let step = self.rng.exp(self.rate * mult);
+                    if self.t + step <= self.next_switch {
+                        self.t += step;
+                        break;
+                    }
+                    self.t = self.next_switch;
+                    self.bursting = !self.bursting;
+                    self.next_switch = self.t + self.rng.exp(switch_rate);
+                    if self.duration.is_some_and(|d| self.t > d) {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.done || self.remaining == Some(0) {
+            return None;
+        }
+        self.advance_arrival();
+        if self.duration.is_some_and(|d| self.t > d) {
+            self.done = true;
+            return None;
+        }
+        // The per-request draw order below matches the eager generators
+        // exactly: bucket, jitter, output (see `DynamicSonnet::generate`).
+        let buckets = [512usize, 1024, 2048];
+        let bucket = *self.rng.choose(&buckets);
+        // Jitter within (50%, 100%] of the bucket.
+        let input = (((bucket as f64) * (0.5 + 0.5 * self.rng.f64())).round() as usize)
+            .clamp(16, self.workload.max_input);
+        // Output: lognormal-ish around 128 tokens.
+        let output = ((self.rng.normal(4.8, 0.6).exp()).round() as usize)
+            .clamp(8, self.workload.max_output);
+        let req = self.workload.tag(Request::new(self.id, input, output, self.t));
+        self.id += 1;
+        if let Some(r) = &mut self.remaining {
+            *r -= 1;
+        }
+        Some(req)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match (self.done, self.remaining) {
+            (true, _) => (0, Some(0)),
+            // Count-capped streams know their length exactly (unless a
+            // time cap can cut them short).
+            (false, Some(n)) => (if self.duration.is_none() { n } else { 0 }, Some(n)),
+            (false, None) => (0, None),
+        }
     }
 }
 
@@ -147,26 +324,28 @@ impl OpenLoopTrace {
     }
 
     /// Generate the trace (request count is Poisson-distributed around
-    /// `rate * duration`; ids are sequential from 0).
+    /// `rate * duration`; ids are sequential from 0). Eager form of
+    /// [`stream`](Self::stream) — identical draws, materialized with the
+    /// expected-count preallocation.
     pub fn generate(&self, seed: u64) -> Vec<Request> {
-        let mut rng = Rng::new(seed);
-        let mut t = 0.0;
         let mut out = Vec::with_capacity((self.rate * self.duration) as usize + 1);
-        let buckets = [512usize, 1024, 2048];
-        let mut id = 0u64;
-        loop {
-            t += rng.exp(self.rate);
-            if t > self.duration {
-                return out;
-            }
-            let bucket = *rng.choose(&buckets);
-            let input = (((bucket as f64) * (0.5 + 0.5 * rng.f64())).round() as usize)
-                .clamp(16, self.workload.max_input);
-            let output =
-                ((rng.normal(4.8, 0.6).exp()).round() as usize).clamp(8, self.workload.max_output);
-            out.push(self.workload.tag(Request::new(id, input, output, t)));
-            id += 1;
-        }
+        out.extend(self.stream(seed));
+        out
+    }
+
+    /// Streaming form of [`generate`](Self::generate): one request at a
+    /// time until `duration` elapses. `tr.stream(seed).collect()` equals
+    /// `tr.generate(seed)` exactly.
+    pub fn stream(&self, seed: u64) -> ArrivalStream {
+        ArrivalStream::new(self.workload.clone(), self.rate, seed, None, Some(self.duration))
+    }
+
+    /// Streaming diurnal day: the same length mixture under a cosine-
+    /// modulated rate whose period is the trace duration — trough at the
+    /// start and end, peak mid-trace (see [`RateProcess::Diurnal`]).
+    pub fn diurnal_stream(&self, depth: f64, seed: u64) -> ArrivalStream {
+        self.stream(seed)
+            .with_process(RateProcess::Diurnal { period_s: self.duration, depth })
     }
 }
 
@@ -350,6 +529,102 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_class_share_rejected() {
         let _ = DynamicSonnet::default().with_class_mix(vec![(0, 0)]);
+    }
+
+    #[test]
+    fn stream_replays_generate_exactly() {
+        // Poisson-arrival, prefix- and class-tagged: every field matches.
+        let w = DynamicSonnet::default().with_prefix_groups(3).with_class_mix(vec![(0, 1), (2, 1)]);
+        let eager = w.generate(25, 12.0, 9);
+        let lazy: Vec<Request> = w.clone().stream(25, 12.0, 9).collect();
+        assert_eq!(eager.len(), lazy.len());
+        for (a, b) in eager.iter().zip(&lazy) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.prefix_id, b.prefix_id);
+            assert_eq!(a.class_id, b.class_id);
+        }
+        // Batch form (rate = infinity, all at t = 0) replays too.
+        let eb = DynamicSonnet::default().generate(10, f64::INFINITY, 4);
+        let lb: Vec<Request> = DynamicSonnet::default().stream(10, f64::INFINITY, 4).collect();
+        assert_eq!(eb.len(), lb.len());
+        assert!(eb
+            .iter()
+            .zip(&lb)
+            .all(|(a, b)| a.arrival == b.arrival && a.prompt_len == b.prompt_len));
+        // Duration-capped open-loop trace replays as well.
+        let tr = OpenLoopTrace::new(20.0, 5.0).with_prefix_groups(2);
+        let eager = tr.generate(11);
+        let lazy: Vec<Request> = tr.stream(11).collect();
+        assert_eq!(eager.len(), lazy.len());
+        assert!(eager.iter().zip(&lazy).all(|(a, b)| a.arrival == b.arrival
+            && a.prompt_len == b.prompt_len
+            && a.max_new_tokens == b.max_new_tokens
+            && a.prefix_id == b.prefix_id));
+    }
+
+    #[test]
+    fn stream_size_hint_enables_preallocation() {
+        // Count-capped: exact (this is what lets `generate`'s collect
+        // preallocate); time-capped: unknown length.
+        let s = DynamicSonnet::default().stream(100, 10.0, 1);
+        assert_eq!(s.size_hint(), (100, Some(100)));
+        let s = OpenLoopTrace::new(10.0, 2.0).stream(1);
+        assert_eq!(s.size_hint(), (0, None));
+    }
+
+    #[test]
+    fn diurnal_stream_concentrates_load_at_midday() {
+        let day = 1000.0;
+        let tr = OpenLoopTrace::new(5.0, day);
+        let reqs: Vec<Request> = tr.diurnal_stream(0.8, 7).collect();
+        assert!(reqs.len() > 2_000, "n = {}", reqs.len());
+        assert!(reqs.iter().all(|r| r.arrival > 0.0 && r.arrival <= day));
+        for pair in reqs.windows(2) {
+            assert!(pair[1].arrival >= pair[0].arrival);
+            assert_eq!(pair[1].id, pair[0].id + 1);
+        }
+        // The midday half [day/4, 3*day/4] (where cos < 0) must carry
+        // well over half the arrivals at depth 0.8 (expected share 75%).
+        let mid = reqs
+            .iter()
+            .filter(|r| r.arrival > day / 4.0 && r.arrival < 3.0 * day / 4.0)
+            .count();
+        assert!(3 * mid > 2 * reqs.len(), "midday {mid} of {}", reqs.len());
+        // Deterministic given the seed.
+        let again: Vec<Request> = tr.diurnal_stream(0.8, 7).collect();
+        assert_eq!(reqs.len(), again.len());
+        assert!(reqs.iter().zip(&again).all(|(a, b)| a.arrival == b.arrival));
+    }
+
+    #[test]
+    fn mmpp_stream_is_bursty_and_deterministic() {
+        let mmpp = RateProcess::Mmpp { calm: 0.2, burst: 5.0, switch_rate: 0.5 };
+        let reqs: Vec<Request> =
+            DynamicSonnet::default().stream(400, 10.0, 5).with_process(mmpp).collect();
+        assert_eq!(reqs.len(), 400);
+        for pair in reqs.windows(2) {
+            assert!(pair[1].arrival >= pair[0].arrival);
+        }
+        // Burstiness: squared coefficient of variation of inter-arrival
+        // gaps well above the Poisson value of 1.
+        let gaps: Vec<f64> = reqs.windows(2).map(|p| p[1].arrival - p[0].arrival).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        assert!(var / (mean * mean) > 1.5, "cv^2 = {}", var / (mean * mean));
+        let again: Vec<Request> =
+            DynamicSonnet::default().stream(400, 10.0, 5).with_process(mmpp).collect();
+        assert!(reqs.iter().zip(&again).all(|(a, b)| a.arrival == b.arrival));
+    }
+
+    #[test]
+    #[should_panic(expected = "finite rate")]
+    fn modulated_stream_rejects_infinite_rate() {
+        let _ = DynamicSonnet::default()
+            .stream(10, f64::INFINITY, 1)
+            .with_process(RateProcess::Diurnal { period_s: 10.0, depth: 0.5 });
     }
 
     #[test]

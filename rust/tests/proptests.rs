@@ -377,6 +377,57 @@ fn preemption_never_victimizes_a_strictly_higher_priority_sequence() {
 }
 
 #[test]
+fn indexed_event_core_is_bitwise_equal_to_the_scan_loop_oracle() {
+    // Property over random fleets, workloads and QoS mixes: the indexed
+    // discrete-event core (heap-dispatched arrivals + replica wakes) must
+    // replay the retained pre-refactor scan loop bit-for-bit — same
+    // per-request metrics, same backpressure requeue count, same event
+    // count, same prefix-cache counters. Small queue caps are drawn on
+    // purpose so the requeue path's same-time ordering is exercised too.
+    use cuda_myth::serving::cluster::ClusterSim;
+    use cuda_myth::serving::qos::ClassSet;
+    forall(
+        79,
+        10,
+        &PairOf(
+            PairOf(UsizeIn(6, 30), UsizeIn(1, 4)),
+            PairOf(UsizeIn(1, 1000), PairOf(UsizeIn(0, 4), UsizeIn(4, 48))),
+        ),
+        |&((n, replicas), (seed, (groups, max_queued)))| {
+            let classes = if seed % 2 == 0 { ClassSet::default() } else { ClassSet::three_tier() };
+            let cfg = ServingConfig {
+                replicas,
+                route_policy: RoutePolicy::LeastLoaded,
+                max_queued,
+                num_blocks: 2048,
+                max_decode_batch: 12,
+                classes,
+                ..Default::default()
+            };
+            let trace = || {
+                let mut w = DynamicSonnet::default().with_prefix_groups(groups);
+                if seed % 2 == 1 {
+                    w = w.with_class_mix(vec![(0, 2), (1, 1), (2, 1)]);
+                }
+                w.generate(n, 10.0 + (seed % 50) as f64, seed as u64)
+            };
+            let mut indexed = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+            indexed.submit_all(trace());
+            indexed.run_to_completion();
+            let mut oracle = ClusterSim::new_scan_oracle(&cfg, LlamaConfig::llama31_8b());
+            oracle.submit_all(trace());
+            oracle.run_to_completion();
+            indexed.fleet_metrics().max_request_delta(&oracle.fleet_metrics()) == 0.0
+                && indexed.requeues == oracle.requeues
+                && indexed.events() == oracle.events()
+                && indexed.completed() == oracle.completed()
+                && format!("{:?}", indexed.fleet_prefix_stats())
+                    == format!("{:?}", oracle.fleet_prefix_stats())
+        },
+    );
+}
+
+#[test]
 fn block_table_and_list_agree_on_effectual_blocks() {
     forall(13, 200, &VecOf(UsizeIn(1, 3000), 16), |lens| {
         let mut m = KvBlockManager::new(512, 128, 0.0);
