@@ -22,6 +22,11 @@ vs scan-loop oracle). Pass several artifact directories — one per
 commit, oldest first — and the trend spans them; a single directory
 yields single-point series (the CI smoke shape).
 
+``BENCH_chaos_sweep.json`` (the fault-injection grid) gets one
+dip/recovery timeline figure per fleet: goodput over time, one line per
+fault schedule, with each schedule's fault windows (crash downtime,
+straggler interval, preemption storm) shaded behind its curve.
+
 Usage:
     python python/plot_bench.py <artifact-dir> [<older-dir> ...] [--out <plot-dir>]
 
@@ -201,6 +206,81 @@ def plot_class_attainment(experiment: str, artifact: dict, out_dir: Path) -> Pat
     return out
 
 
+CHAOS_TIMELINE_PREFIX = "Chaos goodput timeline"
+CHAOS_WINDOW_COLORS = {"crash": "tab:red", "straggler": "tab:orange", "preempt_storm": "tab:purple"}
+
+
+def chaos_fault_windows(artifact: dict) -> list[tuple[str, str, float, float]]:
+    """(schedule, kind, from_s, until_s) rows of the fault-window report
+    the chaos_sweep experiment emits alongside its timelines."""
+    report = next(
+        (r for r in artifact.get("reports", []) if r.get("title") == "Chaos fault windows"),
+        None,
+    )
+    if report is None:
+        return []
+    return [
+        (row[0], row[1], float(row[2]["v"]), float(row[3]["v"]))
+        for row in report.get("rows", [])
+        if len(row) >= 4
+        and isinstance(row[0], str)
+        and isinstance(row[1], str)
+        and isinstance(row[2], dict)
+        and isinstance(row[3], dict)
+    ]
+
+
+def plot_chaos_timeline(experiment: str, artifact: dict, report: dict, out_dir: Path) -> Path | None:
+    """Goodput-over-time dip/recovery figure for one chaos timeline
+    report: one line per fault schedule (the text label of each row),
+    the schedule's fault windows shaded behind the curves."""
+    series: dict[str, tuple[list[float], list[float]]] = {}
+    for row in report.get("rows", []):
+        if (
+            len(row) >= 3
+            and isinstance(row[0], str)
+            and isinstance(row[1], dict)
+            and isinstance(row[2], dict)
+        ):
+            ts, gs = series.setdefault(row[0], ([], []))
+            ts.append(float(row[1]["v"]))
+            gs.append(float(row[2]["v"]))
+    if not series or all(len(ts) < 2 for ts, _ in series.values()):
+        return None
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(7.5, 4.5))
+    for label, (ts, gs) in series.items():
+        ax.plot(ts, gs, marker="o", ms=3, label=label)
+    seen_kinds: set[str] = set()
+    for schedule, kind, start, until in chaos_fault_windows(artifact):
+        if schedule not in series:
+            continue
+        span_label = kind if kind not in seen_kinds else None
+        seen_kinds.add(kind)
+        ax.axvspan(
+            start,
+            max(until, start + 0.05),  # zero-width storms still visible
+            alpha=0.15,
+            color=CHAOS_WINDOW_COLORS.get(kind, "gray"),
+            label=span_label,
+        )
+    ax.set_xlabel("time [s]")
+    ax.set_ylabel("goodput [req/s]")
+    ax.set_title(f"{experiment}: {report.get('title', '')}"[:100])
+    ax.legend(fontsize=7, title="schedule / fault window")
+    ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+    out = out_dir / f"{experiment}__{slugify(report.get('title', 'chaos-timeline'))}.png"
+    fig.savefig(out, dpi=110)
+    plt.close(fig)
+    return out
+
+
 def plot_sim_speed_trend(artifact_dirs: list[Path], out_dir: Path) -> Path | None:
     """Events/sec trend for the sim-speed self-benchmark: one line per
     event loop (row label of the throughput report) across the given
@@ -272,7 +352,13 @@ def plot_artifact(path: Path, out_dir: Path) -> list[Path]:
     experiment = artifact.get("experiment", path.stem)
     written = []
     for report in artifact.get("reports", []):
-        out = plot_report(experiment, report, out_dir)
+        if report.get("title", "").startswith(CHAOS_TIMELINE_PREFIX):
+            # Dedicated dip/recovery rendering (fault windows shaded, one
+            # line per schedule) replaces the generic per-report curves,
+            # which would concatenate every schedule into one jagged line.
+            out = plot_chaos_timeline(experiment, artifact, report, out_dir)
+        else:
+            out = plot_report(experiment, report, out_dir)
         if out is not None:
             written.append(out)
     combined = plot_class_attainment(experiment, artifact, out_dir)

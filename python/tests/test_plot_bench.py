@@ -242,6 +242,93 @@ def test_no_trend_without_sim_speed_artifact(tmp_path):
     assert not (out_dir / "sim_speed__events-per-sec-trend.png").exists()
 
 
+def chaos_artifact():
+    def timeline(fleet):
+        rows = []
+        for sched, dip_at in [("crash r0@3s (1.5s down)", 6), ("straggler r1 x4 [2,6]s", 5)]:
+            for i in range(12):
+                goodput = 2.0 if abs(i - dip_at) > 1 else 0.6
+                rows.append([sched, val(0.5 + i * 1.0, "s"), val(goodput, "req/s")])
+        return {
+            "title": f"Chaos goodput timeline [{fleet}]",
+            "columns": ["schedule", "t", "goodput"],
+            "rows": rows,
+            "notes": [],
+        }
+
+    return {
+        "schema": "cuda-myth/experiment-v1",
+        "experiment": "chaos_sweep",
+        "title": "synthetic chaos",
+        "params": {"seed": 47},
+        "reports": [
+            timeline("homogeneous 3x gaudi2"),
+            timeline("mixed gaudi2/a100"),
+            {
+                "title": "Chaos fault windows",
+                "columns": ["schedule", "kind", "from", "until"],
+                "rows": [
+                    ["crash r0@3s (1.5s down)", "crash", val(3.0, "s"), val(4.5, "s")],
+                    ["straggler r1 x4 [2,6]s", "straggler", val(2.0, "s"), val(6.0, "s")],
+                    ["storm", "preempt_storm", val(4.0, "s"), val(4.0, "s")],
+                ],
+                "notes": [],
+            },
+            {
+                "title": "Chaos-sweep derived claims",
+                "columns": ["claim", "value"],
+                "rows": [["conservation", val(0.0, "count")]],
+                "notes": [],
+            },
+        ],
+        "expectations": [],
+    }
+
+
+def test_chaos_fault_windows_parsed():
+    windows = plot_bench.chaos_fault_windows(chaos_artifact())
+    assert len(windows) == 3
+    assert windows[0] == ("crash r0@3s (1.5s down)", "crash", 3.0, 4.5)
+    assert windows[2][1] == "preempt_storm"
+
+
+def test_chaos_artifact_gets_shaded_timeline_per_fleet(tmp_path):
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_chaos_sweep.json").write_text(json.dumps(chaos_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    timelines = sorted(out_dir.glob("chaos_sweep__chaos-goodput-timeline*.png"))
+    assert len(timelines) == 2, sorted(out_dir.glob("*.png"))
+    for png in timelines:
+        assert png.stat().st_size > 1000
+
+
+def test_chaos_timeline_replaces_generic_rendering(tmp_path):
+    # The timeline reports must be rendered exactly once (the dedicated
+    # shaded figure), not additionally as generic per-report curves: two
+    # timeline figures plus possibly the windows report's generic plot.
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_chaos_sweep.json").write_text(json.dumps(chaos_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    names = [p.name for p in out_dir.glob("chaos_sweep__chaos-goodput-timeline*.png")]
+    assert sorted(names) == sorted(set(names))
+
+
+def test_chaos_timeline_without_windows_report_still_renders(tmp_path):
+    art = chaos_artifact()
+    art["reports"] = [r for r in art["reports"] if r["title"] != "Chaos fault windows"]
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_chaos_sweep.json").write_text(json.dumps(art))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    assert plot_bench.chaos_fault_windows(art) == []
+    assert list(out_dir.glob("chaos_sweep__chaos-goodput-timeline*.png"))
+
+
 def test_slugify():
     assert plot_bench.slugify("Fig 17(d): SLO knee / sweep") == "fig-17-d-slo-knee-sweep"
     assert plot_bench.slugify("***") == "report"

@@ -58,6 +58,16 @@ pub struct ServingConfig {
     /// "weight": ...}, ...]`. The default is the single `default` class,
     /// which reproduces the pre-QoS scalar-SLO behavior bitwise.
     pub classes: ClassSet,
+    /// Hedged requests (`serving::chaos`): a routed request still
+    /// first-token-less this many seconds after delivery is duplicated
+    /// to a second replica; first completion wins, the loser is
+    /// cancelled. 0 (the default) disables hedging.
+    pub hedge_after_s: f64,
+    /// Per-class admission control: once the router's queue reaches this
+    /// fraction of `max_queued`, priority-0 background requests are shed
+    /// at the door. Must be in (0, 1]; 1.0 (the default) disables
+    /// shedding (that regime belongs to `QueueFull` backpressure).
+    pub shed_threshold: f64,
 }
 
 impl Default for ServingConfig {
@@ -79,6 +89,8 @@ impl Default for ServingConfig {
             max_queued: 4096,
             fleet: Vec::new(),
             classes: ClassSet::default(),
+            hedge_after_s: 0.0,
+            shed_threshold: 1.0,
         }
     }
 }
@@ -154,6 +166,14 @@ impl ServingConfig {
                 None => ClassSet::default(),
                 Some(v) => ClassSet::from_json(v)?,
             },
+            hedge_after_s: match j.get("hedge_after_s") {
+                None => d.hedge_after_s,
+                Some(v) => v.as_f64().ok_or_else(|| anyhow::anyhow!("bad 'hedge_after_s'"))?,
+            },
+            shed_threshold: match j.get("shed_threshold") {
+                None => d.shed_threshold,
+                Some(v) => v.as_f64().ok_or_else(|| anyhow::anyhow!("bad 'shed_threshold'"))?,
+            },
         };
         // A fleet listed without an explicit replica count sizes the fleet.
         let cfg = if !cfg.fleet.is_empty() && j.get("replicas").is_none() {
@@ -188,6 +208,8 @@ impl ServingConfig {
                 ),
             ),
             ("classes", self.classes.to_json()),
+            ("hedge_after_s", Json::Num(self.hedge_after_s)),
+            ("shed_threshold", Json::Num(self.shed_threshold)),
         ])
         .dump()
     }
@@ -242,6 +264,15 @@ impl ServingConfig {
             );
         }
         self.classes.validate()?;
+        if !self.hedge_after_s.is_finite() || self.hedge_after_s < 0.0 {
+            anyhow::bail!("hedge_after_s must be finite and >= 0");
+        }
+        if !self.shed_threshold.is_finite()
+            || self.shed_threshold <= 0.0
+            || self.shed_threshold > 1.0
+        {
+            anyhow::bail!("shed_threshold must be in (0, 1]");
+        }
         Ok(())
     }
 
@@ -388,6 +419,25 @@ mod tests {
             r#"{"classes": [{"name": "a", "ttft_slo": 0.0}]}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn chaos_fields_parse_roundtrip_and_validate() {
+        let d = ServingConfig::default();
+        assert_eq!(d.hedge_after_s, 0.0, "hedging off by default");
+        assert_eq!(d.shed_threshold, 1.0, "shedding off by default");
+        let c = ServingConfig::from_json(
+            r#"{"hedge_after_s": 0.25, "shed_threshold": 0.5}"#,
+        )
+        .unwrap();
+        assert_eq!(c.hedge_after_s, 0.25);
+        assert_eq!(c.shed_threshold, 0.5);
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        assert!(ServingConfig::from_json(r#"{"hedge_after_s": -1.0}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"hedge_after_s": "fast"}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"shed_threshold": 0.0}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"shed_threshold": 1.5}"#).is_err());
     }
 
     #[test]

@@ -1,0 +1,596 @@
+//! Chaos-sweep experiment: seeded fault schedules x fleet shapes — the
+//! serving stack's robustness claims made executable. Each grid point
+//! replays the same open-loop mixed-class trace under one
+//! [`FaultSchedule`] (a replica crash with restart, a straggler window,
+//! or a preemption storm under a flash crowd) on one fleet (homogeneous
+//! Gaudi-2 or mixed Gaudi-2 + A100) and reports the goodput dip and the
+//! time back to baseline (`MetricsCollector::recovery`).
+//!
+//! The structural claims checked by `repro run chaos-sweep --check` are
+//! the chaos engine's contract, not tuning outcomes:
+//!
+//! - **Conservation**: every submitted request either completes exactly
+//!   once or is counted shed — crashes requeue, hedges cancel their
+//!   losers, nothing is lost or double-served (EqExact 0 violations).
+//! - **Inertness**: an *empty* fault schedule is bitwise-equal to a run
+//!   with no chaos installed at all — the third event heap never fires,
+//!   so the fault-free fast path is provably untouched (EqExact 0).
+//! - **Determinism**: the same seed and schedule replay bitwise
+//!   (EqExact 0 max delta between twin runs at every grid point).
+//! - **Recovery**: after the crash schedule, fleet goodput returns to
+//!   `RECOVERY_FRACTION` of its pre-fault baseline within a bounded
+//!   time on every fleet.
+//! - **Hedging**: duplicating long-stuck requests to a second replica
+//!   does not worsen p99 TTFT under a straggler (Le 0 delta), and fires
+//!   at least once there.
+//! - **Shedding**: under a flash-crowd overload with admission control
+//!   on, only priority-0 background traffic is shed (EqExact 0
+//!   non-background requests lost).
+//!
+//! `repro run chaos-sweep --json --out bench/` writes the grid as
+//! `BENCH_chaos_sweep.json`; `python/plot_bench.py` renders the
+//! goodput-over-time timelines with the fault windows shaded.
+
+use crate::config::{DeviceKind, ServingConfig};
+use crate::harness::{Experiment, Params};
+use crate::models::llama::LlamaConfig;
+use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
+use crate::serving::chaos::{ChaosStats, Fault, FaultSchedule};
+use crate::serving::cluster::ClusterSim;
+use crate::serving::metrics::RecoveryMetrics;
+use crate::serving::qos::ClassSet;
+use crate::serving::router::RoutePolicy;
+use crate::workload::{DynamicSonnet, OpenLoopTrace, RateProcess};
+
+/// (label, per-replica devices) — the two fleet shapes every schedule
+/// runs against. Three replicas so a single crash leaves capacity.
+const FLEETS: [(&str, [DeviceKind; 3]); 2] = [
+    ("homogeneous 3x gaudi2", [DeviceKind::Gaudi2; 3]),
+    ("mixed gaudi2/a100", [DeviceKind::Gaudi2, DeviceKind::A100, DeviceKind::Gaudi2]),
+];
+
+/// Flash-crowd window paired with the preemption-storm schedule: the
+/// offered rate triples over [3, 5) s.
+const CROWD: RateProcess = RateProcess::FlashCrowd { start_s: 3.0, duration_s: 2.0, mult: 3.0 };
+
+/// The three fault schedules of the grid. Times sit inside the default
+/// 12 s trace (and inside the >= 7 s traces the tests shrink to).
+fn schedules() -> Vec<(&'static str, FaultSchedule, bool)> {
+    vec![
+        (
+            "crash r0@3s (1.5s down)",
+            FaultSchedule::empty().with(Fault::Crash { replica: 0, at: 3.0, down_s: 1.5 }),
+            false,
+        ),
+        (
+            "straggler r1 x4 [2,6]s",
+            FaultSchedule::empty()
+                .with(Fault::Straggler { replica: 1, from: 2.0, until: 6.0, factor: 4.0 }),
+            false,
+        ),
+        (
+            "storm r0@4s + flash crowd x3 [3,5]s",
+            FaultSchedule::empty().with(Fault::PreemptStorm { replica: 0, at: 4.0, count: 6 }),
+            true,
+        ),
+    ]
+}
+
+struct Knobs {
+    rate_rps: f64,
+    duration_s: f64,
+    bucket_s: f64,
+    hedge_after_s: f64,
+    recovery_bound_s: f64,
+    seed: u64,
+}
+
+impl Knobs {
+    fn from(params: &Params) -> Knobs {
+        Knobs {
+            rate_rps: params.get_or("rate_rps", 10.0),
+            duration_s: params.get_or("duration_s", 12.0),
+            bucket_s: params.get_or("bucket_s", 0.5),
+            hedge_after_s: params.get_or("hedge_after_s", 0.25),
+            recovery_bound_s: params.get_or("recovery_bound_s", 8.0),
+            seed: params.get_or("seed", 47.0) as u64,
+        }
+    }
+}
+
+fn chaos_config(fleet: &[DeviceKind]) -> ServingConfig {
+    ServingConfig {
+        route_policy: RoutePolicy::LeastLoaded,
+        max_decode_batch: 24,
+        num_blocks: 4096,
+        classes: ClassSet::three_tier(),
+        ..Default::default()
+    }
+    .with_fleet(fleet.to_vec())
+}
+
+/// One (schedule, fleet) grid point, plus its bitwise twin-run check.
+struct ChaosPoint {
+    submitted: usize,
+    completed: usize,
+    stats: ChaosStats,
+    p99_ttft: f64,
+    recovery: RecoveryMetrics,
+    timeline: Vec<f64>,
+    has_crash: bool,
+    determinism_delta: f64,
+}
+
+fn run_point(k: &Knobs, fleet: &[DeviceKind], schedule: &FaultSchedule, crowd: bool) -> ChaosPoint {
+    let classes = ClassSet::three_tier();
+    let mix = vec![(0usize, 2usize), (1, 1), (2, 1)];
+    let trace = || -> Vec<crate::serving::request::Request> {
+        let tr = OpenLoopTrace::new(k.rate_rps, k.duration_s).with_class_mix(mix.clone());
+        if crowd {
+            tr.stream(k.seed).with_process(CROWD).collect()
+        } else {
+            tr.generate(k.seed)
+        }
+    };
+    let submitted = trace().len();
+
+    let run = || {
+        let mut sim = ClusterSim::new(&chaos_config(fleet), LlamaConfig::llama31_8b());
+        sim.install_chaos(schedule);
+        sim.submit_all(trace());
+        sim.run_to_completion();
+        sim
+    };
+    let sim = run();
+    let twin = run();
+    let ms = sim.fleet_metrics();
+    let determinism_delta = ms.max_request_delta(&twin.fleet_metrics())
+        + sim.events().abs_diff(twin.events()) as f64;
+
+    let first_fault =
+        schedule.windows().iter().map(|w| w.0).fold(f64::INFINITY, f64::min);
+    ChaosPoint {
+        submitted,
+        completed: sim.completed(),
+        stats: sim.chaos_stats(),
+        p99_ttft: ms.summary().p99_ttft,
+        recovery: ms.recovery(&classes, first_fault, k.bucket_s),
+        timeline: ms.goodput_timeline(&classes, k.bucket_s),
+        has_crash: schedule.faults.iter().any(|f| matches!(f, Fault::Crash { .. })),
+        determinism_delta,
+    }
+}
+
+/// Max per-request delta between a chaos-free run and one with an empty
+/// [`FaultSchedule`] installed — the inertness claim (exact zero: the
+/// control heap stays empty, so the indexed event loop never diverges).
+fn empty_schedule_parity(k: &Knobs) -> f64 {
+    let cfg = chaos_config(&FLEETS[0].1);
+    let trace = || OpenLoopTrace::new(k.rate_rps, k.duration_s).generate(k.seed);
+    let run = |chaos: bool| {
+        let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        if chaos {
+            sim.install_chaos(&FaultSchedule::empty());
+        }
+        sim.submit_all(trace());
+        sim.run_to_completion();
+        sim
+    };
+    let plain = run(false);
+    let empty = run(true);
+    plain.fleet_metrics().max_request_delta(&empty.fleet_metrics())
+        + plain.events().abs_diff(empty.events()) as f64
+}
+
+/// Hedging cell: p99 TTFT with hedging on minus off, under a hard
+/// straggler on a 2-replica round-robin fleet (round-robin keeps
+/// steering half the trace onto the slow replica, so hedges have work
+/// to rescue). Returns the delta and the number of hedges launched.
+fn hedging_cell(k: &Knobs) -> (f64, u64) {
+    let schedule = FaultSchedule::empty().with(Fault::Straggler {
+        replica: 0,
+        from: 0.0,
+        until: k.duration_s,
+        factor: 12.0,
+    });
+    let run = |hedge_after_s: f64| {
+        let cfg = ServingConfig {
+            route_policy: RoutePolicy::RoundRobin,
+            max_decode_batch: 24,
+            num_blocks: 4096,
+            classes: ClassSet::three_tier(),
+            hedge_after_s,
+            ..Default::default()
+        }
+        .with_fleet(vec![DeviceKind::Gaudi2; 2]);
+        let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        sim.install_chaos(&schedule);
+        sim.submit_all(OpenLoopTrace::new(6.0, k.duration_s).generate(k.seed));
+        sim.run_to_completion();
+        (sim.fleet_metrics().summary().p99_ttft, sim.chaos_stats())
+    };
+    let (hedged_p99, stats) = run(k.hedge_after_s);
+    let (control_p99, _) = run(0.0);
+    (hedged_p99 - control_p99, stats.hedges_launched)
+}
+
+/// Shedding cell: a t=0 burst (2x the router queue cap) against a
+/// half-interactive / half-background mix with admission control at 50%
+/// queue depth. Returns (background requests shed, non-background
+/// requests lost) — the latter must be exactly zero.
+fn shed_cell(k: &Knobs) -> (u64, usize) {
+    let reqs = DynamicSonnet::default()
+        .with_class_mix(vec![(0, 1), (2, 1)])
+        .generate(40, f64::INFINITY, k.seed);
+    let foreground_submitted = reqs.iter().filter(|r| r.class_id != 2).count();
+    let cfg = ServingConfig {
+        route_policy: RoutePolicy::LeastLoaded,
+        max_decode_batch: 24,
+        num_blocks: 4096,
+        max_queued: 12,
+        classes: ClassSet::three_tier(),
+        shed_threshold: 0.5,
+        ..Default::default()
+    }
+    .with_fleet(vec![DeviceKind::Gaudi2; 2]);
+    let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    sim.submit_all(reqs);
+    sim.run_to_completion();
+    let foreground_completed =
+        sim.fleet_metrics().per_request().iter().filter(|m| m.class_id != 2).count();
+    (sim.chaos_stats().shed, foreground_submitted - foreground_completed)
+}
+
+pub struct ChaosSweep;
+
+impl Experiment for ChaosSweep {
+    fn id(&self) -> &'static str {
+        "chaos_sweep"
+    }
+
+    fn title(&self) -> &'static str {
+        "Chaos sweep: fault schedules x fleets (conservation, recovery, hedging, shedding)"
+    }
+
+    fn params(&self) -> Params {
+        Params::new()
+            .with("rate_rps", 10.0)
+            .with("duration_s", 12.0)
+            .with("bucket_s", 0.5)
+            .with("hedge_after_s", 0.25)
+            .with("recovery_bound_s", 8.0)
+            .with("seed", 47.0)
+    }
+
+    fn run(&self, params: &Params) -> Vec<Report> {
+        let k = Knobs::from(params);
+        let scheds = schedules();
+        let mut reports = Vec::new();
+        let mut all: Vec<ChaosPoint> = Vec::new();
+
+        for (fleet_label, fleet) in FLEETS {
+            let points: Vec<(&str, ChaosPoint)> = scheds
+                .iter()
+                .map(|(label, s, crowd)| (*label, run_point(&k, &fleet, s, *crowd)))
+                .collect();
+
+            let mut r = Report::new(format!(
+                "Chaos schedule sweep [{fleet_label}]: {} replicas, three-tier classes",
+                fleet.len()
+            ));
+            r.header(&[
+                "schedule",
+                "served",
+                "crashes",
+                "restarts",
+                "requeued by crash",
+                "forced preemptions",
+                "hedges launched",
+                "p99 ttft",
+                "baseline goodput",
+                "dip depth",
+                "dip area",
+                "recovery time",
+            ]);
+            for (label, p) in &points {
+                r.row(vec![
+                    Cell::text(*label),
+                    Cell::count(p.completed),
+                    Cell::count(p.stats.crashes as usize),
+                    Cell::count(p.stats.restarts as usize),
+                    Cell::count(p.stats.requeued_by_crash as usize),
+                    Cell::count(p.stats.forced_preemptions as usize),
+                    Cell::count(p.stats.hedges_launched as usize),
+                    Cell::val(p.p99_ttft, Unit::Seconds),
+                    Cell::val(p.recovery.baseline_rps, Unit::ReqPerSec),
+                    Cell::val(p.recovery.dip_depth, Unit::ReqPerSec),
+                    Cell::val(p.recovery.dip_area, Unit::Count),
+                    Cell::val(p.recovery.recovery_time_s.unwrap_or(-1.0), Unit::Seconds),
+                ]);
+            }
+            r.note(format!(
+                "open-loop mixed-class trace, {} req/s for {}s (seed {}); recovery time is \
+                 seconds from first fault back to {}x of pre-fault goodput, -1 = not within \
+                 the run",
+                k.rate_rps,
+                k.duration_s,
+                k.seed,
+                crate::serving::metrics::RECOVERY_FRACTION,
+            ));
+            reports.push(r);
+
+            // Goodput-over-time series for the dip/recovery plot.
+            let mut tl = Report::new(format!("Chaos goodput timeline [{fleet_label}]"));
+            tl.header(&["schedule", "t", "goodput"]);
+            for (label, p) in &points {
+                for (i, &g) in p.timeline.iter().enumerate() {
+                    tl.row(vec![
+                        Cell::text(*label),
+                        Cell::val((i as f64 + 0.5) * k.bucket_s, Unit::Seconds),
+                        Cell::val(g, Unit::ReqPerSec),
+                    ]);
+                }
+            }
+            tl.note("bucket midpoints; compliant completions per second per bucket");
+            reports.push(tl);
+
+            all.extend(points.into_iter().map(|(_, p)| p));
+        }
+
+        // Fault windows (fleet-independent) for the plot's shaded spans.
+        let mut win = Report::new("Chaos fault windows");
+        win.header(&["schedule", "kind", "from", "until"]);
+        for (label, s, _) in &scheds {
+            for (from, until, kind) in s.windows() {
+                win.row(vec![
+                    Cell::text(*label),
+                    Cell::text(kind),
+                    Cell::val(from, Unit::Seconds),
+                    Cell::val(until, Unit::Seconds),
+                ]);
+            }
+        }
+        reports.push(win);
+
+        // Derived claims over the grid plus the dedicated cells.
+        let parity = empty_schedule_parity(&k);
+        let (hedge_delta, hedges_launched) = hedging_cell(&k);
+        let (shed, foreground_lost) = shed_cell(&k);
+        let conservation: usize = all
+            .iter()
+            .map(|p| p.submitted.abs_diff(p.completed + p.stats.shed as usize))
+            .sum();
+        let determinism = all.iter().map(|p| p.determinism_delta).fold(0.0, f64::max);
+        let crash_cells: Vec<&ChaosPoint> = all.iter().filter(|p| p.has_crash).collect();
+        let unrecovered =
+            crash_cells.iter().filter(|p| p.recovery.recovery_time_s.is_none()).count();
+        let max_recovery = crash_cells
+            .iter()
+            .filter_map(|p| p.recovery.recovery_time_s)
+            .fold(0.0, f64::max);
+
+        let mut claims = Report::new("Chaos-sweep derived claims");
+        claims.header(&["claim", "value"]);
+        claims.row(vec![
+            Cell::text("request conservation violations over the grid"),
+            Cell::count(conservation),
+        ]);
+        claims.row(vec![
+            Cell::text("empty fault schedule vs chaos-free run: max delta"),
+            Cell::val(parity, Unit::Seconds),
+        ]);
+        claims.row(vec![
+            Cell::text("same-seed twin-run determinism: max delta over the grid"),
+            Cell::val(determinism, Unit::Seconds),
+        ]);
+        claims.row(vec![
+            Cell::text("crash cells without goodput recovery"),
+            Cell::count(unrecovered),
+        ]);
+        claims.row(vec![
+            Cell::text("max crash recovery time"),
+            Cell::val(max_recovery, Unit::Seconds),
+        ]);
+        let over_bound = crash_cells
+            .iter()
+            .filter_map(|p| p.recovery.recovery_time_s)
+            .filter(|&t| t > k.recovery_bound_s)
+            .count();
+        claims.row(vec![
+            Cell::text("crash cells exceeding the recovery bound"),
+            Cell::count(over_bound),
+        ]);
+        claims.row(vec![
+            Cell::text("hedging p99 TTFT delta under straggler (on - off)"),
+            Cell::val(hedge_delta, Unit::Seconds),
+        ]);
+        claims.row(vec![
+            Cell::text("hedges launched under straggler"),
+            Cell::count(hedges_launched as usize),
+        ]);
+        claims.row(vec![
+            Cell::text("background requests shed under overload"),
+            Cell::count(shed as usize),
+        ]);
+        claims.row(vec![
+            Cell::text("non-background requests lost to shedding"),
+            Cell::count(foreground_lost),
+        ]);
+        claims.row(vec![Cell::text("grid points swept"), Cell::count(all.len())]);
+        claims.note(
+            "conservation counts |submitted - completed - shed| at every grid point: \
+             crashes requeue their in-flight work, hedge losers are cancelled before \
+             they can double-complete, and admission control only ever drops \
+             priority-0 background traffic",
+        );
+        reports.push(claims);
+
+        reports
+    }
+
+    fn expectations(&self) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "chaos_sweep.conservation",
+                "no request is lost or double-served under any fault schedule",
+                Selector::cell(
+                    "Chaos-sweep derived claims",
+                    "request conservation violations over the grid",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "chaos_sweep.empty_schedule_inert",
+                "an empty fault schedule replays the chaos-free run bitwise",
+                Selector::cell(
+                    "Chaos-sweep derived claims",
+                    "empty fault schedule vs chaos-free run: max delta",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "chaos_sweep.determinism",
+                "the same seed and schedule replay bitwise at every grid point",
+                Selector::cell(
+                    "Chaos-sweep derived claims",
+                    "same-seed twin-run determinism: max delta over the grid",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "chaos_sweep.recovery",
+                "goodput returns to baseline after a crash on every fleet",
+                Selector::cell(
+                    "Chaos-sweep derived claims",
+                    "crash cells without goodput recovery",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "chaos_sweep.recovery_bound",
+                "crash recovery completes within the recovery SLO",
+                Selector::cell(
+                    "Chaos-sweep derived claims",
+                    "crash cells exceeding the recovery bound",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "chaos_sweep.hedging_p99",
+                "hedged requests do not worsen p99 TTFT under a straggler",
+                Selector::cell(
+                    "Chaos-sweep derived claims",
+                    "hedging p99 TTFT delta under straggler (on - off)",
+                    "value",
+                ),
+                Check::Le(0.0),
+            ),
+            Expectation::new(
+                "chaos_sweep.hedging_fires",
+                "the straggler cell actually launches hedges",
+                Selector::cell(
+                    "Chaos-sweep derived claims",
+                    "hedges launched under straggler",
+                    "value",
+                ),
+                Check::Ge(1.0),
+            ),
+            Expectation::new(
+                "chaos_sweep.shed_only_background",
+                "admission control sheds background traffic only",
+                Selector::cell(
+                    "Chaos-sweep derived claims",
+                    "non-background requests lost to shedding",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "chaos_sweep.full_grid",
+                "the sweep covers every (schedule, fleet) grid point",
+                Selector::cell("Chaos-sweep derived claims", "grid points swept", "value"),
+                Check::Ge((FLEETS.len() * 3) as f64),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    ChaosSweep.run(&ChaosSweep.params())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_params() -> Params {
+        ChaosSweep.params().with("duration_s", 7.0).with("bucket_s", 1.0)
+    }
+
+    #[test]
+    fn report_shape_per_fleet_plus_windows_and_claims() {
+        let reports = ChaosSweep.run(&small_params());
+        // Per fleet: schedule table + timeline; then windows + claims.
+        assert_eq!(reports.len(), 2 * FLEETS.len() + 2);
+        for (i, (label, _)) in FLEETS.iter().enumerate() {
+            assert!(reports[2 * i].title().contains(label));
+            assert_eq!(reports[2 * i].num_rows(), schedules().len());
+            assert!(reports[2 * i + 1].title().contains("timeline"));
+        }
+        assert_eq!(reports[reports.len() - 2].title(), "Chaos fault windows");
+        assert_eq!(reports[reports.len() - 1].num_rows(), 11);
+    }
+
+    #[test]
+    fn empty_schedule_is_inert() {
+        let k = Knobs::from(&small_params());
+        assert_eq!(empty_schedule_parity(&k), 0.0);
+    }
+
+    #[test]
+    fn grid_points_conserve_requests_and_replay() {
+        let k = Knobs::from(&small_params());
+        for (_, schedule, crowd) in schedules() {
+            let p = run_point(&k, &FLEETS[0].1, &schedule, crowd);
+            assert_eq!(p.submitted, p.completed + p.stats.shed as usize);
+            assert_eq!(p.determinism_delta, 0.0);
+            assert!(!p.timeline.is_empty());
+        }
+    }
+
+    #[test]
+    fn crash_cell_recovers_on_the_default_grid() {
+        let k = Knobs::from(&ChaosSweep.params());
+        let (_, schedule, crowd) = &schedules()[0];
+        let p = run_point(&k, &FLEETS[0].1, schedule, *crowd);
+        assert!(p.has_crash && p.stats.crashes == 1 && p.stats.restarts == 1);
+        assert!(p.stats.requeued_by_crash > 0, "a 3 s crash should catch in-flight work");
+        let rt = p.recovery.recovery_time_s.expect("goodput should recover");
+        assert!(rt <= k.recovery_bound_s, "recovery {rt}s");
+    }
+
+    #[test]
+    fn shedding_is_background_only() {
+        let k = Knobs::from(&small_params());
+        let (shed, foreground_lost) = shed_cell(&k);
+        assert!(shed > 0, "overload burst should shed background work");
+        assert_eq!(foreground_lost, 0);
+    }
+
+    #[test]
+    fn expectations_pass_on_default_grid() {
+        // The full default grid is the artifact CI gates on; every
+        // expectation must hold there.
+        let reports = run();
+        for e in ChaosSweep.expectations() {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
+    }
+}

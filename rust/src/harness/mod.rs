@@ -7,6 +7,7 @@
 
 pub mod ablations;
 pub mod cache_sweep;
+pub mod chaos_sweep;
 pub mod cluster;
 pub mod cluster_sweep;
 pub mod fig10;
@@ -115,6 +116,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(cluster_sweep::ClusterSweep),
         Box::new(cache_sweep::CacheSweep),
         Box::new(qos_sweep::QosSweep),
+        Box::new(chaos_sweep::ChaosSweep),
         Box::new(ablations::AblMme),
         Box::new(ablations::AblWatermark),
         Box::new(ablations::ExtMultiRecsys),
@@ -179,11 +181,11 @@ mod tests {
         for required in [
             "table1", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
             "fig13", "fig15", "fig17", "cluster", "cluster_sweep", "cache_sweep", "qos_sweep",
-            "sim_speed",
+            "chaos_sweep", "sim_speed",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
-        assert_eq!(ids.len(), 22, "registry must keep all 22 entries");
+        assert_eq!(ids.len(), 23, "registry must keep all 23 entries");
     }
 
     #[test]
@@ -198,6 +200,7 @@ mod tests {
         assert_eq!(find("cluster_sweep").unwrap().id(), "cluster_sweep");
         assert_eq!(find("cache-sweep").unwrap().id(), "cache_sweep");
         assert_eq!(find("qos-sweep").unwrap().id(), "qos_sweep");
+        assert_eq!(find("chaos-sweep").unwrap().id(), "chaos_sweep");
         assert_eq!(find("sim-speed").unwrap().id(), "sim_speed");
         assert!(find("cluster-").is_none());
     }

@@ -51,8 +51,21 @@
 //!   weighted per-class attainment. A single default class replays the
 //!   legacy scalar-SLO path bitwise.
 //!
+//!   `serving::chaos` makes the stack's failure behavior first-class: a
+//!   seeded, JSON-configurable `FaultSchedule` (replica crashes with
+//!   restarts, straggler slow-clock windows, preemption storms) feeds a
+//!   third min-heap of control events into the indexed event core;
+//!   crashes requeue their replica's work through the router with
+//!   no-lost-request conservation, the router hedges long-stuck requests
+//!   to a second replica (first completion wins, the loser is cancelled
+//!   without double-counting) and sheds priority-0 background traffic
+//!   under overload, and metrics report goodput dip depth/area and
+//!   time-to-recover. An empty schedule is bitwise-equal to no chaos at
+//!   all.
+//!
 //!   `ServingConfig { replicas, route_policy, max_queued, fleet,
-//!   prefix_cache_blocks, eviction, classes, .. }` sizes the fleet;
+//!   prefix_cache_blocks, eviction, classes, hedge_after_s,
+//!   shed_threshold, .. }` sizes the fleet;
 //!   `repro run cluster` produces the iso-SLO Gaudi-2 vs A100
 //!   replica-count comparison, `repro run cluster-sweep` the
 //!   goodput-under-SLO frontier across fleet mixes, `repro run
@@ -60,10 +73,12 @@
 //!   monotone in capacity; unbounded capacity bitwise-replays the legacy
 //!   ever-warm set), `repro run qos-sweep` the class-mix x load grid
 //!   (priorities help interactive attainment; single-default-class
-//!   EqExact-0 parity with the scalar-SLO path), and `repro run
-//!   sim-speed` the simulator's own dispatch throughput (indexed event
-//!   core vs the retained scan-loop oracle: bitwise parity, events/sec,
-//!   O(open requests) streaming memory).
+//!   EqExact-0 parity with the scalar-SLO path), `repro run chaos-sweep`
+//!   the fault-schedule x fleet grid (conservation, empty-schedule
+//!   inertness, bounded recovery, hedging, background-only shedding),
+//!   and `repro run sim-speed` the simulator's own dispatch throughput
+//!   (indexed event core vs the retained scan-loop oracle: bitwise
+//!   parity, events/sec, O(open requests) streaming memory).
 //! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, lowered at
 //!   build time by `python/compile/aot.py`) and executes them on the PJRT
 //!   CPU client. Python is never on the request path.
@@ -83,8 +98,8 @@
 //!   Dynamic-Sonnet-like variable-length traces, Zipf embedding indices,
 //!   token-level prompts for the real-numerics engine), eager
 //!   (`generate` a `Vec<Request>`) or streaming (`ArrivalStream`: a lazy
-//!   time-ordered iterator with constant-rate, diurnal-day or MMPP
-//!   arrival processes, fed to `ClusterSim::feed`).
+//!   time-ordered iterator with constant-rate, diurnal-day, MMPP or
+//!   flash-crowd arrival processes, fed to `ClusterSim::feed`).
 
 pub mod config;
 pub mod harness;

@@ -38,6 +38,7 @@ use cuda_myth::harness::{self, Experiment};
 use cuda_myth::models::llama::LlamaConfig;
 use cuda_myth::report::diff::{self, DiffOutcome};
 use cuda_myth::report::expect::results_report;
+use cuda_myth::serving::chaos::FaultSchedule;
 use cuda_myth::serving::cluster::ClusterSim;
 use cuda_myth::serving::real_engine::PjrtLlmEngine;
 use cuda_myth::serving::router::RoutePolicy;
@@ -371,8 +372,11 @@ fn cmd_bench_diff(args: &[String]) -> i32 {
 }
 
 fn cmd_serve(args: &[String]) -> i32 {
-    const USAGE: &str = "usage: repro serve [--config f.json] [--requests N] [--rate R] [--json]";
-    if let Err(e) = reject_unknown_flags(args, &["--config", "--requests", "--rate", "--json"]) {
+    const USAGE: &str = "usage: repro serve [--config f.json] [--requests N] [--rate R] \
+                         [--chaos faults.json] [--json]";
+    if let Err(e) =
+        reject_unknown_flags(args, &["--config", "--requests", "--rate", "--chaos", "--json"])
+    {
         eprintln!("{e}\n{USAGE}");
         return 2;
     }
@@ -402,6 +406,26 @@ fn cmd_serve(args: &[String]) -> i32 {
             eprintln!("{e}\n{USAGE}");
             return 2;
         }
+    };
+    // Optional fault schedule (`serving::chaos`): a JSON list of seeded
+    // crash / straggler / preemption-storm events injected into the run.
+    let chaos = match flag_value(args, "--chaos") {
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+        Ok(Some(path)) => match std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .and_then(|s| FaultSchedule::from_json(&s))
+            .and_then(|sched| sched.validate(cfg.replicas).map(|()| sched))
+        {
+            Ok(sched) => Some(sched),
+            Err(e) => {
+                eprintln!("chaos schedule error: {e}");
+                return 2;
+            }
+        },
+        Ok(None) => None,
     };
     let as_json = has_flag(args, "--json");
     if !as_json {
@@ -437,6 +461,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         workload
     };
     let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    if let Some(sched) = &chaos {
+        sim.install_chaos(sched);
+    }
     sim.submit_all(workload.generate(n, rate, 7));
     let s = sim.run_to_completion();
     let cache = sim.fleet_prefix_stats();
@@ -447,6 +474,14 @@ fn cmd_serve(args: &[String]) -> i32 {
             m.insert("replicas".into(), Json::Num(replicas as f64));
             m.insert("route_policy".into(), Json::Str(policy.name().into()));
             m.insert("requeues".into(), Json::Num(sim.requeues as f64));
+            if chaos.is_some() {
+                let st = sim.chaos_stats();
+                m.insert("chaos_crashes".into(), Json::Num(st.crashes as f64));
+                m.insert("chaos_restarts".into(), Json::Num(st.restarts as f64));
+                m.insert("chaos_requeued".into(), Json::Num(st.requeued_by_crash as f64));
+                m.insert("chaos_hedges".into(), Json::Num(st.hedges_launched as f64));
+                m.insert("chaos_shed".into(), Json::Num(st.shed as f64));
+            }
             m.insert("prefix_cache_hit_rate".into(), Json::Num(cache.hit_rate()));
             m.insert(
                 "prefix_cache_evictions".into(),
@@ -474,6 +509,22 @@ fn cmd_serve(args: &[String]) -> i32 {
         cache.evictions,
         sim.requeues,
     );
+    if chaos.is_some() {
+        let st = sim.chaos_stats();
+        println!(
+            "  chaos: {} crash(es) ({} skipped), {} restart(s), {} requeued, \
+             {} straggler window(s), {} storm(s), {} hedge(s) launched ({} won), {} shed",
+            st.crashes,
+            st.crashes_skipped,
+            st.restarts,
+            st.requeued_by_crash,
+            st.straggler_windows,
+            st.storms,
+            st.hedges_launched,
+            st.hedges_won,
+            st.shed,
+        );
+    }
     // Per-traffic-class breakdown (one line per declared class beyond
     // the trivial single-class case).
     if s.classes.len() > 1 {

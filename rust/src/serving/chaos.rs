@@ -1,0 +1,456 @@
+//! Seeded fault injection for the cluster simulator — the chaos layer of
+//! the serving stack (`serving::cluster` consumes it).
+//!
+//! A [`FaultSchedule`] is a deterministic, JSON-loadable list of
+//! [`Fault`]s: replica crashes (with a restart after a down time),
+//! stragglers (a slow-clock factor over an interval) and preemption
+//! storms (forced preemptions injected at an instant). The schedule is
+//! *data*, not behavior: `ClusterSim::install_chaos` expands it into
+//! timestamped [`ControlKind`] events on a third min-heap alongside the
+//! arrival and replica-wake heaps, so the same pinned-ordering event
+//! core that made indexed runs bitwise-equal to the scan-loop oracle
+//! also makes every chaos run reproducible from its schedule + workload
+//! seed alone. An empty schedule contributes no events and therefore
+//! replays the fault-free run bitwise — the control arm of every
+//! recovery claim (`repro run chaos-sweep --check`).
+//!
+//! Hedged requests ride the same control heap: when hedging is enabled
+//! (`ServingConfig::hedge_after_s > 0`) every delivery also schedules a
+//! [`ControlKind::HedgeCheck`]; if the primary still has no first token
+//! by then, a clone tagged with [`HEDGE_BIT`] races it on a *different*
+//! replica, first completion wins, the loser is cancelled without
+//! double-counting tokens. [`ChaosStats`] ledgers every injected event
+//! and its consequences so the conservation claim — submitted ==
+//! completed + deliberately shed, zero silently lost — is checkable per
+//! run.
+
+use crate::serving::request::RequestId;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// High bit tagging the cloned copy of a hedged request. Request ids are
+/// sequence numbers from the workload generators (nowhere near 2^63), so
+/// the tag can never collide with a real id; `hedge_primary` recovers
+/// the original id from either copy.
+pub const HEDGE_BIT: u64 = 1 << 63;
+
+/// The original request id behind either copy of a hedge pair.
+pub fn hedge_primary(id: RequestId) -> RequestId {
+    id & !HEDGE_BIT
+}
+
+/// Whether `id` names the cloned (hedge) copy rather than the primary.
+pub fn is_hedge(id: RequestId) -> bool {
+    id & HEDGE_BIT != 0
+}
+
+/// One injected fault. Times are simulation seconds, replicas are fleet
+/// indices (validated against the deployment before installation).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// `replica` dies at `at`: its queued + in-flight requests are
+    /// requeued through the router (re-prefilling from scratch — no KV
+    /// replication is assumed), its prefix-cache residency is
+    /// invalidated, and it rejoins the fleet `down_s` later.
+    Crash { replica: usize, at: f64, down_s: f64 },
+    /// `replica`'s step durations are dilated by `factor` over
+    /// `[from, until)` — the router's cost weight and the per-class
+    /// attainment EWMA both see the slowdown honestly.
+    Straggler { replica: usize, from: f64, until: f64, factor: f64 },
+    /// `count` forced preemptions hit `replica`'s scheduler at `at`
+    /// (victims re-prefill; models a host-side memory/driver hiccup).
+    PreemptStorm { replica: usize, at: f64, count: usize },
+}
+
+impl Fault {
+    /// The replica this fault targets.
+    pub fn replica(&self) -> usize {
+        match *self {
+            Fault::Crash { replica, .. }
+            | Fault::Straggler { replica, .. }
+            | Fault::PreemptStorm { replica, .. } => replica,
+        }
+    }
+
+    /// `[start, end)` window the fault is active over (instantaneous
+    /// faults report a zero-length window) — the plot-shading export.
+    pub fn window(&self) -> (f64, f64) {
+        match *self {
+            Fault::Crash { at, down_s, .. } => (at, at + down_s),
+            Fault::Straggler { from, until, .. } => (from, until),
+            Fault::PreemptStorm { at, .. } => (at, at),
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        match self {
+            Fault::Crash { .. } => "crash",
+            Fault::Straggler { .. } => "straggler",
+            Fault::PreemptStorm { .. } => "preempt_storm",
+        }
+    }
+
+    fn validate(&self, replicas: usize) -> anyhow::Result<()> {
+        let r = self.replica();
+        if r >= replicas {
+            anyhow::bail!("fault targets replica {r} but the fleet has {replicas}");
+        }
+        match *self {
+            Fault::Crash { at, down_s, .. } => {
+                if !(at.is_finite() && at >= 0.0) {
+                    anyhow::bail!("crash 'at' must be finite and >= 0");
+                }
+                if !(down_s.is_finite() && down_s > 0.0) {
+                    anyhow::bail!("crash 'down_s' must be finite and > 0");
+                }
+            }
+            Fault::Straggler { from, until, factor, .. } => {
+                if !(from.is_finite() && from >= 0.0 && until.is_finite() && until > from) {
+                    anyhow::bail!("straggler window must satisfy 0 <= from < until (finite)");
+                }
+                if !(factor.is_finite() && factor >= 1.0) {
+                    anyhow::bail!("straggler 'factor' must be finite and >= 1");
+                }
+            }
+            Fault::PreemptStorm { at, count, .. } => {
+                if !(at.is_finite() && at >= 0.0) {
+                    anyhow::bail!("preempt_storm 'at' must be finite and >= 0");
+                }
+                if count == 0 {
+                    anyhow::bail!("preempt_storm 'count' must be > 0");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        match *self {
+            Fault::Crash { replica, at, down_s } => Json::obj(vec![
+                ("kind", Json::Str("crash".into())),
+                ("replica", Json::Num(replica as f64)),
+                ("at", Json::Num(at)),
+                ("down_s", Json::Num(down_s)),
+            ]),
+            Fault::Straggler { replica, from, until, factor } => Json::obj(vec![
+                ("kind", Json::Str("straggler".into())),
+                ("replica", Json::Num(replica as f64)),
+                ("from", Json::Num(from)),
+                ("until", Json::Num(until)),
+                ("factor", Json::Num(factor)),
+            ]),
+            Fault::PreemptStorm { replica, at, count } => Json::obj(vec![
+                ("kind", Json::Str("preempt_storm".into())),
+                ("replica", Json::Num(replica as f64)),
+                ("at", Json::Num(at)),
+                ("count", Json::Num(count as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Fault> {
+        let kind = j
+            .get("kind")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("fault needs a string 'kind'"))?;
+        let num = |key: &str| -> anyhow::Result<f64> {
+            j.get(key)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("fault '{kind}' needs numeric '{key}'"))
+        };
+        let replica = j
+            .get("replica")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("fault '{kind}' needs integer 'replica'"))?;
+        Ok(match kind {
+            "crash" => Fault::Crash { replica, at: num("at")?, down_s: num("down_s")? },
+            "straggler" => Fault::Straggler {
+                replica,
+                from: num("from")?,
+                until: num("until")?,
+                factor: num("factor")?,
+            },
+            "preempt_storm" => Fault::PreemptStorm {
+                replica,
+                at: num("at")?,
+                count: num("count")? as usize,
+            },
+            other => anyhow::bail!("unknown fault kind '{other}'"),
+        })
+    }
+}
+
+/// A deterministic list of faults to inject into one run. The schedule
+/// is pure data: two `ClusterSim` runs over the same schedule, config
+/// and workload seed replay bit-for-bit.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSchedule {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultSchedule {
+    /// The no-chaos schedule — installs zero control events, so the run
+    /// is bitwise-equal to never calling `install_chaos` at all.
+    pub fn empty() -> FaultSchedule {
+        FaultSchedule::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Builder-style append.
+    pub fn with(mut self, fault: Fault) -> FaultSchedule {
+        self.faults.push(fault);
+        self
+    }
+
+    /// Every fault must target a real replica and carry sane numbers.
+    pub fn validate(&self, replicas: usize) -> anyhow::Result<()> {
+        for f in &self.faults {
+            f.validate(replicas)?;
+        }
+        Ok(())
+    }
+
+    /// Expand to timestamped control events (schedule order preserved for
+    /// equal-time faults via the caller's enqueue sequence numbers).
+    pub fn control_events(&self) -> Vec<(f64, ControlKind)> {
+        let mut out = Vec::with_capacity(self.faults.len() * 2);
+        for f in &self.faults {
+            match *f {
+                Fault::Crash { replica, at, down_s } => {
+                    out.push((at, ControlKind::CrashStart { replica }));
+                    out.push((at + down_s, ControlKind::Restart { replica }));
+                }
+                Fault::Straggler { replica, from, until, factor } => {
+                    out.push((from, ControlKind::StragglerStart { replica, factor }));
+                    out.push((until, ControlKind::StragglerEnd { replica }));
+                }
+                Fault::PreemptStorm { replica, at, count } => {
+                    out.push((at, ControlKind::Storm { replica, count }));
+                }
+            }
+        }
+        out
+    }
+
+    /// `(start, end, kind)` shading windows, for the harness artifact and
+    /// the goodput-timeline plot.
+    pub fn windows(&self) -> Vec<(f64, f64, &'static str)> {
+        self.faults
+            .iter()
+            .map(|f| {
+                let (a, b) = f.window();
+                (a, b, f.kind_name())
+            })
+            .collect()
+    }
+
+    /// A seeded random schedule over `replicas` replicas inside
+    /// `[0, horizon_s)` — the property-test generator. Deterministic in
+    /// `seed`; 1..=3 faults, every one valid by construction.
+    pub fn random(seed: u64, replicas: usize, horizon_s: f64) -> FaultSchedule {
+        assert!(replicas > 0 && horizon_s > 0.0);
+        let mut rng = Rng::new(seed ^ 0xC0A5_F00D);
+        let n = 1 + rng.below(3) as usize;
+        let mut s = FaultSchedule::empty();
+        for _ in 0..n {
+            let replica = rng.below(replicas as u64) as usize;
+            let at = rng.f64() * horizon_s * 0.6;
+            s.faults.push(match rng.below(3) {
+                // Crashes only make sense with a peer to fail over to;
+                // single-replica draws degrade to storms.
+                0 if replicas > 1 => Fault::Crash {
+                    replica,
+                    at,
+                    down_s: 0.2 + rng.f64() * horizon_s * 0.3,
+                },
+                1 => Fault::Straggler {
+                    replica,
+                    from: at,
+                    until: at + 0.2 + rng.f64() * horizon_s * 0.4,
+                    factor: 1.5 + rng.f64() * 4.0,
+                },
+                _ => Fault::PreemptStorm { replica, at, count: 1 + rng.below(6) as usize },
+            });
+        }
+        s
+    }
+
+    /// Parse `{"faults": [...]}` (accepts a bare array too).
+    pub fn from_json(s: &str) -> anyhow::Result<FaultSchedule> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let arr = match j.get("faults") {
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'faults' must be an array"))?
+                .to_vec(),
+            None => j
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("want {{\"faults\": [...]}} or a bare array"))?
+                .to_vec(),
+        };
+        let faults =
+            arr.iter().map(Fault::from_json).collect::<anyhow::Result<Vec<Fault>>>()?;
+        Ok(FaultSchedule { faults })
+    }
+
+    pub fn to_json(&self) -> String {
+        Json::obj(vec![(
+            "faults",
+            Json::Arr(self.faults.iter().map(|f| f.to_json()).collect()),
+        )])
+        .dump()
+    }
+}
+
+/// A timestamped chaos control event on the cluster's third heap. The
+/// first five kinds come from expanding a [`FaultSchedule`]; hedge
+/// checks are scheduled per-delivery by the cluster itself.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlKind {
+    /// Replica dies now (skipped if already down or last one standing).
+    CrashStart { replica: usize },
+    /// Replica rejoins the fleet (no-op unless it is down).
+    Restart { replica: usize },
+    /// Replica's step durations dilate by `factor` from now on.
+    StragglerStart { replica: usize, factor: f64 },
+    /// Replica's clock runs true again.
+    StragglerEnd { replica: usize },
+    /// `count` forced preemptions on the replica's scheduler, now.
+    Storm { replica: usize, count: usize },
+    /// If request `id` still has no first token, clone it to a second
+    /// replica (first completion wins, loser cancelled).
+    HedgeCheck { id: RequestId },
+}
+
+/// Ledger of everything the chaos engine injected and what it cost —
+/// the per-run evidence behind the conservation and recovery claims.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ChaosStats {
+    /// Crashes that fired (replica actually went down).
+    pub crashes: u64,
+    /// Crash events skipped (already down, or last active replica).
+    pub crashes_skipped: u64,
+    /// Restarts that brought a down replica back.
+    pub restarts: u64,
+    /// Requests evacuated from crashed replicas and requeued.
+    pub requeued_by_crash: u64,
+    /// Straggler windows that started.
+    pub straggler_windows: u64,
+    /// Preemption storms that fired.
+    pub storms: u64,
+    /// Forced preemptions actually applied by storms.
+    pub forced_preemptions: u64,
+    /// Hedge clones launched onto a second replica.
+    pub hedges_launched: u64,
+    /// Hedge races the *clone* won (primary was cancelled).
+    pub hedges_won: u64,
+    /// Hedge copies cancelled (race losers + crash dissolutions).
+    pub hedges_cancelled: u64,
+    /// Priority-0 requests rejected by admission control under overload.
+    pub shed: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn three() -> FaultSchedule {
+        FaultSchedule::empty()
+            .with(Fault::Crash { replica: 0, at: 3.0, down_s: 2.0 })
+            .with(Fault::Straggler { replica: 1, from: 2.0, until: 6.0, factor: 4.0 })
+            .with(Fault::PreemptStorm { replica: 0, at: 4.0, count: 8 })
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = three();
+        let back = FaultSchedule::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // Bare arrays parse too.
+        let bare = FaultSchedule::from_json(
+            r#"[{"kind": "crash", "replica": 1, "at": 0.5, "down_s": 1.0}]"#,
+        )
+        .unwrap();
+        assert_eq!(bare.faults.len(), 1);
+        assert_eq!(bare.faults[0].replica(), 1);
+    }
+
+    #[test]
+    fn bad_json_rejected() {
+        assert!(FaultSchedule::from_json("not json").is_err());
+        assert!(FaultSchedule::from_json(r#"{"faults": "crash"}"#).is_err());
+        assert!(FaultSchedule::from_json(r#"[{"kind": "meteor", "replica": 0}]"#).is_err());
+        assert!(FaultSchedule::from_json(r#"[{"kind": "crash", "replica": 0}]"#).is_err());
+    }
+
+    #[test]
+    fn validate_checks_targets_and_numbers() {
+        let s = three();
+        s.validate(2).unwrap();
+        assert!(s.validate(1).is_err(), "replica 1 out of a 1-wide fleet");
+        let bad = FaultSchedule::empty().with(Fault::Crash { replica: 0, at: 1.0, down_s: 0.0 });
+        assert!(bad.validate(1).is_err());
+        let bad =
+            FaultSchedule::empty().with(Fault::Straggler { replica: 0, from: 2.0, until: 2.0, factor: 3.0 });
+        assert!(bad.validate(1).is_err());
+        let bad =
+            FaultSchedule::empty().with(Fault::Straggler { replica: 0, from: 0.0, until: 1.0, factor: 0.5 });
+        assert!(bad.validate(1).is_err());
+        let bad = FaultSchedule::empty().with(Fault::PreemptStorm { replica: 0, at: 1.0, count: 0 });
+        assert!(bad.validate(1).is_err());
+    }
+
+    #[test]
+    fn control_events_pair_up() {
+        let ev = three().control_events();
+        assert_eq!(ev.len(), 5, "crash + restart, start + end, storm");
+        assert!(matches!(ev[0], (t, ControlKind::CrashStart { replica: 0 }) if t == 3.0));
+        assert!(matches!(ev[1], (t, ControlKind::Restart { replica: 0 }) if t == 5.0));
+        assert!(matches!(ev[3], (t, ControlKind::StragglerEnd { replica: 1 }) if t == 6.0));
+        assert!(FaultSchedule::empty().control_events().is_empty());
+    }
+
+    #[test]
+    fn windows_expose_shading_ranges() {
+        let w = three().windows();
+        assert_eq!(w[0], (3.0, 5.0, "crash"));
+        assert_eq!(w[1], (2.0, 6.0, "straggler"));
+        assert_eq!(w[2], (4.0, 4.0, "preempt_storm"));
+    }
+
+    #[test]
+    fn random_is_deterministic_and_valid() {
+        for seed in 0..50u64 {
+            for replicas in 1..4usize {
+                let a = FaultSchedule::random(seed, replicas, 10.0);
+                let b = FaultSchedule::random(seed, replicas, 10.0);
+                assert_eq!(a, b, "same seed must replay the same schedule");
+                a.validate(replicas).unwrap();
+                assert!(!a.is_empty());
+                if replicas == 1 {
+                    assert!(
+                        !a.faults.iter().any(|f| matches!(f, Fault::Crash { .. })),
+                        "single-replica schedules never crash the only replica"
+                    );
+                }
+            }
+        }
+        assert_ne!(
+            FaultSchedule::random(1, 3, 10.0),
+            FaultSchedule::random(2, 3, 10.0),
+            "different seeds should (generically) differ"
+        );
+    }
+
+    #[test]
+    fn hedge_bit_tags_and_recovers() {
+        assert!(!is_hedge(17));
+        let clone = 17 | HEDGE_BIT;
+        assert!(is_hedge(clone));
+        assert_eq!(hedge_primary(clone), 17);
+        assert_eq!(hedge_primary(17), 17);
+    }
+}

@@ -64,6 +64,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use crate::config::{DeviceKind, ServingConfig};
 use crate::models::llama::LlamaConfig;
 use crate::serving::autoscale::Autoscaler;
+use crate::serving::chaos::{self, ChaosStats, ControlKind, FaultSchedule};
 use crate::serving::engine::{ClockSource, Engine, SimBackend};
 use crate::serving::metrics::{MetricsCollector, MetricsSummary, RequestMetrics};
 use crate::serving::qos::ClassSet;
@@ -129,6 +130,47 @@ impl Ord for ReplicaWake {
     }
 }
 
+/// Chaos control event (`serving::chaos`): a fault-schedule expansion
+/// entry or a hedge-timeout check, ordered by fire time then FIFO by
+/// push order. Control outranks arrivals *and* wakes at equal
+/// timestamps (same-time policy 0, pinned): a fault at `t` acts on the
+/// fleet as it stood before anything else scheduled at `t` — so a crash
+/// evacuates the step that would have run at `t`, and an arrival at the
+/// same instant already sees the replica gone.
+struct ControlEvent {
+    time: f64,
+    seq: u64,
+    kind: ControlKind,
+}
+
+impl PartialEq for ControlEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other).is_eq()
+    }
+}
+impl Eq for ControlEvent {}
+impl PartialOrd for ControlEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for ControlEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.total_cmp(&other.time).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// One outstanding hedged request: where the primary and its tagged
+/// copy live. The two replicas are distinct by construction
+/// (`Router::route_hedge`), which is what makes a same-instant double
+/// completion impossible — each copy finishes in its own replica event,
+/// and the first one through dissolves the pair and cancels the other.
+#[derive(Debug, Clone, Copy)]
+struct HedgePair {
+    primary: usize,
+    hedge: usize,
+}
+
 /// One-element-lookahead adapter over a lazy arrival iterator (`feed`).
 struct StreamSource {
     iter: Box<dyn Iterator<Item = Request>>,
@@ -188,10 +230,30 @@ pub struct ClusterSim {
     completed: usize,
     /// Requests routed to a replica and not yet completed.
     in_flight: usize,
-    /// Discrete events processed (arrival deliveries + replica steps).
+    /// Discrete events processed (arrival deliveries + replica steps +
+    /// chaos control events).
     events: u64,
     /// High-water mark of `open_requests()` over the run.
     peak_open: usize,
+    /// Chaos control events (fault schedule + hedge checks), min-heap on
+    /// (time, push seq). Empty unless `install_chaos` ran or hedging is
+    /// on — and an empty heap leaves the event loop bitwise-identical to
+    /// the chaos-free core. Indexed mode only.
+    control: BinaryHeap<Reverse<ControlEvent>>,
+    control_seq: u64,
+    /// Replicas currently crashed (drained, awaiting their restart event).
+    down: Vec<bool>,
+    /// Router cost weights at build time — restored when a straggler
+    /// window ends (the window multiplies them by its slow factor).
+    base_cost: Vec<f64>,
+    /// Fault windows of the installed schedule, for reporting/plots.
+    chaos_windows: Vec<(f64, f64, &'static str)>,
+    /// Hedge a request still first-token-less this long after delivery;
+    /// 0.0 (the default) disables hedging.
+    hedge_after_s: f64,
+    /// Outstanding hedge pairs, keyed by primary request id.
+    hedged: FastMap<RequestId, HedgePair>,
+    chaos_stats: ChaosStats,
 }
 
 impl ClusterSim {
@@ -207,12 +269,15 @@ impl ClusterSim {
             .iter()
             .map(|d| SimBackend::decode_cost_weight(&model, *d, cfg.tensor_parallel))
             .collect();
+        let base_cost = costs.clone();
         let router = Router::with_costs(cfg.route_policy, costs, cfg.max_queued)
-            .with_classes(cfg.classes.clone());
-        let replicas = devices
+            .with_classes(cfg.classes.clone())
+            .with_shed_threshold(cfg.shed_threshold);
+        let replicas: Vec<Engine<SimBackend>> = devices
             .iter()
             .map(|d| Self::build_replica(cfg, model, *d))
             .collect();
+        let n = replicas.len();
         ClusterSim {
             replicas,
             devices,
@@ -231,6 +296,14 @@ impl ClusterSim {
             in_flight: 0,
             events: 0,
             peak_open: 0,
+            control: BinaryHeap::new(),
+            control_seq: 0,
+            down: vec![false; n],
+            base_cost,
+            chaos_windows: Vec::new(),
+            hedge_after_s: cfg.hedge_after_s,
+            hedged: FastMap::default(),
+            chaos_stats: ChaosStats::default(),
         }
     }
 
@@ -353,11 +426,11 @@ impl ClusterSim {
         engine.clock_mut().wait_until(now);
         self.replicas.push(engine);
         self.devices.push(device);
-        self.router.add_replica(SimBackend::decode_cost_weight(
-            &self.model,
-            device,
-            self.cfg.tensor_parallel,
-        ))
+        self.down.push(false);
+        let cost =
+            SimBackend::decode_cost_weight(&self.model, device, self.cfg.tensor_parallel);
+        self.base_cost.push(cost);
+        self.router.add_replica(cost)
     }
 
     /// Scale down: stop routing to replica `i`; its in-flight work drains
@@ -369,6 +442,47 @@ impl ClusterSim {
     /// Return a drained replica to service.
     pub fn undrain_replica(&mut self, i: usize) {
         self.router.undrain(i);
+    }
+
+    /// Expand a fault schedule onto the control-event heap. Validated
+    /// against the current fleet size; may be called more than once
+    /// (schedules compose). The expansion is purely data-driven — a
+    /// given schedule + workload seed replays bitwise, and an *empty*
+    /// schedule pushes nothing, leaving the run bitwise-equal to a
+    /// chaos-free one. Indexed mode only (the scan oracle predates the
+    /// control heap and stays fault-free).
+    pub fn install_chaos(&mut self, schedule: &FaultSchedule) {
+        assert_eq!(self.mode, DispatchMode::Indexed, "chaos rides the indexed event core");
+        schedule
+            .validate(self.num_replicas())
+            .expect("fault schedule must be valid for this fleet");
+        for (t, kind) in schedule.control_events() {
+            self.push_control(t, kind);
+        }
+        self.chaos_windows.extend(schedule.windows());
+    }
+
+    /// Counters for everything the chaos layer did this run.
+    pub fn chaos_stats(&self) -> ChaosStats {
+        self.chaos_stats
+    }
+
+    /// Is replica `i` currently crashed (drained, awaiting restart)?
+    pub fn is_down(&self, i: usize) -> bool {
+        self.down[i]
+    }
+
+    /// `(start, end, kind)` windows of the installed fault schedule(s),
+    /// in installation order — the shading source for the chaos plots.
+    pub fn fault_windows(&self) -> &[(f64, f64, &'static str)] {
+        &self.chaos_windows
+    }
+
+    fn push_control(&mut self, time: f64, kind: ControlKind) {
+        debug_assert_eq!(self.mode, DispatchMode::Indexed, "control events are indexed-only");
+        let seq = self.control_seq;
+        self.control_seq += 1;
+        self.control.push(Reverse(ControlEvent { time, seq, kind }));
     }
 
     /// Schedule a (re-)arrival at `due`: a heap push in the indexed core,
@@ -476,13 +590,22 @@ impl ClusterSim {
     fn deliver(&mut self) {
         let (due, req) = self.pop_next_arrival();
         self.events += 1;
+        // Per-class admission control: under overload, priority-0
+        // background is turned away at the door — permanently, before it
+        // touches load accounting — so interactive tiers keep the queue.
+        // Conservation then reads submitted == completed + shed.
+        if self.router.should_shed(&req) {
+            self.chaos_stats.shed += 1;
+            return;
+        }
         let replicas = &self.replicas;
         match self
             .router
             .route_resident(&req, |i, p| replicas[i].sched.kv.prefix_resident(p))
         {
             Ok(idx) => {
-                self.assignment.insert(req.id, idx);
+                let id = req.id;
+                self.assignment.insert(id, idx);
                 let was_idle = !self.replicas[idx].has_any_work();
                 self.replicas[idx].submit(req);
                 self.in_flight += 1;
@@ -494,6 +617,11 @@ impl ClusterSim {
                     if let Some(t) = self.replicas[idx].next_tick() {
                         self.wakes.push(Reverse(ReplicaWake { time: t, index: idx }));
                     }
+                }
+                // Hedging armed: revisit this request after the timeout;
+                // the check fires only if it is still first-token-less.
+                if self.hedge_after_s > 0.0 && self.mode == DispatchMode::Indexed {
+                    self.push_control(due + self.hedge_after_s, ControlKind::HedgeCheck { id });
                 }
             }
             Err(QueueFull) => {
@@ -527,13 +655,46 @@ impl ClusterSim {
         self.events += 1;
         let done = self.replicas[i].advance();
         for id in done {
-            let seq = self.replicas[i].sched.seq(id);
-            let met = self.cfg.classes.met_by(&RequestMetrics::from_sequence(seq));
-            let req = seq.req.clone();
-            self.router.record_outcome(i, req.class_id, met);
-            self.router.complete(i, &req);
-            self.completed += 1;
-            self.in_flight -= 1;
+            self.on_completion(i, id);
+        }
+    }
+
+    /// Settle one completion: router books + QoS feedback, then the
+    /// hedge protocol — a completed copy of a hedged pair wins the race,
+    /// is re-attributed to the primary id, and synchronously cancels its
+    /// twin on the other replica (which therefore never completes:
+    /// exactly one completion and one `completed` increment per
+    /// request, no matter which copy won).
+    fn on_completion(&mut self, i: usize, id: RequestId) {
+        let seq = self.replicas[i].sched.seq(id);
+        let met = self.cfg.classes.met_by(&RequestMetrics::from_sequence(seq));
+        let req = seq.req.clone();
+        self.router.record_outcome(i, req.class_id, met);
+        self.router.complete(i, &req);
+        self.completed += 1;
+        self.in_flight -= 1;
+        let primary_id = chaos::hedge_primary(id);
+        if chaos::is_hedge(id) {
+            // The copy won: its completion (already harvested under the
+            // tagged id, with the original arrival time, so TTFT/E2E are
+            // honest) is re-attributed to the request it duplicates.
+            self.replicas[i].metrics.relabel(id, primary_id);
+            self.chaos_stats.hedges_won += 1;
+        }
+        if let Some(pair) = self.hedged.remove(&primary_id) {
+            let (loser_replica, loser_id) = if chaos::is_hedge(id) {
+                (pair.primary, primary_id)
+            } else {
+                (pair.hedge, primary_id | chaos::HEDGE_BIT)
+            };
+            if let Some(loser) = self.replicas[loser_replica].cancel(loser_id) {
+                // The loser's queue slot and load are returned; its
+                // partial work was real busy time (energy is metered per
+                // step) but it produces no completion and no tokens.
+                self.router.complete(loser_replica, &loser);
+                self.in_flight -= 1;
+                self.chaos_stats.hedges_cancelled += 1;
+            }
         }
     }
 
@@ -547,6 +708,154 @@ impl ClusterSim {
         if let Some(t) = self.replicas[i].next_tick() {
             self.wakes.push(Reverse(ReplicaWake { time: t, index: i }));
         }
+    }
+
+    /// Fire the earliest control event (it is the heap top).
+    fn fire_control(&mut self) {
+        let Reverse(ev) = self.control.pop().expect("fire_control with an empty heap");
+        self.events += 1;
+        match ev.kind {
+            ControlKind::CrashStart { replica } => self.crash(replica, ev.time),
+            ControlKind::Restart { replica } => {
+                // Paired with a CrashStart; a no-op if the crash was
+                // skipped (the replica never went down).
+                if self.down[replica] {
+                    self.down[replica] = false;
+                    self.router.undrain(replica);
+                    self.chaos_stats.restarts += 1;
+                }
+            }
+            ControlKind::StragglerStart { replica, factor } => {
+                if !self.down[replica] {
+                    self.replicas[replica].set_slow(factor);
+                    // The router's cost weight sees the slowdown for the
+                    // duration of the window, so cost-aware policies
+                    // steer around the straggler honestly.
+                    self.router.set_cost(replica, self.base_cost[replica] * factor);
+                    self.chaos_stats.straggler_windows += 1;
+                }
+            }
+            ControlKind::StragglerEnd { replica } => {
+                self.replicas[replica].set_slow(1.0);
+                self.router.set_cost(replica, self.base_cost[replica]);
+            }
+            ControlKind::Storm { replica, count } => {
+                if !self.down[replica] {
+                    self.chaos_stats.storms += 1;
+                    self.chaos_stats.forced_preemptions +=
+                        self.replicas[replica].inject_preemptions(count) as u64;
+                }
+            }
+            ControlKind::HedgeCheck { id } => self.hedge_check(id, ev.time),
+        }
+    }
+
+    /// Crash replica `i` at time `t`: drain it, evacuate every
+    /// unfinished request back through the router (conservation — the
+    /// failover delay lands in each request's TTFT because its arrival
+    /// timestamp is preserved), invalidate its resident prefixes (the
+    /// cache died with the hardware; nothing leaks), and park its clock
+    /// at the restart time. The last active replica never crashes — the
+    /// fleet must be able to absorb the evacuation — and a dead replica
+    /// cannot die twice; both skips are counted, not silently ignored.
+    fn crash(&mut self, i: usize, t: f64) {
+        if self.down[i] || self.router.num_active() <= 1 {
+            self.chaos_stats.crashes_skipped += 1;
+            return;
+        }
+        self.chaos_stats.crashes += 1;
+        self.down[i] = true;
+        self.router.drain(i);
+        // Hardware state dies with the replica: straggler dilation and
+        // its router cost echo reset to healthy for the restarted box.
+        self.replicas[i].set_slow(1.0);
+        self.router.set_cost(i, self.base_cost[i]);
+        let evacuated = self.replicas[i].evacuate();
+        while self.replicas[i].sched.kv.evict_one_idle_prefix() {}
+        debug_assert_eq!(
+            self.replicas[i].sched.kv.num_free(),
+            self.replicas[i].sched.kv.num_blocks(),
+            "crashed replica must not leak KV blocks"
+        );
+        // The replica has no work now: retire its wake entry (if any).
+        let kept: Vec<Reverse<ReplicaWake>> =
+            self.wakes.drain().filter(|Reverse(w)| w.index != i).collect();
+        self.wakes.extend(kept);
+        // Down for the outage: the clock jumps to the restart time so a
+        // restarted replica never runs work "before" its restart.
+        self.replicas[i].clock_mut().wait_until(t + self.downtime_of(i, t));
+        for req in evacuated {
+            self.router.complete(i, &req);
+            self.in_flight -= 1;
+            let primary_id = chaos::hedge_primary(req.id);
+            if self.hedged.remove(&primary_id).is_some() {
+                // One copy of a hedged pair died with the replica: the
+                // surviving copy (on a distinct replica by construction)
+                // carries the request alone — requeueing the dead copy
+                // would race it against its own twin.
+                self.chaos_stats.hedges_cancelled += 1;
+            } else {
+                self.chaos_stats.requeued_by_crash += 1;
+                self.enqueue(t, req);
+                self.note_open();
+            }
+        }
+    }
+
+    /// Outage length for the crash of replica `i` at `t`: the delay to
+    /// the nearest pending Restart event for that replica. 0 if the
+    /// schedule carried none (cannot happen for schedules built through
+    /// `FaultSchedule` — every crash expands with its restart).
+    fn downtime_of(&self, i: usize, t: f64) -> f64 {
+        let d = self
+            .control
+            .iter()
+            .filter_map(|Reverse(ev)| match ev.kind {
+                ControlKind::Restart { replica } if replica == i && ev.time >= t => {
+                    Some(ev.time - t)
+                }
+                _ => None,
+            })
+            .fold(f64::INFINITY, f64::min);
+        if d.is_finite() { d } else { 0.0 }
+    }
+
+    /// A hedge timeout fired: if the request is still first-token-less
+    /// on a live replica (and not already hedged), launch a tagged copy
+    /// on a *different* replica. First completion wins; the loser is
+    /// cancelled synchronously by `on_completion`.
+    fn hedge_check(&mut self, id: RequestId, _t: f64) {
+        if self.hedged.contains_key(&id) {
+            return;
+        }
+        let Some(&r) = self.assignment.get(&id) else { return };
+        if self.down[r] || !self.replicas[r].hedge_eligible(id) {
+            return; // crashed (requeue owns it), progressed, or finished
+        }
+        if self.router.num_active() < 2 {
+            return; // nowhere distinct to hedge to
+        }
+        let Some(mut copy) = self.replicas[r].request_snapshot(id) else { return };
+        copy.id = id | chaos::HEDGE_BIT;
+        let replicas = &self.replicas;
+        if let Ok(idx) =
+            self.router.route_hedge(&copy, r, |i, p| replicas[i].sched.kv.prefix_resident(p))
+        {
+            self.assignment.insert(copy.id, idx);
+            let was_idle = !self.replicas[idx].has_any_work();
+            self.replicas[idx].submit(copy);
+            self.in_flight += 1;
+            self.note_open();
+            if was_idle {
+                if let Some(tn) = self.replicas[idx].next_tick() {
+                    self.wakes.push(Reverse(ReplicaWake { time: tn, index: idx }));
+                }
+            }
+            self.hedged.insert(id, HedgePair { primary: r, hedge: idx });
+            self.chaos_stats.hedges_launched += 1;
+        }
+        // QueueFull: the fleet is too loaded to afford duplicates — a
+        // hedge that would deepen the overload is skipped.
     }
 
     /// Advance the event loop until no event remains at or before `limit`
@@ -564,9 +873,25 @@ impl ClusterSim {
     /// The indexed core: O(log) heap peeks/pops per event. The match arms
     /// mirror `pump_scan` exactly — same-time policy 1 (arrivals first)
     /// is the `t <= w.time` guard, policies 2-3 live in the heap
-    /// orderings, policy 4 in `Engine::next_tick`.
+    /// orderings, policy 4 in `Engine::next_tick`. Chaos adds policy 0
+    /// up front: a control event at or before every arrival and wake
+    /// fires first — and with the control heap empty (no schedule, no
+    /// hedging) the guard never takes, so chaos-free runs execute the
+    /// pre-chaos loop verbatim.
     fn pump_indexed(&mut self, limit: f64) -> bool {
         loop {
+            if let Some(&Reverse(ControlEvent { time, .. })) = self.control.peek() {
+                let beats_arrival = self.next_arrival_due().is_none_or(|a| time <= a);
+                let beats_wake =
+                    self.wakes.peek().is_none_or(|&Reverse(w)| time <= w.time);
+                if beats_arrival && beats_wake {
+                    if time > limit {
+                        return true;
+                    }
+                    self.fire_control();
+                    continue;
+                }
+            }
             let next_due = self.next_arrival_due();
             let wake = self.wakes.peek().map(|&Reverse(w)| w);
             match (next_due, wake) {
@@ -1064,6 +1389,202 @@ mod tests {
             let expect = (den > 0.0).then(|| num / den);
             assert_eq!(c.window_attainment(since, &classes), expect, "since {since}");
         }
+    }
+
+    #[test]
+    fn empty_fault_schedule_is_bitwise_inert() {
+        let trace = || DynamicSonnet::default().generate(30, 40.0, 31);
+        let mut plain = cluster(3, RoutePolicy::LeastLoaded, 10_000);
+        plain.submit_all(trace());
+        plain.run_to_completion();
+        let mut chaotic = cluster(3, RoutePolicy::LeastLoaded, 10_000);
+        chaotic.install_chaos(&FaultSchedule::empty());
+        chaotic.submit_all(trace());
+        chaotic.run_to_completion();
+        assert_eq!(plain.fleet_metrics().max_request_delta(&chaotic.fleet_metrics()), 0.0);
+        assert_eq!(plain.events(), chaotic.events());
+        assert_eq!(chaotic.chaos_stats(), ChaosStats::default());
+    }
+
+    #[test]
+    fn crash_requeues_everything_and_conserves_requests() {
+        use crate::serving::chaos::Fault;
+        let mut c = cluster(3, RoutePolicy::LeastLoaded, 10_000);
+        let n = 36;
+        c.submit_all(DynamicSonnet::default().generate(n, 30.0, 41));
+        c.install_chaos(&FaultSchedule::empty().with(Fault::Crash {
+            replica: 0,
+            at: 0.2,
+            down_s: 1.0,
+        }));
+        let s = c.run_to_completion();
+        let st = c.chaos_stats();
+        assert_eq!(s.requests, n, "no request lost to the crash");
+        assert_eq!(c.completed(), n);
+        assert_eq!(st.crashes, 1);
+        assert_eq!(st.restarts, 1);
+        assert!(st.requeued_by_crash > 0, "the crash must have caught work in flight");
+        assert!(!c.is_down(0), "restarted");
+        assert_eq!(c.router().queued(), 0);
+        // The dead replica's KV came back whole and its prefix cache was
+        // invalidated, not leaked.
+        let kv = &c.replica(0).sched.kv;
+        assert_eq!(kv.num_free(), kv.num_blocks());
+        // Unique completion per original id — nothing completed twice.
+        let mut ids: Vec<u64> =
+            c.fleet_metrics().per_request().iter().map(|m| m.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn crash_on_the_last_active_replica_is_skipped() {
+        use crate::serving::chaos::Fault;
+        let mut c = cluster(1, RoutePolicy::RoundRobin, 10_000);
+        c.submit_all(DynamicSonnet::default().generate(8, 40.0, 5));
+        c.install_chaos(&FaultSchedule::empty().with(Fault::Crash {
+            replica: 0,
+            at: 0.1,
+            down_s: 0.5,
+        }));
+        let s = c.run_to_completion();
+        assert_eq!(s.requests, 8);
+        let st = c.chaos_stats();
+        assert_eq!((st.crashes, st.crashes_skipped, st.restarts), (0, 1, 0));
+    }
+
+    #[test]
+    fn straggler_dilates_the_window_then_recovers() {
+        use crate::serving::chaos::Fault;
+        let run = |faulty: bool| {
+            let mut c = cluster(2, RoutePolicy::RoundRobin, 10_000);
+            if faulty {
+                c.install_chaos(&FaultSchedule::empty().with(Fault::Straggler {
+                    replica: 0,
+                    from: 0.0,
+                    until: 5.0,
+                    factor: 8.0,
+                }));
+            }
+            c.submit_all(DynamicSonnet::default().generate(24, 30.0, 17));
+            let s = c.run_to_completion();
+            assert_eq!(s.requests, 24);
+            (c, s)
+        };
+        let (healthy, hs) = run(false);
+        let (slowed, ss) = run(true);
+        assert_eq!(slowed.chaos_stats().straggler_windows, 1);
+        assert!(
+            ss.p99_ttft > hs.p99_ttft,
+            "a x8 straggler must hurt the tail: {} vs {}",
+            ss.p99_ttft,
+            hs.p99_ttft
+        );
+        // The window ended inside the run: dilation and the router's
+        // cost echo are both restored.
+        assert_eq!(slowed.replica(0).slow_factor(), 1.0);
+        assert_eq!(slowed.router().cost_of(0), healthy.router().cost_of(0));
+    }
+
+    #[test]
+    fn preemption_storm_delays_but_completes() {
+        use crate::serving::chaos::Fault;
+        let mut c = cluster(2, RoutePolicy::LeastLoaded, 10_000);
+        c.submit_all(DynamicSonnet::default().generate(20, f64::INFINITY, 13));
+        c.install_chaos(
+            &FaultSchedule::empty()
+                .with(Fault::PreemptStorm { replica: 0, at: 0.5, count: 4 })
+                .with(Fault::PreemptStorm { replica: 1, at: 0.5, count: 4 }),
+        );
+        let s = c.run_to_completion();
+        assert_eq!(s.requests, 20);
+        let st = c.chaos_stats();
+        assert_eq!(st.storms, 2);
+        assert!(st.forced_preemptions > 0, "storms at t=0.5 must catch running work");
+    }
+
+    #[test]
+    fn hedging_duplicates_stuck_requests_without_double_counting() {
+        use crate::serving::chaos::Fault;
+        // Replica 0 staggers x20 from the start; round-robin keeps
+        // assigning to it anyway, so its requests sit first-token-less
+        // past the hedge timeout and duplicate onto replica 1.
+        let mk = |hedge: f64| {
+            let cfg = ServingConfig {
+                replicas: 2,
+                route_policy: RoutePolicy::RoundRobin,
+                max_queued: 10_000,
+                num_blocks: 4096,
+                max_decode_batch: 16,
+                hedge_after_s: hedge,
+                ..Default::default()
+            };
+            let mut c = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+            c.install_chaos(&FaultSchedule::empty().with(Fault::Straggler {
+                replica: 0,
+                from: 0.0,
+                until: 50.0,
+                factor: 20.0,
+            }));
+            c.submit_all(DynamicSonnet::default().generate(16, 8.0, 29));
+            let s = c.run_to_completion();
+            (c, s)
+        };
+        let (hedged, hesum) = mk(0.4);
+        let (control, cosum) = mk(0.0);
+        let st = hedged.chaos_stats();
+        assert!(st.hedges_launched > 0, "straggler must trigger hedges");
+        assert!(
+            st.hedges_won + st.hedges_cancelled >= st.hedges_launched,
+            "every launched hedge resolves: {st:?}"
+        );
+        assert_eq!(hesum.requests, 16, "hedging never loses requests");
+        assert_eq!(cosum.requests, 16);
+        // Exactly one completion per original id, none under a tagged id.
+        let fleet = hedged.fleet_metrics();
+        let mut ids: Vec<u64> = fleet.per_request().iter().map(|m| m.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..16).collect::<Vec<u64>>());
+        // Hedging must help the tail under this straggler.
+        assert!(
+            hesum.p99_ttft < cosum.p99_ttft,
+            "hedged p99 {} vs control {}",
+            hesum.p99_ttft,
+            cosum.p99_ttft
+        );
+    }
+
+    #[test]
+    fn shedding_drops_background_but_conserves_accounting() {
+        use crate::serving::qos::ClassSet;
+        let cfg = ServingConfig {
+            replicas: 2,
+            route_policy: RoutePolicy::LeastLoaded,
+            max_queued: 12,
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            classes: ClassSet::three_tier(),
+            shed_threshold: 0.5,
+            ..Default::default()
+        };
+        let mut c = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        let n = 40;
+        c.submit_all(
+            DynamicSonnet::default()
+                .with_class_mix(vec![(0, 1), (2, 1)])
+                .generate(n, f64::INFINITY, 37),
+        );
+        let s = c.run_to_completion();
+        let shed = c.chaos_stats().shed as usize;
+        assert!(shed > 0, "an instantaneous burst of 40 against cap 12 must shed");
+        assert_eq!(s.requests + shed, n, "submitted == completed + shed");
+        // Interactive (class 0) is never shed: all 20 completed.
+        assert_eq!(
+            s.classes.iter().find(|cs| cs.class_id == 0).unwrap().requests,
+            20,
+            "interactive tier must be untouched by admission control"
+        );
     }
 
     #[test]

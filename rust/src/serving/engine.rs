@@ -346,6 +346,13 @@ pub struct EngineCore<B: Backend, C: ClockSource = VirtualClock> {
     steps_executed: u64,
     /// Step-level execution trace (bounded ring buffer).
     pub trace: Trace,
+    /// Straggler dilation (`serving::chaos`): every backend-reported step
+    /// duration is multiplied by this before the clock advances, so a
+    /// slow replica's virtual time, energy and trace all stretch
+    /// consistently — and the router's cost weight / attainment EWMA see
+    /// the slowdown through ordinary completions. 1.0 (the default) is
+    /// bitwise-inert: `1.0 * dt == dt` for every f64.
+    slow_factor: f64,
 }
 
 /// The classic simulated engine: `EngineCore` on a virtual clock.
@@ -370,6 +377,7 @@ impl<B: Backend, C: ClockSource> EngineCore<B, C> {
             pending: std::collections::VecDeque::new(),
             steps_executed: 0,
             trace: Trace::new(4096),
+            slow_factor: 1.0,
         }
     }
 
@@ -476,7 +484,7 @@ impl<B: Backend, C: ClockSource> EngineCore<B, C> {
                     .collect();
                 let tokens: usize = items.iter().map(|i| i.prompt_len).sum();
                 let t0 = self.clock.now();
-                let dt = self.backend.prefill(&items);
+                let dt = self.slow_factor * self.backend.prefill(&items);
                 self.clock.advance(dt);
                 self.steps_executed += 1;
                 self.metrics.energy_j += dt * self.backend.step_power_w(TraceStepKind::Prefill);
@@ -511,7 +519,7 @@ impl<B: Backend, C: ClockSource> EngineCore<B, C> {
             Step::Decode(ids) => {
                 let work = self.decode_work(&ids);
                 let t0 = self.clock.now();
-                let dt = self.backend.decode(&work);
+                let dt = self.slow_factor * self.backend.decode(&work);
                 self.clock.advance(dt);
                 self.steps_executed += 1;
                 self.metrics.energy_j += dt * self.backend.step_power_w(TraceStepKind::Decode);
@@ -598,6 +606,89 @@ impl<B: Backend, C: ClockSource> EngineCore<B, C> {
             kv_lens,
             use_block_list,
         }
+    }
+
+    // ---- chaos hooks (`serving::chaos`) --------------------------------
+
+    /// Current straggler dilation factor (1.0 = healthy).
+    pub fn slow_factor(&self) -> f64 {
+        self.slow_factor
+    }
+
+    /// Set the straggler dilation factor. Every subsequent step's
+    /// duration (and hence energy and trace) is multiplied by `factor`;
+    /// pass 1.0 to restore healthy pacing.
+    pub fn set_slow(&mut self, factor: f64) {
+        assert!(
+            factor.is_finite() && factor >= 1.0,
+            "slow factor must be finite and >= 1.0, got {factor}"
+        );
+        self.slow_factor = factor;
+    }
+
+    /// Crash support: pull every unfinished request out of this replica —
+    /// both not-yet-admitted pending arrivals and everything the
+    /// scheduler holds — freeing all KV so nothing leaks with the dead
+    /// replica. The caller (ClusterSim) requeues the returned requests
+    /// through the router; completions already harvested stay counted.
+    pub fn evacuate(&mut self) -> Vec<Request> {
+        let mut out: Vec<Request> = self.pending.drain(..).collect();
+        let scheduled = self.sched.evacuate();
+        for req in &scheduled {
+            // No-op for SimBackend; keeps real backends from leaking
+            // per-sequence state if chaos ever runs against one.
+            self.backend.release(req.id);
+        }
+        out.extend(scheduled);
+        out
+    }
+
+    /// Cancel a single in-flight request (the hedge loser). Returns the
+    /// request if it was still unfinished on this replica; `None` if it
+    /// is unknown here or already finished (completions are immutable).
+    pub fn cancel(&mut self, id: RequestId) -> Option<Request> {
+        if let Some(pos) = self.pending.iter().position(|r| r.id == id) {
+            return self.pending.remove(pos);
+        }
+        let req = self.sched.cancel(id)?;
+        self.backend.release(id);
+        Some(req)
+    }
+
+    /// A request is hedge-eligible while it has made no visible progress
+    /// on this replica: still waiting in pending, or scheduled but
+    /// without a first token. Once a token has streamed (or the request
+    /// finished) duplicating it would waste work, not cut tail latency.
+    pub fn hedge_eligible(&self, id: RequestId) -> bool {
+        if self.pending.iter().any(|r| r.id == id) {
+            return true;
+        }
+        match self.sched.try_seq(id) {
+            Some(s) => s.phase != Phase::Finished && s.first_token_time.is_none(),
+            None => false,
+        }
+    }
+
+    /// Clone of a live (pending or scheduled, unfinished) request, used
+    /// to mint the hedge copy without disturbing the primary.
+    pub fn request_snapshot(&self, id: RequestId) -> Option<Request> {
+        if let Some(r) = self.pending.iter().find(|r| r.id == id) {
+            return Some(r.clone());
+        }
+        self.sched.try_seq(id).and_then(|s| {
+            (s.phase != Phase::Finished).then(|| s.req.clone())
+        })
+    }
+
+    /// Preemption storm: forcibly preempt up to `count` running
+    /// sequences (their KV is recomputed when next scheduled). Returns
+    /// how many were actually hit.
+    pub fn inject_preemptions(&mut self, count: usize) -> usize {
+        let n = self.sched.force_preempt(count);
+        for id in self.sched.take_preempted() {
+            self.backend.preempt(id);
+        }
+        n
     }
 }
 
@@ -773,5 +864,85 @@ mod tests {
         assert_eq!(c.now(), 1.5);
         c.wait_until(3.0);
         assert_eq!(c.now(), 3.0);
+    }
+
+    #[test]
+    fn slow_factor_dilates_time_and_energy() {
+        let run = |factor: f64| {
+            let mut e = engine(true);
+            e.set_slow(factor);
+            for i in 0..6 {
+                e.submit(Request::new(i, 256, 16, 0.0));
+            }
+            let s = e.run_to_completion();
+            assert_eq!(s.requests, 6);
+            (e.clock(), e.metrics.energy_j)
+        };
+        let (t1, j1) = run(1.0);
+        let (t4, j4) = run(4.0);
+        // Same step sequence, every duration ×4 → makespan and energy ×4.
+        assert!((t4 / t1 - 4.0).abs() < 1e-9, "t1 {t1} t4 {t4}");
+        assert!((j4 / j1 - 4.0).abs() < 1e-9, "j1 {j1} j4 {j4}");
+    }
+
+    #[test]
+    fn evacuate_empties_replica_and_frees_kv() {
+        let mut e = engine(true);
+        // One admitted + running, one pending far in the future.
+        e.submit(Request::new(0, 256, 64, 0.0));
+        e.submit(Request::new(1, 256, 64, 1e6));
+        e.step(); // prefill request 0
+        let evac = e.evacuate();
+        let mut ids: Vec<u64> = evac.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1]);
+        assert!(!e.has_any_work());
+        assert_eq!(e.sched.kv.num_free(), e.sched.kv.num_blocks());
+        // Evacuated requests keep their original arrival time so requeue
+        // latency lands in TTFT, not silently forgiven.
+        assert_eq!(evac.iter().find(|r| r.id == 1).unwrap().arrival, 1e6);
+    }
+
+    #[test]
+    fn cancel_spares_finished_and_unknown() {
+        let mut e = engine(true);
+        e.submit(Request::new(0, 64, 1, 0.0));
+        e.submit(Request::new(1, 64, 64, 0.0));
+        while e.sched.try_seq(0).map(|s| s.phase) != Some(Phase::Finished)
+            && e.has_any_work()
+        {
+            e.advance();
+        }
+        assert!(e.cancel(0).is_none(), "finished requests are immutable");
+        assert!(e.cancel(99).is_none(), "unknown id");
+        assert_eq!(e.cancel(1).map(|r| r.id), Some(1));
+        assert_eq!(e.sched.kv.num_free(), e.sched.kv.num_blocks());
+    }
+
+    #[test]
+    fn hedge_eligibility_ends_at_first_token() {
+        let mut e = engine(true);
+        e.submit(Request::new(0, 256, 8, 0.0));
+        e.submit(Request::new(1, 256, 8, 1e6));
+        assert!(e.hedge_eligible(0), "queued, no progress yet");
+        assert!(e.hedge_eligible(1), "still pending");
+        assert!(!e.hedge_eligible(42), "unknown");
+        e.step(); // prefill emits request 0's first token
+        assert!(!e.hedge_eligible(0), "first token already streamed");
+        assert_eq!(e.request_snapshot(1).map(|r| r.id), Some(1));
+    }
+
+    #[test]
+    fn inject_preemptions_hits_running_sequences() {
+        let mut e = engine(true);
+        for i in 0..4 {
+            e.submit(Request::new(i, 128, 64, 0.0));
+        }
+        e.step(); // prefill all four into Running
+        let hit = e.inject_preemptions(2);
+        assert_eq!(hit, 2);
+        assert_eq!(e.inject_preemptions(10), 2, "only the remaining two");
+        let s = e.run_to_completion();
+        assert_eq!(s.requests, 4, "storm delays but never loses requests");
     }
 }

@@ -352,6 +352,106 @@ impl MetricsCollector {
         s.classes = self.class_breakdown(classes);
         s
     }
+
+    /// Rename one recorded completion. `serving::chaos` uses this when a
+    /// hedge copy wins the race: the completion was recorded under the
+    /// tagged hedge id and is re-attributed to the primary request, so
+    /// per-request histories never show a synthetic id and conservation
+    /// accounting stays by-original-request. No-op if `from` is absent.
+    pub fn relabel(&mut self, from: RequestId, to: RequestId) {
+        debug_assert!(
+            !self.per_request.iter().any(|m| m.id == to),
+            "relabel target {to} already has a completion — duplicate hedge finish?"
+        );
+        if let Some(m) = self.per_request.iter_mut().find(|m| m.id == from) {
+            m.id = to;
+        }
+    }
+
+    /// SLO-compliant completions per second, bucketed by completion time
+    /// over `[0, makespan)` — the goodput-over-time curve the chaos
+    /// experiment plots and [`recovery`](Self::recovery) analyzes.
+    /// Completions at exactly `makespan` fold into the last bucket.
+    pub fn goodput_timeline(&self, classes: &ClassSet, bucket_s: f64) -> Vec<f64> {
+        assert!(bucket_s.is_finite() && bucket_s > 0.0, "bucket must be positive");
+        let n = ((self.makespan / bucket_s).ceil() as usize).max(1);
+        let mut buckets = vec![0usize; n];
+        for m in self.compliant(classes) {
+            let i = ((m.finish / bucket_s) as usize).min(n - 1);
+            buckets[i] += 1;
+        }
+        buckets.into_iter().map(|c| c as f64 / bucket_s).collect()
+    }
+
+    /// Degradation-and-recovery analysis around a fault at `fault_t`:
+    /// baseline goodput from the buckets fully before the fault, then
+    /// dip depth, dip area and time back to [`RECOVERY_FRACTION`] of
+    /// baseline measured over the buckets at/after it.
+    pub fn recovery(&self, classes: &ClassSet, fault_t: f64, bucket_s: f64) -> RecoveryMetrics {
+        let timeline = self.goodput_timeline(classes, bucket_s);
+        let pre: Vec<f64> = timeline
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|(i, _)| (*i as f64 + 1.0) * bucket_s <= fault_t)
+            .map(|(_, g)| g)
+            .collect();
+        let baseline = mean(&pre); // 0.0 when no full pre-fault bucket
+        let post: Vec<(usize, f64)> = timeline
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|(i, _)| (*i as f64 + 1.0) * bucket_s > fault_t)
+            .collect();
+        let min_post = post.iter().map(|(_, g)| *g).fold(f64::INFINITY, f64::min);
+        let dip_depth = if post.is_empty() { 0.0 } else { (baseline - min_post).max(0.0) };
+        let dip_area: f64 =
+            post.iter().map(|(_, g)| (baseline - g).max(0.0) * bucket_s).sum();
+        let recovery_time_s = post
+            .iter()
+            .find(|(_, g)| *g >= RECOVERY_FRACTION * baseline)
+            .map(|(i, _)| ((*i as f64 + 1.0) * bucket_s - fault_t).max(0.0));
+        RecoveryMetrics { baseline_rps: baseline, dip_depth, dip_area, recovery_time_s }
+    }
+}
+
+/// A post-fault bucket counts as "recovered" once its goodput is back to
+/// this fraction of the pre-fault baseline (full recovery to 1.0 is
+/// noise-sensitive: a single boundary-straddling completion flips it).
+pub const RECOVERY_FRACTION: f64 = 0.9;
+
+/// Goodput degradation and recovery around one fault window — the
+/// recovery-SLO surface of `repro run chaos-sweep` (time-to-recover,
+/// how deep the dip went, and its integrated request deficit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryMetrics {
+    /// Mean goodput (req/s) over the buckets fully before the fault.
+    pub baseline_rps: f64,
+    /// Worst post-fault goodput shortfall vs baseline (req/s, >= 0).
+    pub dip_depth: f64,
+    /// Integrated shortfall over post-fault buckets (requests "lost to
+    /// the dip" — delayed past their bucket, not dropped).
+    pub dip_area: f64,
+    /// Time from the fault until the first bucket back at
+    /// [`RECOVERY_FRACTION`] of baseline; `None` if the run ended first.
+    pub recovery_time_s: Option<f64>,
+}
+
+impl RecoveryMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("baseline_req_per_s", Json::Num(self.baseline_rps)),
+            ("dip_depth_req_per_s", Json::Num(self.dip_depth)),
+            ("dip_area_requests", Json::Num(self.dip_area)),
+            (
+                "recovery_time_s",
+                match self.recovery_time_s {
+                    Some(t) => Json::Num(t),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -558,6 +658,65 @@ mod tests {
             none.to_json().get("joule_per_good_tok"),
             Some(&Json::Null)
         );
+    }
+
+    #[test]
+    fn relabel_reattributes_a_hedge_completion() {
+        let mut c = MetricsCollector::default();
+        let hedge_id = 5 | crate::serving::chaos::HEDGE_BIT;
+        c.record(m(hedge_id, 0.1));
+        c.record(m(2, 0.2));
+        c.relabel(hedge_id, 5);
+        let ids: Vec<RequestId> = c.per_request().iter().map(|m| m.id).collect();
+        assert_eq!(ids, vec![5, 2]);
+        c.relabel(999, 1000); // absent: no-op
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn goodput_timeline_buckets_compliant_completions() {
+        let mut c = MetricsCollector::default();
+        // finish = id (helper m): 0,1,2 in early buckets, 9 at makespan.
+        for (id, ttft) in [(0, 0.1), (1, 0.1), (2, 0.9), (9, 0.1)] {
+            c.record(m(id, ttft));
+        }
+        c.makespan = 10.0;
+        let classes = ClassSet::scalar(0.2, 0.05); // ttft 0.9 violates
+        let tl = c.goodput_timeline(&classes, 2.0);
+        assert_eq!(tl.len(), 5);
+        // Bucket [0,2): ids 0,1 -> 2 compliant / 2 s; id 2 non-compliant;
+        // id 9 finishes at t=9 -> the last bucket [8,10).
+        assert_eq!(tl, vec![1.0, 0.0, 0.0, 0.0, 0.5]);
+    }
+
+    #[test]
+    fn recovery_measures_dip_and_return_to_baseline() {
+        let mut c = MetricsCollector::default();
+        // 1 compliant completion per second until t=4, nothing in [4,6),
+        // then 1/s again from t=6 (finish = id here).
+        for id in [0, 1, 2, 3, 6, 7, 8, 9] {
+            c.record(m(id, 0.1));
+        }
+        c.makespan = 10.0;
+        let classes = ClassSet::scalar(0.2, 0.05);
+        let r = c.recovery(&classes, 4.0, 1.0);
+        assert!((r.baseline_rps - 1.0).abs() < 1e-12);
+        assert!((r.dip_depth - 1.0).abs() < 1e-12, "two empty buckets hit 0 rps");
+        // Empty buckets [4,5) and [5,6) each contribute 1.0 x 1 s.
+        assert!((r.dip_area - 2.0).abs() < 1e-12);
+        // First bucket back at >= 0.9 baseline is [6,7) -> ends 3 s after
+        // the fault.
+        assert_eq!(r.recovery_time_s, Some(3.0));
+        // A fault the run never recovers from reports None.
+        let mut dead = MetricsCollector::default();
+        for id in 0..4 {
+            dead.record(m(id, 0.1));
+        }
+        dead.makespan = 10.0;
+        assert_eq!(dead.recovery(&classes, 4.0, 1.0).recovery_time_s, None);
+        let j = r.to_json();
+        assert_eq!(j.get("recovery_time_s").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("dip_area_requests").unwrap().as_f64(), Some(r.dip_area));
     }
 
     #[test]

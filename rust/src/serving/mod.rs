@@ -18,7 +18,16 @@
 //!             │                          (incl. cost-aware PrefixAffinity
 //!             │                          over real block residency and
 //!             │                          per-class QoS penalties),
-//!             │                          global queue cap, drain support
+//!             │                          global queue cap, per-class
+//!             │                          admission control (shed
+//!             │                          priority-0 under overload),
+//!             │                          drain support
+//!             ├── ChaosEngine            seeded FaultSchedule (crash/
+//!             │                          restart, straggler slow-clock,
+//!             │                          preemption storms) on a third
+//!             │                          control-event heap + hedged
+//!             │                          requests (first completion
+//!             │                          wins, loser cancelled)
 //!             └── Autoscaler             weighted per-class-attainment-
 //!                                        driven scale-up/drain
 //! ```
@@ -42,14 +51,26 @@
 //! or MMPP — so million-request days hold only the open requests in
 //! memory (`repro run sim-speed` tracks events/sec and the memory bound).
 //!
+//! Failure behavior is first-class too ([`chaos`]): a seeded,
+//! JSON-loadable `FaultSchedule` (replica crash/restart, straggler
+//! slow-clock factors, preemption storms) expands onto a third
+//! control-event min-heap in the same pinned-ordering event core, so
+//! every degraded run is reproducible from its schedule + workload seed,
+//! an empty schedule is bitwise-equal to the fault-free run, crashes
+//! conserve requests (evacuated + requeued, prefix residency invalidated
+//! not leaked), and the router's hedged requests + per-class admission
+//! control bound tail latency under the injected faults (`repro run
+//! chaos-sweep` checks recovery time, goodput dip and conservation).
+//!
 //! All block bookkeeping is identical in the simulated and real paths;
 //! the cluster layer turns the per-device reproduction into a
 //! deployment-scale simulator (`repro run cluster`, `repro run
 //! cluster-sweep`, `repro run cache-sweep`, `repro run qos-sweep`,
-//! `repro run sim-speed`).
+//! `repro run sim-speed`, `repro run chaos-sweep`).
 
 pub mod autoscale;
 pub mod block_table;
+pub mod chaos;
 pub mod cluster;
 pub mod engine;
 pub mod kv_cache;

@@ -107,6 +107,13 @@ pub struct Router {
     drained: Vec<bool>,
     queued: usize,
     max_queued: usize,
+    /// Per-class admission control (`serving::chaos` graceful
+    /// degradation): once the global queue reaches this fraction of
+    /// `max_queued`, priority-0 background requests are shed at the door
+    /// instead of queueing behind interactive traffic. 1.0 disables the
+    /// mechanism (shedding at the cap is indistinguishable from the
+    /// `QueueFull` backpressure that already fires there).
+    shed_threshold: f64,
     /// Declared traffic classes (priorities drive the QoS penalty). The
     /// default single class keeps every penalty factor at exactly 1.0.
     classes: ClassSet,
@@ -137,6 +144,7 @@ impl Router {
             drained: vec![false; n],
             queued: 0,
             max_queued,
+            shed_threshold: 1.0,
             classes: ClassSet::default(),
             qos_att: vec![FastMap::default(); n],
         }
@@ -147,6 +155,18 @@ impl Router {
     /// router assumes the single default class (priority 0 — no penalty).
     pub fn with_classes(mut self, classes: ClassSet) -> Router {
         self.classes = classes;
+        self
+    }
+
+    /// Enable load shedding (builder-style): priority-0 requests are
+    /// rejected once the queue reaches `threshold x max_queued`. Must be
+    /// in `(0, 1]`; 1.0 keeps shedding disabled.
+    pub fn with_shed_threshold(mut self, threshold: f64) -> Router {
+        assert!(
+            threshold.is_finite() && threshold > 0.0 && threshold <= 1.0,
+            "shed threshold must be in (0, 1], got {threshold}"
+        );
+        self.shed_threshold = threshold;
         self
     }
 
@@ -168,6 +188,15 @@ impl Router {
 
     pub fn cost_of(&self, replica: usize) -> f64 {
         self.cost[replica]
+    }
+
+    /// Reweight a replica's decode cost in place. `serving::chaos` uses
+    /// this to make a straggler's slowdown visible to the cost-aware
+    /// policies for the duration of its fault window (and to restore the
+    /// base weight afterwards).
+    pub fn set_cost(&mut self, replica: usize, cost: f64) {
+        assert!(cost.is_finite() && cost > 0.0, "cost must be positive");
+        self.cost[replica] = cost;
     }
 
     pub fn is_drained(&self, replica: usize) -> bool {
@@ -313,6 +342,42 @@ impl Router {
             }
         }
         best.expect("at least one active replica").0
+    }
+
+    /// Should this request be shed at the door instead of queued?
+    /// Fires only for priority-0 classes once the queue is at or past
+    /// `shed_threshold x max_queued` — overload protection that keeps
+    /// interactive tiers queueable while background is turned away.
+    /// Callers check this *before* `route_resident` so a shed request
+    /// never touches load accounting.
+    pub fn should_shed(&self, req: &Request) -> bool {
+        self.shed_threshold < 1.0
+            && self.classes.priority_of(req.class_id) == 0
+            && (self.queued as f64) >= self.shed_threshold * self.max_queued as f64
+    }
+
+    /// Route a hedge copy: like [`route_resident`](Self::route_resident)
+    /// but never places the copy on `avoid` (the primary's replica — a
+    /// hedge against the very replica it is stuck on would be useless,
+    /// and keeping the copies apart is what makes "both finish in one
+    /// step" impossible). Returns `Err(QueueFull)` if the queue is at
+    /// the cap or no other active replica exists.
+    pub fn route_hedge(
+        &mut self,
+        req: &Request,
+        avoid: usize,
+        resident: impl Fn(usize, u64) -> bool,
+    ) -> Result<usize, QueueFull> {
+        let was_drained = self.drained[avoid];
+        self.drained[avoid] = true;
+        let out = if self.num_active() == 0 {
+            Err(QueueFull)
+        } else {
+            self.route_resident(req, resident)
+        };
+        self.drained[avoid] = was_drained;
+        debug_assert!(out != Ok(avoid), "hedge landed on the avoided replica");
+        out
     }
 
     /// Mark a request complete on its replica.
@@ -559,5 +624,72 @@ mod tests {
         // New replica is routable immediately.
         r.route(&req(0, 1000)).unwrap();
         assert_eq!(r.route(&req(1, 10)).unwrap(), 1);
+    }
+
+    #[test]
+    fn set_cost_reweights_prefix_affinity() {
+        let mut r = Router::with_costs(RoutePolicy::PrefixAffinity, vec![1.0, 1.0], 100);
+        // Tie breaks to index 0 while costs are uniform...
+        assert_eq!(r.route(&req(0, 10)).unwrap(), 0);
+        r.complete(0, &req(0, 10));
+        // ...a straggling replica 0 (cost x4) repels fresh traffic...
+        r.set_cost(0, 4.0);
+        assert_eq!(r.route(&req(1, 10)).unwrap(), 1);
+        r.complete(1, &req(1, 10));
+        // ...and restoring the base weight restores the legacy pick.
+        r.set_cost(0, 1.0);
+        assert_eq!(r.route(&req(2, 10)).unwrap(), 0);
+    }
+
+    #[test]
+    fn shedding_rejects_only_background_under_overload() {
+        use crate::serving::qos::ClassSet;
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2, 10)
+            .with_classes(ClassSet::three_tier())
+            .with_shed_threshold(0.5);
+        let interactive = |id| req(id, 10).with_class(0);
+        let background = |id| req(id, 10).with_class(2);
+        assert!(!r.should_shed(&background(0)), "empty queue sheds nothing");
+        for i in 0..5 {
+            r.route(&interactive(i)).unwrap();
+        }
+        // Queue at the threshold: background is shed, interactive queues.
+        assert!(r.should_shed(&background(100)));
+        assert!(!r.should_shed(&interactive(101)));
+        assert!(r.route(&interactive(101)).is_ok());
+    }
+
+    #[test]
+    fn default_shed_threshold_never_sheds() {
+        // Disabled (1.0): even a full queue answers false — the QueueFull
+        // backpressure path owns that regime.
+        let mut r = Router::new(RoutePolicy::RoundRobin, 1, 2);
+        r.route(&req(0, 10)).unwrap();
+        r.route(&req(1, 10)).unwrap();
+        assert!(!r.should_shed(&req(2, 10)));
+        assert_eq!(r.route(&req(2, 10)), Err(QueueFull));
+    }
+
+    #[test]
+    fn route_hedge_avoids_the_primary_replica() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 3, 100);
+        // Replica 0 is idle and would win least-loaded; hedging around it
+        // must land elsewhere anyway.
+        for i in 0..20 {
+            let idx = r.route_hedge(&req(i, 10), 0, |_, _| false).unwrap();
+            assert_ne!(idx, 0);
+        }
+        // A previously drained avoid target stays drained afterwards.
+        r.drain(2);
+        assert_ne!(r.route_hedge(&req(50, 10), 0, |_, _| false).unwrap(), 0);
+        assert!(r.is_drained(2));
+    }
+
+    #[test]
+    fn route_hedge_fails_with_no_alternative() {
+        let mut r = Router::new(RoutePolicy::LeastLoaded, 2, 100);
+        r.drain(1);
+        assert_eq!(r.route_hedge(&req(0, 10), 0, |_, _| false), Err(QueueFull));
+        assert!(!r.is_drained(0), "avoid target restored to active");
     }
 }

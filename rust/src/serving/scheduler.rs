@@ -398,6 +398,79 @@ impl Scheduler {
     pub fn kv_lens(&self, ids: &[RequestId]) -> Vec<usize> {
         ids.iter().map(|id| self.seqs[id].kv_len).collect()
     }
+
+    /// Non-panicking sequence lookup (the chaos/hedging layer probes ids
+    /// that may have been evacuated or cancelled).
+    pub fn try_seq(&self, id: RequestId) -> Option<&Sequence> {
+        self.seqs.get(&id)
+    }
+
+    /// Remove an unfinished sequence entirely — waiting or running, its
+    /// KV freed, its prefix pin released, its state dropped — and return
+    /// the original request. `None` if the id is unknown or already
+    /// finished (a finished sequence has won its race; metrics keep it).
+    /// Used by hedging to cancel the losing copy without it ever
+    /// completing, and therefore without double-counting tokens.
+    pub fn cancel(&mut self, id: RequestId) -> Option<Request> {
+        match self.seqs.get(&id) {
+            None => return None,
+            Some(s) if s.phase == Phase::Finished => return None,
+            Some(_) => {}
+        }
+        self.waiting.retain(|&w| w != id);
+        self.running.retain(|&r| r != id);
+        self.preempted.retain(|&p| p != id);
+        self.release_prefix_pin(id);
+        self.kv.free(id);
+        self.seqs.remove(&id).map(|s| s.req)
+    }
+
+    /// Crash evacuation: drain every unfinished sequence (waiting,
+    /// running or preempted), free all their KV and prefix pins, and
+    /// return the original requests in admission order (waiting-queue
+    /// order first, then running) so the cluster can requeue them
+    /// through the router. Finished sequences must already have been
+    /// harvested — the engine harvests inside every step, so between
+    /// cluster events there is nothing pending.
+    pub fn evacuate(&mut self) -> Vec<Request> {
+        debug_assert!(
+            self.finished.is_empty(),
+            "evacuate with unharvested completions — crash fired mid-step?"
+        );
+        let ids: Vec<RequestId> =
+            self.waiting.iter().copied().chain(self.running.iter().copied()).collect();
+        self.waiting.clear();
+        self.running.clear();
+        self.preempted.clear();
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            self.release_prefix_pin(id);
+            self.kv.free(id);
+            if let Some(s) = self.seqs.remove(&id) {
+                out.push(s.req);
+            }
+        }
+        out
+    }
+
+    /// Preemption storm: forcibly preempt up to `count` running
+    /// sequences (normal victim order — lowest priority, youngest within
+    /// the class). Returns how many were actually preempted. Victims
+    /// land back in `waiting` and re-prefill, exactly like a memory-
+    /// pressure preemption.
+    pub fn force_preempt(&mut self, count: usize) -> usize {
+        let mut hit = 0;
+        for _ in 0..count {
+            match self.preempt_victim() {
+                Some(victim) => {
+                    self.preempt(victim);
+                    hit += 1;
+                }
+                None => break,
+            }
+        }
+        hit
+    }
 }
 
 #[cfg(test)]
@@ -720,6 +793,69 @@ mod tests {
         // The victim was later in the (priority-sorted) decode snapshot:
         // it must have been skipped, not decoded while back in `waiting`.
         assert_eq!(s.seq(2).generated, 0, "a just-preempted sequence must not decode");
+        assert!(s.kv.check_conservation());
+    }
+
+    #[test]
+    fn cancel_drops_unfinished_and_spares_finished() {
+        let mut s = Scheduler::new(cfg(8, 64));
+        s.submit(Request::new(1, 100, 1, 0.0));
+        s.submit(Request::new(2, 100, 5, 0.0));
+        let _ = s.schedule(); // prefill both
+        let _ = s.schedule(); // decode
+        s.complete_decode(&[1, 2], 0.1);
+        assert_eq!(s.take_finished(), vec![1]);
+        // Finished: the race is decided, cancel must refuse.
+        assert!(s.cancel(1).is_none());
+        assert!(s.try_seq(1).is_some(), "finished sequence stays for metrics");
+        // Running: cancelled, KV freed, state gone.
+        let req = s.cancel(2).expect("running sequence cancels");
+        assert_eq!(req.id, 2);
+        assert!(s.try_seq(2).is_none());
+        assert_eq!(s.num_running(), 0);
+        assert_eq!(s.kv.num_free(), 64);
+        assert!(s.kv.check_conservation());
+        assert!(s.cancel(99).is_none(), "unknown ids are a no-op");
+    }
+
+    #[test]
+    fn evacuate_returns_every_unfinished_request_and_frees_the_pool() {
+        let mut s = Scheduler::new(ServingConfig {
+            prefix_cache_blocks: 8,
+            ..cfg(2, 64)
+        });
+        s.submit(Request::new(1, 128, 5, 0.0).with_prefix(4));
+        s.submit(Request::new(2, 128, 5, 0.0));
+        s.submit(Request::new(3, 128, 5, 0.0)); // stays waiting (batch cap 2)
+        let _ = s.schedule(); // prefill 1, 2
+        assert_eq!((s.num_running(), s.num_waiting()), (2, 1));
+        let mut reqs = s.evacuate();
+        reqs.sort_by_key(|r| r.id);
+        assert_eq!(reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!((s.num_running(), s.num_waiting()), (0, 0));
+        assert!(!s.has_work());
+        // Pins released: the warm prefix is idle, eviction can reclaim it.
+        while s.kv.evict_one_idle_prefix() {}
+        assert_eq!(s.kv.num_free(), 64);
+        assert!(s.kv.check_conservation());
+    }
+
+    #[test]
+    fn force_preempt_caps_at_the_running_set() {
+        let mut s = Scheduler::new(cfg(8, 256));
+        for i in 0..3 {
+            s.submit(Request::new(i, 64, 10, 0.0));
+        }
+        let _ = s.schedule(); // prefill all three
+        assert_eq!(s.num_running(), 3);
+        assert_eq!(s.force_preempt(5), 3, "only 3 victims exist");
+        assert_eq!(s.num_running(), 0);
+        assert_eq!(s.num_waiting(), 3);
+        assert_eq!(s.take_preempted().len(), 3);
+        for i in 0..3 {
+            assert_eq!(s.seq(i).phase, Phase::Preempted);
+            assert_eq!(s.seq(i).preemptions, 1);
+        }
         assert!(s.kv.check_conservation());
     }
 

@@ -7,8 +7,8 @@
 //! [`ArrivalStream`] iterator, which `ClusterSim::feed` pulls one request
 //! at a time so million-request traces run at O(open requests) memory. A
 //! `Constant`-rate stream replays the eager generator *exactly* (same RNG
-//! draw order per request); the [`RateProcess`] modulators layer diurnal
-//! or MMPP load shapes on top of the same length mixture.
+//! draw order per request); the [`RateProcess`] modulators layer diurnal,
+//! MMPP, or flash-crowd load shapes on top of the same length mixture.
 
 use crate::serving::qos::ClassId;
 use crate::serving::request::Request;
@@ -129,6 +129,11 @@ pub enum RateProcess {
     /// alternates between `calm` and `burst`, with exponential dwell
     /// times of mean `1 / switch_rate` seconds in each state.
     Mmpp { calm: f64, burst: f64, switch_rate: f64 },
+    /// Flash crowd via Lewis-Shedler thinning: the rate jumps to
+    /// `base * mult` over `[start_s, start_s + duration_s)` and is the
+    /// base rate everywhere else — the deterministic overload window
+    /// chaos schedules pair with preemption storms. `mult >= 1`.
+    FlashCrowd { start_s: f64, duration_s: f64, mult: f64 },
 }
 
 /// Lazy request iterator: the Dynamic-Sonnet length mixture under a
@@ -191,6 +196,12 @@ impl ArrivalStream {
                 assert!(calm > 0.0 && burst > 0.0 && switch_rate > 0.0);
                 self.next_switch = self.rng.exp(switch_rate);
             }
+            RateProcess::FlashCrowd { start_s, duration_s, mult } => {
+                assert!(self.rate.is_finite() && self.rate > 0.0, "modulation needs a finite rate");
+                assert!(start_s.is_finite() && start_s >= 0.0);
+                assert!(duration_s.is_finite() && duration_s > 0.0);
+                assert!(mult.is_finite() && mult >= 1.0);
+            }
         }
         self.process = process;
         self
@@ -238,6 +249,25 @@ impl ArrivalStream {
                     self.t = self.next_switch;
                     self.bursting = !self.bursting;
                     self.next_switch = self.t + self.rng.exp(switch_rate);
+                    if self.duration.is_some_and(|d| self.t > d) {
+                        break;
+                    }
+                }
+            }
+            RateProcess::FlashCrowd { start_s, duration_s, mult } => {
+                // Lewis-Shedler thinning against the crowd-peak envelope
+                // base * mult: candidates outside the crowd window are
+                // accepted with probability 1 / mult.
+                let envelope = self.rate * mult;
+                loop {
+                    self.t += self.rng.exp(envelope);
+                    let in_crowd = self.t >= start_s && self.t < start_s + duration_s;
+                    let rate_t = if in_crowd { envelope } else { self.rate };
+                    if self.rng.f64() < rate_t / envelope {
+                        break;
+                    }
+                    // Past the time cap no acceptance is needed: the
+                    // caller rejects this timestamp anyway.
                     if self.duration.is_some_and(|d| self.t > d) {
                         break;
                     }
@@ -617,6 +647,47 @@ mod tests {
         let again: Vec<Request> =
             DynamicSonnet::default().stream(400, 10.0, 5).with_process(mmpp).collect();
         assert!(reqs.iter().zip(&again).all(|(a, b)| a.arrival == b.arrival));
+    }
+
+    #[test]
+    fn flash_crowd_densifies_the_window_and_is_deterministic() {
+        let crowd = RateProcess::FlashCrowd { start_s: 20.0, duration_s: 10.0, mult: 6.0 };
+        let tr = OpenLoopTrace::new(4.0, 60.0);
+        let reqs: Vec<Request> = tr.stream(13).with_process(crowd).collect();
+        assert!(reqs.iter().all(|r| r.arrival > 0.0 && r.arrival <= 60.0));
+        for pair in reqs.windows(2) {
+            assert!(pair[1].arrival >= pair[0].arrival);
+            assert_eq!(pair[1].id, pair[0].id + 1);
+        }
+        // The 10 s crowd window at mult 6 carries ~240 expected arrivals
+        // vs ~200 over the remaining 50 s: per-second density inside the
+        // window must be several times the outside density.
+        let inside =
+            reqs.iter().filter(|r| r.arrival >= 20.0 && r.arrival < 30.0).count() as f64 / 10.0;
+        let outside =
+            reqs.iter().filter(|r| r.arrival < 20.0 || r.arrival >= 30.0).count() as f64 / 50.0;
+        assert!(inside > 3.0 * outside, "inside {inside}/s vs outside {outside}/s");
+        // Deterministic given the seed.
+        let again: Vec<Request> = tr.stream(13).with_process(crowd).collect();
+        assert_eq!(reqs.len(), again.len());
+        assert!(reqs.iter().zip(&again).all(|(a, b)| a.arrival == b.arrival));
+        // mult = 1 degenerates to a (thinned) homogeneous process whose
+        // count tracks the same offered load.
+        let flat: Vec<Request> = tr
+            .stream(13)
+            .with_process(RateProcess::FlashCrowd { start_s: 20.0, duration_s: 10.0, mult: 1.0 })
+            .collect();
+        let plain: Vec<Request> = tr.stream(13).collect();
+        let (lo, hi) = (plain.len() / 2, plain.len() * 2);
+        assert!((lo..hi).contains(&flat.len()), "flat {} vs plain {}", flat.len(), plain.len());
+    }
+
+    #[test]
+    #[should_panic(expected = "mult")]
+    fn flash_crowd_rejects_damping_multiplier() {
+        let _ = OpenLoopTrace::new(4.0, 60.0)
+            .stream(1)
+            .with_process(RateProcess::FlashCrowd { start_s: 0.0, duration_s: 5.0, mult: 0.5 });
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Property-based tests (in-tree harness, `util::proptest`) on coordinator
-//! invariants: KV block manager conservation, scheduler safety, collective
-//! accounting, MME geometry selection, and layout equivalence.
+//! invariants: KV block manager conservation, scheduler safety, chaos-engine
+//! determinism and request/token conservation, collective accounting, MME
+//! geometry selection, and layout equivalence.
 
 use cuda_myth::config::{DeviceKind, ServingConfig};
 use cuda_myth::harness::cache_sweep::LegacyWarmBackend;
@@ -423,6 +424,208 @@ fn indexed_event_core_is_bitwise_equal_to_the_scan_loop_oracle() {
                 && indexed.completed() == oracle.completed()
                 && format!("{:?}", indexed.fleet_prefix_stats())
                     == format!("{:?}", oracle.fleet_prefix_stats())
+        },
+    );
+}
+
+#[test]
+fn fault_schedules_replay_bitwise_given_the_seed() {
+    // Property (serving::chaos): the same seed, schedule and trace replay
+    // the whole chaotic run bit-for-bit — per-request metrics, event
+    // count, and every chaos counter (crashes, requeues, hedges, shed).
+    use cuda_myth::serving::chaos::FaultSchedule;
+    use cuda_myth::serving::cluster::ClusterSim;
+    use cuda_myth::serving::qos::ClassSet;
+    forall(
+        83,
+        8,
+        &PairOf(PairOf(UsizeIn(10, 30), UsizeIn(2, 4)), UsizeIn(1, 1000)),
+        |&((n, replicas), seed)| {
+            let schedule = FaultSchedule::random(seed as u64, replicas, 6.0);
+            let cfg = ServingConfig {
+                replicas,
+                route_policy: RoutePolicy::LeastLoaded,
+                num_blocks: 2048,
+                max_decode_batch: 12,
+                classes: ClassSet::three_tier(),
+                hedge_after_s: 0.3,
+                ..Default::default()
+            };
+            let run = || {
+                let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+                sim.install_chaos(&schedule);
+                sim.submit_all(
+                    DynamicSonnet::default()
+                        .with_class_mix(vec![(0, 2), (1, 1), (2, 1)])
+                        .generate(n, 12.0, seed as u64),
+                );
+                sim.run_to_completion();
+                sim
+            };
+            let a = run();
+            let b = run();
+            a.fleet_metrics().max_request_delta(&b.fleet_metrics()) == 0.0
+                && a.events() == b.events()
+                && a.chaos_stats() == b.chaos_stats()
+        },
+    );
+}
+
+#[test]
+fn chaos_conserves_every_request_and_token() {
+    // Property (serving::chaos): under random fault schedules, fleet
+    // sizes and class mixes, no request is ever lost or double-served —
+    // submitted == completed + shed, completion ids are unique originals
+    // (no hedge-tagged id leaks into metrics), and every completed
+    // request's tokens are charged exactly once (crash-requeued work
+    // restarts but still yields its full output exactly once).
+    use cuda_myth::serving::chaos::{FaultSchedule, HEDGE_BIT};
+    use cuda_myth::serving::cluster::ClusterSim;
+    use cuda_myth::serving::qos::ClassSet;
+    forall(
+        89,
+        8,
+        &PairOf(PairOf(UsizeIn(10, 36), UsizeIn(2, 4)), UsizeIn(1, 1000)),
+        |&((n, replicas), seed)| {
+            let schedule = FaultSchedule::random(seed as u64 + 7, replicas, 5.0);
+            let cfg = ServingConfig {
+                replicas,
+                route_policy: RoutePolicy::LeastLoaded,
+                num_blocks: 2048,
+                max_decode_batch: 12,
+                max_queued: 16,
+                classes: ClassSet::three_tier(),
+                hedge_after_s: 0.25,
+                shed_threshold: if seed % 2 == 0 { 1.0 } else { 0.5 },
+                ..Default::default()
+            };
+            let trace = || {
+                DynamicSonnet::default()
+                    .with_class_mix(vec![(0, 2), (1, 1), (2, 1)])
+                    .generate(n, 15.0, seed as u64)
+            };
+            let expected_tokens: usize = trace().iter().map(|r| r.max_new_tokens).sum();
+            let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+            sim.install_chaos(&schedule);
+            sim.submit_all(trace());
+            sim.run_to_completion();
+            let ms = sim.fleet_metrics();
+            let shed = sim.chaos_stats().shed as usize;
+            let mut ids: Vec<u64> = ms.per_request().iter().map(|m| m.id).collect();
+            let unique = {
+                let len = ids.len();
+                ids.sort_unstable();
+                ids.dedup();
+                len == ids.len()
+            };
+            let shed_tokens: usize = expected_tokens
+                - ms.per_request().iter().map(|m| m.output_tokens).sum::<usize>();
+            sim.completed() + shed == n
+                && unique
+                && ids.iter().all(|&id| id & HEDGE_BIT == 0 && id < n as u64)
+                && (shed > 0) == (shed_tokens > 0)
+        },
+    );
+}
+
+#[test]
+fn hedging_never_duplicates_a_completion_or_a_token() {
+    // Property (serving::chaos): however aggressive the hedge timer and
+    // the straggler, first-completion-wins means every request completes
+    // exactly once and its output tokens are charged exactly once — the
+    // cancelled copy's id never reaches the metrics.
+    use cuda_myth::serving::chaos::{Fault, FaultSchedule, HEDGE_BIT};
+    use cuda_myth::serving::cluster::ClusterSim;
+    forall(
+        97,
+        8,
+        &PairOf(PairOf(UsizeIn(8, 24), UsizeIn(1, 20)), UsizeIn(1, 1000)),
+        |&((n, factor_x), seed)| {
+            let schedule = FaultSchedule::empty().with(Fault::Straggler {
+                replica: 0,
+                from: 0.0,
+                until: 50.0,
+                factor: 1.0 + factor_x as f64,
+            });
+            let cfg = ServingConfig {
+                replicas: 2,
+                route_policy: RoutePolicy::RoundRobin,
+                num_blocks: 2048,
+                max_decode_batch: 12,
+                hedge_after_s: 0.05 + (seed % 5) as f64 * 0.1,
+                ..Default::default()
+            };
+            let trace = || DynamicSonnet::default().generate(n, 8.0, seed as u64);
+            let expected_tokens: usize = trace().iter().map(|r| r.max_new_tokens).sum();
+            let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+            sim.install_chaos(&schedule);
+            sim.submit_all(trace());
+            sim.run_to_completion();
+            let ms = sim.fleet_metrics();
+            let mut ids: Vec<u64> = ms.per_request().iter().map(|m| m.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            let st = sim.chaos_stats();
+            sim.completed() == n
+                && ids.len() == n
+                && ids.iter().all(|&id| id & HEDGE_BIT == 0)
+                && ms.per_request().iter().map(|m| m.output_tokens).sum::<usize>()
+                    == expected_tokens
+                && st.hedges_won <= st.hedges_launched
+                && st.hedges_cancelled <= st.hedges_launched
+        },
+    );
+}
+
+#[test]
+fn empty_fault_schedule_is_bitwise_inert_across_fleets() {
+    // Property (serving::chaos): installing an *empty* schedule must be
+    // indistinguishable from never touching the chaos engine at all, for
+    // every random fleet size, queue cap and class mix — the third event
+    // heap stays empty, so the indexed loop's fast path never diverges.
+    use cuda_myth::serving::chaos::FaultSchedule;
+    use cuda_myth::serving::cluster::ClusterSim;
+    use cuda_myth::serving::qos::ClassSet;
+    forall(
+        101,
+        10,
+        &PairOf(
+            PairOf(UsizeIn(6, 30), UsizeIn(1, 4)),
+            PairOf(UsizeIn(1, 1000), UsizeIn(4, 48)),
+        ),
+        |&((n, replicas), (seed, max_queued))| {
+            let classes = if seed % 2 == 0 { ClassSet::default() } else { ClassSet::three_tier() };
+            let cfg = ServingConfig {
+                replicas,
+                route_policy: RoutePolicy::LeastLoaded,
+                max_queued,
+                num_blocks: 2048,
+                max_decode_batch: 12,
+                classes,
+                ..Default::default()
+            };
+            let trace = || {
+                let mut w = DynamicSonnet::default();
+                if seed % 2 == 1 {
+                    w = w.with_class_mix(vec![(0, 2), (1, 1), (2, 1)]);
+                }
+                w.generate(n, 10.0 + (seed % 40) as f64, seed as u64)
+            };
+            let run = |chaos: bool| {
+                let mut sim = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+                if chaos {
+                    sim.install_chaos(&FaultSchedule::empty());
+                }
+                sim.submit_all(trace());
+                sim.run_to_completion();
+                sim
+            };
+            let plain = run(false);
+            let empty = run(true);
+            plain.fleet_metrics().max_request_delta(&empty.fleet_metrics()) == 0.0
+                && plain.events() == empty.events()
+                && plain.requeues == empty.requeues
+                && plain.completed() == empty.completed()
         },
     );
 }
