@@ -27,6 +27,12 @@ dip/recovery timeline figure per fleet: goodput over time, one line per
 fault schedule, with each schedule's fault windows (crash downtime,
 straggler interval, preemption storm) shaded behind its curve.
 
+``BENCH_tp_sweep.json`` (the device-group scaling grid) additionally
+gets one combined tokens/s-vs-tp scaling figure: one solid curve per
+device kind from its ``TP sweep [<device>]`` report, with each device's
+ideal linear scaling from its tp=1 point drawn as a dotted reference —
+the gap between the two is the all-reduce overhead.
+
 Usage:
     python python/plot_bench.py <artifact-dir> [<older-dir> ...] [--out <plot-dir>]
 
@@ -281,6 +287,73 @@ def plot_chaos_timeline(experiment: str, artifact: dict, report: dict, out_dir: 
     return out
 
 
+TP_REPORT_RE = re.compile(r"^TP sweep \[(?P<device>[^\]]+)\]")
+
+
+def tp_scaling_series(artifact: dict) -> list[tuple[str, list[int], list[float]]]:
+    """(device, tp values, tok/s values) per ``TP sweep [<device>]``
+    report: rows labeled ``tp=<n>`` with a tok/s column — the shape the
+    tp_sweep per-device reports emit."""
+    series = []
+    for report in artifact.get("reports", []):
+        m = TP_REPORT_RE.match(report.get("title", ""))
+        if m is None:
+            continue
+        tok_cols = [idx for idx, _, unit in numeric_columns(report) if unit == "tok/s"]
+        if not tok_cols:
+            continue
+        tps: list[int] = []
+        ys: list[float] = []
+        for row, v in zip(report.get("rows", []), column_values(report, tok_cols[0])):
+            label = row[0] if row and isinstance(row[0], str) else ""
+            if not label.startswith("tp="):
+                continue
+            try:
+                tps.append(int(label[len("tp="):]))
+            except ValueError:
+                continue
+            ys.append(v)
+        if len(tps) >= 2:
+            series.append((m.group("device"), tps, ys))
+    return series
+
+
+def plot_tp_scaling(experiment: str, artifact: dict, out_dir: Path) -> Path | None:
+    """One combined tokens/s-vs-tp figure: a solid measured curve per
+    device kind plus its dotted ideal-linear reference anchored at the
+    tp=1 point, so sub-linear scaling (the all-reduce tax) is the visible
+    gap between the pair."""
+    series = tp_scaling_series(artifact)
+    if not series:
+        return None
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(7, 4.5))
+    cycle = plt.rcParams["axes.prop_cycle"].by_key().get("color", ["C0", "C1", "C2"])
+    for i, (device, tps, ys) in enumerate(series):
+        color = cycle[i % len(cycle)]
+        ax.plot(tps, ys, marker="o", color=color, label=device)
+        ax.plot(tps, [ys[0] * tp / tps[0] for tp in tps], ":", color=color, alpha=0.6,
+                label=f"{device} (ideal linear)")
+    ax.set_xscale("log", base=2)
+    ax.set_xticks(series[0][1])
+    ax.set_xticklabels([str(tp) for tp in series[0][1]])
+    ax.set_xlabel("tensor-parallel group width (cards per replica)")
+    ax.set_ylabel("throughput [tok/s]")
+    ax.set_title(f"{experiment}: tokens/s vs tp per device kind"[:100])
+    ax.legend(fontsize=8)
+    ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+    out = out_dir / f"{experiment}__tp-scaling.png"
+    fig.savefig(out, dpi=110)
+    plt.close(fig)
+    return out
+
+
 def plot_sim_speed_trend(artifact_dirs: list[Path], out_dir: Path) -> Path | None:
     """Events/sec trend for the sim-speed self-benchmark: one line per
     event loop (row label of the throughput report) across the given
@@ -364,6 +437,9 @@ def plot_artifact(path: Path, out_dir: Path) -> list[Path]:
     combined = plot_class_attainment(experiment, artifact, out_dir)
     if combined is not None:
         written.append(combined)
+    scaling = plot_tp_scaling(experiment, artifact, out_dir)
+    if scaling is not None:
+        written.append(scaling)
     return written
 
 

@@ -329,6 +329,82 @@ def test_chaos_timeline_without_windows_report_still_renders(tmp_path):
     assert list(out_dir.glob("chaos_sweep__chaos-goodput-timeline*.png"))
 
 
+def tp_sweep_artifact():
+    def device_report(device, base_tps):
+        rows = []
+        for i, tp in enumerate([1, 2, 4, 8]):
+            tps = base_tps * tp * (0.95 ** i)  # sub-linear measured curve
+            rows.append([
+                f"tp={tp}",
+                val(141.0 / tp, "GB"),
+                val(0 if tp == 1 else 40_000 * tp, "count"),
+                val(0 if tp == 1 else 300 * tp, "count"),
+                val(0 if tp == 1 else 1, "count"),
+                val(tps, "tok/s"),
+                val(tps / base_tps, "ratio"),
+                val(tps / base_tps / tp, "ratio"),
+                val(0.0 if tp == 1 else 0.05 * tp, "frac"),
+            ])
+        return {
+            "title": f"TP sweep [{device}]: Llama-3.1-70B device-group sizing and scaling",
+            "columns": [
+                "group", "weights GB/card", "KV tokens", "KV blocks", "fits",
+                "tok/s", "speedup", "scaling eff", "comm share",
+            ],
+            "rows": rows,
+            "notes": [],
+        }
+
+    return {
+        "schema": "cuda-myth/experiment-v1",
+        "experiment": "tp_sweep",
+        "title": "synthetic tp sweep",
+        "params": {"seed": 31},
+        "reports": [
+            device_report("Gaudi-2", 500.0),
+            device_report("A100", 400.0),
+            {
+                "title": "TP-sweep derived claims",
+                "columns": ["claim", "value"],
+                "rows": [["parity", val(0.0, "s")]],
+                "notes": [],
+            },
+        ],
+        "expectations": [],
+    }
+
+
+def test_tp_scaling_series_parsed():
+    series = plot_bench.tp_scaling_series(tp_sweep_artifact())
+    assert [device for device, _, _ in series] == ["Gaudi-2", "A100"]
+    device, tps, ys = series[0]
+    assert tps == [1, 2, 4, 8]
+    assert ys[0] == 500.0 and ys[-1] > ys[0]
+
+
+def test_tp_sweep_artifact_gets_scaling_figure(tmp_path):
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_tp_sweep.json").write_text(json.dumps(tp_sweep_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    scaling = out_dir / "tp_sweep__tp-scaling.png"
+    assert scaling.exists(), sorted(out_dir.glob("*.png"))
+    assert scaling.stat().st_size > 1000
+    # The per-device generic curves render alongside the combined figure.
+    assert len(list(out_dir.glob("tp_sweep__tp-sweep*.png"))) >= 2
+
+
+def test_no_scaling_figure_without_tp_reports(tmp_path):
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_cache_sweep.json").write_text(json.dumps(synthetic_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    assert plot_bench.tp_scaling_series(synthetic_artifact()) == []
+    assert not (out_dir / "cache_sweep__tp-scaling.png").exists()
+
+
 def test_slugify():
     assert plot_bench.slugify("Fig 17(d): SLO knee / sweep") == "fig-17-d-slo-knee-sweep"
     assert plot_bench.slugify("***") == "report"

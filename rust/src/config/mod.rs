@@ -5,4 +5,4 @@ pub mod device_specs;
 pub mod serving_config;
 
 pub use device_specs::{DeviceKind, DeviceSpec};
-pub use serving_config::ServingConfig;
+pub use serving_config::{ReplicaSpec, ServingConfig};

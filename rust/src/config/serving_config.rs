@@ -9,6 +9,94 @@ use crate::serving::qos::ClassSet;
 use crate::serving::router::RoutePolicy;
 use crate::util::json::Json;
 
+/// One replica as a *device group*: `tp` cards of `device` acting as a
+/// single tensor-parallel serving unit behind the router. Each card holds
+/// 1/tp of every GEMM shard and 1/tp of the KV bytes; the group pays two
+/// all-reduces per transformer block on the device's interconnect
+/// (`sim::collective::CollectiveModel`). `tp = 1` is exactly the old
+/// single-device replica.
+///
+/// JSON: the compact legacy form `"gaudi2"` means tp 1; the object form
+/// `{"device": "gaudi2", "tp": 4}` names the group explicitly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaSpec {
+    /// Device kind of every card in the group.
+    pub device: DeviceKind,
+    /// Cards in the group (tensor-parallel degree): 1, 2, 4 or 8.
+    pub tp: usize,
+}
+
+impl ReplicaSpec {
+    pub fn new(device: DeviceKind, tp: usize) -> ReplicaSpec {
+        ReplicaSpec { device, tp }
+    }
+
+    /// A single-card group — the legacy replica.
+    pub fn single(device: DeviceKind) -> ReplicaSpec {
+        ReplicaSpec { device, tp: 1 }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if ![1, 2, 4, 8].contains(&self.tp) {
+            anyhow::bail!("replica tp must be 1, 2, 4 or 8 (got {})", self.tp);
+        }
+        Ok(())
+    }
+
+    /// Parse either fleet-entry form: `"gaudi2"` (tp 1) or
+    /// `{"device": "gaudi2", "tp": 4}`.
+    pub fn from_json(j: &Json) -> anyhow::Result<ReplicaSpec> {
+        match j {
+            Json::Str(name) => {
+                let device = DeviceKind::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown fleet device '{name}'"))?;
+                Ok(ReplicaSpec::single(device))
+            }
+            Json::Obj(_) => {
+                let name = j
+                    .req("device")
+                    .map_err(|e| anyhow::anyhow!("fleet entry: {e}"))?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("fleet entry 'device' must be a string"))?;
+                let device = DeviceKind::parse(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown fleet device '{name}'"))?;
+                let tp = match j.get("tp") {
+                    None => 1,
+                    Some(v) => v
+                        .as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("fleet entry 'tp' must be an integer"))?,
+                };
+                let spec = ReplicaSpec { device, tp };
+                spec.validate()?;
+                Ok(spec)
+            }
+            _ => anyhow::bail!("bad 'fleet' entry (want a device string or {{device, tp}} object)"),
+        }
+    }
+
+    /// Emit the compact string form when tp = 1 so pre-group configs and
+    /// committed artifacts round-trip byte-identically.
+    pub fn to_json(&self) -> Json {
+        if self.tp == 1 {
+            Json::Str(self.device.json_tag().into())
+        } else {
+            Json::obj(vec![
+                ("device", Json::Str(self.device.json_tag().into())),
+                ("tp", Json::Num(self.tp as f64)),
+            ])
+        }
+    }
+
+    /// Human-readable group label: `gaudi2` or `gaudi2 x4`.
+    pub fn desc(&self) -> String {
+        if self.tp == 1 {
+            self.device.json_tag().to_string()
+        } else {
+            format!("{} x{}", self.device.json_tag(), self.tp)
+        }
+    }
+}
+
 /// Configuration for the vLLM-style serving engine / cluster.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
@@ -47,10 +135,13 @@ pub struct ServingConfig {
     /// Router queue cap: maximum in-flight (routed, unfinished) requests
     /// before admission returns backpressure.
     pub max_queued: usize,
-    /// Per-replica device kinds for heterogeneous fleets (mixed Gaudi-2 +
-    /// A100 behind one router). Empty means homogeneous: `replicas` copies
-    /// of `device`. When non-empty its length must equal `replicas`.
-    pub fleet: Vec<DeviceKind>,
+    /// Per-replica device groups for heterogeneous fleets (mixed Gaudi-2 +
+    /// A100 behind one router, each replica `tp` cards wide). Empty means
+    /// homogeneous: `replicas` copies of `device` at `tensor_parallel`
+    /// cards each. When non-empty its length must equal `replicas`. JSON
+    /// accepts `"gaudi2"` (tp 1) and `{"device": "gaudi2", "tp": 4}`
+    /// entries interchangeably.
+    pub fleet: Vec<ReplicaSpec>,
     /// Traffic classes served by this deployment (`serving::qos`): each
     /// request carries a `class_id` indexing this set, fixing its SLO,
     /// scheduling priority and goodput weight. JSON: `"classes":
@@ -151,16 +242,14 @@ impl ServingConfig {
                 None => Vec::new(),
                 Some(v) => v
                     .as_arr()
-                    .ok_or_else(|| anyhow::anyhow!("bad 'fleet' (want an array of device names)"))?
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "bad 'fleet' (want an array of device names or {{device, tp}} objects)"
+                        )
+                    })?
                     .iter()
-                    .map(|entry| {
-                        let name = entry
-                            .as_str()
-                            .ok_or_else(|| anyhow::anyhow!("bad 'fleet' entry (want a string)"))?;
-                        DeviceKind::parse(name)
-                            .ok_or_else(|| anyhow::anyhow!("unknown fleet device '{name}'"))
-                    })
-                    .collect::<anyhow::Result<Vec<DeviceKind>>>()?,
+                    .map(ReplicaSpec::from_json)
+                    .collect::<anyhow::Result<Vec<ReplicaSpec>>>()?,
             },
             classes: match j.get("classes") {
                 None => ClassSet::default(),
@@ -201,12 +290,7 @@ impl ServingConfig {
             ("replicas", Json::Num(self.replicas as f64)),
             ("route_policy", Json::Str(self.route_policy.name().into())),
             ("max_queued", Json::Num(self.max_queued as f64)),
-            (
-                "fleet",
-                Json::Arr(
-                    self.fleet.iter().map(|d| Json::Str(d.json_tag().into())).collect(),
-                ),
-            ),
+            ("fleet", Json::Arr(self.fleet.iter().map(|s| s.to_json()).collect())),
             ("classes", self.classes.to_json()),
             ("hedge_after_s", Json::Num(self.hedge_after_s)),
             ("shed_threshold", Json::Num(self.shed_threshold)),
@@ -214,21 +298,36 @@ impl ServingConfig {
         .dump()
     }
 
-    /// The device of every replica: the explicit `fleet` when given,
-    /// otherwise `replicas` copies of `device`.
-    pub fn replica_devices(&self) -> Vec<DeviceKind> {
+    /// The device group of every replica: the explicit `fleet` when
+    /// given, otherwise `replicas` copies of `device` at the scalar
+    /// `tensor_parallel` degree — so every pre-group config describes
+    /// exactly the fleet it always did.
+    pub fn replica_specs(&self) -> Vec<ReplicaSpec> {
         if self.fleet.is_empty() {
-            vec![self.device; self.replicas]
+            vec![ReplicaSpec::new(self.device, self.tensor_parallel); self.replicas]
         } else {
             self.fleet.clone()
         }
     }
 
-    /// Heterogeneous-fleet constructor: one entry per replica.
-    pub fn with_fleet(mut self, fleet: Vec<DeviceKind>) -> ServingConfig {
+    /// The device kind of every replica (group width dropped) — kept for
+    /// callers that only care about heterogeneity, e.g. fleet labels.
+    pub fn replica_devices(&self) -> Vec<DeviceKind> {
+        self.replica_specs().iter().map(|s| s.device).collect()
+    }
+
+    /// Device-group fleet constructor: one `ReplicaSpec` per replica.
+    pub fn with_replica_specs(mut self, fleet: Vec<ReplicaSpec>) -> ServingConfig {
         self.replicas = fleet.len().max(1);
         self.fleet = fleet;
         self
+    }
+
+    /// Heterogeneous-fleet constructor: one single-card entry per
+    /// replica. Thin shim over [`ServingConfig::with_replica_specs`],
+    /// kept for pre-group callers; prefer the spec form in new code.
+    pub fn with_fleet(self, fleet: Vec<DeviceKind>) -> ServingConfig {
+        self.with_replica_specs(fleet.into_iter().map(ReplicaSpec::single).collect())
     }
 
     /// Basic sanity validation; returns an error naming the bad field.
@@ -258,10 +357,13 @@ impl ServingConfig {
         }
         if !self.fleet.is_empty() && self.fleet.len() != self.replicas {
             anyhow::bail!(
-                "fleet lists {} devices but replicas is {}",
+                "fleet lists {} device groups but replicas is {}",
                 self.fleet.len(),
                 self.replicas
             );
+        }
+        for spec in &self.fleet {
+            spec.validate()?;
         }
         self.classes.validate()?;
         if !self.hedge_after_s.is_finite() || self.hedge_after_s < 0.0 {
@@ -377,6 +479,66 @@ mod tests {
         assert!(ServingConfig::from_json(r#"{"fleet": ["warp9"]}"#).is_err());
         assert!(ServingConfig::from_json(r#"{"fleet": [3]}"#).is_err());
         assert!(ServingConfig::from_json(r#"{"fleet": "gaudi2"}"#).is_err());
+    }
+
+    #[test]
+    fn fleet_object_form_parses_and_roundtrips() {
+        // Both entry forms in one fleet: bare string means tp 1.
+        let c = ServingConfig::from_json(
+            r#"{"fleet": ["gaudi2", {"device": "a100", "tp": 4}, {"device": "gaudi2"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.replicas, 3);
+        assert_eq!(
+            c.fleet,
+            vec![
+                ReplicaSpec::single(DeviceKind::Gaudi2),
+                ReplicaSpec::new(DeviceKind::A100, 4),
+                ReplicaSpec::single(DeviceKind::Gaudi2),
+            ]
+        );
+        let back = ServingConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        // The emitted JSON keeps tp=1 groups in the compact string form,
+        // so pre-group configs and artifacts round-trip unchanged.
+        assert!(c.to_json().contains(r#""gaudi2""#));
+        assert!(c.to_json().contains(r#""tp": 4"#) || c.to_json().contains(r#""tp":4"#));
+        // Bare-string-form and object-form tp=1 entries are the same spec.
+        let s = ServingConfig::from_json(r#"{"fleet": ["a100"]}"#).unwrap();
+        let o = ServingConfig::from_json(r#"{"fleet": [{"device": "a100", "tp": 1}]}"#).unwrap();
+        assert_eq!(s.fleet, o.fleet);
+        assert_eq!(s.to_json(), o.to_json());
+    }
+
+    #[test]
+    fn replica_specs_defaults_and_validation() {
+        // No explicit fleet: replicas x (device, tensor_parallel).
+        let h = ServingConfig {
+            replicas: 2,
+            device: DeviceKind::A100,
+            tensor_parallel: 4,
+            ..Default::default()
+        };
+        assert_eq!(h.replica_specs(), vec![ReplicaSpec::new(DeviceKind::A100, 4); 2]);
+        assert_eq!(h.replica_devices(), vec![DeviceKind::A100; 2]);
+        // Builder keeps replicas in sync and survives validation.
+        let b = ServingConfig::default().with_replica_specs(vec![
+            ReplicaSpec::new(DeviceKind::Gaudi2, 8),
+            ReplicaSpec::single(DeviceKind::A100),
+        ]);
+        assert_eq!(b.replicas, 2);
+        b.validate().unwrap();
+        assert_eq!(b.fleet[0].desc(), "gaudi2 x8");
+        assert_eq!(b.fleet[1].desc(), "a100");
+        // The legacy shim builds tp=1 groups.
+        let legacy = ServingConfig::default().with_fleet(vec![DeviceKind::Gaudi2; 3]);
+        assert_eq!(legacy.fleet, vec![ReplicaSpec::single(DeviceKind::Gaudi2); 3]);
+        // Bad group widths are rejected in JSON and in validate().
+        assert!(ServingConfig::from_json(r#"{"fleet": [{"device": "a100", "tp": 3}]}"#).is_err());
+        assert!(ServingConfig::from_json(r#"{"fleet": [{"tp": 2}]}"#).is_err());
+        let bad = ServingConfig::default()
+            .with_replica_specs(vec![ReplicaSpec::new(DeviceKind::A100, 5)]);
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use crate::config::DeviceKind;
 use crate::harness::{Experiment, Params};
 use crate::report::{Agg, Cell, Check, Expectation, Report, Selector, Unit};
-use crate::sim::collective::{self, ALL_COLLECTIVES};
+use crate::sim::collective::{CollectiveModel, ALL_COLLECTIVES};
 use crate::util::units::{KIB, MIB};
 
 pub struct Fig10;
@@ -35,8 +35,11 @@ impl Experiment for Fig10 {
             for &s in &sizes {
                 let mut row = vec![Cell::val(s, Unit::Bytes)];
                 for kind in [DeviceKind::Gaudi2, DeviceKind::A100] {
+                    // The same unified model the serving path prices its
+                    // tensor-parallel all-reduces through.
+                    let model = CollectiveModel::for_device(kind);
                     for n in [2usize, 4, 8] {
-                        let util = collective::run(kind, coll, n, s).utilization;
+                        let util = model.run(coll, n, s).utilization;
                         if n == 8 && s == headline {
                             match kind {
                                 DeviceKind::Gaudi2 => g8 = util,

@@ -24,6 +24,7 @@ pub mod fig9;
 pub mod qos_sweep;
 pub mod sim_speed;
 pub mod table1;
+pub mod tp_sweep;
 
 use crate::report::{Expectation, ExpectationResult, Report};
 use crate::util::json::Json;
@@ -123,6 +124,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(ablations::ExtTraining),
         Box::new(ablations::ExtGaudi3),
         Box::new(sim_speed::SimSpeed),
+        Box::new(tp_sweep::TpSweep),
     ]
 }
 
@@ -181,11 +183,11 @@ mod tests {
         for required in [
             "table1", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
             "fig13", "fig15", "fig17", "cluster", "cluster_sweep", "cache_sweep", "qos_sweep",
-            "chaos_sweep", "sim_speed",
+            "chaos_sweep", "sim_speed", "tp_sweep",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
-        assert_eq!(ids.len(), 23, "registry must keep all 23 entries");
+        assert_eq!(ids.len(), 24, "registry must keep all 24 entries");
     }
 
     #[test]
@@ -202,6 +204,7 @@ mod tests {
         assert_eq!(find("qos-sweep").unwrap().id(), "qos_sweep");
         assert_eq!(find("chaos-sweep").unwrap().id(), "chaos_sweep");
         assert_eq!(find("sim-speed").unwrap().id(), "sim_speed");
+        assert_eq!(find("tp-sweep").unwrap().id(), "tp_sweep");
         assert!(find("cluster-").is_none());
     }
 

@@ -27,8 +27,11 @@
 //!           │                             shared-prefix blocks under a
 //!           │                             finite budget + LRU/cost-aware
 //!           │                             eviction, trace, metrics+energy)
-//!           └── ClusterSim                N replicas (homogeneous or a
-//!               │                         mixed Gaudi-2/A100 fleet),
+//!           └── ClusterSim                N replicas, each a *device
+//!               │                         group* (`ReplicaSpec { device,
+//!               │                         tp }`: homogeneous, mixed
+//!               │                         Gaudi-2/A100, or tp-wide
+//!               │                         tensor-parallel groups),
 //!               │                         indexed discrete-event core
 //!               │                         (arrival + replica-wake heaps,
 //!               │                         streamed arrivals at O(open
@@ -65,7 +68,11 @@
 //!
 //!   `ServingConfig { replicas, route_policy, max_queued, fleet,
 //!   prefix_cache_blocks, eviction, classes, hedge_after_s,
-//!   shed_threshold, .. }` sizes the fleet;
+//!   shed_threshold, .. }` sizes the fleet — `fleet` is a
+//!   `Vec<ReplicaSpec>`, each entry one device group whose `tp` cards
+//!   shard every transformer block's GEMMs and KV heads and pay two
+//!   all-reduces per block through the collective model (a tp=1 group
+//!   replays the single-device path bitwise);
 //!   `repro run cluster` produces the iso-SLO Gaudi-2 vs A100
 //!   replica-count comparison, `repro run cluster-sweep` the
 //!   goodput-under-SLO frontier across fleet mixes, `repro run
@@ -76,9 +83,12 @@
 //!   EqExact-0 parity with the scalar-SLO path), `repro run chaos-sweep`
 //!   the fault-schedule x fleet grid (conservation, empty-schedule
 //!   inertness, bounded recovery, hedging, background-only shedding),
-//!   and `repro run sim-speed` the simulator's own dispatch throughput
+//!   `repro run sim-speed` the simulator's own dispatch throughput
 //!   (indexed event core vs the retained scan-loop oracle: bitwise
-//!   parity, events/sec, O(open requests) streaming memory).
+//!   parity, events/sec, O(open requests) streaming memory), and `repro
+//!   run tp-sweep` the Llama-70B device-group scaling grid (tp=1 parity,
+//!   monotone sub-linear tokens/s, HBM-bound at tp=1 / servable at
+//!   tp>=4, mesh-vs-switch collective overhead share).
 //! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, lowered at
 //!   build time by `python/compile/aot.py`) and executes them on the PJRT
 //!   CPU client. Python is never on the request path.

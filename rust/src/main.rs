@@ -435,14 +435,12 @@ fn cmd_serve(args: &[String]) -> i32 {
     // One path for every fleet size: a 1-replica cluster is
     // integration-tested bitwise-equal to the bare engine. Heterogeneous
     // fleets (`"fleet": ["gaudi2", "a100", ...]` in --config) run the
-    // same path with per-replica devices.
+    // same path with per-replica devices, and each entry may instead be a
+    // device group (`{"device": "gaudi2", "tp": 4}`) whose cards shard
+    // the model tensor-parallel behind one replica slot.
     let replicas = cfg.replicas;
-    let fleet_desc = cfg
-        .replica_devices()
-        .iter()
-        .map(|d| d.name())
-        .collect::<Vec<_>>()
-        .join("+");
+    let fleet_desc =
+        cfg.replica_specs().iter().map(|s| s.desc()).collect::<Vec<_>>().join("+");
     let policy = cfg.route_policy;
     // Prefix-affinity routing needs prefix-tagged requests to have any
     // warm cache to exploit; tagging is RNG-free, so the other policies'

@@ -13,7 +13,7 @@
 
 use crate::config::DeviceKind;
 use crate::ops::attention::{self, PagedAttnImpl, PagedAttnWork};
-use crate::sim::collective;
+use crate::sim::collective::CollectiveModel;
 use crate::sim::device::Device;
 use crate::sim::power::{Activity, PowerModel};
 use crate::sim::Dtype;
@@ -80,6 +80,37 @@ impl LlamaConfig {
     }
 }
 
+/// BF16 weight bytes each card of a `tp`-wide group must hold resident.
+pub fn weight_bytes_per_card(cfg: &LlamaConfig, tp: usize) -> f64 {
+    cfg.weight_bytes() / tp as f64
+}
+
+/// KV-cache tokens a `(kind, tp)` device group can hold once every card's
+/// weight shard is resident: per card, `(hbm_capacity - weights/tp)` bytes
+/// feed KV at `kv_bytes_per_token/tp` each (heads are sharded with the
+/// GEMMs, so the group's token capacity is the per-card capacity). 0 means
+/// the weights alone exceed HBM — the model does not fit at this width.
+pub fn kv_token_capacity(cfg: &LlamaConfig, kind: DeviceKind, tp: usize) -> usize {
+    let free = kind.spec().hbm_capacity - weight_bytes_per_card(cfg, tp);
+    if free <= 0.0 {
+        return 0;
+    }
+    (free / (cfg.kv_bytes_per_token() / tp as f64)) as usize
+}
+
+/// Whether the group can serve at all: weight shards fit and at least one
+/// `min_tokens`-token sequence's KV fits beside them.
+pub fn hbm_feasible(cfg: &LlamaConfig, kind: DeviceKind, tp: usize, min_tokens: usize) -> bool {
+    kv_token_capacity(cfg, kind, tp) >= min_tokens.max(1)
+}
+
+/// Group-aware KV block budget: the number of `block_size`-token blocks
+/// the group's post-weights HBM can hold (the `num_blocks` a sized
+/// deployment should configure per replica).
+pub fn kv_block_budget(cfg: &LlamaConfig, kind: DeviceKind, tp: usize, block_size: usize) -> usize {
+    kv_token_capacity(cfg, kind, tp) / block_size.max(1)
+}
+
 /// Sustained fraction of HBM bandwidth during weight-streaming decode.
 fn decode_mbu(kind: DeviceKind) -> f64 {
     match kind {
@@ -117,7 +148,7 @@ pub fn prefill_cost(cfg: &LlamaConfig, kind: DeviceKind, batch: usize, in_len: u
     let down = dev.gemm(tokens, cfg.intermediate / tp, h, Dtype::Bf16);
     let attn = attention::prefill_attention_time(&dev, batch, in_len, cfg.n_q_heads / tp, cfg.head_dim);
     let ar_bytes = (tokens * h) as f64 * 2.0;
-    let allreduce = 2.0 * collective::allreduce_time(kind, tp, ar_bytes);
+    let allreduce = 2.0 * CollectiveModel::for_device(kind).allreduce_time(tp, ar_bytes);
     let per_layer = qkv.time + o.time + gate_up.time + down.time + attn + allreduce;
     // LM head on the last token of each sequence.
     let lm_head = dev.gemm(batch, h, cfg.vocab / tp, Dtype::Bf16);
@@ -165,7 +196,8 @@ pub fn decode_step_cost(cfg: &LlamaConfig, kind: DeviceKind, batch: usize, kv_le
     };
     let attn = cfg.layers as f64 * attention::run(attn_impl, attn_work).time;
     let ar_bytes = (batch * cfg.hidden) as f64 * 2.0;
-    let allreduce = cfg.layers as f64 * 2.0 * collective::allreduce_time(kind, tp, ar_bytes);
+    let allreduce =
+        cfg.layers as f64 * 2.0 * CollectiveModel::for_device(kind).allreduce_time(tp, ar_bytes);
     let time = weight_time + attn + allreduce + step_overhead(kind);
     // Decode is a GEMV: the MME activates a narrow slice and power-gates
     // the rest (batch rows only); A100 keeps its full array clocked.
@@ -353,6 +385,29 @@ mod tests {
         let e8 = mean(&eff8);
         assert!((pr - 0.88).abs() < 0.15, "power ratio {pr}");
         assert!((e8 - 1.56).abs() < 0.35, "8-dev energy eff {e8}");
+    }
+
+    #[test]
+    fn hbm_sizing_70b_needs_a_device_group() {
+        // ~141 GB of BF16 weights: no single Gaudi-2 (96 GB) or A100
+        // (80 GB) holds Llama-70B, but a tp>=2 group shards it and tp>=4
+        // leaves comfortable KV headroom on both — the tp-sweep claim.
+        let cfg70 = LlamaConfig::llama31_70b();
+        for kind in [DeviceKind::Gaudi2, DeviceKind::A100] {
+            assert!(!hbm_feasible(&cfg70, kind, 1, 4096), "{kind:?} tp1 must be HBM-bound");
+            assert_eq!(kv_token_capacity(&cfg70, kind, 1), 0);
+            assert!(hbm_feasible(&cfg70, kind, 4, 4096), "{kind:?} tp4 must serve");
+            assert!(kv_block_budget(&cfg70, kind, 4, 128) > 1000, "{kind:?} tp4 headroom");
+            // Token capacity grows monotonically with group width.
+            let caps: Vec<usize> =
+                [1, 2, 4, 8].iter().map(|&tp| kv_token_capacity(&cfg70, kind, tp)).collect();
+            assert!(caps.windows(2).all(|w| w[0] <= w[1]), "{kind:?}: {caps:?}");
+        }
+        // 8B fits a single card everywhere (the pre-group regime).
+        let cfg8 = LlamaConfig::llama31_8b();
+        for kind in [DeviceKind::Gaudi2, DeviceKind::A100] {
+            assert!(hbm_feasible(&cfg8, kind, 1, 4096));
+        }
     }
 
     #[test]

@@ -61,7 +61,7 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::config::{DeviceKind, ServingConfig};
+use crate::config::{DeviceKind, ReplicaSpec, ServingConfig};
 use crate::models::llama::LlamaConfig;
 use crate::serving::autoscale::Autoscaler;
 use crate::serving::chaos::{self, ChaosStats, ControlKind, FaultSchedule};
@@ -201,8 +201,8 @@ impl StreamSource {
 /// A multi-replica serving deployment under simulated time.
 pub struct ClusterSim {
     replicas: Vec<Engine<SimBackend>>,
-    /// Device of each replica (parallel to `replicas`).
-    devices: Vec<DeviceKind>,
+    /// Device group of each replica (parallel to `replicas`).
+    specs: Vec<ReplicaSpec>,
     router: Router,
     /// The cluster-level config replicas are instantiated from (per-replica
     /// scheduler/KV knobs; `device` is overridden per replica).
@@ -257,30 +257,31 @@ pub struct ClusterSim {
 }
 
 impl ClusterSim {
-    /// Build the fleet `cfg` describes — `cfg.replica_devices()` engine
+    /// Build the fleet `cfg` describes — `cfg.replica_specs()` engine
     /// replicas (homogeneous `device` x `replicas`, or the explicit mixed
-    /// `fleet`) serving `model`, fronted by a router with
-    /// `cfg.route_policy` / `cfg.max_queued` and per-replica decode-cost
-    /// weights from the device cost model.
+    /// `fleet` of device groups) serving `model`, fronted by a router with
+    /// `cfg.route_policy` / `cfg.max_queued` and per-group decode-cost
+    /// weights from the device cost model (a wider group decodes faster,
+    /// so cost-aware policies see tensor parallelism honestly).
     pub fn new(cfg: &ServingConfig, model: LlamaConfig) -> ClusterSim {
         cfg.validate().expect("valid config");
-        let devices = cfg.replica_devices();
-        let costs: Vec<f64> = devices
+        let specs = cfg.replica_specs();
+        let costs: Vec<f64> = specs
             .iter()
-            .map(|d| SimBackend::decode_cost_weight(&model, *d, cfg.tensor_parallel))
+            .map(|s| SimBackend::decode_cost_weight(&model, s.device, s.tp))
             .collect();
         let base_cost = costs.clone();
         let router = Router::with_costs(cfg.route_policy, costs, cfg.max_queued)
             .with_classes(cfg.classes.clone())
             .with_shed_threshold(cfg.shed_threshold);
-        let replicas: Vec<Engine<SimBackend>> = devices
+        let replicas: Vec<Engine<SimBackend>> = specs
             .iter()
-            .map(|d| Self::build_replica(cfg, model, *d))
+            .map(|s| Self::build_replica(cfg, model, *s))
             .collect();
         let n = replicas.len();
         ClusterSim {
             replicas,
-            devices,
+            specs,
             router,
             cfg: cfg.clone(),
             model,
@@ -317,17 +318,24 @@ impl ClusterSim {
         ClusterSim { mode: DispatchMode::ScanOracle, ..ClusterSim::new(cfg, model) }
     }
 
-    /// One engine replica pinned to `device`. The per-replica config is
-    /// the cluster config with the device substituted and the fleet list
-    /// cleared (a replica is always a 1-device engine) — for homogeneous
-    /// configs this is exactly the cluster config, which is what keeps the
-    /// 1-replica path bitwise-equal to a bare `Engine`.
+    /// One engine replica pinned to the device group `spec`. The
+    /// per-replica config is the cluster config with the group's device
+    /// and width substituted and the fleet list cleared (a replica is
+    /// always one engine, however many cards wide) — for homogeneous
+    /// configs this is exactly the cluster config, which is what keeps
+    /// the 1-replica path bitwise-equal to a bare `Engine`, and a tp=1
+    /// spec bitwise-equal to the pre-group single-device replica.
     fn build_replica(
         cfg: &ServingConfig,
         model: LlamaConfig,
-        device: DeviceKind,
+        spec: ReplicaSpec,
     ) -> Engine<SimBackend> {
-        let replica_cfg = ServingConfig { device, fleet: Vec::new(), ..cfg.clone() };
+        let replica_cfg = ServingConfig {
+            device: spec.device,
+            tensor_parallel: spec.tp,
+            fleet: Vec::new(),
+            ..cfg.clone()
+        };
         let backend = SimBackend::new(model, &replica_cfg);
         Engine::new(replica_cfg, backend)
     }
@@ -340,14 +348,19 @@ impl ClusterSim {
         &self.replicas[i]
     }
 
-    /// Device of replica `i`.
+    /// Device of replica `i` (group width dropped).
     pub fn device_of(&self, i: usize) -> DeviceKind {
-        self.devices[i]
+        self.specs[i].device
     }
 
-    /// Per-replica devices, in replica order.
-    pub fn devices(&self) -> &[DeviceKind] {
-        &self.devices
+    /// Device group of replica `i`.
+    pub fn spec_of(&self, i: usize) -> ReplicaSpec {
+        self.specs[i]
+    }
+
+    /// Per-replica device groups, in replica order.
+    pub fn specs(&self) -> &[ReplicaSpec] {
+        &self.specs
     }
 
     pub fn router(&self) -> &Router {
@@ -419,16 +432,22 @@ impl ClusterSim {
         self.peak_open = self.peak_open.max(self.open_requests());
     }
 
-    /// Scale up: add a fresh replica on `device` whose clock starts at
-    /// `now` (the control tick that decided it). Returns its index.
+    /// Scale up: add a fresh replica on `device` (at the deployment's
+    /// scalar `tensor_parallel` width) whose clock starts at `now` (the
+    /// control tick that decided it). Returns its index.
     pub fn add_replica(&mut self, device: DeviceKind, now: f64) -> usize {
-        let mut engine = Self::build_replica(&self.cfg, self.model, device);
+        self.add_replica_spec(ReplicaSpec::new(device, self.cfg.tensor_parallel), now)
+    }
+
+    /// Scale up with an explicit device group.
+    pub fn add_replica_spec(&mut self, spec: ReplicaSpec, now: f64) -> usize {
+        spec.validate().expect("valid replica spec");
+        let mut engine = Self::build_replica(&self.cfg, self.model, spec);
         engine.clock_mut().wait_until(now);
         self.replicas.push(engine);
-        self.devices.push(device);
+        self.specs.push(spec);
         self.down.push(false);
-        let cost =
-            SimBackend::decode_cost_weight(&self.model, device, self.cfg.tensor_parallel);
+        let cost = SimBackend::decode_cost_weight(&self.model, spec.device, spec.tp);
         self.base_cost.push(cost);
         self.router.add_replica(cost)
     }
@@ -1130,7 +1149,11 @@ mod tests {
         }
         .with_fleet(vec![DeviceKind::Gaudi2, DeviceKind::A100]);
         let mut c = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
-        assert_eq!(c.devices(), &[DeviceKind::Gaudi2, DeviceKind::A100]);
+        assert_eq!(
+            c.specs(),
+            &[ReplicaSpec::single(DeviceKind::Gaudi2), ReplicaSpec::single(DeviceKind::A100)]
+        );
+        assert_eq!(c.device_of(0), DeviceKind::Gaudi2);
         c.submit_all(DynamicSonnet::default().generate(40, 30.0, 5));
         let s = c.run_to_completion();
         assert_eq!(s.requests, 40);
@@ -1141,6 +1164,62 @@ mod tests {
         // Backends really run on different devices.
         assert_eq!(c.replica(0).backend().device, DeviceKind::Gaudi2);
         assert_eq!(c.replica(1).backend().device, DeviceKind::A100);
+    }
+
+    #[test]
+    fn tp1_spec_fleet_is_bitwise_equal_to_the_legacy_device_fleet() {
+        let base = ServingConfig {
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            route_policy: RoutePolicy::LeastLoaded,
+            ..Default::default()
+        };
+        let legacy = base.clone().with_fleet(vec![DeviceKind::Gaudi2, DeviceKind::A100]);
+        let specs = base.with_replica_specs(vec![
+            ReplicaSpec::new(DeviceKind::Gaudi2, 1),
+            ReplicaSpec::new(DeviceKind::A100, 1),
+        ]);
+        let run = |cfg: &ServingConfig| {
+            let mut c = ClusterSim::new(cfg, LlamaConfig::llama31_8b());
+            c.submit_all(DynamicSonnet::default().generate(40, 30.0, 11));
+            c.run_to_completion();
+            c
+        };
+        let a = run(&legacy);
+        let b = run(&specs);
+        assert_eq!(a.fleet_metrics().max_request_delta(&b.fleet_metrics()), 0.0);
+        assert_eq!(a.events(), b.events());
+        assert_eq!(a.completed(), b.completed());
+    }
+
+    #[test]
+    fn tp_group_serves_a_model_too_big_for_one_card() {
+        // Llama-70B BF16 weights (~141 GB) exceed a single Gaudi-2 HBM
+        // (96 GB); a tp=4 device group shards them to ~35 GB/card and
+        // serves the same trace to completion.
+        let model = LlamaConfig::llama31_70b();
+        assert_eq!(crate::models::llama::kv_token_capacity(&model, DeviceKind::Gaudi2, 1), 0);
+        let blocks = crate::models::llama::kv_block_budget(&model, DeviceKind::Gaudi2, 4, 16);
+        assert!(blocks > 1000, "tp=4 budget: {blocks}");
+        let cfg = ServingConfig {
+            num_blocks: 4096,
+            max_decode_batch: 8,
+            route_policy: RoutePolicy::LeastLoaded,
+            ..Default::default()
+        }
+        .with_replica_specs(vec![ReplicaSpec::new(DeviceKind::Gaudi2, 4)]);
+        let mut c = ClusterSim::new(&cfg, model);
+        assert_eq!(c.spec_of(0), ReplicaSpec::new(DeviceKind::Gaudi2, 4));
+        assert_eq!(c.replica(0).backend().tp, 4);
+        c.submit_all(DynamicSonnet::default().generate(24, 40.0, 13));
+        let s = c.run_to_completion();
+        assert_eq!(s.requests, 24);
+        // The group pays real all-reduce time: its decode cost weight is
+        // cheaper than a (hypothetical) single card but not 4x cheaper.
+        let w1 = SimBackend::decode_cost_weight(&model, DeviceKind::Gaudi2, 1);
+        let w4 = SimBackend::decode_cost_weight(&model, DeviceKind::Gaudi2, 4);
+        assert!(w4 < w1, "sharding must cut the step cost: {w4} vs {w1}");
+        assert!(w4 > w1 / 4.0, "all-reduces keep scaling sub-linear: {w4} vs {}", w1 / 4.0);
     }
 
     #[test]

@@ -328,7 +328,10 @@ impl Backend for SimBackend {
             },
             TraceStepKind::Idle => Activity::default(),
         };
-        power::power(self.device, activity)
+        // A replica is a *device group*: every one of its `tp` cards draws
+        // the activity's power simultaneously, so the group's energy rate
+        // is per-card power x width (x1 is bitwise-inert for tp=1).
+        power::power(self.device, activity) * self.tp as f64
     }
 }
 

@@ -8,8 +8,11 @@
 //!         │                              budgeted shared-prefix blocks
 //!         │                              with eviction) + trace +
 //!         │                              metrics/energy emission
-//!         └── ClusterSim                 N replicas (homogeneous or a
-//!             │                          mixed Gaudi-2/A100 fleet),
+//!         └── ClusterSim                 N replicas, each a *device
+//!             │                          group* (`ReplicaSpec { device,
+//!             │                          tp }`: homogeneous, mixed
+//!             │                          Gaudi-2/A100, or tp-wide
+//!             │                          tensor-parallel groups),
 //!             │                          indexed discrete-event core:
 //!             │                          arrival heap + replica-wake heap
 //!             │                          (O(log) dispatch), lazy arrival
@@ -62,11 +65,21 @@
 //! control bound tail latency under the injected faults (`repro run
 //! chaos-sweep` checks recovery time, goodput dip and conservation).
 //!
+//! Replicas are *device groups* ([`crate::config::ReplicaSpec`]): a `tp`-wide
+//! group shards each transformer block's GEMMs and KV heads across its
+//! cards and pays two all-reduces per block through the unified
+//! collective model (`sim::collective::CollectiveModel`), so KV block
+//! budgets, prefix residency, router cost weights and energy are all
+//! per-group. A tp=1 group is bitwise-equal to the legacy single-device
+//! replica (`repro run tp-sweep` pins parity, monotone sub-linear
+//! scaling, and the 70B HBM-feasibility frontier).
+//!
 //! All block bookkeeping is identical in the simulated and real paths;
 //! the cluster layer turns the per-device reproduction into a
 //! deployment-scale simulator (`repro run cluster`, `repro run
 //! cluster-sweep`, `repro run cache-sweep`, `repro run qos-sweep`,
-//! `repro run sim-speed`, `repro run chaos-sweep`).
+//! `repro run sim-speed`, `repro run chaos-sweep`, `repro run
+//! tp-sweep`).
 
 pub mod autoscale;
 pub mod block_table;

@@ -113,45 +113,86 @@ pub struct CollectiveResult {
     pub utilization: f64,
 }
 
+/// The unified collective cost model: one device kind bound to its node
+/// topology, pricing every collective the fig-10 harness benchmarks AND
+/// the tensor-parallel all-reduces the serving path pays — one type, so
+/// the microbenchmark numbers and the serving simulator can never drift
+/// apart.
+#[derive(Debug, Clone, Copy)]
+pub struct CollectiveModel {
+    kind: DeviceKind,
+    topo: Topology,
+}
+
+impl CollectiveModel {
+    /// The model for one device kind on its native node topology
+    /// (Gaudi-2: 24x100GbE P2P mesh; A100: NVSwitch).
+    pub fn for_device(kind: DeviceKind) -> CollectiveModel {
+        CollectiveModel { kind, topo: Topology::for_device(kind) }
+    }
+
+    pub fn device(&self) -> DeviceKind {
+        self.kind
+    }
+
+    /// The node topology the model prices against.
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// Run `coll` over `n` devices with per-device payload `bytes`.
+    pub fn run(&self, coll: Collective, n: usize, bytes: f64) -> CollectiveResult {
+        assert!((2..=8).contains(&n), "devices {n}");
+        assert!(bytes > 0.0);
+        let topo = self.topo;
+        let (t_bw, steps) = match self.kind {
+            DeviceKind::Gaudi2 => {
+                let (traffic, steps) = coll.mesh_cost(n);
+                let bw = topo.egress_bandwidth(n) * coll.hccl_efficiency();
+                (bytes * traffic / bw, steps)
+            }
+            DeviceKind::A100 => {
+                // Ring pipelines move the same shard traffic as the direct
+                // algorithm but at NVSwitch's flat per-device bandwidth;
+                // ring latency grows with the number of hops.
+                let (traffic, _) = coll.mesh_cost(n.min(8));
+                let traffic = match coll {
+                    // NCCL ring broadcast/reduce forward the full payload.
+                    Collective::Broadcast | Collective::Reduce => 1.0,
+                    _ => traffic,
+                };
+                let bw = topo.egress_bandwidth(n) * coll.nccl_efficiency();
+                (bytes * traffic / bw, (n as f64 - 1.0))
+            }
+        };
+        let time = t_bw + steps * topo.step_latency();
+        let algbw = bytes / time;
+        let busbw = algbw * coll.busbw_factor(n);
+        CollectiveResult { time, algbw, busbw, utilization: busbw / topo.nominal_bandwidth() }
+    }
+
+    /// Time for an AllReduce of `bytes` over `n` devices — the
+    /// tensor-parallel primitive the LLM serving model pays twice per
+    /// transformer block. A single-device "group" communicates nothing.
+    pub fn allreduce_time(&self, n: usize, bytes: f64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        self.run(Collective::AllReduce, n, bytes).time
+    }
+}
+
 /// Run `coll` over `n` devices with per-device payload `bytes` on the node
-/// topology of `kind`.
+/// topology of `kind`. Delegating wrapper over [`CollectiveModel::run`].
 pub fn run(kind: DeviceKind, coll: Collective, n: usize, bytes: f64) -> CollectiveResult {
-    assert!((2..=8).contains(&n), "devices {n}");
-    assert!(bytes > 0.0);
-    let topo = Topology::for_device(kind);
-    let (t_bw, steps) = match kind {
-        DeviceKind::Gaudi2 => {
-            let (traffic, steps) = coll.mesh_cost(n);
-            let bw = topo.egress_bandwidth(n) * coll.hccl_efficiency();
-            (bytes * traffic / bw, steps)
-        }
-        DeviceKind::A100 => {
-            // Ring pipelines move the same shard traffic as the direct
-            // algorithm but at NVSwitch's flat per-device bandwidth; ring
-            // latency grows with the number of hops.
-            let (traffic, _) = coll.mesh_cost(n.min(8));
-            let traffic = match coll {
-                // NCCL ring broadcast/reduce forward the full payload.
-                Collective::Broadcast | Collective::Reduce => 1.0,
-                _ => traffic,
-            };
-            let bw = topo.egress_bandwidth(n) * coll.nccl_efficiency();
-            (bytes * traffic / bw, (n as f64 - 1.0))
-        }
-    };
-    let time = t_bw + steps * topo.step_latency();
-    let algbw = bytes / time;
-    let busbw = algbw * coll.busbw_factor(n);
-    CollectiveResult { time, algbw, busbw, utilization: busbw / topo.nominal_bandwidth() }
+    CollectiveModel::for_device(kind).run(coll, n, bytes)
 }
 
 /// Convenience: time for an AllReduce of `bytes` over `n` devices — the
-/// tensor-parallel primitive used by the LLM serving model.
+/// tensor-parallel primitive used by the LLM serving model. Delegating
+/// wrapper over [`CollectiveModel::allreduce_time`].
 pub fn allreduce_time(kind: DeviceKind, n: usize, bytes: f64) -> f64 {
-    if n <= 1 {
-        return 0.0;
-    }
-    run(kind, Collective::AllReduce, n, bytes).time
+    CollectiveModel::for_device(kind).allreduce_time(n, bytes)
 }
 
 #[cfg(test)]
@@ -217,6 +258,50 @@ mod tests {
     fn allreduce_time_zero_for_single_device() {
         assert_eq!(allreduce_time(DeviceKind::Gaudi2, 1, 1e6), 0.0);
         assert!(allreduce_time(DeviceKind::Gaudi2, 8, 1e6) > 0.0);
+    }
+
+    #[test]
+    fn model_and_free_functions_agree_bitwise() {
+        // The free functions are delegating wrappers: same f64s, always.
+        for kind in [DeviceKind::Gaudi2, DeviceKind::A100] {
+            let m = CollectiveModel::for_device(kind);
+            assert_eq!(m.device(), kind);
+            assert_eq!(m.topology(), Topology::for_device(kind));
+            for coll in ALL_COLLECTIVES {
+                for n in [2usize, 4, 8] {
+                    for bytes in [2e3, 2.0 * MB, 32.0 * MB] {
+                        let a = m.run(coll, n, bytes);
+                        let b = run(kind, coll, n, bytes);
+                        assert_eq!(a.time, b.time);
+                        assert_eq!(a.busbw, b.busbw);
+                        assert_eq!(a.utilization, b.utilization);
+                    }
+                }
+            }
+            for n in 1..=8 {
+                assert_eq!(m.allreduce_time(n, 4.0 * MB), allreduce_time(kind, n, 4.0 * MB));
+            }
+        }
+    }
+
+    #[test]
+    fn busbw_factor_is_monotone_in_participants() {
+        // Every collective's busbw correction factor is nondecreasing in
+        // n (AllReduce: 2(n-1)/n climbs toward 2; single-root factors are
+        // constant 1), and AllReduce's strictly increases.
+        for coll in ALL_COLLECTIVES {
+            for n in 2..8usize {
+                assert!(
+                    coll.busbw_factor(n + 1) >= coll.busbw_factor(n),
+                    "{} factor dropped from n={n} to n={}",
+                    coll.name(),
+                    n + 1
+                );
+            }
+        }
+        for n in 2..8usize {
+            assert!(Collective::AllReduce.busbw_factor(n + 1) > Collective::AllReduce.busbw_factor(n));
+        }
     }
 
     #[test]

@@ -918,3 +918,78 @@ fn allreduce_time_scales_with_payload() {
         t2 > t1 && t2 < 2.5 * t1
     });
 }
+
+#[test]
+fn tp1_replica_spec_fleets_replay_the_legacy_path() {
+    // Property (config + cluster): any random fleet of tp=1 `ReplicaSpec`s
+    // is bitwise-equal to the legacy `Vec<DeviceKind>` fleet on the same
+    // trace — across random device mixes, class mixes, queue caps and
+    // chaos schedules. And when the draw is homogeneous, both must also
+    // replay the scalar `device x replicas` config: a width-1 group IS a
+    // single device, everywhere.
+    use cuda_myth::config::ReplicaSpec;
+    use cuda_myth::serving::chaos::FaultSchedule;
+    use cuda_myth::serving::cluster::ClusterSim;
+    use cuda_myth::serving::qos::ClassSet;
+    forall(
+        89,
+        10,
+        &PairOf(
+            PairOf(VecOf(UsizeIn(0, 1), 4), UsizeIn(8, 24)),
+            PairOf(UsizeIn(1, 1000), UsizeIn(4, 48)),
+        ),
+        |((picks, n), (seed, max_queued))| {
+            let mut devices: Vec<DeviceKind> = picks
+                .iter()
+                .map(|&p| if p == 0 { DeviceKind::Gaudi2 } else { DeviceKind::A100 })
+                .collect();
+            if devices.is_empty() {
+                devices.push(DeviceKind::Gaudi2);
+            }
+            let classes =
+                if seed % 2 == 0 { ClassSet::default() } else { ClassSet::three_tier() };
+            let base = ServingConfig {
+                route_policy: RoutePolicy::LeastLoaded,
+                max_queued: *max_queued,
+                num_blocks: 2048,
+                max_decode_batch: 12,
+                classes,
+                ..Default::default()
+            };
+            let legacy = base.clone().with_fleet(devices.clone());
+            let grouped = base.clone().with_replica_specs(
+                devices.iter().map(|&d| ReplicaSpec::single(d)).collect(),
+            );
+            let schedule =
+                (seed % 3 == 0).then(|| FaultSchedule::random(*seed as u64, devices.len(), 5.0));
+            let run = |cfg: &ServingConfig| {
+                let mut sim = ClusterSim::new(cfg, LlamaConfig::llama31_8b());
+                if let Some(s) = &schedule {
+                    sim.install_chaos(s);
+                }
+                sim.submit_all(
+                    DynamicSonnet::default()
+                        .with_prefix_groups(seed % 4)
+                        .generate(*n, 10.0 + (seed % 40) as f64, *seed as u64),
+                );
+                sim.run_to_completion();
+                sim
+            };
+            let a = run(&legacy);
+            let b = run(&grouped);
+            let mut ok = a.fleet_metrics().max_request_delta(&b.fleet_metrics()) == 0.0
+                && a.requeues == b.requeues
+                && a.events() == b.events()
+                && a.completed() == b.completed();
+            if ok && devices.iter().all(|&d| d == devices[0]) {
+                let mut scalar_cfg = base.clone();
+                scalar_cfg.replicas = devices.len();
+                scalar_cfg.device = devices[0];
+                let c = run(&scalar_cfg);
+                ok = a.fleet_metrics().max_request_delta(&c.fleet_metrics()) == 0.0
+                    && a.events() == c.events();
+            }
+            ok
+        },
+    );
+}
