@@ -33,6 +33,12 @@ device kind from its ``TP sweep [<device>]`` report, with each device's
 ideal linear scaling from its tp=1 point drawn as a dotted reference —
 the gap between the two is the all-reduce overhead.
 
+``BENCH_fleet_budget.json`` (the fixed-card-budget sweep) additionally
+gets one goodput-per-card-vs-fleet-shape figure from its ``Fleet-budget
+goodput frontier`` report: the four 8-card shapes (8x tp1 ... 1x tp8) on
+a categorical x-axis, one line per device kind — the capacity planner's
+view of how to slice a node.
+
 Usage:
     python python/plot_bench.py <artifact-dir> [<older-dir> ...] [--out <plot-dir>]
 
@@ -354,6 +360,63 @@ def plot_tp_scaling(experiment: str, artifact: dict, out_dir: Path) -> Path | No
     return out
 
 
+FLEET_FRONTIER_TITLE = "Fleet-budget goodput frontier"
+FLEET_DEVICE_COL_SUFFIX = " goodput/card"
+
+
+def fleet_frontier_series(artifact: dict) -> tuple[list[str], list[tuple[str, list[float]]]]:
+    """(shape labels, [(device, goodput-per-card values)]) from the
+    fleet-budget frontier report: text rows are the 8-card shapes, each
+    ``<device> goodput/card`` column is one device's curve."""
+    report = next(
+        (r for r in artifact.get("reports", []) if r.get("title") == FLEET_FRONTIER_TITLE),
+        None,
+    )
+    if report is None:
+        return [], []
+    shapes = [
+        row[0] if row and isinstance(row[0], str) else f"row {i}"
+        for i, row in enumerate(report.get("rows", []))
+    ]
+    series = [
+        (name[: -len(FLEET_DEVICE_COL_SUFFIX)], column_values(report, idx))
+        for idx, name, _unit in numeric_columns(report)
+        if name.endswith(FLEET_DEVICE_COL_SUFFIX)
+    ]
+    return shapes, series
+
+
+def plot_fleet_budget(experiment: str, artifact: dict, out_dir: Path) -> Path | None:
+    """Goodput-per-card vs fleet shape: the four ways to slice the 8-card
+    node on a categorical x-axis, one line per device kind. Infeasible
+    shapes (tp=1 for 70B) sit at zero — the visible cliff."""
+    shapes, series = fleet_frontier_series(artifact)
+    if len(shapes) < 2 or not series:
+        return None
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    fig, ax = plt.subplots(figsize=(7, 4.5))
+    xs = list(range(len(shapes)))
+    for device, ys in series:
+        ax.plot(xs, ys, marker="o", label=device)
+    ax.set_xticks(xs)
+    ax.set_xticklabels(shapes)
+    ax.set_xlabel("fleet shape (replicas x tensor-parallel width, 8 cards total)")
+    ax.set_ylabel("goodput per card [req/s]")
+    ax.set_title(f"{experiment}: goodput/card vs fleet shape (heavy load)"[:100])
+    ax.legend(fontsize=8, title="device")
+    ax.grid(True, alpha=0.3)
+    fig.tight_layout()
+    out = out_dir / f"{experiment}__fleet-shape-frontier.png"
+    fig.savefig(out, dpi=110)
+    plt.close(fig)
+    return out
+
+
 def plot_sim_speed_trend(artifact_dirs: list[Path], out_dir: Path) -> Path | None:
     """Events/sec trend for the sim-speed self-benchmark: one line per
     event loop (row label of the throughput report) across the given
@@ -440,6 +503,9 @@ def plot_artifact(path: Path, out_dir: Path) -> list[Path]:
     scaling = plot_tp_scaling(experiment, artifact, out_dir)
     if scaling is not None:
         written.append(scaling)
+    frontier = plot_fleet_budget(experiment, artifact, out_dir)
+    if frontier is not None:
+        written.append(frontier)
     return written
 
 

@@ -405,6 +405,65 @@ def test_no_scaling_figure_without_tp_reports(tmp_path):
     assert not (out_dir / "cache_sweep__tp-scaling.png").exists()
 
 
+def fleet_budget_artifact():
+    shapes = ["8x tp1", "4x tp2", "2x tp4", "1x tp8"]
+    per_card = {"Gaudi-2": [0.0, 0.42, 0.35, 0.22], "A100": [0.0, 0.38, 0.31, 0.2]}
+    return {
+        "schema": "cuda-myth/experiment-v1",
+        "experiment": "fleet_budget",
+        "title": "synthetic fleet budget",
+        "params": {"seed": 47},
+        "reports": [
+            {
+                "title": "Fleet-budget goodput frontier",
+                "columns": ["shape", "Gaudi-2 goodput/card", "A100 goodput/card"],
+                "rows": [
+                    [shape, val(per_card["Gaudi-2"][i], "req/s"), val(per_card["A100"][i], "req/s")]
+                    for i, shape in enumerate(shapes)
+                ],
+                "notes": [],
+            },
+            {
+                "title": "Fleet-budget derived claims",
+                "columns": ["claim", "value"],
+                "rows": [["cards conserved", val(0.0, "count")]],
+                "notes": [],
+            },
+        ],
+        "expectations": [],
+    }
+
+
+def test_fleet_frontier_series_parsed():
+    shapes, series = plot_bench.fleet_frontier_series(fleet_budget_artifact())
+    assert shapes == ["8x tp1", "4x tp2", "2x tp4", "1x tp8"]
+    assert [device for device, _ in series] == ["Gaudi-2", "A100"]
+    device, ys = series[0]
+    assert ys[0] == 0.0  # the infeasible tp=1 cliff
+    assert ys[1] == max(ys)
+
+
+def test_fleet_budget_artifact_gets_frontier_figure(tmp_path):
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_fleet_budget.json").write_text(json.dumps(fleet_budget_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    frontier = out_dir / "fleet_budget__fleet-shape-frontier.png"
+    assert frontier.exists(), sorted(out_dir.glob("*.png"))
+    assert frontier.stat().st_size > 1000
+
+
+def test_no_frontier_figure_without_fleet_report(tmp_path):
+    art_dir = tmp_path / "bench"
+    art_dir.mkdir()
+    (art_dir / "BENCH_cache_sweep.json").write_text(json.dumps(synthetic_artifact()))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([str(art_dir), "--out", str(out_dir)]) == 0
+    assert plot_bench.fleet_frontier_series(synthetic_artifact()) == ([], [])
+    assert not (out_dir / "cache_sweep__fleet-shape-frontier.png").exists()
+
+
 def test_slugify():
     assert plot_bench.slugify("Fig 17(d): SLO knee / sweep") == "fig-17-d-slo-knee-sweep"
     assert plot_bench.slugify("***") == "report"

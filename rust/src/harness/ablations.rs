@@ -59,7 +59,7 @@ impl Experiment for AblMme {
         vec![r]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![Expectation::new(
             "abl-mme.skinny_gain",
             "the memory roofline caps reconfiguration gains at 1.15-2x on skinny N",
@@ -199,7 +199,7 @@ impl Experiment for ExtGaudi3 {
         vec![r]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![Expectation::new(
             "ext-gaudi3.strictly_better",
             "every projected Gaudi-3 metric improves on Gaudi-2",
@@ -248,7 +248,7 @@ impl Experiment for ExtTraining {
         vec![r]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![Expectation::new(
             "ext-training.compute_bound_advantage",
             "the MME advantage carries over to training (speedup > 1x on average)",
@@ -308,7 +308,7 @@ mod tests {
                 continue;
             }
             let reports = e.run(&e.params());
-            for x in e.expectations() {
+            for x in e.expectations(&e.params()) {
                 let res = x.evaluate(&reports);
                 assert!(res.pass, "{}: {}", res.id, res.detail);
             }

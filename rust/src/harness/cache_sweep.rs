@@ -26,6 +26,7 @@ use crate::serving::router::RoutePolicy;
 use crate::serving::trace::TraceStepKind;
 use crate::serving::PREFIX_HIT_DISCOUNT;
 use crate::util::fasthash::FastMap;
+use crate::util::par;
 use crate::workload::DynamicSonnet;
 
 /// KV pool per replica (ample: capacity effects must come from the
@@ -214,12 +215,18 @@ impl Experiment for CacheSweep {
 
     fn run(&self, params: &Params) -> Vec<Report> {
         let k = Knobs::from(params);
+        // Fan the flattened (skew, capacity) grid across the worker pool;
+        // submission-ordered assembly keeps the artifact byte-identical
+        // at any --jobs value.
+        let all_points = par::par_map_indexed(SKEWS.len() * CAPACITIES.len(), |idx| {
+            run_point(&k, SKEWS[idx / CAPACITIES.len()].1, CAPACITIES[idx % CAPACITIES.len()])
+        });
+        let mut point_chunks = all_points.chunks_exact(CAPACITIES.len());
         let mut reports = Vec::new();
-        let mut curves: Vec<(&str, Vec<SweepPoint>)> = Vec::new();
+        let mut curves: Vec<(&str, &[SweepPoint])> = Vec::new();
 
         for (label, groups) in SKEWS {
-            let points: Vec<SweepPoint> =
-                CAPACITIES.iter().map(|&cap| run_point(&k, groups, cap)).collect();
+            let points: &[SweepPoint] = point_chunks.next().expect("one chunk per skew");
             let mut r = Report::new(format!(
                 "Prefix-cache capacity sweep [{label}]: {NUM_BLOCKS}-block pool, \
                  prefix-affinity router"
@@ -236,7 +243,7 @@ impl Experiment for CacheSweep {
                 "goodput req/s",
                 "J/tok",
             ]);
-            for p in &points {
+            for p in points {
                 let cap_label = if p.capacity == 0 {
                     "off".to_string()
                 } else if p.capacity >= NUM_BLOCKS {
@@ -278,7 +285,7 @@ impl Experiment for CacheSweep {
                     monotonicity_violations += 1;
                 }
             }
-            for p in points {
+            for p in points.iter() {
                 conservation += p.submitted.abs_diff(p.completed);
                 if p.capacity >= NUM_BLOCKS {
                     unbounded_evictions += p.evictions;
@@ -317,7 +324,7 @@ impl Experiment for CacheSweep {
         reports
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "cache_sweep.hit_rate_monotone",
@@ -432,7 +439,7 @@ mod tests {
         // The full default grid is the artifact CI gates on; every
         // expectation must hold there.
         let reports = run();
-        for e in CacheSweep.expectations() {
+        for e in CacheSweep.expectations(&CacheSweep.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

@@ -40,6 +40,7 @@ use crate::serving::cluster::ClusterSim;
 use crate::serving::metrics::RecoveryMetrics;
 use crate::serving::qos::ClassSet;
 use crate::serving::router::RoutePolicy;
+use crate::util::par;
 use crate::workload::{DynamicSonnet, OpenLoopTrace, RateProcess};
 
 /// (label, per-replica devices) — the two fleet shapes every schedule
@@ -268,11 +269,19 @@ impl Experiment for ChaosSweep {
         let mut reports = Vec::new();
         let mut all: Vec<ChaosPoint> = Vec::new();
 
+        // Fan the flattened (fleet, schedule) grid across the worker
+        // pool — each point is an independent seeded run (including its
+        // twin determinism re-run); submission-ordered assembly keeps
+        // the artifact byte-identical at any --jobs value.
+        let grid = par::par_map_indexed(FLEETS.len() * scheds.len(), |idx| {
+            let (label, s, crowd) = &scheds[idx % scheds.len()];
+            (*label, run_point(&k, &FLEETS[idx / scheds.len()].1, s, *crowd))
+        });
+        let mut grid_iter = grid.into_iter();
+
         for (fleet_label, fleet) in FLEETS {
-            let points: Vec<(&str, ChaosPoint)> = scheds
-                .iter()
-                .map(|(label, s, crowd)| (*label, run_point(&k, &fleet, s, *crowd)))
-                .collect();
+            let points: Vec<(&str, ChaosPoint)> =
+                grid_iter.by_ref().take(scheds.len()).collect();
 
             let mut r = Report::new(format!(
                 "Chaos schedule sweep [{fleet_label}]: {} replicas, three-tier classes",
@@ -428,7 +437,7 @@ impl Experiment for ChaosSweep {
         reports
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "chaos_sweep.conservation",
@@ -588,7 +597,7 @@ mod tests {
         // The full default grid is the artifact CI gates on; every
         // expectation must hold there.
         let reports = run();
-        for e in ChaosSweep.expectations() {
+        for e in ChaosSweep.expectations(&ChaosSweep.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

@@ -272,7 +272,7 @@ impl Experiment for Cluster {
         vec![sweep, iso, claims]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "cluster.bitwise_parity",
@@ -356,7 +356,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Cluster.expectations() {
+        for e in Cluster.expectations(&Cluster.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

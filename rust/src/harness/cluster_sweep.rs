@@ -15,6 +15,7 @@ use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
 use crate::serving::cluster::ClusterSim;
 use crate::serving::qos::ClassSet;
 use crate::serving::router::RoutePolicy;
+use crate::util::par;
 use crate::workload::OpenLoopTrace;
 
 /// Replicas per fleet (every mix is a 4-replica deployment, so curves
@@ -169,13 +170,21 @@ impl Experiment for ClusterSweep {
     fn run(&self, params: &Params) -> Vec<Report> {
         let k = Knobs::from(params);
         let loads = k.loads();
+        // Every (mix, load) point is an independent seeded simulation:
+        // fan the flattened grid across the worker pool. Results come
+        // back in submission order, so the reports (and the BENCH
+        // artifact) are byte-identical at any --jobs value.
+        let all_points = par::par_map_indexed(MIXES.len() * loads.len(), |idx| {
+            run_point(&k, MIXES[idx / loads.len()].1, loads[idx % loads.len()])
+        });
+        let mut point_chunks = all_points.chunks_exact(loads.len());
+
         let mut reports = Vec::new();
         // (mix label, per-load points), in MIXES order.
-        let mut curves: Vec<(&str, Vec<SweepPoint>)> = Vec::new();
+        let mut curves: Vec<(&str, &[SweepPoint])> = Vec::new();
 
-        for (label, gaudi) in MIXES {
-            let points: Vec<SweepPoint> =
-                loads.iter().map(|&rate| run_point(&k, gaudi, rate)).collect();
+        for (label, _gaudi) in MIXES {
+            let points: &[SweepPoint] = point_chunks.next().expect("one chunk per mix");
             let mut r = Report::new(format!(
                 "Cluster load sweep [{label}]: {FLEET_SIZE} replicas, prefix-affinity \
                  router (SLO: TTFT <= {}s, TPOT <= {}s)",
@@ -192,7 +201,7 @@ impl Experiment for ClusterSweep {
                 "SLO attain",
                 "requeues",
             ]);
-            for p in &points {
+            for p in points {
                 r.row(vec![
                     Cell::text(format!("{:.0} rps", p.offered_rps)),
                     Cell::val(p.offered_rps, Unit::ReqPerSec),
@@ -277,7 +286,7 @@ impl Experiment for ClusterSweep {
         reports
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "cluster_sweep.mixed_homogeneous_parity",
@@ -374,7 +383,7 @@ mod tests {
         // The full default grid is the artifact CI gates on; every
         // expectation must hold there.
         let reports = run();
-        for e in ClusterSweep.expectations() {
+        for e in ClusterSweep.expectations(&ClusterSweep.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

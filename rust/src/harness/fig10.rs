@@ -64,7 +64,7 @@ impl Experiment for Fig10 {
         out
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![Expectation::new(
             "fig10.gaudi_wins_five_of_six",
             "Gaudi-2 wins 5 of the 6 collectives at 8 devices / 32 MiB",
@@ -95,7 +95,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig10.expectations() {
+        for e in Fig10.expectations(&Fig10.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

@@ -53,7 +53,7 @@ impl Experiment for Fig11 {
         out
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "fig11.rm1_avg_speedup",
@@ -99,7 +99,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig11.expectations() {
+        for e in Fig11.expectations(&Fig11.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

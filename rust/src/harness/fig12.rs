@@ -73,7 +73,7 @@ impl Experiment for Fig12 {
         out
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "fig12.8b_single_device_speedup",
@@ -130,7 +130,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig12.expectations() {
+        for e in Fig12.expectations(&Fig12.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

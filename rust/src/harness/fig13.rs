@@ -63,7 +63,7 @@ impl Experiment for Fig13 {
         out
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "fig13.8b_energy_efficiency",
@@ -108,7 +108,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig13.expectations() {
+        for e in Fig13.expectations(&Fig13.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

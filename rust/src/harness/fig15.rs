@@ -70,7 +70,7 @@ impl Experiment for Fig15 {
         out
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "fig15.batched_avg_utilization",
@@ -111,7 +111,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig15.expectations() {
+        for e in Fig15.expectations(&Fig15.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

@@ -100,7 +100,7 @@ impl Experiment for Fig17 {
         out
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "fig17.opt_over_base",
@@ -170,7 +170,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig17.expectations() {
+        for e in Fig17.expectations(&Fig17.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

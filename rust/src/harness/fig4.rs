@@ -48,7 +48,7 @@ impl Experiment for Fig4 {
         vec![r]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "fig4.peak_tflops",
@@ -92,7 +92,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig4.expectations() {
+        for e in Fig4.expectations(&Fig4.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

@@ -64,7 +64,7 @@ impl Experiment for Fig5 {
         vec![sq, irr, summary]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "fig5.avg_gap",
@@ -101,7 +101,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig5.expectations() {
+        for e in Fig5.expectations(&Fig5.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

@@ -67,7 +67,7 @@ impl Experiment for Fig7 {
         vec![geo, util, cmp]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![Expectation::new(
             "fig7.reconfig_peak_benefit",
             "configurability buys a double-digit utilization improvement on skinny N",
@@ -103,7 +103,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig7.expectations() {
+        for e in Fig7.expectations(&Fig7.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

@@ -102,7 +102,7 @@ impl Experiment for Fig8 {
         vec![a, b, c, d, sat]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "fig8.triad_weak_scaling",
@@ -148,7 +148,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig8.expectations() {
+        for e in Fig8.expectations(&Fig8.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

@@ -77,7 +77,7 @@ impl Experiment for Fig9 {
         vec![gather, scatter, summary]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "fig9.gaudi_coarse",
@@ -127,7 +127,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Fig9.expectations() {
+        for e in Fig9.expectations(&Fig9.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

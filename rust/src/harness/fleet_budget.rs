@@ -1,0 +1,500 @@
+//! Fleet-budget experiment: the paper's sizing question asked the way a
+//! capacity planner would — **you have exactly eight cards per node; how
+//! do you slice them?** The same 8-card budget is spent four ways
+//! (8 × tp1, 4 × tp2, 2 × tp4, 1 × tp8 device groups), on both Gaudi-2
+//! and A100, under three offered loads against one scalar SLO, all
+//! serving Llama-3.1-70B. Each feasible (shape, device, load) point runs
+//! a real [`ClusterSim`] deployment; HBM-infeasible shapes (a single
+//! card cannot hold the 70B shard) are reported analytically and never
+//! simulated. Grid points fan across the [`crate::util::par`] worker
+//! pool; submission-ordered assembly keeps `BENCH_fleet_budget.json`
+//! byte-identical at any `--jobs` value.
+//!
+//! The derived claims pinned by `repro run fleet-budget --check`:
+//!
+//! - **Card conservation**: every shape spends exactly the 8-card
+//!   budget — `replicas x tp = 8` (EqExact 0 violations).
+//! - **tp=1 infeasible**: no single card fits the 70B shard on either
+//!   device, so the 8 × tp1 shape never serves (EqExact 0 fits).
+//! - **Wide groups serve**: every tp ≥ 2 shape is HBM-feasible on both
+//!   devices (EqExact 0 infeasible).
+//! - **TTFT favors wide groups at light load**: with queueing out of
+//!   the picture, the 1 × tp8 group's sharded prefill beats the
+//!   4 × tp2 groups' p99 TTFT on both devices (EqExact 0 violations;
+//!   desk-estimated ordering — recalibrate on real hardware).
+//! - **Throughput favors replicas at heavy load**: sub-linear TP
+//!   scaling means 4 × tp2 out-serves 1 × tp8 once the node saturates
+//!   (Ge 1.0 tok/s ratio; desk-estimated — recalibrate on hardware).
+//! - **Energy ledger complete**: every simulated point prices its good
+//!   tokens — no feasible cell is missing a J/good-token entry
+//!   (EqExact 0 missing).
+//!
+//! The "Fleet-budget goodput frontier" report (rows = shapes, one
+//! goodput-per-card column per device at the heavy load) is the typed
+//! contract `python/plot_bench.py` renders as the fleet-shape figure.
+
+use crate::config::{DeviceKind, ReplicaSpec, ServingConfig};
+use crate::harness::{Experiment, Params};
+use crate::models::llama::{self, LlamaConfig};
+use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
+use crate::serving::cluster::ClusterSim;
+use crate::serving::qos::ClassSet;
+use crate::serving::router::RoutePolicy;
+use crate::util::par;
+use crate::workload::OpenLoopTrace;
+
+/// The node's card budget (one HLS-Gaudi-2 or DGX A100 node).
+const CARD_BUDGET: usize = 8;
+
+/// (label, replicas, tp) — the four ways to slice eight cards.
+const SHAPES: [(&str, usize, usize); 4] =
+    [("8x tp1", 8, 1), ("4x tp2", 4, 2), ("2x tp4", 2, 4), ("1x tp8", 1, 8)];
+
+const DEVICES: [DeviceKind; 2] = [DeviceKind::Gaudi2, DeviceKind::A100];
+
+struct Knobs {
+    light_rps: f64,
+    mid_rps: f64,
+    heavy_rps: f64,
+    duration_s: f64,
+    slo_ttft_s: f64,
+    slo_tpot_s: f64,
+    block_size: usize,
+    seed: u64,
+}
+
+impl Knobs {
+    fn from(params: &Params) -> Knobs {
+        Knobs {
+            light_rps: params.get_or("light_rps", 1.0),
+            mid_rps: params.get_or("mid_rps", 3.0),
+            heavy_rps: params.get_or("heavy_rps", 6.0),
+            duration_s: params.get_or("duration_s", 4.0),
+            slo_ttft_s: params.get_or("slo_ttft_s", 6.0),
+            slo_tpot_s: params.get_or("slo_tpot_s", 0.5),
+            block_size: params.get_or("block_size", 128.0) as usize,
+            seed: params.get_or("seed", 47.0) as u64,
+        }
+    }
+
+    fn loads(&self) -> [f64; 3] {
+        [self.light_rps, self.mid_rps, self.heavy_rps]
+    }
+
+    fn classes(&self) -> ClassSet {
+        ClassSet::scalar(self.slo_ttft_s, self.slo_tpot_s)
+    }
+}
+
+/// One (shape, device, load) grid point. Infeasible shapes carry the
+/// analytic sizing verdict and zeros everywhere else.
+struct FleetPoint {
+    shape: &'static str,
+    replicas: usize,
+    tp: usize,
+    feasible: bool,
+    load_rps: f64,
+    submitted: usize,
+    completed: usize,
+    goodput_rps: f64,
+    attainment: f64,
+    p99_ttft: f64,
+    tps: f64,
+    /// `None` when the simulator produced no energy entry for the
+    /// point's good tokens (claim: never happens on feasible points).
+    j_per_good: Option<f64>,
+}
+
+fn infeasible_point(shape: &'static str, replicas: usize, tp: usize, load: f64) -> FleetPoint {
+    FleetPoint {
+        shape,
+        replicas,
+        tp,
+        feasible: false,
+        load_rps: load,
+        submitted: 0,
+        completed: 0,
+        goodput_rps: 0.0,
+        attainment: 0.0,
+        p99_ttft: 0.0,
+        tps: 0.0,
+        j_per_good: None,
+    }
+}
+
+fn run_point(
+    k: &Knobs,
+    cfg: &LlamaConfig,
+    kind: DeviceKind,
+    shape: &'static str,
+    replicas: usize,
+    tp: usize,
+    load: f64,
+) -> FleetPoint {
+    // A shard that does not fit (plus one block of KV) never boots:
+    // report the sizing verdict analytically instead of simulating.
+    if !llama::hbm_feasible(cfg, kind, tp, k.block_size) {
+        return infeasible_point(shape, replicas, tp, load);
+    }
+    let classes = k.classes();
+    let budget = llama::kv_block_budget(cfg, kind, tp, k.block_size);
+    let serving = ServingConfig {
+        num_blocks: budget.min(8192),
+        max_decode_batch: 8,
+        route_policy: RoutePolicy::LeastLoaded,
+        classes: classes.clone(),
+        ..Default::default()
+    }
+    .with_replica_specs(vec![ReplicaSpec::new(kind, tp); replicas]);
+    let mut sim = ClusterSim::new(&serving, *cfg);
+    let trace = OpenLoopTrace::new(load, k.duration_s).generate(k.seed);
+    let submitted = trace.len();
+    sim.submit_all(trace);
+    let s = sim.run_to_completion();
+    let fleet = sim.fleet_metrics();
+    FleetPoint {
+        shape,
+        replicas,
+        tp,
+        feasible: true,
+        load_rps: load,
+        submitted,
+        completed: sim.completed(),
+        goodput_rps: fleet.goodput(&classes),
+        attainment: fleet.attainment(&classes),
+        p99_ttft: s.p99_ttft,
+        tps: s.throughput_tps,
+        j_per_good: fleet.energy_per_good_token(&classes),
+    }
+}
+
+pub struct FleetBudget;
+
+impl Experiment for FleetBudget {
+    fn id(&self) -> &'static str {
+        "fleet_budget"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fleet budget: slicing 8 cards into 8x tp1 / 4x tp2 / 2x tp4 / 1x tp8 for Llama-70B"
+    }
+
+    fn params(&self) -> Params {
+        Params::new()
+            .with("light_rps", 1.0)
+            .with("mid_rps", 3.0)
+            .with("heavy_rps", 6.0)
+            .with("duration_s", 4.0)
+            .with("slo_ttft_s", 6.0)
+            .with("slo_tpot_s", 0.5)
+            .with("block_size", 128.0)
+            .with("seed", 47.0)
+    }
+
+    fn run(&self, params: &Params) -> Vec<Report> {
+        let k = Knobs::from(params);
+        let cfg = LlamaConfig::llama31_70b();
+        let loads = k.loads();
+        let mut reports = Vec::new();
+
+        // Flattened (device, shape, load) grid fanned across the worker
+        // pool; assembly order is the nesting order below, so the
+        // artifact is byte-identical at any --jobs value.
+        let per_device = SHAPES.len() * loads.len();
+        let grid = par::par_map_indexed(DEVICES.len() * per_device, |idx| {
+            let (shape, replicas, tp) = SHAPES[(idx % per_device) / loads.len()];
+            run_point(
+                &k,
+                &cfg,
+                DEVICES[idx / per_device],
+                shape,
+                replicas,
+                tp,
+                loads[idx % loads.len()],
+            )
+        });
+        let mut grid_iter = grid.into_iter();
+        // (device, points in shape-major, load-minor order).
+        let mut panels: Vec<(DeviceKind, Vec<FleetPoint>)> = Vec::new();
+
+        for kind in DEVICES {
+            let points: Vec<FleetPoint> = grid_iter.by_ref().take(per_device).collect();
+            let mut r = Report::new(format!(
+                "Fleet budget [{}]: {}-card shapes serving {}",
+                kind.name(),
+                CARD_BUDGET,
+                cfg.name
+            ));
+            r.header(&[
+                "shape",
+                "cards",
+                "fits",
+                "offered rps",
+                "submitted",
+                "served",
+                "goodput",
+                "goodput/card",
+                "attainment",
+                "p99 ttft",
+                "tok/s",
+                "J/good tok",
+            ]);
+            for p in &points {
+                r.row(vec![
+                    Cell::text(p.shape),
+                    Cell::count(p.replicas * p.tp),
+                    Cell::count(usize::from(p.feasible)),
+                    Cell::val(p.load_rps, Unit::ReqPerSec),
+                    Cell::count(p.submitted),
+                    Cell::count(p.completed),
+                    Cell::val(p.goodput_rps, Unit::ReqPerSec),
+                    Cell::val(p.goodput_rps / CARD_BUDGET as f64, Unit::ReqPerSec),
+                    Cell::val(p.attainment, Unit::Percent),
+                    Cell::val(p.p99_ttft, Unit::Seconds),
+                    Cell::val(p.tps, Unit::TokPerSec),
+                    Cell::val(p.j_per_good.unwrap_or(-1.0), Unit::JoulePerTok),
+                ]);
+            }
+            r.note(format!(
+                "open-loop trace, {}s at each load (seed {}); scalar SLO ttft<={}s, \
+                 tpot<={}s; 'fits'=0 rows are HBM-infeasible and reported analytically \
+                 (never simulated); J/good tok = -1 marks a missing energy entry",
+                k.duration_s, k.seed, k.slo_ttft_s, k.slo_tpot_s
+            ));
+            reports.push(r);
+            panels.push((kind, points));
+        }
+
+        // Frontier: goodput per card at the heavy load — the plot
+        // contract for python/plot_bench.py's fleet-shape figure.
+        let heavy_of = |points: &[FleetPoint], shape: &str| {
+            points
+                .iter()
+                .find(|p| p.shape == shape && p.load_rps == k.heavy_rps)
+                .map(|p| p.goodput_rps / CARD_BUDGET as f64)
+                .unwrap_or(0.0)
+        };
+        let mut fr = Report::new("Fleet-budget goodput frontier");
+        let headers: Vec<String> = std::iter::once("shape".to_string())
+            .chain(DEVICES.iter().map(|d| format!("{} goodput/card", d.name())))
+            .collect();
+        fr.header(&headers.iter().map(String::as_str).collect::<Vec<_>>());
+        for (shape, _, _) in SHAPES {
+            let mut row = vec![Cell::text(shape)];
+            for (_, points) in &panels {
+                row.push(Cell::val(heavy_of(points, shape), Unit::ReqPerSec));
+            }
+            fr.row(row);
+        }
+        fr.note(format!(
+            "SLO-compliant completions per second per card at the heavy load \
+             ({} req/s); infeasible shapes score 0",
+            k.heavy_rps
+        ));
+        reports.push(fr);
+
+        // Derived claims.
+        let all: Vec<&FleetPoint> =
+            panels.iter().flat_map(|(_, ps)| ps.iter()).collect();
+        let budget_violations =
+            all.iter().filter(|p| p.replicas * p.tp != CARD_BUDGET).count();
+        let tp1_fits = all.iter().filter(|p| p.tp == 1 && p.feasible).count();
+        let wide_infeasible = all.iter().filter(|p| p.tp >= 2 && !p.feasible).count();
+        let ttft_violations = panels
+            .iter()
+            .filter(|(_, ps)| {
+                let at = |shape: &str| {
+                    ps.iter()
+                        .find(|p| p.shape == shape && p.load_rps == k.light_rps)
+                        .map(|p| p.p99_ttft)
+                        .unwrap_or(0.0)
+                };
+                at("1x tp8") > at("4x tp2")
+            })
+            .count();
+        let heavy_tps = |points: &[FleetPoint], shape: &str| {
+            points
+                .iter()
+                .find(|p| p.shape == shape && p.load_rps == k.heavy_rps)
+                .map(|p| p.tps)
+                .unwrap_or(0.0)
+        };
+        let replica_ratio = panels
+            .iter()
+            .map(|(_, ps)| heavy_tps(ps, "4x tp2") / heavy_tps(ps, "1x tp8"))
+            .fold(f64::INFINITY, f64::min);
+        let energy_missing =
+            all.iter().filter(|p| p.feasible && p.j_per_good.is_none()).count();
+
+        let mut claims = Report::new("Fleet-budget derived claims");
+        claims.header(&["claim", "value"]);
+        claims.row(vec![
+            Cell::text("card budget violations over the grid"),
+            Cell::count(budget_violations),
+        ]);
+        claims.row(vec![
+            Cell::text("grid points serving 70B at tp=1"),
+            Cell::count(tp1_fits),
+        ]);
+        claims.row(vec![
+            Cell::text("infeasible grid points among tp>=2 shapes"),
+            Cell::count(wide_infeasible),
+        ]);
+        claims.row(vec![
+            Cell::text("devices where 1x tp8 p99 TTFT exceeds 4x tp2 at light load"),
+            Cell::count(ttft_violations),
+        ]);
+        claims.row(vec![
+            Cell::text("min 4x tp2 / 1x tp8 tok/s ratio at heavy load"),
+            Cell::val(replica_ratio, Unit::Ratio),
+        ]);
+        claims.row(vec![
+            Cell::text("feasible grid points missing a J/good-token entry"),
+            Cell::count(energy_missing),
+        ]);
+        claims.note(
+            "same 8-card budget every row; TTFT-ordering and tok/s-ratio \
+             thresholds are desk estimates from the analytic roofline — \
+             recalibrate on real hardware",
+        );
+        reports.push(claims);
+
+        reports
+    }
+
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
+        vec![
+            Expectation::new(
+                "fleet_budget.cards_conserved",
+                "every fleet shape spends exactly the 8-card budget",
+                Selector::cell(
+                    "Fleet-budget derived claims",
+                    "card budget violations over the grid",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "fleet_budget.tp1_infeasible_70b",
+                "no single card fits Llama-70B: the 8x tp1 shape never serves",
+                Selector::cell(
+                    "Fleet-budget derived claims",
+                    "grid points serving 70B at tp=1",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "fleet_budget.wide_groups_serve",
+                "every tp>=2 shape is HBM-feasible on both devices",
+                Selector::cell(
+                    "Fleet-budget derived claims",
+                    "infeasible grid points among tp>=2 shapes",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "fleet_budget.ttft_favors_wide_groups",
+                "at light load the 1x tp8 group's sharded prefill beats 4x tp2 p99 TTFT",
+                Selector::cell(
+                    "Fleet-budget derived claims",
+                    "devices where 1x tp8 p99 TTFT exceeds 4x tp2 at light load",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "fleet_budget.throughput_favors_replicas",
+                "at heavy load 4x tp2 out-serves 1x tp8: sub-linear TP scaling",
+                Selector::cell(
+                    "Fleet-budget derived claims",
+                    "min 4x tp2 / 1x tp8 tok/s ratio at heavy load",
+                    "value",
+                ),
+                Check::Ge(1.0),
+            ),
+            Expectation::new(
+                "fleet_budget.energy_ledger_complete",
+                "every simulated point prices its good tokens",
+                Selector::cell(
+                    "Fleet-budget derived claims",
+                    "feasible grid points missing a J/good-token entry",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+        ]
+    }
+}
+
+/// Run with default params (convenience for tests and library callers).
+pub fn run() -> Vec<Report> {
+    FleetBudget.run(&FleetBudget.params())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_params() -> Params {
+        // Shorter trace keeps the unit-test grid quick; the full default
+        // grid runs under `repro run fleet-budget` and CI.
+        FleetBudget
+            .params()
+            .with("duration_s", 2.0)
+            .with("heavy_rps", 4.0)
+    }
+
+    #[test]
+    fn one_report_per_device_plus_frontier_and_claims() {
+        let reports = FleetBudget.run(&small_params());
+        assert_eq!(reports.len(), DEVICES.len() + 2);
+        for (i, kind) in DEVICES.iter().enumerate() {
+            assert!(reports[i].title().contains(kind.name()), "report {i} mislabeled");
+            assert_eq!(reports[i].num_rows(), SHAPES.len() * 3);
+        }
+        let frontier = &reports[DEVICES.len()];
+        assert_eq!(frontier.num_rows(), SHAPES.len());
+    }
+
+    #[test]
+    fn every_shape_spends_the_whole_budget() {
+        for (_, replicas, tp) in SHAPES {
+            assert_eq!(replicas * tp, CARD_BUDGET);
+        }
+    }
+
+    #[test]
+    fn tp1_is_reported_analytically_not_simulated() {
+        let k = Knobs::from(&small_params());
+        let cfg = LlamaConfig::llama31_70b();
+        for kind in DEVICES {
+            let p = run_point(&k, &cfg, kind, "8x tp1", 8, 1, k.light_rps);
+            assert!(!p.feasible, "{}: 70B must not fit one card", kind.name());
+            assert_eq!(p.submitted, 0, "infeasible shapes must skip the sim");
+        }
+    }
+
+    #[test]
+    fn feasible_points_serve_and_price_their_tokens() {
+        let k = Knobs::from(&small_params());
+        let cfg = LlamaConfig::llama31_70b();
+        let p = run_point(&k, &cfg, DeviceKind::Gaudi2, "2x tp4", 2, 4, k.light_rps);
+        assert!(p.feasible);
+        assert!(p.submitted > 0 && p.completed == p.submitted);
+        assert!(p.tps > 0.0);
+        assert!(p.j_per_good.is_some(), "energy ledger must cover the point");
+    }
+
+    #[test]
+    fn expectations_pass_on_default_grid() {
+        // The full default grid is the artifact CI gates on; every
+        // expectation must hold there.
+        let reports = run();
+        for e in FleetBudget.expectations(&FleetBudget.params()) {
+            let res = e.evaluate(&reports);
+            assert!(res.pass, "{}: {}", res.id, res.detail);
+        }
+    }
+}

@@ -4,6 +4,16 @@
 //! typed [`Report`]s (raw numbers + units, rendered by `util::table`,
 //! exported as JSON artifacts), and carries the paper's headline claims
 //! as typed [`Expectation`]s checked by `repro run --check`.
+//!
+//! Experiments are `Sync` and every grid point is a seeded, deterministic
+//! simulation, so the harness runs them through the dependency-free
+//! executor in [`crate::util::par`]: `repro run all --jobs N` fans
+//! experiments across a work pool via [`run_all_isolated`] (results
+//! assembled in registry order, one panicking experiment never poisons
+//! its siblings' artifacts), and the big sweeps fan their own grid
+//! points the same way. The per-experiment `BENCH_*.json` artifacts are
+//! byte-identical at any `--jobs` value — jobs-invariance — leaving
+//! [`wall_report`]'s timing table as the only jobs-dependent output.
 
 pub mod ablations;
 pub mod cache_sweep;
@@ -21,13 +31,16 @@ pub mod fig5;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod fleet_budget;
+pub mod par_speed;
 pub mod qos_sweep;
 pub mod sim_speed;
 pub mod table1;
 pub mod tp_sweep;
 
-use crate::report::{Expectation, ExpectationResult, Report};
+use crate::report::{Cell, Expectation, ExpectationResult, Report, Unit};
 use crate::util::json::Json;
+use crate::util::par;
 
 /// Named numeric parameters of an experiment (sweep rates, seeds, SLOs).
 /// Declared by `Experiment::params`, read back in `run`, and recorded in
@@ -81,7 +94,10 @@ pub fn load_grid(min_rps: f64, step_rps: f64, points: usize) -> Vec<f64> {
 }
 
 /// A runnable experiment (one paper table/figure, ablation or extension).
-pub trait Experiment {
+/// `Sync` because the parallel runner shares experiments by reference
+/// across its worker threads (all implementors are stateless unit
+/// structs; their runs derive everything from `Params`).
+pub trait Experiment: Sync {
     /// Stable CLI id (`repro run <id>`, artifact file name).
     fn id(&self) -> &'static str;
     /// Human title shown by `repro list`.
@@ -92,8 +108,10 @@ pub trait Experiment {
     }
     /// Regenerate the experiment's reports under `params`.
     fn run(&self, params: &Params) -> Vec<Report>;
-    /// The paper's headline claims over this experiment's reports.
-    fn expectations(&self) -> Vec<Expectation> {
+    /// The paper's headline claims over this experiment's reports. The
+    /// run's `params` are passed in so machine-dependent thresholds can
+    /// be `--param`-overridden (e.g. sim-speed's `min_speedup`).
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         Vec::new()
     }
 }
@@ -125,6 +143,8 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(ablations::ExtGaudi3),
         Box::new(sim_speed::SimSpeed),
         Box::new(tp_sweep::TpSweep),
+        Box::new(fleet_budget::FleetBudget),
+        Box::new(par_speed::ParSpeed),
     ]
 }
 
@@ -146,9 +166,151 @@ pub fn run_all() -> Vec<Report> {
     registry().iter().flat_map(|e| e.run(&e.params())).collect()
 }
 
-/// Evaluate an experiment's expectations over already-produced reports.
-pub fn evaluate(e: &dyn Experiment, reports: &[Report]) -> Vec<ExpectationResult> {
-    e.expectations().iter().map(|x| x.evaluate(reports)).collect()
+/// Evaluate an experiment's expectations over already-produced reports
+/// (`params` = the params the run used, so overridden thresholds apply).
+pub fn evaluate(e: &dyn Experiment, params: &Params, reports: &[Report]) -> Vec<ExpectationResult> {
+    e.expectations(params).iter().map(|x| x.evaluate(reports)).collect()
+}
+
+/// An experiment's params after applying the CLI's `--param` overrides
+/// (only keys the experiment declares; unknown keys are the caller's
+/// usage error to reject).
+pub fn apply_overrides(e: &dyn Experiment, overrides: &[(String, f64)]) -> Params {
+    let mut params = e.params();
+    for (k, v) in overrides {
+        if params.get(k).is_some() {
+            params = params.with(k, *v);
+        }
+    }
+    params
+}
+
+/// Everything one experiment produced under [`run_all_isolated`]: the
+/// effective params, reports, evaluated claims, the wall-clock cost, and
+/// — when the run unwound — the panic message plus one synthesized
+/// failing [`ExpectationResult`] so `--check` reports the crash.
+pub struct ExpRun {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub params: Params,
+    pub reports: Vec<Report>,
+    pub results: Vec<ExpectationResult>,
+    /// `Some(message)` if `run` (or `expectations`) panicked.
+    pub panic: Option<String>,
+    /// Wall-clock seconds this experiment spent on its worker.
+    pub wall_s: f64,
+}
+
+impl ExpRun {
+    pub fn failed(&self) -> bool {
+        self.panic.is_some() || self.results.iter().any(|r| !r.pass)
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run a batch of experiments across the [`par`] pool, each isolated by
+/// `catch_unwind`: a panicking experiment (or a panicking grid point
+/// inside one — the pool re-raises it on the experiment's worker)
+/// becomes that entry's failure without poisoning its siblings. Results
+/// come back in input order at any jobs count, so artifact emission
+/// stays registry-ordered and byte-identical — the jobs-invariance
+/// contract.
+pub fn run_all_isolated(exps: &[Box<dyn Experiment>], overrides: &[(String, f64)]) -> Vec<ExpRun> {
+    par::par_map_indexed(exps.len(), |i| {
+        let e = exps[i].as_ref();
+        let params = apply_overrides(e, overrides);
+        let t0 = std::time::Instant::now();
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let reports = e.run(&params);
+            let results = evaluate(e, &params, &reports);
+            (reports, results)
+        }));
+        let wall_s = t0.elapsed().as_secs_f64();
+        match outcome {
+            Ok((reports, results)) => {
+                ExpRun { id: e.id(), title: e.title(), params, reports, results, panic: None, wall_s }
+            }
+            Err(payload) => {
+                let msg = panic_message(payload.as_ref());
+                let results = vec![ExpectationResult {
+                    id: format!("{}.run_panicked", e.id()),
+                    claim: "the experiment's run must complete without panicking".to_string(),
+                    pass: false,
+                    actual: None,
+                    detail: format!("panicked: {msg}"),
+                }];
+                ExpRun {
+                    id: e.id(),
+                    title: e.title(),
+                    params,
+                    reports: Vec::new(),
+                    results,
+                    panic: Some(msg),
+                    wall_s,
+                }
+            }
+        }
+    })
+}
+
+/// Per-experiment wall-time summary of a batch run (`repro run all`):
+/// one row per experiment in registry order with `Unit::Seconds` cells,
+/// so humans and the bench-diff gate can see which experiments dominate
+/// CI time. This is the ONE deliberately jobs-/machine-dependent table —
+/// it ships in its own `BENCH_run_wall.json` artifact (see
+/// [`wall_artifact_json`]) precisely so the per-experiment artifacts
+/// stay byte-identical across `--jobs`.
+pub fn wall_report(runs: &[ExpRun], jobs: usize) -> Report {
+    let mut r = Report::new("Run wall-time summary: per-experiment cost");
+    r.header(&["experiment", "reports", "claims", "wall s", "status"]);
+    for run in runs {
+        r.row(vec![
+            Cell::text(run.id),
+            Cell::count(run.reports.len()),
+            Cell::count(run.results.len()),
+            Cell::val(run.wall_s, Unit::Seconds),
+            Cell::text(if run.panic.is_some() {
+                "PANIC"
+            } else if run.failed() {
+                "FAIL"
+            } else {
+                "ok"
+            }),
+        ]);
+    }
+    let total: f64 = runs.iter().map(|r| r.wall_s).sum();
+    r.note(format!(
+        "{} experiment(s), {:.1} s summed worker time at jobs={jobs}; wall-clock cells \
+         are machine-dependent (see bench/baseline/README.md)",
+        runs.len(),
+        total
+    ));
+    r
+}
+
+/// The `BENCH_run_wall.json` artifact: [`wall_report`] wrapped in the
+/// standard experiment-v1 schema (experiment id `run_wall`) so
+/// bench-diff and the plotting script consume it like any other
+/// artifact. Unlike every other artifact it is jobs- and
+/// machine-dependent by design.
+pub fn wall_artifact_json(runs: &[ExpRun], jobs: usize) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str(ARTIFACT_SCHEMA.into())),
+        ("experiment", Json::Str("run_wall".into())),
+        ("title", Json::Str("Per-experiment wall time of the harness run".into())),
+        ("params", Params::new().with("jobs", jobs as f64).to_json()),
+        ("reports", Json::Arr(vec![wall_report(runs, jobs).to_json()])),
+        ("expectations", Json::Arr(Vec::new())),
+    ])
 }
 
 /// Schema tag of the per-experiment JSON artifact.
@@ -183,11 +345,11 @@ mod tests {
         for required in [
             "table1", "fig4", "fig5", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
             "fig13", "fig15", "fig17", "cluster", "cluster_sweep", "cache_sweep", "qos_sweep",
-            "chaos_sweep", "sim_speed", "tp_sweep",
+            "chaos_sweep", "sim_speed", "tp_sweep", "fleet_budget", "par_speed",
         ] {
             assert!(ids.contains(&required), "missing {required}");
         }
-        assert_eq!(ids.len(), 24, "registry must keep all 24 entries");
+        assert_eq!(ids.len(), 26, "registry must keep all 26 entries");
     }
 
     #[test]
@@ -205,6 +367,8 @@ mod tests {
         assert_eq!(find("chaos-sweep").unwrap().id(), "chaos_sweep");
         assert_eq!(find("sim-speed").unwrap().id(), "sim_speed");
         assert_eq!(find("tp-sweep").unwrap().id(), "tp_sweep");
+        assert_eq!(find("fleet-budget").unwrap().id(), "fleet_budget");
+        assert_eq!(find("par-speed").unwrap().id(), "par_speed");
         assert!(find("cluster-").is_none());
     }
 
@@ -223,12 +387,46 @@ mod tests {
         let e = find("table1").unwrap();
         let params = e.params();
         let reports = e.run(&params);
-        let results = evaluate(e.as_ref(), &reports);
+        let results = evaluate(e.as_ref(), &params, &reports);
         let j = artifact_json(e.as_ref(), &params, &reports, &results);
         let parsed = Json::parse(&j.dump()).unwrap();
         assert_eq!(parsed.get("schema").unwrap().as_str(), Some(ARTIFACT_SCHEMA));
         assert_eq!(parsed.get("experiment").unwrap().as_str(), Some("table1"));
         assert!(!parsed.get("reports").unwrap().as_arr().unwrap().is_empty());
         assert!(!parsed.get("expectations").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn apply_overrides_only_touches_declared_keys() {
+        let e = find("tp_sweep").unwrap();
+        let overrides =
+            vec![("requests".to_string(), 16.0), ("no_such_key".to_string(), 1.0)];
+        let params = apply_overrides(e.as_ref(), &overrides);
+        assert_eq!(params.get("requests"), Some(16.0));
+        assert_eq!(params.get("no_such_key"), None);
+    }
+
+    #[test]
+    fn isolated_runner_reports_and_walls_every_entry() {
+        let exps: Vec<Box<dyn Experiment>> =
+            vec![find("table1").unwrap(), find("fig4").unwrap()];
+        let runs = run_all_isolated(&exps, &[]);
+        assert_eq!(runs.len(), 2);
+        // Input order is preserved regardless of worker scheduling.
+        assert_eq!(runs[0].id, "table1");
+        assert_eq!(runs[1].id, "fig4");
+        for run in &runs {
+            assert!(run.panic.is_none(), "{}: {:?}", run.id, run.panic);
+            assert!(!run.failed());
+            assert!(!run.reports.is_empty());
+            assert!(run.wall_s >= 0.0);
+        }
+        let wall = wall_report(&runs, 2);
+        assert_eq!(wall.num_rows(), 2);
+        let cell = wall.value_at("table1", "wall s").unwrap();
+        assert_eq!(cell.unit, Unit::Seconds);
+        let j = Json::parse(&wall_artifact_json(&runs, 2).dump()).unwrap();
+        assert_eq!(j.get("experiment").unwrap().as_str(), Some("run_wall"));
+        assert_eq!(j.get("params").unwrap().get("jobs").unwrap().as_f64(), Some(2.0));
     }
 }

@@ -31,6 +31,7 @@ use crate::serving::cluster::ClusterSim;
 use crate::serving::metrics::MetricsCollector;
 use crate::serving::qos::ClassSet;
 use crate::serving::router::RoutePolicy;
+use crate::util::par;
 use crate::workload::OpenLoopTrace;
 
 /// Replicas per deployment (fixed, so curves compare mixes and loads at
@@ -241,12 +242,19 @@ impl Experiment for QosSweep {
     fn run(&self, params: &Params) -> Vec<Report> {
         let k = Knobs::from(params);
         let loads = k.loads();
+        // Fan the flattened (mix, load) grid across the worker pool —
+        // each point is an independent seeded run (both QoS and blind
+        // arms); submission-ordered assembly keeps the artifact
+        // byte-identical at any --jobs value.
+        let all_points = par::par_map_indexed(MIXES.len() * loads.len(), |idx| {
+            run_point(&k, MIXES[idx / loads.len()].1, loads[idx % loads.len()])
+        });
+        let mut point_chunks = all_points.chunks_exact(loads.len());
         let mut reports = Vec::new();
-        let mut curves: Vec<(&str, Vec<SweepPoint>)> = Vec::new();
+        let mut curves: Vec<(&str, &[SweepPoint])> = Vec::new();
 
-        for (label, shares) in MIXES {
-            let points: Vec<SweepPoint> =
-                loads.iter().map(|&rate| run_point(&k, shares, rate)).collect();
+        for (label, _shares) in MIXES {
+            let points: &[SweepPoint] = point_chunks.next().expect("one chunk per mix");
             let mut r = Report::new(format!(
                 "QoS load sweep [{label}]: {REPLICAS} replicas, three-tier classes \
                  (interactive 0.5s/50ms, batch 2s/200ms, background 8s/500ms)"
@@ -265,7 +273,7 @@ impl Experiment for QosSweep {
                 "tok/s",
                 "requeues",
             ]);
-            for p in &points {
+            for p in points {
                 r.row(vec![
                     Cell::text(format!("{:.0} rps", p.offered_rps)),
                     Cell::val(p.offered_rps, Unit::ReqPerSec),
@@ -340,7 +348,7 @@ impl Experiment for QosSweep {
         reports
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "qos_sweep.scalar_parity",
@@ -449,7 +457,7 @@ mod tests {
         // The full default grid is the artifact CI gates on; every
         // expectation must hold there.
         let reports = run();
-        for e in QosSweep.expectations() {
+        for e in QosSweep.expectations(&QosSweep.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

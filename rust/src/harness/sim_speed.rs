@@ -195,6 +195,11 @@ impl Experiment for SimSpeed {
             .with("diurnal_depth", 0.6)
             .with("parity_arrivals", 40.0)
             .with("seed", 42.0)
+            // Threshold of the machine-dependent events/sec speedup claim
+            // (desk-estimated; see ROADMAP). `--param min_speedup=K` lets
+            // a CI runner gate at a measured value instead of hard-failing
+            // on a constant nobody timed on its hardware.
+            .with("min_speedup", 10.0)
     }
 
     fn run(&self, params: &Params) -> Vec<Report> {
@@ -294,7 +299,7 @@ impl Experiment for SimSpeed {
         vec![p, t, c]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "sim_speed.bitwise_parity",
@@ -308,13 +313,14 @@ impl Experiment for SimSpeed {
             ),
             Expectation::new(
                 "sim_speed.indexed_speedup",
-                "indexed dispatch sustains >= 10x the scan loop's events/sec at 100 replicas",
+                "indexed dispatch beats the scan loop's events/sec by the min_speedup \
+                 factor (default 10x, `--param min_speedup=K` to recalibrate)",
                 Selector::cell(
                     "Sim-speed derived claims",
                     "indexed events/sec over scan-loop oracle",
                     "value",
                 ),
-                Check::Ge(10.0),
+                Check::Ge(params.get_or("min_speedup", 10.0)),
             ),
             Expectation::new(
                 "sim_speed.million_request_day",
@@ -385,12 +391,28 @@ mod tests {
         // debug-build wall clocks are meaningless. Parity, memory and
         // conservation are structural — they must hold at every scale.
         let reports = SimSpeed.run(&small_params());
-        for e in SimSpeed.expectations() {
+        for e in SimSpeed.expectations(&SimSpeed.params()) {
             if e.id.ends_with("indexed_speedup") || e.id.ends_with("million_request_day") {
                 continue;
             }
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }
+    }
+
+    #[test]
+    fn speedup_threshold_follows_the_min_speedup_param() {
+        // `--param min_speedup=K` must move the machine-dependent claim's
+        // bound — the default 10.0 is a desk estimate, not a measurement.
+        let find_check = |params: &Params| {
+            SimSpeed
+                .expectations(params)
+                .into_iter()
+                .find(|e| e.id.ends_with("indexed_speedup"))
+                .unwrap()
+                .check
+        };
+        assert_eq!(find_check(&SimSpeed.params()), Check::Ge(10.0));
+        assert_eq!(find_check(&SimSpeed.params().with("min_speedup", 2.5)), Check::Ge(2.5));
     }
 }

@@ -40,7 +40,7 @@ impl Experiment for Table1 {
         vec![r]
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "table1.matrix_ratio",
@@ -94,7 +94,7 @@ mod tests {
     #[test]
     fn expectations_pass() {
         let reports = run();
-        for e in Table1.expectations() {
+        for e in Table1.expectations(&Table1.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

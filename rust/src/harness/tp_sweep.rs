@@ -18,6 +18,7 @@ use crate::models::llama::{self, LlamaConfig};
 use crate::report::{Cell, Check, Expectation, Report, Selector, Unit};
 use crate::serving::cluster::ClusterSim;
 use crate::serving::router::RoutePolicy;
+use crate::util::par;
 use crate::workload::DynamicSonnet;
 
 /// Group widths the sweep walks (the paper's multi-device grid).
@@ -163,9 +164,17 @@ impl Experiment for TpSweep {
         // (device, per-tp points) in DEVICES order.
         let mut curves: Vec<(DeviceKind, Vec<TpPoint>)> = Vec::new();
 
+        // Fan the flattened (device, tp) grid across the worker pool;
+        // submission-ordered assembly keeps the artifact byte-identical
+        // at any --jobs value.
+        let grid = par::par_map_indexed(DEVICES.len() * TP_GRID.len(), |idx| {
+            run_point(&k, &cfg, DEVICES[idx / TP_GRID.len()], TP_GRID[idx % TP_GRID.len()])
+        });
+        let mut grid_iter = grid.into_iter();
+
         for kind in DEVICES {
             let points: Vec<TpPoint> =
-                TP_GRID.iter().map(|&tp| run_point(&k, &cfg, kind, tp)).collect();
+                grid_iter.by_ref().take(TP_GRID.len()).collect();
             let mut r = Report::new(format!(
                 "TP sweep [{}]: {} device-group sizing and scaling",
                 kind.name(),
@@ -207,9 +216,10 @@ impl Experiment for TpSweep {
             curves.push((kind, points));
         }
 
-        // Sized tp=4 deployments: real ClusterSim groups with budgeted KV.
+        // Sized tp=4 deployments: real ClusterSim groups with budgeted KV,
+        // one simulated arm per device run concurrently.
         let sized: Vec<SizedPoint> =
-            DEVICES.iter().map(|&kind| run_sized(&k, &cfg, kind)).collect();
+            par::par_map_indexed(DEVICES.len(), |i| run_sized(&k, &cfg, DEVICES[i]));
         let mut sr = Report::new("TP sweep sized deployments: tp=4 groups serving Llama-70B");
         sr.header(&["device", "KV block budget", "served", "tok/s"]);
         for p in &sized {
@@ -306,7 +316,7 @@ impl Experiment for TpSweep {
         reports
     }
 
-    fn expectations(&self) -> Vec<Expectation> {
+    fn expectations(&self, _params: &Params) -> Vec<Expectation> {
         vec![
             Expectation::new(
                 "tp_sweep.tp1_parity",
@@ -431,7 +441,7 @@ mod tests {
         // The full default grid is the artifact CI gates on; every
         // expectation must hold there.
         let reports = run();
-        for e in TpSweep.expectations() {
+        for e in TpSweep.expectations(&TpSweep.params()) {
             let res = e.evaluate(&reports);
             assert!(res.pass, "{}: {}", res.id, res.detail);
         }

@@ -85,19 +85,28 @@
 //!   inertness, bounded recovery, hedging, background-only shedding),
 //!   `repro run sim-speed` the simulator's own dispatch throughput
 //!   (indexed event core vs the retained scan-loop oracle: bitwise
-//!   parity, events/sec, O(open requests) streaming memory), and `repro
+//!   parity, events/sec, O(open requests) streaming memory), `repro
 //!   run tp-sweep` the Llama-70B device-group scaling grid (tp=1 parity,
 //!   monotone sub-linear tokens/s, HBM-bound at tp=1 / servable at
-//!   tp>=4, mesh-vs-switch collective overhead share).
+//!   tp>=4, mesh-vs-switch collective overhead share), and `repro run
+//!   fleet-budget` the fixed-card-budget shape sweep (the same 8 cards
+//!   as 8x tp1 / 4x tp2 / 2x tp4 / 1x tp8: card conservation, the tp=1
+//!   HBM cliff, TTFT-vs-throughput crossover between wide groups and
+//!   replicated narrow groups, J-per-good-token ledger).
 //! * [`runtime`] — loads AOT-compiled HLO artifacts (JAX/Pallas, lowered at
 //!   build time by `python/compile/aot.py`) and executes them on the PJRT
 //!   CPU client. Python is never on the request path.
 //! * [`harness`] — regenerates every table and figure in the paper's
 //!   evaluation section. Each entry implements the `Experiment` trait
 //!   (`id` / `title` / `params` / `run` / `expectations`); `repro run
-//!   <exp|all> [--json] [--out DIR] [--check]` renders ASCII, writes one
-//!   `BENCH_<id>.json` artifact per experiment, and regression-checks the
-//!   paper's headline claims.
+//!   <exp|all> [--json] [--out DIR] [--check] [--jobs N]` renders ASCII,
+//!   writes one `BENCH_<id>.json` artifact per experiment, and
+//!   regression-checks the paper's headline claims. `--jobs` fans
+//!   experiments and sweep grid points across `util::par`'s
+//!   `std::thread::scope` pool (dependency-free, submission-ordered
+//!   assembly): artifacts are byte-identical at any jobs count — the
+//!   jobs-invariance contract pinned by `repro run par-speed` — and a
+//!   panicking experiment fails alone without poisoning its siblings.
 //! * [`report`] — the typed result model underneath the harness:
 //!   `Value` (raw `f64` + `Unit`), `Cell`/`Report` tables that render to
 //!   ASCII/CSV/JSON, `Series` column views, `Expectation` paper-claim

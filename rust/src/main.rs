@@ -3,7 +3,7 @@
 //! ```text
 //! repro list                       # show every reproducible table/figure
 //! repro run <exp|all> [--csv] [--json] [--out DIR] [--check]
-//!           [--param k=v ...]
+//!           [--param k=v ...] [--jobs N]
 //!                                  # regenerate a paper table/figure;
 //!                                  # --json prints one artifact per
 //!                                  # experiment, --out DIR writes them as
@@ -11,7 +11,11 @@
 //!                                  # the paper-claim expectations and
 //!                                  # exits non-zero on any failure;
 //!                                  # --param overrides a declared
-//!                                  # experiment parameter (repeatable)
+//!                                  # experiment parameter (repeatable);
+//!                                  # --jobs N fans experiments and sweep
+//!                                  # grid points across N workers
+//!                                  # (default: all cores) — artifacts
+//!                                  # are byte-identical at any N
 //! repro bench-diff <baseline-dir> <candidate-dir> [--tolerance PCT]
 //!                                  # compare two BENCH_*.json artifact
 //!                                  # directories cell-by-cell; prints the
@@ -43,6 +47,7 @@ use cuda_myth::serving::cluster::ClusterSim;
 use cuda_myth::serving::real_engine::PjrtLlmEngine;
 use cuda_myth::serving::router::RoutePolicy;
 use cuda_myth::util::json::Json;
+use cuda_myth::util::par;
 use cuda_myth::workload::{DynamicSonnet, TokenPrompts};
 
 fn main() {
@@ -56,7 +61,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: repro <list|run <exp|all> [--csv] [--json] [--out DIR] [--check] \
-                 [--param k=v]|bench-diff <base> <cand> [--tolerance PCT]\
+                 [--param k=v] [--jobs N]|bench-diff <base> <cand> [--tolerance PCT]\
                  |serve [opts]|real-serve [opts]>"
             );
             2
@@ -147,20 +152,34 @@ fn reject_unknown_flags(args: &[String], known: &[&str]) -> Result<(), String> {
 }
 
 fn cmd_run(args: &[String]) -> i32 {
-    const USAGE: &str =
-        "usage: repro run <exp|all> [--csv] [--json] [--out DIR] [--check] [--param k=v ...]";
+    const USAGE: &str = "usage: repro run <exp|all> [--csv] [--json] [--out DIR] [--check] \
+                         [--param k=v ...] [--jobs N]";
     let Some(id) = args.first() else {
         eprintln!("{USAGE}");
         return 2;
     };
-    if let Err(e) = reject_unknown_flags(args, &["--csv", "--json", "--out", "--check", "--param"])
-    {
+    if let Err(e) = reject_unknown_flags(
+        args,
+        &["--csv", "--json", "--out", "--check", "--param", "--jobs"],
+    ) {
         eprintln!("{e}\n{USAGE}");
         return 2;
     }
     let csv = has_flag(args, "--csv");
     let json = has_flag(args, "--json");
     let check = has_flag(args, "--check");
+    let jobs = match parse_flag::<usize>(args, "--jobs", par::available_jobs()) {
+        Ok(j) if j >= 1 => j,
+        Ok(j) => {
+            eprintln!("--jobs must be >= 1, got {j}\n{USAGE}");
+            return 2;
+        }
+        Err(e) => {
+            eprintln!("{e}\n{USAGE}");
+            return 2;
+        }
+    };
+    par::configure_jobs(jobs);
     let out_dir = match flag_value(args, "--out") {
         Ok(d) => d.map(str::to_string),
         Err(e) => {
@@ -213,23 +232,25 @@ fn cmd_run(args: &[String]) -> i32 {
     }
 
     let emit_artifacts = json || out_dir.is_some();
+    // Fan the selected experiments across the worker pool; results come
+    // back in registry order at any --jobs value, so artifact emission
+    // below is deterministic and byte-identical (the jobs-invariance
+    // contract). A panicking experiment fails alone — its siblings'
+    // artifacts still land.
+    let runs = harness::run_all_isolated(&exps, &overrides);
+    let mut panicked = false;
     let mut all_results = Vec::new();
-    for e in exps {
-        let mut params = e.params();
-        // Apply the overrides this experiment declares; the artifact
-        // records the overridden values as the run's provenance.
-        for (k, v) in &overrides {
-            if params.get(k).is_some() {
-                params = params.with(k, *v);
-            }
-        }
-        let reports = e.run(&params);
-        let results = harness::evaluate(e.as_ref(), &reports);
-        if emit_artifacts {
-            let artifact = harness::artifact_json(e.as_ref(), &params, &reports, &results);
+    for run in &runs {
+        if let Some(msg) = &run.panic {
+            eprintln!("experiment '{}' panicked: {msg}", run.id);
+            panicked = true;
+        } else if emit_artifacts {
+            let e = harness::find(run.id).expect("run ids come from the registry");
+            let artifact =
+                harness::artifact_json(e.as_ref(), &run.params, &run.reports, &run.results);
             match &out_dir {
                 Some(dir) => {
-                    let path = format!("{dir}/BENCH_{}.json", e.id());
+                    let path = format!("{dir}/BENCH_{}.json", run.id);
                     if let Err(err) = std::fs::write(&path, artifact.dump()) {
                         eprintln!("cannot write '{path}': {err}");
                         return 1;
@@ -239,7 +260,7 @@ fn cmd_run(args: &[String]) -> i32 {
                 None => println!("{}", artifact.dump()),
             }
         } else {
-            for r in &reports {
+            for r in &run.reports {
                 if csv {
                     println!("# {}", r.title());
                     print!("{}", r.to_csv());
@@ -248,7 +269,30 @@ fn cmd_run(args: &[String]) -> i32 {
                 }
             }
         }
-        all_results.extend(results);
+        all_results.extend(run.results.iter().cloned());
+    }
+
+    // `run all` also reports what each experiment cost: the one
+    // deliberately jobs-/machine-dependent table, shipped in its own
+    // BENCH_run_wall.json so the per-experiment artifacts stay
+    // byte-identical across --jobs.
+    if id == "all" {
+        let wall = harness::wall_report(&runs, jobs).render();
+        if emit_artifacts {
+            eprintln!("{wall}");
+        } else {
+            println!("{wall}");
+        }
+        if let Some(dir) = &out_dir {
+            let path = format!("{dir}/BENCH_run_wall.json");
+            if let Err(err) =
+                std::fs::write(&path, harness::wall_artifact_json(&runs, jobs).dump())
+            {
+                eprintln!("cannot write '{path}': {err}");
+                return 1;
+            }
+            println!("wrote {path}");
+        }
     }
 
     if check {
@@ -263,6 +307,9 @@ fn cmd_run(args: &[String]) -> i32 {
         if all_results.iter().any(|r| !r.pass) {
             return 1;
         }
+    }
+    if panicked {
+        return 1;
     }
     0
 }

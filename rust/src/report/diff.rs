@@ -604,7 +604,7 @@ mod tests {
         let e = harness::find("table1").unwrap();
         let params = e.params();
         let reports = e.run(&params);
-        let results = harness::evaluate(e.as_ref(), &reports);
+        let results = harness::evaluate(e.as_ref(), &params, &reports);
         let j = harness::artifact_json(e.as_ref(), &params, &reports, &results);
         let parsed = Json::parse(&j.dump()).unwrap();
         let out = diff_artifacts(&parsed, &parsed, 0.0).unwrap();

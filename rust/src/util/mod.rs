@@ -1,9 +1,10 @@
 //! Small shared utilities: statistics, the ASCII/CSV report renderer,
-//! JSON, PRNG, and unit helpers.
+//! JSON, PRNG, unit helpers, and the dependency-free parallel executor.
 
 pub mod benchkit;
 pub mod fasthash;
 pub mod json;
+pub mod par;
 pub mod prng;
 pub mod proptest;
 pub mod stats;

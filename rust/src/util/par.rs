@@ -1,0 +1,231 @@
+//! Dependency-free parallel execution: a `std::thread::scope` work pool
+//! with deterministic, submission-ordered result assembly.
+//!
+//! Every sweep grid point in this repo is an independent, seeded
+//! simulation — embarrassingly parallel work. [`par_map_indexed`] fans
+//! closures across a bounded pool and returns the results **in
+//! submission order**, so a parallel sweep emits byte-identical reports
+//! (and therefore byte-identical `BENCH_*.json` artifacts) to a serial
+//! one: parallelism is pure speed, never a semantics change. That
+//! *jobs-invariance* is the layer's contract, pinned by a typed
+//! `par_speed.jobs_invariance` claim and the integration tests.
+//!
+//! The worker budget resolves in three layers, innermost wins:
+//!
+//! 1. a thread-local override installed by [`with_jobs`] (scoped, used
+//!    by tests and by the pool itself),
+//! 2. the process-wide budget set once by [`configure_jobs`] (the CLI's
+//!    `--jobs N` flag),
+//! 3. [`available_jobs`] — `std::thread::available_parallelism`.
+//!
+//! Only the **first** parallel level fans out: worker threads run with
+//! their budget clamped to 1, so `repro run all --jobs 8` parallelizes
+//! across experiments while each experiment's inner grid stays serial
+//! (no J x J thread explosion), and `repro run cluster-sweep --jobs 8`
+//! — a single experiment — lets the grid itself use the budget.
+//!
+//! No rayon, no crossbeam: the crate vendors offline shims and adds no
+//! dependencies, so the pool is ~100 lines of std.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide worker budget; 0 = unset, fall through to
+/// [`available_jobs`].
+static GLOBAL_JOBS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Scoped per-thread override; 0 = inherit [`GLOBAL_JOBS`].
+    static LOCAL_JOBS: Cell<usize> = const { Cell::new(0) };
+}
+
+/// The machine's available parallelism (>= 1); the default budget when
+/// neither [`configure_jobs`] nor [`with_jobs`] applies.
+pub fn available_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Set the process-wide worker budget (the CLI's `--jobs N`). Clamped to
+/// >= 1; call once at startup, before any [`par_map_indexed`].
+pub fn configure_jobs(n: usize) {
+    GLOBAL_JOBS.store(n.max(1), Ordering::SeqCst);
+}
+
+/// The budget the *calling thread* would fan out to right now.
+pub fn current_jobs() -> usize {
+    let local = LOCAL_JOBS.with(|c| c.get());
+    if local != 0 {
+        return local;
+    }
+    match GLOBAL_JOBS.load(Ordering::SeqCst) {
+        0 => available_jobs(),
+        n => n,
+    }
+}
+
+/// Run `f` with the calling thread's budget overridden to `n` (>= 1),
+/// restoring the previous override afterwards — even on panic. Tests use
+/// this instead of [`configure_jobs`] so concurrent `cargo test` threads
+/// never race on the global.
+pub fn with_jobs<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LOCAL_JOBS.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(LOCAL_JOBS.with(|c| c.replace(n.max(1))));
+    f()
+}
+
+/// Map `f` over `0..n` with up to [`current_jobs`] worker threads,
+/// returning results **in submission order** (`out[i] == f(i)`).
+///
+/// Work is pulled from a shared atomic counter, so uneven grid points
+/// balance across workers; each worker runs with its own budget clamped
+/// to 1 (see the module docs). If any closure panics, the panic payload
+/// of the **lowest panicking index** is re-raised on the caller after
+/// all workers drain — deterministic regardless of thread timing, and
+/// identical to the serial path's first panic.
+pub fn par_map_indexed<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let jobs = current_jobs().min(n);
+    if jobs <= 1 {
+        // Serial path: run inline WITHOUT touching the budget, so a
+        // single-experiment run (outer level n=1) leaves the whole
+        // budget to its inner grid.
+        return (0..n).map(&f).collect();
+    }
+
+    let slots: Vec<Mutex<Option<std::thread::Result<R>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                // Workers are the leaf level: their own par calls run
+                // serial (budget 1), preventing nested fan-out.
+                with_jobs(1, || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = catch_unwind(AssertUnwindSafe(|| f(i)));
+                    *slots[i].lock().unwrap() = Some(r);
+                });
+            });
+        }
+    });
+
+    let mut out = Vec::with_capacity(n);
+    let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().unwrap() {
+            Some(Ok(r)) => out.push(r),
+            Some(Err(payload)) => {
+                if panic.is_none() {
+                    panic = Some(payload);
+                }
+            }
+            None => unreachable!("slot {i} never filled"),
+        }
+    }
+    if let Some(payload) = panic {
+        resume_unwind(payload);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        let serial: Vec<usize> = (0..100).map(|i| i * i).collect();
+        let par = with_jobs(8, || par_map_indexed(100, |i| i * i));
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn empty_and_single_inputs() {
+        assert_eq!(with_jobs(8, || par_map_indexed(0, |i| i)), Vec::<usize>::new());
+        assert_eq!(with_jobs(8, || par_map_indexed(1, |i| i + 7)), vec![7]);
+    }
+
+    #[test]
+    fn with_jobs_scopes_and_restores() {
+        let outer = current_jobs();
+        with_jobs(3, || {
+            assert_eq!(current_jobs(), 3);
+            with_jobs(5, || assert_eq!(current_jobs(), 5));
+            assert_eq!(current_jobs(), 3);
+        });
+        assert_eq!(current_jobs(), outer);
+    }
+
+    #[test]
+    fn with_jobs_restores_after_panic() {
+        let before = current_jobs();
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            with_jobs(7, || panic!("boom"));
+        }));
+        assert_eq!(current_jobs(), before);
+    }
+
+    #[test]
+    fn workers_run_with_budget_one() {
+        // Only the first parallel level fans out: inside a worker the
+        // budget reads 1, so nested par_map calls run inline.
+        let seen = with_jobs(4, || par_map_indexed(8, |_| current_jobs()));
+        assert_eq!(seen, vec![1; 8]);
+    }
+
+    #[test]
+    fn serial_fallback_leaves_budget_for_inner_levels() {
+        // n=1 at the outer level (a single experiment) must not eat the
+        // budget: the inner level still sees it and parallelizes.
+        let inner = with_jobs(4, || par_map_indexed(1, |_| current_jobs()));
+        assert_eq!(inner, vec![4]);
+    }
+
+    #[test]
+    fn lowest_index_panic_wins_deterministically() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            with_jobs(4, || {
+                par_map_indexed(16, |i| {
+                    if i == 3 || i == 11 {
+                        panic!("grid point {i} failed");
+                    }
+                    i
+                })
+            })
+        }));
+        let payload = caught.expect_err("panic must propagate");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert_eq!(msg, "grid point 3 failed");
+    }
+
+    #[test]
+    fn sibling_points_complete_despite_a_panic() {
+        // A panicking grid point must not poison its siblings: every
+        // other index still computes (observable via the side counter).
+        let done = AtomicUsize::new(0);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            with_jobs(4, || {
+                par_map_indexed(32, |i| {
+                    if i == 0 {
+                        panic!("first point fails");
+                    }
+                    done.fetch_add(1, Ordering::Relaxed);
+                })
+            })
+        }));
+        assert_eq!(done.load(Ordering::Relaxed), 31);
+    }
+}

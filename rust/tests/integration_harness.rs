@@ -28,8 +28,9 @@ fn every_paper_claim_expectation_passes() {
     // headline-claim expectations evaluate green over fresh reports.
     let mut checked = 0;
     for e in harness::registry() {
-        let reports = e.run(&e.params());
-        for res in harness::evaluate(e.as_ref(), &reports) {
+        let params = e.params();
+        let reports = e.run(&params);
+        for res in harness::evaluate(e.as_ref(), &params, &reports) {
             assert!(res.pass, "{}: {} ({})", res.id, res.detail, res.claim);
             checked += 1;
         }
@@ -96,7 +97,7 @@ fn artifact_json_is_schema_stable_for_all() {
     for e in harness::registry() {
         let params = e.params();
         let reports = e.run(&params);
-        let results = harness::evaluate(e.as_ref(), &reports);
+        let results = harness::evaluate(e.as_ref(), &params, &reports);
         let artifact = harness::artifact_json(e.as_ref(), &params, &reports, &results);
         let j = Json::parse(&artifact.dump()).unwrap();
         assert_eq!(j.get("schema").unwrap().as_str(), Some(harness::ARTIFACT_SCHEMA));
@@ -130,6 +131,70 @@ fn run_all_covers_all_registry_entries() {
     let n_reports = harness::run_all().len();
     // Each experiment yields at least one report.
     assert!(n_reports >= harness::registry().len());
+}
+
+#[test]
+fn sweep_artifacts_are_jobs_invariant() {
+    // The parallel executor's headline contract: the full JSON artifact
+    // (params, every report cell, every evaluated claim) is byte-equal
+    // whether the sweep grid ran on one worker or eight.
+    for id in ["cluster_sweep", "tp_sweep"] {
+        let e = harness::find(id).unwrap();
+        let params = e.params();
+        let dump = |jobs: usize| {
+            cuda_myth::util::par::with_jobs(jobs, || {
+                let reports = e.run(&params);
+                let results = harness::evaluate(e.as_ref(), &params, &reports);
+                harness::artifact_json(e.as_ref(), &params, &reports, &results).dump()
+            })
+        };
+        assert_eq!(dump(1), dump(8), "{id}: artifact bytes depend on the jobs count");
+    }
+}
+
+#[test]
+fn a_panicking_experiment_fails_alone_in_a_batch_run() {
+    use cuda_myth::harness::Params;
+    use cuda_myth::report::{Expectation, Report};
+
+    struct Panicky;
+    impl Experiment for Panicky {
+        fn id(&self) -> &'static str {
+            "panicky"
+        }
+        fn title(&self) -> &'static str {
+            "always panics"
+        }
+        fn run(&self, _params: &Params) -> Vec<Report> {
+            panic!("grid point 3 exploded")
+        }
+        fn expectations(&self, _params: &Params) -> Vec<Expectation> {
+            Vec::new()
+        }
+    }
+
+    let exps: Vec<Box<dyn Experiment>> = vec![Box::new(Panicky), harness::find("fig4").unwrap()];
+    let runs = harness::run_all_isolated(&exps, &[]);
+    assert_eq!(runs.len(), 2);
+
+    // The panic becomes that entry's failure: a synthesized failing
+    // claim carrying the payload, no reports, failed() true.
+    let bad = &runs[0];
+    assert_eq!(bad.id, "panicky");
+    assert!(bad.panic.as_deref().unwrap().contains("grid point 3 exploded"));
+    assert!(bad.reports.is_empty());
+    assert_eq!(bad.results.len(), 1);
+    assert_eq!(bad.results[0].id, "panicky.run_panicked");
+    assert!(!bad.results[0].pass);
+    assert!(bad.failed());
+
+    // The sibling is untouched: same order, real reports, green claims.
+    let good = &runs[1];
+    assert_eq!(good.id, "fig4");
+    assert!(good.panic.is_none());
+    assert!(!good.reports.is_empty());
+    assert!(good.results.iter().all(|r| r.pass));
+    assert!(!good.failed());
 }
 
 #[test]
