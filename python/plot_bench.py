@@ -18,9 +18,11 @@ linestyle per report/mix, one color per class).
 
 ``BENCH_sim_speed.json`` (the simulator's self-benchmark) additionally
 gets an events/sec trend figure: one line per event loop (indexed core
-vs scan-loop oracle). Pass several artifact directories — one per
-commit, oldest first — and the trend spans them; a single directory
-yields single-point series (the CI smoke shape).
+vs scan-loop oracle, plus the macro-stepping fast path vs its retained
+micro-step oracle when the artifact carries the macro throughput
+report). Pass several artifact directories — one per commit, oldest
+first — and the trend spans them; a single directory yields
+single-point series (the CI smoke shape).
 
 ``BENCH_chaos_sweep.json`` (the fault-injection grid) gets one
 dip/recovery timeline figure per fleet: goodput over time, one line per
@@ -417,11 +419,38 @@ def plot_fleet_budget(experiment: str, artifact: dict, out_dir: Path) -> Path | 
     return out
 
 
+SIM_SPEED_THROUGHPUT_TITLES = ("Sim-speed throughput", "Sim-speed macro-stepping throughput")
+
+
+def sim_speed_throughput_rows(artifact: dict) -> list[tuple[str, float]]:
+    """(event-loop label, events/sec) pairs from every timed-throughput
+    report in a sim-speed artifact: the indexed-vs-scan pair, plus the
+    macro-vs-micro pair when present (older artifacts predate it). Row
+    labels are unique across the reports, so they name the series."""
+    pairs: list[tuple[str, float]] = []
+    for report in artifact.get("reports", []):
+        title = report.get("title", "")
+        if not any(title.startswith(t) for t in SIM_SPEED_THROUGHPUT_TITLES):
+            continue
+        ev_cols = [
+            idx
+            for idx, name, unit in numeric_columns(report)
+            if unit == "ev/s" and name == "events/sec"
+        ]
+        if not ev_cols:
+            continue
+        for row, v in zip(report.get("rows", []), column_values(report, ev_cols[0])):
+            loop = row[0] if row and isinstance(row[0], str) else "?"
+            pairs.append((loop, v))
+    return pairs
+
+
 def plot_sim_speed_trend(artifact_dirs: list[Path], out_dir: Path) -> Path | None:
     """Events/sec trend for the sim-speed self-benchmark: one line per
-    event loop (row label of the throughput report) across the given
-    artifact directories in order — a commit history when the caller
-    keeps one directory per commit, single-point series for one dir."""
+    event loop (row labels of the timed-throughput reports, macro-step
+    series included) across the given artifact directories in order — a
+    commit history when the caller keeps one directory per commit,
+    single-point series for one dir."""
     series: dict[str, list[float]] = {}
     labels: list[str] = []
     for d in artifact_dirs:
@@ -431,23 +460,11 @@ def plot_sim_speed_trend(artifact_dirs: list[Path], out_dir: Path) -> Path | Non
         artifact = json.loads(path.read_text())
         if artifact.get("schema") != SCHEMA:
             continue
-        report = next(
-            (r for r in artifact.get("reports", []) if "Sim-speed throughput" in r.get("title", "")),
-            None,
-        )
-        if report is None:
+        pairs = sim_speed_throughput_rows(artifact)
+        if not pairs:
             continue
-        ev_cols = [
-            idx
-            for idx, name, unit in numeric_columns(report)
-            if unit == "ev/s" and name == "events/sec"
-        ]
-        if not ev_cols:
-            continue
-        values = column_values(report, ev_cols[0])
         labels.append(d.name)
-        for row, v in zip(report.get("rows", []), values):
-            loop = row[0] if row and isinstance(row[0], str) else "?"
+        for loop, v in pairs:
             # Pad a loop first seen now with NaNs for the earlier dirs.
             series.setdefault(loop, [float("nan")] * (len(labels) - 1)).append(v)
         for vals in series.values():

@@ -170,34 +170,54 @@ def test_no_combined_figure_without_class_columns(tmp_path):
     assert not (out_dir / "cache_sweep__per-class-attainment.png").exists()
 
 
-def sim_speed_artifact(indexed_ev_s=5.0e6, oracle_ev_s=4.0e5):
+def sim_speed_artifact(indexed_ev_s=5.0e6, oracle_ev_s=4.0e5, with_macro=False):
+    cols = [
+        "event loop", "arrivals", "events", "wall s", "events/sec",
+        "wall s per sim-hour", "peak open",
+    ]
+    reports = [
+        {
+            "title": "Sim-speed throughput: 100-replica fleet, short-decode Dynamic-Sonnet",
+            "columns": cols,
+            "rows": [
+                [
+                    "indexed + streamed", val(1_000_000, "count"),
+                    val(12_000_000, "count"), val(2.4, "s"),
+                    val(indexed_ev_s, "ev/s"), val(0.1, "s"), val(40, "count"),
+                ],
+                [
+                    "scan oracle (eager)", val(100_000, "count"),
+                    val(1_200_000, "count"), val(3.0, "s"),
+                    val(oracle_ev_s, "ev/s"), val(1.25, "s"), val(100_000, "count"),
+                ],
+            ],
+            "notes": [],
+        },
+    ]
+    if with_macro:
+        reports.append({
+            "title": "Sim-speed macro-stepping throughput: 8-replica saturated decode-heavy drain",
+            "columns": cols,
+            "rows": [
+                [
+                    "macro bursts on", val(20_000, "count"),
+                    val(5_200_000, "count"), val(1.0, "s"),
+                    val(5.2e6, "ev/s"), val(0.2, "s"), val(20_000, "count"),
+                ],
+                [
+                    "micro-step oracle", val(20_000, "count"),
+                    val(5_200_000, "count"), val(2.1, "s"),
+                    val(2.5e6, "ev/s"), val(0.4, "s"), val(20_000, "count"),
+                ],
+            ],
+            "notes": [],
+        })
     return {
         "schema": "cuda-myth/experiment-v1",
         "experiment": "sim_speed",
         "title": "synthetic sim-speed",
         "params": {"replicas": 100},
-        "reports": [
-            {
-                "title": "Sim-speed throughput: 100-replica fleet, short-decode Dynamic-Sonnet",
-                "columns": [
-                    "event loop", "arrivals", "events", "wall s", "events/sec",
-                    "wall s per sim-hour", "peak open",
-                ],
-                "rows": [
-                    [
-                        "indexed + streamed", val(1_000_000, "count"),
-                        val(12_000_000, "count"), val(2.4, "s"),
-                        val(indexed_ev_s, "ev/s"), val(0.1, "s"), val(40, "count"),
-                    ],
-                    [
-                        "scan oracle (eager)", val(100_000, "count"),
-                        val(1_200_000, "count"), val(3.0, "s"),
-                        val(oracle_ev_s, "ev/s"), val(1.25, "s"), val(100_000, "count"),
-                    ],
-                ],
-                "notes": [],
-            },
-        ],
+        "reports": reports,
         "expectations": [],
     }
 
@@ -231,6 +251,36 @@ def test_sim_speed_single_dir_renders_trend_and_generic_curves(tmp_path):
     assert list(out_dir.glob("sim_speed__sim-speed-throughput*.png")), sorted(
         out_dir.glob("*.png")
     )
+
+
+def test_sim_speed_throughput_rows_include_macro_series():
+    # Without the macro report: just the indexed/scan pair. With it: the
+    # macro/micro pair joins the series list under its own row labels.
+    plain = plot_bench.sim_speed_throughput_rows(sim_speed_artifact())
+    assert [loop for loop, _ in plain] == ["indexed + streamed", "scan oracle (eager)"]
+    full = plot_bench.sim_speed_throughput_rows(sim_speed_artifact(with_macro=True))
+    assert [loop for loop, _ in full] == [
+        "indexed + streamed", "scan oracle (eager)", "macro bursts on", "micro-step oracle",
+    ]
+    assert dict(full)["macro bursts on"] == 5.2e6
+
+
+def test_sim_speed_trend_pads_macro_series_across_old_artifacts(tmp_path):
+    # Commit 0 predates macro-stepping (no macro report); commit 1 has
+    # it. The trend must still render, padding the macro series with a
+    # NaN for the older directory instead of crashing or misaligning.
+    specs = [dict(with_macro=False), dict(with_macro=True)]
+    dirs = []
+    for i, kw in enumerate(specs):
+        d = tmp_path / f"commit{i}"
+        d.mkdir()
+        (d / "BENCH_sim_speed.json").write_text(json.dumps(sim_speed_artifact(**kw)))
+        dirs.append(str(d))
+    out_dir = tmp_path / "plots"
+    assert plot_bench.main([*dirs, "--out", str(out_dir)]) == 0
+    trend = out_dir / "sim_speed__events-per-sec-trend.png"
+    assert trend.exists(), sorted(out_dir.glob("*.png"))
+    assert trend.stat().st_size > 1000
 
 
 def test_no_trend_without_sim_speed_artifact(tmp_path):

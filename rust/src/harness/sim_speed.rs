@@ -1,11 +1,16 @@
-//! Sim-speed experiment: the simulator benchmarking itself. Three typed
+//! Sim-speed experiment: the simulator benchmarking itself. Five typed
 //! reports pin the indexed discrete-event core (`serving/cluster.rs`)
-//! against the retained pre-refactor scan loop: (1) bitwise parity on a
-//! backpressured reference trace, (2) raw dispatch throughput — a
-//! million-request streamed diurnal day on a 100-replica fleet vs the
-//! scan-loop oracle, in simulated events per wall-clock second — and
-//! (3) the derived headline claims (>= 10x events/sec, O(open requests)
-//! memory). `repro run sim-speed --json --out bench/` writes the run as
+//! against its two retained oracles: (1) bitwise parity vs the
+//! pre-refactor scan loop on a backpressured reference trace, (2) the
+//! same bitwise parity for decode macro-stepping vs the retained
+//! micro-step oracle (plus how many bursts the fast path actually
+//! took), (3) raw dispatch throughput — a million-request streamed
+//! diurnal day on a 100-replica fleet vs the scan-loop oracle, in
+//! simulated events per wall-clock second — (4) macro-stepping
+//! throughput on a saturated decode-heavy drain vs the micro-step
+//! oracle, and (5) the derived headline claims (>= 10x events/sec,
+//! O(open requests) memory, macro parity + speedup). `repro run
+//! sim-speed --json --out bench/` writes the run as
 //! `BENCH_sim_speed.json` for the CI bench-diff gate, whose time-polarity
 //! units (`s` lower-better, `ev/s` higher-better) make a simulator
 //! slowdown a gate failure, not a silent drift.
@@ -33,6 +38,8 @@ struct Knobs {
     day_s: f64,
     diurnal_depth: f64,
     parity_arrivals: usize,
+    macro_arrivals: usize,
+    macro_replicas: usize,
     seed: u64,
 }
 
@@ -45,6 +52,8 @@ impl Knobs {
             day_s: params.get_or("day_s", 86_400.0),
             diurnal_depth: params.get_or("diurnal_depth", 0.6),
             parity_arrivals: params.get_or("parity_arrivals", 40.0) as usize,
+            macro_arrivals: params.get_or("macro_arrivals", 20_000.0) as usize,
+            macro_replicas: params.get_or("macro_replicas", 8.0) as usize,
             seed: params.get_or("seed", 42.0) as u64,
         }
     }
@@ -60,6 +69,14 @@ impl Knobs {
 /// dispatch cost (what this experiment is about), not decode length.
 fn short_workload() -> DynamicSonnet {
     DynamicSonnet { max_input: 64, max_output: 8, ..DynamicSonnet::default() }
+}
+
+/// Decode-heavy Dynamic-Sonnet: short prompts, long outputs. Submitted
+/// as one instantaneous burst, it drains as long stable decode windows —
+/// the macro-stepping fast path's natural habitat, and the regime the
+/// dispatch-bound `short_workload` deliberately avoids.
+fn decode_heavy_workload() -> DynamicSonnet {
+    DynamicSonnet { max_input: 64, max_output: 256, ..DynamicSonnet::default() }
 }
 
 fn fleet_config(replicas: usize) -> ServingConfig {
@@ -83,6 +100,8 @@ struct RunStats {
     wall_s: f64,
     sim_span_s: f64,
     peak_open: usize,
+    macro_bursts: u64,
+    macro_ticks: u64,
 }
 
 impl RunStats {
@@ -97,6 +116,8 @@ impl RunStats {
             wall_s,
             sim_span_s: sim.fleet_metrics().makespan,
             peak_open: sim.peak_open(),
+            macro_bursts: sim.macro_bursts(),
+            macro_ticks: sim.macro_ticks(),
         }
     }
 
@@ -132,6 +153,18 @@ fn run_oracle(k: &Knobs) -> RunStats {
     RunStats::measure(sim, k.oracle_arrivals)
 }
 
+/// The macro-stepping timed pair: a saturated decode-heavy drain where
+/// quiescent windows dominate. `micro` retains the per-tick oracle so
+/// the events/sec ratio isolates exactly what macro-stepping buys.
+fn run_macro_timed(k: &Knobs, micro: bool) -> RunStats {
+    let cfg = fleet_config(k.macro_replicas);
+    let model = LlamaConfig::llama31_8b();
+    let mut sim =
+        if micro { ClusterSim::new_micro_oracle(&cfg, model) } else { ClusterSim::new(&cfg, model) };
+    sim.submit_all(decode_heavy_workload().generate(k.macro_arrivals, f64::INFINITY, k.seed));
+    RunStats::measure(sim, k.macro_arrivals)
+}
+
 /// Bitwise parity on the reference trace: tight queue cap, three-tier
 /// class mix and prefix groups, so requeues, QoS feedback and prefix
 /// routing all flow through both dispatch loops.
@@ -142,8 +175,9 @@ struct Parity {
     prefix_mismatches: usize,
 }
 
-fn parity_check(k: &Knobs) -> Parity {
-    let cfg = ServingConfig {
+/// The backpressured reference deployment both parity sections run on.
+fn parity_config() -> ServingConfig {
+    ServingConfig {
         replicas: 3,
         route_policy: RoutePolicy::LeastLoaded,
         max_queued: 8,
@@ -151,28 +185,82 @@ fn parity_check(k: &Knobs) -> Parity {
         max_decode_batch: 16,
         classes: ClassSet::three_tier(),
         ..Default::default()
-    };
-    let trace = || {
-        DynamicSonnet::default()
-            .with_prefix_groups(4)
-            .with_class_mix(vec![(0, 2), (1, 1), (2, 1)])
-            .generate(k.parity_arrivals, 60.0, k.seed)
-    };
-    let mut indexed = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
-    indexed.submit_all(trace());
-    indexed.run_to_completion();
-    let mut oracle = ClusterSim::new_scan_oracle(&cfg, LlamaConfig::llama31_8b());
-    oracle.submit_all(trace());
-    oracle.run_to_completion();
+    }
+}
+
+fn parity_trace(k: &Knobs) -> Vec<crate::serving::request::Request> {
+    DynamicSonnet::default()
+        .with_prefix_groups(4)
+        .with_class_mix(vec![(0, 2), (1, 1), (2, 1)])
+        .generate(k.parity_arrivals, 60.0, k.seed)
+}
+
+fn parity_delta(a: &ClusterSim, b: &ClusterSim) -> Parity {
     Parity {
-        request_delta: indexed.fleet_metrics().max_request_delta(&oracle.fleet_metrics()),
-        requeue_delta: indexed.requeues.abs_diff(oracle.requeues),
-        event_delta: indexed.events().abs_diff(oracle.events()),
+        request_delta: a.fleet_metrics().max_request_delta(&b.fleet_metrics()),
+        requeue_delta: a.requeues.abs_diff(b.requeues),
+        event_delta: a.events().abs_diff(b.events()),
         prefix_mismatches: usize::from(
-            format!("{:?}", indexed.fleet_prefix_stats())
-                != format!("{:?}", oracle.fleet_prefix_stats()),
+            format!("{:?}", a.fleet_prefix_stats()) != format!("{:?}", b.fleet_prefix_stats()),
         ),
     }
+}
+
+fn parity_check(k: &Knobs) -> Parity {
+    let cfg = parity_config();
+    let mut indexed = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    indexed.submit_all(parity_trace(k));
+    indexed.run_to_completion();
+    let mut oracle = ClusterSim::new_scan_oracle(&cfg, LlamaConfig::llama31_8b());
+    oracle.submit_all(parity_trace(k));
+    oracle.run_to_completion();
+    parity_delta(&indexed, &oracle)
+}
+
+/// Macro-stepping parity on the same backpressured reference trace: the
+/// default (macro-enabled) run vs the retained micro-step oracle, plus
+/// how much burst coverage the fast path actually achieved — a parity
+/// claim over a trace the fast path never engages on would be vacuous.
+struct MacroParity {
+    parity: Parity,
+    bursts: u64,
+    ticks: u64,
+}
+
+fn macro_parity_check(k: &Knobs) -> MacroParity {
+    let cfg = parity_config();
+    let mut fast = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+    fast.submit_all(parity_trace(k));
+    fast.run_to_completion();
+    let mut micro = ClusterSim::new_micro_oracle(&cfg, LlamaConfig::llama31_8b());
+    micro.submit_all(parity_trace(k));
+    micro.run_to_completion();
+    let bursts = fast.macro_bursts();
+    let ticks = fast.macro_ticks();
+    MacroParity { parity: parity_delta(&fast, &micro), bursts, ticks }
+}
+
+/// Shared column set of the two timed-throughput reports.
+const THROUGHPUT_COLS: [&str; 7] = [
+    "event loop",
+    "arrivals",
+    "events",
+    "wall s",
+    "events/sec",
+    "wall s per sim-hour",
+    "peak open",
+];
+
+fn throughput_row(label: &str, s: &RunStats) -> Vec<Cell> {
+    vec![
+        Cell::text(label),
+        Cell::count(s.arrivals),
+        Cell::count(s.events as usize),
+        Cell::val(s.wall_s, Unit::Seconds),
+        Cell::val(s.events_per_sec(), Unit::EventPerSec),
+        Cell::val(s.wall_per_sim_hour(), Unit::Seconds),
+        Cell::count(s.peak_open),
+    ]
 }
 
 pub struct SimSpeed;
@@ -194,19 +282,26 @@ impl Experiment for SimSpeed {
             .with("day_s", 86_400.0)
             .with("diurnal_depth", 0.6)
             .with("parity_arrivals", 40.0)
+            .with("macro_arrivals", 20_000.0)
+            .with("macro_replicas", 8.0)
             .with("seed", 42.0)
-            // Threshold of the machine-dependent events/sec speedup claim
-            // (desk-estimated; see ROADMAP). `--param min_speedup=K` lets
-            // a CI runner gate at a measured value instead of hard-failing
-            // on a constant nobody timed on its hardware.
+            // Thresholds of the machine-dependent events/sec speedup
+            // claims (desk-estimated; see ROADMAP). `--param min_speedup=K`
+            // / `--param min_macro_speedup=K` let a CI runner gate at a
+            // measured value instead of hard-failing on a constant nobody
+            // timed on its hardware.
             .with("min_speedup", 10.0)
+            .with("min_macro_speedup", 1.3)
     }
 
     fn run(&self, params: &Params) -> Vec<Report> {
         let k = Knobs::from(params);
         let parity = parity_check(&k);
+        let macro_parity = macro_parity_check(&k);
         let streamed = run_streamed(&k);
         let oracle = run_oracle(&k);
+        let macro_fast = run_macro_timed(&k, false);
+        let macro_micro = run_macro_timed(&k, true);
 
         let mut p = Report::new(
             "Sim-speed parity: indexed event core vs retained scan-loop oracle",
@@ -232,29 +327,43 @@ impl Experiment for SimSpeed {
             k.parity_arrivals, k.seed
         ));
 
+        let mut mp = Report::new(
+            "Sim-speed macro parity: decode macro-stepping vs retained micro-step oracle",
+        );
+        mp.header(&["check", "value"]);
+        mp.row(vec![
+            Cell::text("max per-request metric delta"),
+            Cell::val(macro_parity.parity.request_delta, Unit::Seconds),
+        ]);
+        mp.row(vec![
+            Cell::text("requeue-count delta"),
+            Cell::count(macro_parity.parity.requeue_delta as usize),
+        ]);
+        mp.row(vec![
+            Cell::text("event-count delta"),
+            Cell::count(macro_parity.parity.event_delta as usize),
+        ]);
+        mp.row(vec![
+            Cell::text("prefix-cache stat mismatches"),
+            Cell::count(macro_parity.parity.prefix_mismatches),
+        ]);
+        mp.row(vec![Cell::text("macro bursts taken"), Cell::count(macro_parity.bursts as usize)]);
+        mp.row(vec![Cell::text("macro ticks covered"), Cell::count(macro_parity.ticks as usize)]);
+        mp.note(
+            "same backpressured reference trace as the scan-loop parity section; the \
+             default run macro-steps quiescent decode windows while the oracle steps \
+             every tick — identical arithmetic, so all deltas must be zero, and the \
+             burst count proves the fast path actually engaged (a parity claim over a \
+             trace it never fires on would be vacuous)",
+        );
+
         let mut t = Report::new(format!(
             "Sim-speed throughput: {}-replica fleet, short-decode Dynamic-Sonnet",
             k.replicas
         ));
-        t.header(&[
-            "event loop",
-            "arrivals",
-            "events",
-            "wall s",
-            "events/sec",
-            "wall s per sim-hour",
-            "peak open",
-        ]);
+        t.header(&THROUGHPUT_COLS);
         for (label, s) in [("indexed + streamed", &streamed), ("scan oracle (eager)", &oracle)] {
-            t.row(vec![
-                Cell::text(label),
-                Cell::count(s.arrivals),
-                Cell::count(s.events as usize),
-                Cell::val(s.wall_s, Unit::Seconds),
-                Cell::val(s.events_per_sec(), Unit::EventPerSec),
-                Cell::val(s.wall_per_sim_hour(), Unit::Seconds),
-                Cell::count(s.peak_open),
-            ]);
+            t.row(throughput_row(label, s));
         }
         t.note(format!(
             "streamed run: diurnal day ({}s period, depth {}) at mean {:.2} req/s fed \
@@ -265,8 +374,28 @@ impl Experiment for SimSpeed {
             k.rate_rps()
         ));
 
+        let mut mt = Report::new(format!(
+            "Sim-speed macro-stepping throughput: {}-replica saturated decode-heavy drain",
+            k.macro_replicas
+        ));
+        mt.header(&THROUGHPUT_COLS);
+        for (label, s) in
+            [("macro bursts on", &macro_fast), ("micro-step oracle", &macro_micro)]
+        {
+            mt.row(throughput_row(label, s));
+        }
+        mt.note(format!(
+            "{} decode-heavy requests (<= 64-token prompts, <= 256-token outputs) \
+             submitted as one burst and drained: long stable decode windows, so the \
+             fast path covers most ticks ({} bursts over {} ticks here); the micro \
+             oracle pays one full scheduler + costing pass per tick",
+            k.macro_arrivals, macro_fast.macro_bursts, macro_fast.macro_ticks
+        ));
+
         let conservation = streamed.arrivals.abs_diff(streamed.completed)
-            + oracle.arrivals.abs_diff(oracle.completed);
+            + oracle.arrivals.abs_diff(oracle.completed)
+            + macro_fast.arrivals.abs_diff(macro_fast.completed)
+            + macro_micro.arrivals.abs_diff(macro_micro.completed);
         let mut c = Report::new("Sim-speed derived claims");
         c.header(&["claim", "value"]);
         c.row(vec![
@@ -274,8 +403,16 @@ impl Experiment for SimSpeed {
             Cell::val(streamed.events_per_sec() / oracle.events_per_sec(), Unit::Ratio),
         ]);
         c.row(vec![
+            Cell::text("macro events/sec over micro-step oracle"),
+            Cell::val(macro_fast.events_per_sec() / macro_micro.events_per_sec(), Unit::Ratio),
+        ]);
+        c.row(vec![
             Cell::text("bitwise parity: max per-request delta"),
             Cell::val(parity.request_delta, Unit::Seconds),
+        ]);
+        c.row(vec![
+            Cell::text("macro parity: max per-request delta"),
+            Cell::val(macro_parity.parity.request_delta, Unit::Seconds),
         ]);
         c.row(vec![
             Cell::text("streamed arrivals per run"),
@@ -291,12 +428,12 @@ impl Experiment for SimSpeed {
         ]);
         c.note(
             "the memory claim is structural (working set = open requests, not trace \
-             length); the speedup claim is wall-clock and release-build only — debug \
+             length); the speedup claims are wall-clock and release-build only — debug \
              timings are meaningless, so unit tests check the structural claims and CI \
              checks all of them",
         );
 
-        vec![p, t, c]
+        vec![p, mp, t, mt, c]
     }
 
     fn expectations(&self, params: &Params) -> Vec<Expectation> {
@@ -310,6 +447,41 @@ impl Experiment for SimSpeed {
                     "value",
                 ),
                 Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "sim_speed.macro_parity",
+                "decode macro-stepping replays the retained micro-step oracle bit-for-bit \
+                 on the backpressured reference trace",
+                Selector::cell(
+                    "Sim-speed derived claims",
+                    "macro parity: max per-request delta",
+                    "value",
+                ),
+                Check::EqExact(0.0),
+            ),
+            Expectation::new(
+                "sim_speed.macro_engaged",
+                "the macro fast path takes real bursts on the parity trace (a vacuous \
+                 parity claim would pass trivially)",
+                Selector::cell(
+                    "Sim-speed macro parity: decode macro-stepping vs retained \
+                     micro-step oracle",
+                    "macro bursts taken",
+                    "value",
+                ),
+                Check::Ge(1.0),
+            ),
+            Expectation::new(
+                "sim_speed.macro_speedup",
+                "macro-stepping beats the micro-step oracle's events/sec on the \
+                 decode-heavy drain by the min_macro_speedup factor (default 1.3x, \
+                 `--param min_macro_speedup=K` to recalibrate)",
+                Selector::cell(
+                    "Sim-speed derived claims",
+                    "macro events/sec over micro-step oracle",
+                    "value",
+                ),
+                Check::Ge(params.get_or("min_macro_speedup", 1.3)),
             ),
             Expectation::new(
                 "sim_speed.indexed_speedup",
@@ -373,26 +545,34 @@ mod tests {
             .with("oracle_arrivals", 300.0)
             .with("day_s", 30.0)
             .with("parity_arrivals", 30.0)
+            .with("macro_arrivals", 48.0)
+            .with("macro_replicas", 2.0)
     }
 
     #[test]
     fn reports_have_expected_shape() {
         let reports = SimSpeed.run(&small_params());
-        assert_eq!(reports.len(), 3);
+        assert_eq!(reports.len(), 5);
         assert_eq!(reports[0].num_rows(), 4);
-        assert_eq!(reports[1].num_rows(), 2);
-        assert_eq!(reports[2].num_rows(), 5);
+        assert_eq!(reports[1].num_rows(), 6);
+        assert_eq!(reports[2].num_rows(), 2);
+        assert_eq!(reports[3].num_rows(), 2);
+        assert_eq!(reports[4].num_rows(), 7);
     }
 
     #[test]
     fn structural_claims_hold_at_any_scale() {
-        // The timing claim (>= 10x) and the million-request scale claim
-        // are CI-only: they need the release-build default grid, and
-        // debug-build wall clocks are meaningless. Parity, memory and
-        // conservation are structural — they must hold at every scale.
+        // The timing claims (>= 10x indexed, >= 1.3x macro) and the
+        // million-request scale claim are CI-only: they need the
+        // release-build default grid, and debug-build wall clocks are
+        // meaningless. Parity, burst engagement, memory and conservation
+        // are structural — they must hold at every scale.
         let reports = SimSpeed.run(&small_params());
         for e in SimSpeed.expectations(&SimSpeed.params()) {
-            if e.id.ends_with("indexed_speedup") || e.id.ends_with("million_request_day") {
+            if e.id.ends_with("indexed_speedup")
+                || e.id.ends_with("macro_speedup")
+                || e.id.ends_with("million_request_day")
+            {
                 continue;
             }
             let res = e.evaluate(&reports);
@@ -404,15 +584,41 @@ mod tests {
     fn speedup_threshold_follows_the_min_speedup_param() {
         // `--param min_speedup=K` must move the machine-dependent claim's
         // bound — the default 10.0 is a desk estimate, not a measurement.
-        let find_check = |params: &Params| {
+        let find_check = |params: &Params, id: &str| {
             SimSpeed
                 .expectations(params)
                 .into_iter()
-                .find(|e| e.id.ends_with("indexed_speedup"))
+                .find(|e| e.id.ends_with(id))
                 .unwrap()
                 .check
         };
-        assert_eq!(find_check(&SimSpeed.params()), Check::Ge(10.0));
-        assert_eq!(find_check(&SimSpeed.params().with("min_speedup", 2.5)), Check::Ge(2.5));
+        assert_eq!(find_check(&SimSpeed.params(), "indexed_speedup"), Check::Ge(10.0));
+        assert_eq!(
+            find_check(&SimSpeed.params().with("min_speedup", 2.5), "indexed_speedup"),
+            Check::Ge(2.5)
+        );
+        // And the macro claim's knob moves independently.
+        assert_eq!(find_check(&SimSpeed.params(), "macro_speedup"), Check::Ge(1.3));
+        assert_eq!(
+            find_check(&SimSpeed.params().with("min_macro_speedup", 1.05), "macro_speedup"),
+            Check::Ge(1.05)
+        );
+    }
+
+    #[test]
+    fn macro_timed_pair_counts_identical_events_and_takes_bursts() {
+        // The macro/micro timed pair must agree on *what* was simulated —
+        // identical event and completion counts — and differ only in how
+        // many scheduler passes paid for it. Burst coverage > burst count
+        // proves multi-tick windows, not degenerate 1-tick bursts.
+        let k = Knobs::from(&small_params());
+        let fast = run_macro_timed(&k, false);
+        let micro = run_macro_timed(&k, true);
+        assert_eq!(fast.events, micro.events);
+        assert_eq!(fast.completed, micro.completed);
+        assert_eq!(fast.completed, k.macro_arrivals);
+        assert!(fast.macro_bursts > 0, "the drain must engage the fast path");
+        assert!(fast.macro_ticks > fast.macro_bursts);
+        assert_eq!(micro.macro_ticks, 0, "the oracle must stay micro-stepped");
     }
 }

@@ -22,11 +22,18 @@
 //!
 //!   ```text
 //!   Backend (SimBackend | PjrtBackend)    step costs: simulated / wall
+//!       │                                 (SimBackend memoizes decode
+//!       │                                 costs by batch-composition
+//!       │                                 signature, exact-verified hits)
 //!       └── EngineCore<B, ClockSource>    one shared step loop (scheduler,
 //!           │                             paged KV with ref-counted
 //!           │                             shared-prefix blocks under a
 //!           │                             finite budget + LRU/cost-aware
-//!           │                             eviction, trace, metrics+energy)
+//!           │                             eviction, trace, metrics+energy);
+//!           │                             provably-stable decode windows
+//!           │                             macro-step k ticks per call
+//!           │                             (`step_until`, bitwise-equal to
+//!           │                             the retained micro oracle)
 //!           └── ClusterSim                N replicas, each a *device
 //!               │                         group* (`ReplicaSpec { device,
 //!               │                         tp }`: homogeneous, mixed
@@ -84,8 +91,9 @@
 //!   the fault-schedule x fleet grid (conservation, empty-schedule
 //!   inertness, bounded recovery, hedging, background-only shedding),
 //!   `repro run sim-speed` the simulator's own dispatch throughput
-//!   (indexed event core vs the retained scan-loop oracle: bitwise
-//!   parity, events/sec, O(open requests) streaming memory), `repro
+//!   (indexed event core vs the retained scan-loop oracle, decode
+//!   macro-stepping vs the retained micro-step oracle: bitwise parity,
+//!   events/sec, O(open requests) streaming memory), `repro
 //!   run tp-sweep` the Llama-70B device-group scaling grid (tp=1 parity,
 //!   monotone sub-linear tokens/s, HBM-bound at tp=1 / servable at
 //!   tp>=4, mesh-vs-switch collective overhead share), and `repro run

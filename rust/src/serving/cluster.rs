@@ -51,12 +51,13 @@
 //!
 //! Backpressure: when the router's global queue cap rejects an arrival
 //! (`QueueFull`), the request is rescheduled as a wake event just past
-//! the earliest busy replica's clock (`floor.max(due) + 1e-6`, the exact
-//! legacy retry time — the epsilon is load-bearing, see `deliver`) — it
-//! retries as soon as the fleet has made progress, preserving arrival
-//! order among retries. The request's *arrival* timestamp is untouched,
-//! so queueing delay from backpressure shows up in its TTFT, exactly as
-//! a client would see it.
+//! the earliest busy replica's clock (`floor.max(due) + REQUEUE_EPS`,
+//! the exact legacy retry time — the epsilon is load-bearing and part of
+//! the pinned event-ordering policy, see [`REQUEUE_EPS`] and `deliver`)
+//! — it retries as soon as the fleet has made progress, preserving
+//! arrival order among retries. The request's *arrival* timestamp is
+//! untouched, so queueing delay from backpressure shows up in its TTFT,
+//! exactly as a client would see it.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -71,6 +72,15 @@ use crate::serving::qos::ClassSet;
 use crate::serving::request::{Request, RequestId};
 use crate::serving::router::{QueueFull, Router};
 use crate::util::fasthash::FastMap;
+
+/// Backpressure retry offset: a `QueueFull` arrival is requeued at
+/// `requeue_floor().max(due) + REQUEUE_EPS`. The epsilon is load-bearing
+/// under same-time policy 1 (arrivals beat equal-time replica steps): a
+/// retry at exactly the floor would fire *before* the replica step that
+/// frees queue capacity and spin forever. Its exact value is part of the
+/// pinned event-ordering policy — changing it reorders every
+/// backpressured trace, so it is a named constant rather than a literal.
+pub const REQUEUE_EPS: f64 = 1e-6;
 
 /// Which event loop drives `pump`: the indexed heap core (default), or
 /// the retained pre-refactor scan loop (the parity/benchmark oracle).
@@ -254,6 +264,10 @@ pub struct ClusterSim {
     /// Outstanding hedge pairs, keyed by primary request id.
     hedged: FastMap<RequestId, HedgePair>,
     chaos_stats: ChaosStats,
+    /// Quiescent-window macro-stepping on this fleet's replicas (current
+    /// and future — `add_replica_spec` applies it to autoscaled ones).
+    /// On by default; `new_micro_oracle` builds the fleet with it off.
+    macro_stepping: bool,
 }
 
 impl ClusterSim {
@@ -305,6 +319,7 @@ impl ClusterSim {
             hedge_after_s: cfg.hedge_after_s,
             hedged: FastMap::default(),
             chaos_stats: ChaosStats::default(),
+            macro_stepping: true,
         }
     }
 
@@ -316,6 +331,32 @@ impl ClusterSim {
     #[doc(hidden)]
     pub fn new_scan_oracle(cfg: &ServingConfig, model: LlamaConfig) -> ClusterSim {
         ClusterSim { mode: DispatchMode::ScanOracle, ..ClusterSim::new(cfg, model) }
+    }
+
+    /// The micro-stepped oracle: the indexed event core with the
+    /// quiescent-window macro fast path disabled on every replica
+    /// (current and future), so each decode tick runs the full per-tick
+    /// scheduler pass exactly as before macro-stepping landed. Hidden —
+    /// it exists solely for the macro-vs-micro bitwise property tests and
+    /// the `sim-speed` macro section (the `new_scan_oracle` pattern).
+    #[doc(hidden)]
+    pub fn new_micro_oracle(cfg: &ServingConfig, model: LlamaConfig) -> ClusterSim {
+        let mut sim = ClusterSim::new(cfg, model);
+        sim.macro_stepping = false;
+        for e in &mut sim.replicas {
+            e.set_macro_stepping(false);
+        }
+        sim
+    }
+
+    /// Total quiescent-window macro bursts taken across the fleet.
+    pub fn macro_bursts(&self) -> u64 {
+        self.replicas.iter().map(|e| e.macro_bursts()).sum()
+    }
+
+    /// Total decode ticks covered by macro bursts across the fleet.
+    pub fn macro_ticks(&self) -> u64 {
+        self.replicas.iter().map(|e| e.macro_ticks()).sum()
     }
 
     /// One engine replica pinned to the device group `spec`. The
@@ -423,7 +464,10 @@ impl ClusterSim {
     }
 
     /// Discrete events processed so far (arrival deliveries + replica
-    /// steps) — the numerator of the `sim-speed` events/sec metric.
+    /// steps + chaos control events) — the numerator of the `sim-speed`
+    /// events/sec metric. A quiescent-window macro burst counts each
+    /// decode tick it covers, so macro and micro runs of the same trace
+    /// report identical totals and events/sec comparisons stay fair.
     pub fn events(&self) -> u64 {
         self.events
     }
@@ -443,6 +487,7 @@ impl ClusterSim {
     pub fn add_replica_spec(&mut self, spec: ReplicaSpec, now: f64) -> usize {
         spec.validate().expect("valid replica spec");
         let mut engine = Self::build_replica(&self.cfg, self.model, spec);
+        engine.set_macro_stepping(self.macro_stepping);
         engine.clock_mut().wait_until(now);
         self.replicas.push(engine);
         self.specs.push(spec);
@@ -655,11 +700,10 @@ impl ClusterSim {
                 };
                 // Retry just after the fleet has made progress; the
                 // request's own arrival timestamp is preserved so the
-                // extra queueing delay lands in its TTFT. The epsilon is
-                // load-bearing: a retry at exactly the floor would beat
-                // the replica step that frees capacity (arrivals win
-                // same-time ties) and spin forever.
-                self.enqueue(floor.max(due) + 1e-6, req);
+                // extra queueing delay lands in its TTFT (see
+                // `REQUEUE_EPS` for why the offset must be strictly
+                // positive).
+                self.enqueue(floor.max(due) + REQUEUE_EPS, req);
                 self.note_open();
             }
         }
@@ -718,12 +762,41 @@ impl ClusterSim {
     }
 
     /// Indexed-mode replica step: retire the replica's wake entry (it is
-    /// the heap top — that is why it was chosen), advance the replica,
-    /// and re-key it at its new `next_tick` while it still has work.
-    fn step_replica(&mut self, i: usize) {
+    /// the heap top — that is why it was chosen), advance the replica —
+    /// one micro iteration, or a quiescent-window macro burst bounded by
+    /// the externally-safe horizon — and re-key it at its new `next_tick`
+    /// while it still has work. The horizon handed to
+    /// `Engine::step_until` is the *strict* bound `before` (the next
+    /// arrival due or chaos control event: both beat an equal-time
+    /// replica step, same-time policies 0 and 1) plus the *inclusive*
+    /// pump `limit` (a tick starting at or before it runs to its end —
+    /// events are atomic, exactly as the micro loop overruns). Bursts
+    /// cover only completion-free decode ticks, so the books settled
+    /// here per event are the same ones the micro loop would settle —
+    /// just `iters` ticks at a time, which is also what keeps `events`
+    /// equal between macro and micro runs.
+    fn step_replica(&mut self, i: usize, limit: f64) {
         let Reverse(w) = self.wakes.pop().expect("step_replica with an empty wake index");
         debug_assert_eq!(w.index, i, "stepped replica must own the top wake entry");
-        self.advance_replica(i);
+        // An outstanding hedge pair is the one cross-replica mutation a
+        // completion can cause (the winner synchronously cancels its twin
+        // on the *other* replica, possibly mid-window), so while any pair
+        // is open every replica micro-steps: a NEG_INFINITY horizon fails
+        // the burst entry guard. New pairs only form at HedgeCheck
+        // control events, which the control bound below already fences —
+        // a burst can therefore never span a pair's creation either.
+        let before = if self.hedged.is_empty() {
+            self.next_arrival_due()
+                .unwrap_or(f64::INFINITY)
+                .min(self.control.peek().map_or(f64::INFINITY, |Reverse(c)| c.time))
+        } else {
+            f64::NEG_INFINITY
+        };
+        let (done, iters) = self.replicas[i].step_until(before, limit);
+        self.events += iters;
+        for id in done {
+            self.on_completion(i, id);
+        }
         if let Some(t) = self.replicas[i].next_tick() {
             self.wakes.push(Reverse(ReplicaWake { time: t, index: i }));
         }
@@ -924,7 +997,7 @@ impl ClusterSim {
                     if w.time > limit {
                         return true;
                     }
-                    self.step_replica(w.index);
+                    self.step_replica(w.index, limit);
                 }
                 (Some(t), None) => {
                     if t > limit {
@@ -1664,6 +1737,85 @@ mod tests {
             20,
             "interactive tier must be untouched by admission control"
         );
+    }
+
+    #[test]
+    fn macro_bursts_replay_micro_bitwise_on_a_small_fleet() {
+        // Decode-heavy trace (short prompts, long outputs) so replicas
+        // spend most of the run in stable decode windows — the macro
+        // fast path's natural habitat. The indexed run must take real
+        // bursts and still replay the retained micro oracle bitwise.
+        let cfg = ServingConfig {
+            replicas: 2,
+            route_policy: RoutePolicy::LeastLoaded,
+            max_queued: 10_000,
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            ..Default::default()
+        };
+        let trace = || {
+            DynamicSonnet { max_input: 64, max_output: 256, ..Default::default() }
+                .generate(24, 20.0, 19)
+        };
+        let mut m = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        m.submit_all(trace());
+        let sm = m.run_to_completion();
+        let mut u = ClusterSim::new_micro_oracle(&cfg, LlamaConfig::llama31_8b());
+        u.submit_all(trace());
+        let su = u.run_to_completion();
+        assert_eq!(sm.requests, 24);
+        assert_eq!(su.requests, 24);
+        assert!(m.macro_ticks() > m.macro_bursts(), "bursts must cover >1 tick on average");
+        assert!(m.macro_bursts() > 0, "the fast path must engage on this trace");
+        assert_eq!(u.macro_ticks(), 0, "the oracle must stay micro-stepped");
+        assert_eq!(m.fleet_metrics().max_request_delta(&u.fleet_metrics()), 0.0);
+        assert_eq!(m.events(), u.events(), "a burst of k ticks still counts k events");
+        assert_eq!(m.completed(), u.completed());
+        assert_eq!(sm.mean_tpot.to_bits(), su.mean_tpot.to_bits());
+        assert_eq!(sm.p99_ttft.to_bits(), su.p99_ttft.to_bits());
+    }
+
+    #[test]
+    fn straggler_window_boundary_terminates_macro_bursts() {
+        use crate::serving::chaos::Fault;
+        // A straggler window flips a replica's slow-clock factor at its
+        // `from`/`until` control events. Both edges sit on the control
+        // heap, so they bound every macro burst: a burst that wrongly
+        // spanned either boundary would cost its later ticks under the
+        // wrong dilation and break bitwise parity with the micro oracle.
+        let cfg = ServingConfig {
+            replicas: 2,
+            route_policy: RoutePolicy::RoundRobin,
+            max_queued: 10_000,
+            num_blocks: 4096,
+            max_decode_batch: 16,
+            ..Default::default()
+        };
+        let chaos = FaultSchedule::empty().with(Fault::Straggler {
+            replica: 0,
+            from: 0.4,
+            until: 3.0,
+            factor: 6.0,
+        });
+        let trace = || {
+            DynamicSonnet { max_input: 64, max_output: 192, ..Default::default() }
+                .generate(20, 25.0, 43)
+        };
+        let mut m = ClusterSim::new(&cfg, LlamaConfig::llama31_8b());
+        m.install_chaos(&chaos);
+        m.submit_all(trace());
+        let sm = m.run_to_completion();
+        let mut u = ClusterSim::new_micro_oracle(&cfg, LlamaConfig::llama31_8b());
+        u.install_chaos(&chaos);
+        u.submit_all(trace());
+        let su = u.run_to_completion();
+        assert_eq!(sm.requests, 20);
+        assert_eq!(su.requests, 20);
+        assert_eq!(m.chaos_stats().straggler_windows, 1, "the window must fire mid-run");
+        assert_eq!(m.chaos_stats(), u.chaos_stats());
+        assert!(m.macro_bursts() > 0, "bursts must still engage around the window");
+        assert_eq!(m.fleet_metrics().max_request_delta(&u.fleet_metrics()), 0.0);
+        assert_eq!(m.events(), u.events());
     }
 
     #[test]

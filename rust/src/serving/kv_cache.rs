@@ -259,6 +259,31 @@ impl KvBlockManager {
         self.blocks_for(tokens) + self.watermark_blocks <= self.free.len()
     }
 
+    /// Largest `k <= cap` such that growing every sequence in `kv_lens`
+    /// by `k` tokens — one token per tick for `k` ticks, the shape of a
+    /// macro-stepping window — allocates at most the currently-free
+    /// block count. Growth of an *existing* sequence ignores the
+    /// watermark (only new-sequence admission reserves it), so free
+    /// blocks are the only bound; within the returned window every
+    /// per-tick `allocate` succeeds without eviction or preemption. The
+    /// total block need is monotone in `k`, hence the binary search.
+    pub fn max_stable_growth(&self, kv_lens: &[usize], cap: usize) -> usize {
+        let free = self.free.len();
+        let need = |k: usize| -> usize {
+            kv_lens.iter().map(|&kv| self.blocks_for(kv + k) - self.blocks_for(kv)).sum()
+        };
+        let (mut lo, mut hi) = (0usize, cap);
+        while lo < hi {
+            let mid = lo + (hi - lo + 1) / 2;
+            if need(mid) <= free {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+
     /// Acquire the shared prefix `prefix_id` (length `prefix_tokens`,
     /// recompute weight `weight`) for one sequence about to prefill,
     /// pinning it against eviction. `reserve` blocks are left untouched in
@@ -538,6 +563,33 @@ mod tests {
         assert_eq!(m.blocks_for(1), 1);
         assert_eq!(m.blocks_for(128), 1);
         assert_eq!(m.blocks_for(129), 2);
+    }
+
+    #[test]
+    fn max_stable_growth_matches_brute_force() {
+        let mut m = KvBlockManager::new(16, 4, 0.0);
+        m.allocate(1, 6).unwrap(); // 2 blocks
+        m.allocate(2, 9).unwrap(); // 3 blocks -> 11 free
+        let kv = [6usize, 9];
+        let need = |k: usize| -> usize {
+            kv.iter().map(|&v| m.blocks_for(v + k) - m.blocks_for(v)).sum()
+        };
+        for cap in 0..48 {
+            let k = m.max_stable_growth(&kv, cap);
+            // Maximal feasible: k fits, and k+1 (when under cap) does not.
+            assert!(k <= cap);
+            assert!(need(k) <= m.num_free(), "cap {cap} k {k}");
+            if k < cap {
+                assert!(need(k + 1) > m.num_free(), "cap {cap} k {k} not maximal");
+            }
+        }
+        // The watermark must NOT bound growth (existing sequences may dip
+        // into the reserve, so neither may the window proof count it):
+        // 14 free blocks ahead of the 2 held -> the sequence can reach all
+        // 16 blocks = 64 tokens, i.e. grow by 58 from 6 — reserve ignored.
+        let mut w = KvBlockManager::new(16, 4, 0.25); // 4 reserved
+        w.allocate(1, 6).unwrap();
+        assert_eq!(w.max_stable_growth(&[6], 64), 58);
     }
 
     #[test]

@@ -64,6 +64,14 @@ pub struct Scheduler {
     /// fast paths — which also makes the single-class bitwise parity
     /// with the pre-refactor scheduler structural, not incidental.
     uniform_priority: bool,
+    /// Cached multi-class decode order: `running` stable-sorted by
+    /// descending class priority. A request's priority is fixed at
+    /// submit, so the order only changes when the running *membership*
+    /// does — every mutation site marks it dirty and the next decode
+    /// pass re-sorts once, instead of the per-decode-tick sort the
+    /// pre-cache code paid. (Uniform-priority configs never touch it.)
+    decode_order: Vec<RequestId>,
+    decode_order_dirty: bool,
 }
 
 impl Scheduler {
@@ -85,7 +93,27 @@ impl Scheduler {
             prefix_weight: 1.0,
             classes,
             uniform_priority,
+            decode_order: Vec::new(),
+            decode_order_dirty: true,
         }
+    }
+
+    /// The cached multi-class decode order, re-sorted only when the
+    /// running membership changed since last use. The sort is the same
+    /// stable descending-priority sort the per-tick path ran, over the
+    /// same `running` snapshot, so the cached order is *identical* to a
+    /// fresh sort — the cache changes when work happens, never what is
+    /// scheduled.
+    fn priority_order(&mut self) -> &[RequestId] {
+        if self.decode_order_dirty {
+            let mut order = std::mem::take(&mut self.decode_order);
+            order.clear();
+            order.extend_from_slice(&self.running);
+            order.sort_by_key(|id| std::cmp::Reverse(self.priority_of(*id)));
+            self.decode_order = order;
+            self.decode_order_dirty = false;
+        }
+        &self.decode_order
     }
 
     /// Scheduling priority of a stored sequence's traffic class.
@@ -252,6 +280,7 @@ impl Scheduler {
                 s.kv_len = s.req.prompt_len;
                 self.running.push(id);
             }
+            self.decode_order_dirty = true;
             return Step::Prefill(prefill);
         }
 
@@ -261,15 +290,14 @@ impl Scheduler {
             return Step::Idle;
         }
         // Decode slots go to higher classes first; the sort is stable, so
-        // within a class the running order is preserved — and uniform-
-        // priority configs skip the sort entirely (the legacy snapshot).
+        // within a class the running order is preserved — uniform-priority
+        // configs skip the sort entirely (the legacy snapshot) and the
+        // multi-class path reuses the cached order while membership holds.
+        let cap = self.cfg.max_decode_batch;
         let batch: Vec<RequestId> = if self.uniform_priority {
-            self.running.iter().copied().take(self.cfg.max_decode_batch).collect()
+            self.running.iter().copied().take(cap).collect()
         } else {
-            let mut order: Vec<RequestId> = self.running.clone();
-            order.sort_by_key(|id| std::cmp::Reverse(self.priority_of(*id)));
-            order.truncate(self.cfg.max_decode_batch);
-            order
+            self.priority_order().iter().copied().take(cap).collect()
         };
         let mut scheduled = Vec::with_capacity(batch.len());
         for id in batch {
@@ -330,6 +358,43 @@ impl Scheduler {
         Step::Decode(scheduled)
     }
 
+    /// The decode batch `schedule()` would pick right now *if* the
+    /// scheduler is in a pure-decode steady state; `None` when it is not.
+    /// Steady means the running set is non-empty and the best waiting
+    /// request (if any) fails at least one of `schedule()`'s three
+    /// admission gates — and each gate stays failed under pure decode:
+    /// the batch cap (nobody retires inside a completion-free window),
+    /// the prefill token budget (a constant), and `can_admit` (free
+    /// blocks only shrink while decode grows KV; the only replenishers —
+    /// retire, preempt, cancel, prefix eviction — cannot fire in a
+    /// window). This is what lets `EngineCore::try_macro_burst` prove the
+    /// batch stable over a whole window instead of re-running the
+    /// admission pass per tick; the caller still bounds the window by
+    /// finish distance and the free-block budget.
+    pub fn steady_decode_batch(&mut self) -> Option<&[RequestId]> {
+        if self.running.is_empty() {
+            return None;
+        }
+        if let Some(pos) = self.best_waiting_pos() {
+            let s = &self.seqs[&self.waiting[pos]];
+            let blocked = self.running.len() >= self.cfg.max_decode_batch
+                || s.req.prompt_len > self.cfg.max_prefill_tokens
+                || !self.kv.can_admit(s.req.prompt_len);
+            if !blocked {
+                return None;
+            }
+        }
+        let cap = self.cfg.max_decode_batch;
+        if self.uniform_priority {
+            let n = self.running.len().min(cap);
+            Some(&self.running[..n])
+        } else {
+            let order = self.priority_order();
+            let n = order.len().min(cap);
+            Some(&order[..n])
+        }
+    }
+
     /// Record the outcome of an executed decode step: each sequence gained
     /// one token at engine time `now`.
     pub fn complete_decode(&mut self, ids: &[RequestId], now: f64) {
@@ -358,6 +423,7 @@ impl Scheduler {
             ids.iter().copied().filter(|id| self.seqs[id].phase == Phase::Finished).collect();
         for id in done {
             self.running.retain(|&r| r != id);
+            self.decode_order_dirty = true;
             self.release_prefix_pin(id);
             self.kv.free(id);
             self.finished.push(id);
@@ -380,6 +446,7 @@ impl Scheduler {
     /// *front* of the waiting queue (recompute-style preemption).
     fn preempt(&mut self, id: RequestId) {
         self.running.retain(|&r| r != id);
+        self.decode_order_dirty = true;
         self.release_prefix_pin(id);
         self.kv.free(id);
         let s = self.seqs.get_mut(&id).unwrap();
@@ -419,6 +486,7 @@ impl Scheduler {
         }
         self.waiting.retain(|&w| w != id);
         self.running.retain(|&r| r != id);
+        self.decode_order_dirty = true;
         self.preempted.retain(|&p| p != id);
         self.release_prefix_pin(id);
         self.kv.free(id);
@@ -441,6 +509,7 @@ impl Scheduler {
             self.waiting.iter().copied().chain(self.running.iter().copied()).collect();
         self.waiting.clear();
         self.running.clear();
+        self.decode_order_dirty = true;
         self.preempted.clear();
         let mut out = Vec::with_capacity(ids.len());
         for id in ids {
@@ -857,6 +926,45 @@ mod tests {
             assert_eq!(s.seq(i).preemptions, 1);
         }
         assert!(s.kv.check_conservation());
+    }
+
+    #[test]
+    fn cached_decode_order_tracks_membership_changes() {
+        // Two decode passes with unchanged membership reuse the cached
+        // order; a retirement dirties it and the next pass re-sorts.
+        let mut s = Scheduler::new(three_tier_cfg(8, 256));
+        s.submit(Request::new(0, 64, 10, 0.0).with_class(2)); // background
+        s.submit(Request::new(1, 64, 2, 0.0).with_class(0)); // interactive
+        let _ = s.schedule(); // prefill both
+        for now in [0.1, 0.2] {
+            match s.schedule() {
+                Step::Decode(ids) => {
+                    assert_eq!(ids, vec![1, 0], "interactive decodes first");
+                    s.complete_decode(&ids, now);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        assert_eq!(s.take_finished(), vec![1]);
+        match s.schedule() {
+            Step::Decode(ids) => assert_eq!(ids, vec![0], "retired id left the order"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn steady_decode_batch_requires_blocked_admission() {
+        let mut s = Scheduler::new(cfg(2, 256));
+        for i in 0..3 {
+            s.submit(Request::new(i, 64, 10, 0.0));
+        }
+        assert!(s.steady_decode_batch().is_none(), "nothing running yet");
+        let _ = s.schedule(); // prefill 0, 1; request 2 blocked by the batch cap
+        assert_eq!(s.steady_decode_batch(), Some(&[0u64, 1][..]));
+        s.cancel(0); // headroom again: request 2 becomes admissible
+        assert!(s.steady_decode_batch().is_none(), "admissible waiting head");
+        let _ = s.schedule(); // prefill 2
+        assert_eq!(s.steady_decode_batch(), Some(&[1u64, 2][..]), "queue drained");
     }
 
     #[test]

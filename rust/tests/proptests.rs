@@ -472,6 +472,81 @@ fn fault_schedules_replay_bitwise_given_the_seed() {
 }
 
 #[test]
+fn macro_stepping_replays_the_micro_loop_bitwise() {
+    // Property (serving::engine + cluster): the quiescent-window decode
+    // macro-stepping fast path must replay the retained micro-step
+    // oracle bit-for-bit — per-request metrics, token counts, requeues,
+    // event counts, chaos counters and prefix-cache stats — across
+    // random fleets, class mixes, queue caps, chaos schedules and hedge
+    // timers. The burst accumulator proves the property is not vacuous:
+    // across the sampled draws the fast path must actually engage.
+    use cuda_myth::serving::chaos::FaultSchedule;
+    use cuda_myth::serving::cluster::ClusterSim;
+    use cuda_myth::serving::qos::ClassSet;
+    let bursts = std::cell::Cell::new(0u64);
+    forall(
+        103,
+        10,
+        &PairOf(
+            PairOf(UsizeIn(8, 30), UsizeIn(1, 4)),
+            PairOf(UsizeIn(1, 1000), PairOf(UsizeIn(0, 4), UsizeIn(4, 48))),
+        ),
+        |&((n, replicas), (seed, (groups, max_queued)))| {
+            let classes = if seed % 2 == 0 { ClassSet::default() } else { ClassSet::three_tier() };
+            let cfg = ServingConfig {
+                replicas,
+                route_policy: RoutePolicy::LeastLoaded,
+                max_queued,
+                num_blocks: 2048,
+                max_decode_batch: 12,
+                classes,
+                hedge_after_s: if seed % 3 == 0 { 0.3 } else { 0.0 },
+                ..Default::default()
+            };
+            let schedule =
+                (seed % 2 == 0).then(|| FaultSchedule::random(seed as u64, replicas, 6.0));
+            let trace = || {
+                let mut w = DynamicSonnet::default().with_prefix_groups(groups);
+                if seed % 2 == 1 {
+                    w = w.with_class_mix(vec![(0, 2), (1, 1), (2, 1)]);
+                }
+                w.generate(n, 10.0 + (seed % 50) as f64, seed as u64)
+            };
+            let run = |micro: bool| {
+                let model = LlamaConfig::llama31_8b();
+                let mut sim = if micro {
+                    ClusterSim::new_micro_oracle(&cfg, model)
+                } else {
+                    ClusterSim::new(&cfg, model)
+                };
+                if let Some(s) = &schedule {
+                    sim.install_chaos(s);
+                }
+                sim.submit_all(trace());
+                sim.run_to_completion();
+                sim
+            };
+            let fast = run(false);
+            let micro = run(true);
+            bursts.set(bursts.get() + fast.macro_bursts());
+            let tokens = |sim: &ClusterSim| {
+                sim.fleet_metrics().per_request().iter().map(|m| m.output_tokens).sum::<usize>()
+            };
+            fast.fleet_metrics().max_request_delta(&micro.fleet_metrics()) == 0.0
+                && tokens(&fast) == tokens(&micro)
+                && fast.requeues == micro.requeues
+                && fast.events() == micro.events()
+                && fast.completed() == micro.completed()
+                && fast.chaos_stats() == micro.chaos_stats()
+                && micro.macro_ticks() == 0
+                && format!("{:?}", fast.fleet_prefix_stats())
+                    == format!("{:?}", micro.fleet_prefix_stats())
+        },
+    );
+    assert!(bursts.get() > 0, "the fast path never engaged across the sampled draws");
+}
+
+#[test]
 fn chaos_conserves_every_request_and_token() {
     // Property (serving::chaos): under random fault schedules, fleet
     // sizes and class mixes, no request is ever lost or double-served —
